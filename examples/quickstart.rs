@@ -1,0 +1,56 @@
+//! Quickstart: solve one ultra-high-dimensional Elastic Net with SsNAL-EN,
+//! inspect the result, and cross-check against coordinate descent.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ssnal_en::coordinator::{Coordinator, CoordinatorConfig};
+use ssnal_en::data::{generate_synthetic, SyntheticSpec};
+use ssnal_en::solver::types::{Algorithm, EnetProblem};
+use ssnal_en::solver::{kkt_residuals, solve_with};
+use ssnal_en::util::timer::time_it;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a synthetic instance in the paper's ultra-high-dimensional regime:
+    //    n = 50 000 features, m = 500 observations, 20 true nonzeros.
+    let spec = SyntheticSpec { m: 500, n: 50_000, n0: 20, x_star: 5.0, snr: 5.0, seed: 42 };
+    println!("generating A ∈ R^{{{}×{}}} ...", spec.m, spec.n);
+    let prob = generate_synthetic(&spec);
+
+    // 2. the paper's λ parametrization: λ1 = α·c·λmax, λ2 = (1−α)·c·λmax.
+    let alpha = 0.75;
+    let lambda_max = EnetProblem::lambda_max(&prob.a, &prob.b, alpha);
+    let (lam1, lam2) = EnetProblem::lambdas_from_alpha(alpha, 0.3, lambda_max);
+    println!("λ_max = {lambda_max:.3}, λ1 = {lam1:.3}, λ2 = {lam2:.3}");
+
+    // 3. solve with SsNAL-EN via the coordinator (native f64 backend).
+    let coord = Coordinator::new(CoordinatorConfig::native(1e-6));
+    let (fit, secs) = time_it(|| coord.solve(&prob.a, &prob.b, lam1, lam2));
+    let fit = fit?;
+    println!(
+        "\nSsNAL-EN: {secs:.3}s — {} outer / {} inner iterations, residual {:.2e}",
+        fit.iterations, fit.inner_iterations, fit.residual
+    );
+    println!("active set: {} features, objective {:.5}", fit.active_set.len(), fit.objective);
+
+    // 4. verify the KKT system (Eq. 8/20) at the solution.
+    let p = EnetProblem::new(&prob.a, &prob.b, lam1, lam2);
+    let z: Vec<f64> = prob.a.t_mul_vec(&fit.y).iter().map(|v| -v).collect();
+    let kkt = kkt_residuals(&p, &fit.x, &fit.y, &z);
+    println!("KKT residuals: res1={:.2e} res2={:.2e} res3={:.2e}", kkt.res1, kkt.res2, kkt.res3);
+
+    // 5. recovery of the true support.
+    let hits = prob.support.iter().filter(|j| fit.x[**j] != 0.0).count();
+    println!("true-support recovery: {hits}/{}", prob.support.len());
+
+    // 6. cross-check against glmnet-style coordinate descent (same optimum).
+    let (cd, cd_secs) = time_it(|| solve_with(&p, Algorithm::CdCovariance, 1e-8));
+    let dist = ssnal_en::linalg::blas::dist2(&fit.x, &cd.x);
+    println!(
+        "\ncoordinate descent: {cd_secs:.3}s — ‖x_ssnal − x_cd‖ = {dist:.2e} \
+         (speedup ×{:.1})",
+        cd_secs / secs
+    );
+    Ok(())
+}

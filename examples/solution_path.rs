@@ -1,0 +1,72 @@
+//! Warm-started λ-path + parameter tuning (paper §3.3 / Supplement D.4).
+//!
+//! Traces the full regularization path on a sim1-style instance, shows how the
+//! active set grows as c_λ decreases, compares path cost against coordinate
+//! descent, and picks a model with GCV and e-BIC.
+//!
+//! ```bash
+//! cargo run --release --example solution_path
+//! ```
+
+use ssnal_en::data::{generate_synthetic, SyntheticSpec};
+use ssnal_en::path::{c_lambda_grid, PathOptions};
+use ssnal_en::solver::types::Algorithm;
+use ssnal_en::tuning::{tune, TuningOptions};
+use ssnal_en::util::table::Table;
+use ssnal_en::util::timer::time_it;
+
+fn main() -> anyhow::Result<()> {
+    // sim1 shape (scaled for an example): m=500, n₀=100 true features
+    let spec = SyntheticSpec { m: 500, n: 20_000, n0: 100, x_star: 5.0, snr: 5.0, seed: 7 };
+    println!("generating sim1-style instance ({}×{}) ...", spec.m, spec.n);
+    let prob = generate_synthetic(&spec);
+
+    // D.4 protocol: 100 log-spaced c_λ in [0.1, 1], stop at 100 active features
+    let mk_opts = |algorithm| PathOptions {
+        alpha: 0.8,
+        c_grid: c_lambda_grid(1.0, 0.1, 100),
+        max_active: 100,
+        tol: 1e-6,
+        algorithm,
+    };
+
+    let (path, secs) =
+        time_it(|| ssnal_en::path::solve_path(&prob.a, &prob.b, &mk_opts(Algorithm::SsnalEn)));
+    println!("\nSsNAL-EN path: {} points in {secs:.2}s (truncated = {})", path.runs, path.truncated);
+
+    let mut t = Table::new(&["c_lambda", "active", "outer", "inner"])
+        .with_title("path milestones (every 5th point)");
+    for p in path.points.iter().step_by(5) {
+        t.row(vec![
+            format!("{:.3}", p.c_lambda),
+            format!("{}", p.result.active_set.len()),
+            format!("{}", p.result.iterations),
+            format!("{}", p.result.inner_iterations),
+        ]);
+    }
+    t.print();
+
+    let (path_cd, secs_cd) = time_it(|| {
+        ssnal_en::path::solve_path(&prob.a, &prob.b, &mk_opts(Algorithm::CdCovariance))
+    });
+    println!(
+        "\nglmnet-style CD path: {} points in {secs_cd:.2}s → SsNAL-EN speedup ×{:.1}",
+        path_cd.runs,
+        secs_cd / secs
+    );
+
+    // tuning criteria on a coarser grid (GCV + e-BIC; CV optional and costly)
+    let topts = TuningOptions {
+        path: PathOptions { c_grid: c_lambda_grid(0.99, 0.1, 30), ..mk_opts(Algorithm::SsnalEn) },
+        cv_folds: 0,
+        cv_seed: 0,
+    };
+    let (tuned, secs_tune) = time_it(|| tune(&prob.a, &prob.b, &topts));
+    let g = &tuned.points[tuned.best_gcv];
+    let e = &tuned.points[tuned.best_ebic];
+    println!(
+        "\ntuning ({secs_tune:.2}s): gcv picks c={:.3} (r={}), e-bic picks c={:.3} (r={}) — truth n₀={}",
+        g.c_lambda, g.active, e.c_lambda, e.active, spec.n0
+    );
+    Ok(())
+}

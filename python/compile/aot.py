@@ -1,0 +1,96 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO text artifacts + manifest.json.
+
+This is the only place Python runs in the whole system, and it runs once
+(`make artifacts`). The interchange format is **HLO text**, not a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--shapes 200x4000,500x10240]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Default shapes: a small one for quick tests/examples and a bench-sized one.
+# n must be divisible by the kernel tile (512) for the Pallas BlockSpec.
+DEFAULT_SHAPES = [(200, 4096), (500, 10240)]
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def graph_specs(m: int, n: int):
+    """(name, function, example_args) for every graph, at shape (m, n)."""
+    at = jax.ShapeDtypeStruct((n, m), F32)
+    vec_m = jax.ShapeDtypeStruct((m,), F32)
+    vec_n = jax.ShapeDtypeStruct((n,), F32)
+    scalar = jax.ShapeDtypeStruct((), F32)
+    return [
+        ("dual_prox_grad", model.dual_prox_grad, (at, vec_m, vec_n, vec_m, scalar, scalar, scalar)),
+        ("hess_vec", model.hess_vec, (at, vec_n, scalar, vec_m)),
+        ("al_update", model.al_update, (vec_n, vec_n)),
+    ]
+
+
+def lower_all(shapes, out_dir: str, verbose: bool = True) -> dict:
+    """Lower every graph at every shape; write HLO files and the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"dtype": "f32", "artifacts": []}
+    for m, n in shapes:
+        for name, fn, args in graph_specs(m, n):
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            fname = f"{name}_{m}x{n}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append({"name": name, "m": m, "n": n, "file": fname})
+            if verbose:
+                print(f"  lowered {name} ({m}x{n}) -> {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote manifest with {len(manifest['artifacts'])} artifacts to {out_dir}")
+    return manifest
+
+
+def parse_shapes(text: str):
+    """Parse `200x4096,500x10240` into [(200, 4096), (500, 10240)]."""
+    shapes = []
+    for part in text.split(","):
+        ms, ns = part.lower().split("x")
+        shapes.append((int(ms), int(ns)))
+    return shapes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--shapes", default=None, help="comma list like 200x4096,500x10240")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    shapes = parse_shapes(args.shapes) if args.shapes else DEFAULT_SHAPES
+    lower_all(shapes, args.out_dir, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

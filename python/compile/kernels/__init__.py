@@ -1,0 +1,4 @@
+"""L1 Pallas kernels and their pure-jnp reference oracle."""
+
+from compile.kernels import ref  # noqa: F401
+from compile.kernels.prox_enet import dual_prox_sweep  # noqa: F401

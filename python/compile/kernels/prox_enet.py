@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: the fused dual-feasibility + prox sweep of SsNAL-EN.
+
+The solve-path hot spot over the huge n-dimension is
+
+    t    = x - sigma * (A^T y)        # the O(mn) dual sweep
+    u    = prox_{sigma p}(t)          # Eq. (6), scaled soft-threshold
+    mask = 1{|t| > sigma*lam1}        # the active set J (Eq. 17)
+
+This kernel fuses all three so `t` never round-trips to HBM. The n-axis is
+tiled with BlockSpec: each grid step loads one (bn, m) block of `at` (the
+transposed design) into VMEM, computes the block mat-vec on the MXU, and
+applies the elementwise prox in-register.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CPU BLAS
+`A^T y` becomes a VMEM-tiled MXU contraction; the prox/mask is the epilogue of
+the same tile. `interpret=True` everywhere — the CPU PJRT plugin cannot run
+Mosaic custom-calls; real-TPU efficiency is estimated in EXPERIMENTS.md §Perf.
+
+VMEM budget per grid step (f32): bn*m (at tile) + m (y) + 4*bn (x, t, u, mask)
+bytes*4. With bn=512, m=500: ~1.05 MB — comfortably inside the ~16 MB VMEM of a
+TPU core, leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default n-axis tile. Multiple of 128 (lane width); see VMEM budget above.
+DEFAULT_BLOCK_N = 512
+
+
+def _kernel(at_ref, y_ref, x_ref, scal_ref, t_ref, u_ref, mask_ref):
+    """One (bn,)-tile of the fused sweep.
+
+    scal_ref packs (sigma, lam1, lam2) as a length-3 vector so the penalty
+    parameters stay runtime inputs (the artifacts would otherwise bake them).
+    """
+    sigma = scal_ref[0]
+    lam1 = scal_ref[1]
+    lam2 = scal_ref[2]
+    # (bn, m) @ (m,) on the MXU
+    aty = jnp.dot(at_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+    t = x_ref[...] - sigma * aty
+    thr = sigma * lam1
+    scale = 1.0 / (1.0 + sigma * lam2)
+    u = jnp.sign(t) * jnp.maximum(jnp.abs(t) - thr, 0.0) * scale
+    t_ref[...] = t
+    u_ref[...] = u
+    mask_ref[...] = (jnp.abs(t) > thr).astype(t.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def dual_prox_sweep(at, x, y, sigma, lam1, lam2, *, block_n: int = DEFAULT_BLOCK_N):
+    """Fused `t = x - sigma*A^T y`, `u = prox_{sigma p}(t)`, `mask` via Pallas.
+
+    Args:
+      at: transposed design, shape (n, m). n must be divisible by `block_n`
+          (aot.py checks; pad the design if needed).
+      x:  multiplier iterate, shape (n,).
+      y:  dual iterate, shape (m,).
+      sigma, lam1, lam2: scalars (traced — stay runtime inputs in the HLO).
+      block_n: n-axis tile size.
+
+    Returns:
+      (t, u, mask), each shape (n,).
+    """
+    n, m = at.shape
+    if n % block_n != 0:
+        raise ValueError(f"n={n} must be divisible by block_n={block_n}")
+    grid = (n // block_n,)
+    scal = jnp.stack(
+        [
+            jnp.asarray(sigma, jnp.float32),
+            jnp.asarray(lam1, jnp.float32),
+            jnp.asarray(lam2, jnp.float32),
+        ]
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((n,), jnp.float32),  # t
+        jax.ShapeDtypeStruct((n,), jnp.float32),  # u
+        jax.ShapeDtypeStruct((n,), jnp.float32),  # mask
+    ]
+    vec_spec = pl.BlockSpec((block_n,), lambda i: (i,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),  # at tile
+            pl.BlockSpec((m,), lambda i: (0,)),  # y (replicated)
+            vec_spec,  # x tile
+            pl.BlockSpec((3,), lambda i: (0,)),  # scalars (replicated)
+        ],
+        out_specs=[vec_spec, vec_spec, vec_spec],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(at.astype(jnp.float32), y.astype(jnp.float32), x.astype(jnp.float32), scal)
+
+
+def vmem_bytes(block_n: int, m: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (used by the §Perf analysis)."""
+    tile = block_n * m          # at tile
+    vectors = m + 4 * block_n   # y + x/t/u/mask tiles
+    scalars = 3
+    return dtype_bytes * (tile + vectors + scalars)
+
+
+def mxu_utilization_estimate(block_n: int, m: int) -> float:
+    """Crude MXU utilization bound for the (bn, m) x (m,) contraction.
+
+    A mat-vec feeds only one column of the 128x128 MXU per pass, so the
+    theoretical ceiling is m/128 rounded-up occupancy over the systolic array;
+    what rescues throughput is that the sweep is bandwidth-bound: the figure of
+    merit is HBM bytes per FLOP, reported in EXPERIMENTS.md §Perf.
+    """
+    lanes = 128.0
+    return min(1.0, (m % 128 or 128) / lanes)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracle for the L1 Pallas kernel and the L2 graphs.
+
+These are the reference semantics — the closed forms of the paper's Eq. (3),
+(5), (6) and Proposition 2 — written in plain jax.numpy with no Pallas. The
+pytest suite asserts the Pallas kernel and the lowered HLO agree with these to
+float tolerance, and the Rust test-suite implements the same formulas in f64.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def soft_threshold(t, thr):
+    """Scalar/vector soft-thresholding operator (Eq. 5, left)."""
+    return jnp.sign(t) * jnp.maximum(jnp.abs(t) - thr, 0.0)
+
+
+def prox_enet(t, sigma, lam1, lam2):
+    """`prox_{sigma p}(t)` for the Elastic Net penalty (Eq. 6, left)."""
+    return soft_threshold(t, sigma * lam1) / (1.0 + sigma * lam2)
+
+
+def prox_enet_conj(t, sigma, lam1, lam2):
+    """`prox_{p*/sigma}(t/sigma)` (Eq. 6, right); `t` is the pre-division argument."""
+    thr = sigma * lam1
+    upper = (t * lam2 + lam1) / (1.0 + sigma * lam2)
+    lower = (t * lam2 - lam1) / (1.0 + sigma * lam2)
+    mid = t / sigma
+    return jnp.where(t >= thr, upper, jnp.where(t <= -thr, lower, mid))
+
+
+def active_mask(t, sigma, lam1):
+    """Indicator of the active set J = {j : |t_j| > sigma*lam1} (Eq. 17)."""
+    return (jnp.abs(t) > sigma * lam1).astype(t.dtype)
+
+
+def enet_penalty(x, lam1, lam2):
+    """`p(x) = lam1*||x||_1 + (lam2/2)*||x||_2^2`."""
+    return lam1 * jnp.sum(jnp.abs(x)) + 0.5 * lam2 * jnp.sum(x * x)
+
+
+def enet_conjugate(z, lam1, lam2):
+    """`p*(z)` (Proposition 1, Eq. 3). Requires lam2 > 0."""
+    d = soft_threshold(z, lam1)
+    return jnp.sum(d * d) / (2.0 * lam2)
+
+
+def h_star(y, b):
+    """`h*(y) = 0.5*||y||^2 + b^T y` for `h(u) = 0.5*||u - b||^2`."""
+    return 0.5 * jnp.sum(y * y) + jnp.dot(b, y)
+
+
+def dual_prox_sweep_ref(at, x, y, sigma, lam1, lam2):
+    """Reference for the fused L1 kernel: `t = x - sigma*A^T y`, prox, mask.
+
+    `at` is the transposed design (n, m) — see DESIGN.md (the Rust side passes
+    its column-major storage directly as a row-major (n, m) buffer).
+    """
+    t = x - sigma * (at @ y)
+    u = prox_enet(t, sigma, lam1, lam2)
+    mask = active_mask(t, sigma, lam1)
+    return t, u, mask
+
+
+def dual_prox_grad_ref(at, b, x, y, sigma, lam1, lam2):
+    """Reference for the L2 `dual_prox_grad` graph (Proposition 2 + Eq. 15).
+
+    Returns (grad_psi(y), u, mask, psi(y)).
+    """
+    t, u, mask = dual_prox_sweep_ref(at, x, y, sigma, lam1, lam2)
+    grad = y + b - u @ at  # A.u = at^T u = u @ at
+    psi = (
+        h_star(y, b)
+        + (1.0 + sigma * lam2) / (2.0 * sigma) * jnp.sum(u * u)
+        - jnp.sum(x * x) / (2.0 * sigma)
+    )
+    return grad, u, mask, psi
+
+
+def hess_vec_ref(at, mask, kappa, d):
+    """Reference for the L2 `hess_vec` graph: `(I + kappa*A_J A_J^T) d` (Eq. 18).
+
+    The active set enters through the 0/1 `mask` (Q's support, Eq. 17); the
+    `1/(1+sigma*lam2)` factor of Q is folded into `kappa = sigma/(1+sigma*lam2)`
+    by the caller.
+    """
+    atd = at @ d
+    return d + kappa * ((mask * atd) @ at)

@@ -1,0 +1,72 @@
+"""L2: the SsNAL-EN building blocks as JAX graphs (build-time only).
+
+Each function here is jitted and AOT-lowered by `aot.py` to HLO text; the Rust
+runtime (`rust/src/runtime/`) loads and executes the artifacts on the PJRT CPU
+client. The control flow (AL outer loop, SsN inner loop, CG, line search)
+lives in Rust — these graphs are the numerical building blocks, so they stay
+loop-free and shape-static.
+
+Conventions (shared with `rust/src/runtime/engine.rs`):
+  * the design is passed transposed (`at`, shape (n, m)) — the Rust side's
+    column-major storage is exactly this row-major buffer,
+  * all buffers are f32,
+  * functions return tuples (lowered with return_tuple=True).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.prox_enet import DEFAULT_BLOCK_N, dual_prox_sweep
+
+
+def dual_prox_grad(at, b, x, y, sigma, lam1, lam2):
+    """One fused evaluation of Proposition 2 / Eq. (15):
+
+        t     = x - sigma * A^T y          (L1 Pallas kernel)
+        u     = prox_{sigma p}(t)          (L1 Pallas kernel)
+        mask  = 1{|t| > sigma lam1}        (L1 Pallas kernel)
+        grad  = y + b - A u                (Eq. 15)
+        psi   = h*(y) + (1+sigma lam2)/(2 sigma) ||u||^2 - ||x||^2/(2 sigma)
+
+    Returns (grad, u, mask, psi).
+    """
+    n = at.shape[0]
+    block_n = DEFAULT_BLOCK_N if n % DEFAULT_BLOCK_N == 0 else _largest_tile(n)
+    _, u, mask = dual_prox_sweep(at, x, y, sigma, lam1, lam2, block_n=block_n)
+    grad = y + b - u @ at
+    psi = (
+        ref.h_star(y, b)
+        + (1.0 + sigma * lam2) / (2.0 * sigma) * jnp.sum(u * u)
+        - jnp.sum(x * x) / (2.0 * sigma)
+    )
+    return grad, u, mask, psi
+
+
+def hess_vec(at, mask, kappa, d):
+    """Generalized-Hessian mat-vec `(I + kappa A_J A_J^T) d` (Eq. 18).
+
+    Used by the matrix-free CG strategy on the PJRT backend. Returns a 1-tuple.
+    """
+    atd = at @ d
+    return (d + kappa * ((mask * atd) @ at),)
+
+
+def al_update(x, u):
+    """AL multiplier update (Moreau identity form of Eq. 10): x <- u, plus the
+    kkt3 residual numerator ||x - u||_2 the outer loop checks (Eq. 20; the
+    denominator's sigma and norm terms are cheap host-side scalars).
+
+    Returns (x_next, dist).
+    """
+    d = x - u
+    return (u, jnp.sqrt(jnp.sum(d * d)))
+
+
+def _largest_tile(n: int) -> int:
+    """Largest power-of-two tile (<= DEFAULT_BLOCK_N) dividing n."""
+    t = DEFAULT_BLOCK_N
+    while t > 1 and n % t != 0:
+        t //= 2
+    return t

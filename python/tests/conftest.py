@@ -1,0 +1,7 @@
+"""Test configuration: enable f64 (the closed-form identity tests need it;
+the Pallas kernel casts its own inputs to f32 regardless)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,100 @@
+"""Property-based sweeps (hypothesis) over the L1 kernel's shapes, dtypes and
+parameter space — the paper's prox identities must hold everywhere."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.prox_enet import dual_prox_sweep
+
+jax.config.update("jax_platform_name", "cpu")
+
+# keep each case small: interpret-mode Pallas is slow
+SHAPES = st.sampled_from([(128, 1), (128, 7), (256, 16), (512, 33), (256, 64)])
+POS = st.floats(min_value=1e-3, max_value=10.0, allow_nan=False)
+NONNEG = st.floats(min_value=0.0, max_value=10.0, allow_nan=False)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, sigma=POS, lam1=NONNEG, lam2=NONNEG, seed=SEEDS)
+def test_kernel_matches_oracle_everywhere(shape, sigma, lam1, lam2, seed):
+    n, m = shape
+    rng = np.random.default_rng(seed)
+    at = rng.standard_normal((n, m)).astype(np.float32)
+    x = (10.0 * rng.standard_normal(n)).astype(np.float32)
+    y = rng.standard_normal(m).astype(np.float32)
+    t, u, mask = dual_prox_sweep(at, x, y, sigma, lam1, lam2, block_n=128)
+    t2, u2, m2 = ref.dual_prox_sweep_ref(at, x, y, sigma, lam1, lam2)
+    scale = float(np.max(np.abs(np.asarray(t2)))) + 1.0
+    np.testing.assert_allclose(t, t2, rtol=1e-4, atol=1e-5 * scale)
+    np.testing.assert_allclose(u, u2, rtol=1e-4, atol=1e-5 * scale)
+    # masks may legitimately differ where |t| sits within f32 noise of the
+    # threshold; require agreement away from the boundary.
+    tt = np.asarray(t2)
+    thr = sigma * lam1
+    safe = np.abs(np.abs(tt) - thr) > 1e-3 * (1.0 + thr)
+    np.testing.assert_array_equal(np.asarray(mask)[safe], np.asarray(m2)[safe])
+
+
+@settings(max_examples=40, deadline=None)
+@given(sigma=POS, lam1=NONNEG, lam2=NONNEG, seed=SEEDS)
+def test_moreau_identity_random_parameters(sigma, lam1, lam2, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(64) * 5.0)
+    lhs = ref.prox_enet(x, sigma, lam1, lam2) + sigma * ref.prox_enet_conj(
+        x, sigma, lam1, lam2
+    )
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(x), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(sigma=POS, lam1=POS, lam2=POS, seed=SEEDS)
+def test_prox_is_minimizer(sigma, lam1, lam2, seed):
+    # prox_{sigma p}(t) minimizes p(v) + (1/2 sigma)||v - t||^2 (Eq. 4):
+    # compare against perturbations.
+    rng = np.random.default_rng(seed)
+    t = rng.standard_normal(16) * 3.0
+    star = np.asarray(ref.prox_enet(jnp.asarray(t), sigma, lam1, lam2))
+
+    def obj(v):
+        return (
+            lam1 * np.abs(v).sum()
+            + 0.5 * lam2 * (v * v).sum()
+            + ((v - t) ** 2).sum() / (2 * sigma)
+        )
+
+    f_star = obj(star)
+    for _ in range(8):
+        v = star + rng.standard_normal(16) * 0.1
+        assert f_star <= obj(v) + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(lam1=POS, lam2=POS, seed=SEEDS)
+def test_conjugate_dominates_linear_minus_penalty(lam1, lam2, seed):
+    # p*(z) >= x.z - p(x) for random x, z (Fenchel-Young).
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(8) * 2.0
+    z = rng.standard_normal(8) * 2.0
+    pstar = float(ref.enet_conjugate(jnp.asarray(z), lam1, lam2))
+    lin = float(np.dot(x, z)) - float(ref.enet_penalty(jnp.asarray(x), lam1, lam2))
+    assert pstar >= lin - 1e-8
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=SEEDS, kappa=POS)
+def test_hess_vec_symmetry(seed, kappa):
+    # V is symmetric: d1.V(d2) == d2.V(d1)
+    rng = np.random.default_rng(seed)
+    n, m = 128, 9
+    at = rng.standard_normal((n, m))
+    mask = (rng.random(n) < 0.25).astype(float)
+    d1 = rng.standard_normal(m)
+    d2 = rng.standard_normal(m)
+    v1 = np.asarray(ref.hess_vec_ref(at, mask, kappa, d1))
+    v2 = np.asarray(ref.hess_vec_ref(at, mask, kappa, d2))
+    np.testing.assert_allclose(np.dot(d1, v2), np.dot(d2, v1), rtol=1e-9)

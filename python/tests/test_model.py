@@ -1,0 +1,119 @@
+"""L2 correctness: the jitted graphs vs the oracle, gradients vs finite
+differences, and the internal consistency results of the paper (Prop. 2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def case(n=512, m=24, seed=0):
+    rng = np.random.default_rng(seed)
+    at = rng.standard_normal((n, m)).astype(np.float32)
+    b = rng.standard_normal(m).astype(np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(m).astype(np.float32)
+    return at, b, x, y
+
+
+class TestDualProxGrad:
+    def test_matches_reference(self):
+        at, b, x, y = case()
+        g, u, mask, psi = model.dual_prox_grad(at, b, x, y, 0.7, 0.9, 1.1)
+        g2, u2, m2, psi2 = ref.dual_prox_grad_ref(at, b, x, y, 0.7, 0.9, 1.1)
+        np.testing.assert_allclose(g, g2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(u, u2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(m2))
+        np.testing.assert_allclose(float(psi), float(psi2), rtol=1e-4)
+
+    def test_grad_is_dpsi_dy_finite_difference(self):
+        # psi is C^1 (paper Section 3.1) — check grad against central differences
+        # in f64 through the reference implementation.
+        rng = np.random.default_rng(1)
+        n, m = 64, 6
+        at = rng.standard_normal((n, m))
+        b = rng.standard_normal(m)
+        x = rng.standard_normal(n)
+        y = rng.standard_normal(m)
+        sigma, lam1, lam2 = 0.6, 0.8, 0.9
+
+        def psi_of(yv):
+            _, _, _, psi = ref.dual_prox_grad_ref(at, b, x, yv, sigma, lam1, lam2)
+            return float(psi)
+
+        grad, _, _, _ = ref.dual_prox_grad_ref(at, b, x, y, sigma, lam1, lam2)
+        eps = 1e-6
+        for i in range(m):
+            e = np.zeros(m)
+            e[i] = eps
+            fd = (psi_of(y + e) - psi_of(y - e)) / (2 * eps)
+            assert abs(fd - float(grad[i])) < 1e-4, f"coord {i}: {fd} vs {grad[i]}"
+
+    def test_psi_matches_lagrangian_definition(self):
+        # Prop 2 part 1: psi(y) = L_sigma(y | z_bar, x) with
+        # z_bar = prox_{p*/sigma}(x/sigma - A^T y). Check against the raw
+        # Lagrangian formula (7).
+        rng = np.random.default_rng(2)
+        n, m = 40, 5
+        at = rng.standard_normal((n, m))
+        b = rng.standard_normal(m)
+        x = rng.standard_normal(n)
+        y = rng.standard_normal(m)
+        sigma, lam1, lam2 = 1.3, 0.7, 0.5
+
+        t = x - sigma * (at @ y)
+        zbar = ref.prox_enet_conj(jnp.asarray(t), sigma, lam1, lam2)
+        aty = at @ y
+        constraint = aty + np.asarray(zbar)
+        lag = (
+            float(ref.h_star(jnp.asarray(y), jnp.asarray(b)))
+            + float(ref.enet_conjugate(zbar, lam1, lam2))
+            - float(np.dot(x, constraint))
+            + 0.5 * sigma * float(np.dot(constraint, constraint))
+        )
+        _, _, _, psi = ref.dual_prox_grad_ref(at, b, x, y, sigma, lam1, lam2)
+        np.testing.assert_allclose(lag, float(psi), rtol=1e-9)
+
+
+class TestHessVec:
+    def test_matches_reference(self):
+        at, _, _, y = case(seed=3)
+        n, m = at.shape
+        rng = np.random.default_rng(4)
+        mask = (rng.random(n) < 0.1).astype(np.float32)
+        d = rng.standard_normal(m).astype(np.float32)
+        (out,) = model.hess_vec(at, mask, 0.8, d)
+        expected = ref.hess_vec_ref(at, mask, 0.8, d)
+        np.testing.assert_allclose(out, expected, rtol=1e-4, atol=1e-4)
+
+    def test_empty_mask_is_identity(self):
+        at, _, _, _ = case(seed=5)
+        m = at.shape[1]
+        d = np.arange(m, dtype=np.float32)
+        (out,) = model.hess_vec(at, np.zeros(at.shape[0], np.float32), 0.8, d)
+        np.testing.assert_allclose(out, d, atol=1e-6)
+
+    def test_operator_is_spd(self):
+        # x^T V x >= ||x||^2 for any direction (V = I + kappa A_J A_J^T)
+        at, _, _, _ = case(n=128, m=10, seed=6)
+        rng = np.random.default_rng(7)
+        mask = (rng.random(128) < 0.3).astype(np.float32)
+        for _ in range(5):
+            d = rng.standard_normal(10).astype(np.float32)
+            (vd,) = model.hess_vec(at, mask, 1.7, d)
+            quad = float(np.dot(d, np.asarray(vd)))
+            assert quad >= float(np.dot(d, d)) * (1 - 1e-4)
+
+
+class TestAlUpdate:
+    def test_returns_u_and_distance(self):
+        x = np.ones(8, np.float32)
+        u = np.arange(8, dtype=np.float32)
+        out, dist = model.al_update(x, u)
+        np.testing.assert_array_equal(np.asarray(out), u)
+        expected = float(np.linalg.norm(x - u))
+        assert abs(float(dist) - expected) < 1e-5

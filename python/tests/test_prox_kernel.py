@@ -1,0 +1,131 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle and closed forms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.prox_enet import (
+    DEFAULT_BLOCK_N,
+    dual_prox_sweep,
+    mxu_utilization_estimate,
+    vmem_bytes,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_case(n, m, seed=0):
+    rng = np.random.default_rng(seed)
+    at = rng.standard_normal((n, m)).astype(np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(m).astype(np.float32)
+    return at, x, y
+
+
+class TestKernelVsReference:
+    @pytest.mark.parametrize("n,m", [(512, 16), (1024, 37), (2048, 200), (512, 1)])
+    def test_matches_reference(self, n, m):
+        at, x, y = random_case(n, m, seed=n + m)
+        t, u, mask = dual_prox_sweep(at, x, y, 0.5, 0.8, 1.2)
+        t2, u2, m2 = ref.dual_prox_sweep_ref(at, x, y, 0.5, 0.8, 1.2)
+        np.testing.assert_allclose(t, t2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(u, u2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(m2))
+
+    @pytest.mark.parametrize("block_n", [128, 256, 512])
+    def test_block_size_invariance(self, block_n):
+        at, x, y = random_case(1024, 50, seed=3)
+        t0, u0, m0 = dual_prox_sweep(at, x, y, 1.0, 1.0, 1.0, block_n=block_n)
+        t1, u1, m1 = dual_prox_sweep(at, x, y, 1.0, 1.0, 1.0, block_n=1024)
+        np.testing.assert_allclose(t0, t1, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(u0, u1, rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+
+    def test_rejects_indivisible_n(self):
+        at, x, y = random_case(1000, 10, seed=4)
+        with pytest.raises(ValueError, match="divisible"):
+            dual_prox_sweep(at, x, y, 1.0, 1.0, 1.0, block_n=DEFAULT_BLOCK_N)
+
+    def test_lambda_zero_reduces_to_dual_sweep(self):
+        # lam1 = lam2 = 0: u = t = x - sigma*A^T y, mask = |t| > 0
+        at, x, y = random_case(512, 20, seed=5)
+        t, u, mask = dual_prox_sweep(at, x, y, 0.9, 0.0, 0.0)
+        np.testing.assert_allclose(u, t, rtol=1e-6)
+        expected = x - 0.9 * (at @ y)
+        np.testing.assert_allclose(t, expected, rtol=1e-4, atol=1e-4)
+        assert np.all(np.asarray(mask) == (np.abs(np.asarray(t)) > 0))
+
+    def test_zero_y_keeps_x_dependency_only(self):
+        at, x, _ = random_case(512, 8, seed=6)
+        y = np.zeros(8, np.float32)
+        t, u, mask = dual_prox_sweep(at, x, y, 2.0, 0.5, 0.25)
+        np.testing.assert_allclose(t, x, atol=1e-6)
+        np.testing.assert_allclose(
+            u, np.asarray(ref.prox_enet(jnp.asarray(x), 2.0, 0.5, 0.25)), atol=1e-6
+        )
+        assert np.all(np.asarray(mask) == (np.abs(x) > 1.0))
+
+
+class TestProxClosedForms:
+    """The jnp oracle itself vs the paper's closed forms (f64 for exactness)."""
+
+    def test_prox_branches(self):
+        # sigma=lam1=lam2=1: prox(t) = (t -/+ 1)/2 outside [-1, 1], 0 inside
+        t = jnp.asarray([3.0, -3.0, 0.3, 1.0, -1.0], jnp.float64)
+        u = ref.prox_enet(t, 1.0, 1.0, 1.0)
+        np.testing.assert_allclose(u, [1.0, -1.0, 0.0, 0.0, 0.0])
+
+    def test_moreau_identity(self):
+        # x = prox_{sigma p}(x) + sigma * prox_{p*/sigma}(x/sigma)
+        x = jnp.linspace(-5, 5, 201)
+        sigma, lam1, lam2 = 0.8, 1.2, 0.6
+        lhs = ref.prox_enet(x, sigma, lam1, lam2) + sigma * ref.prox_enet_conj(
+            x, sigma, lam1, lam2
+        )
+        np.testing.assert_allclose(lhs, x, rtol=1e-6, atol=1e-6)
+
+    def test_conjugate_matches_proposition1(self):
+        z = jnp.asarray([2.0, 0.5, -3.0])
+        # lam1=lam2=1: p*(2)=0.5, p*(0.5)=0, p*(-3)=2
+        assert abs(float(ref.enet_conjugate(z[:1], 1.0, 1.0)) - 0.5) < 1e-6
+        assert float(ref.enet_conjugate(z[1:2], 1.0, 1.0)) == 0.0
+        assert abs(float(ref.enet_conjugate(z[2:], 1.0, 1.0)) - 2.0) < 1e-6
+
+    def test_fenchel_young(self):
+        lam1, lam2 = 1.1, 0.7
+        xs = jnp.linspace(-3, 3, 61)
+        zs = jnp.linspace(-3, 3, 61)
+        for xv in xs:
+            p = ref.enet_penalty(xv[None], lam1, lam2)
+            pstar = ref.enet_conjugate(zs, lam1, lam2)  # not per-z; do per-z below
+        # per-(x, z) check on a coarse grid
+        for xv in np.linspace(-3, 3, 13):
+            for zv in np.linspace(-3, 3, 13):
+                lhs = float(
+                    ref.enet_penalty(jnp.asarray([xv]), lam1, lam2)
+                    + ref.enet_conjugate(jnp.asarray([zv]), lam1, lam2)
+                )
+                assert lhs >= xv * zv - 1e-9
+
+    def test_prox_conj_is_gradient_consistent(self):
+        # For z = prox_{p*/sigma}(t/sigma):  t/sigma - z = grad p*(z)/sigma.
+        sigma, lam1, lam2 = 1.5, 1.0, 2.0
+        for tv in [-4.0, -1.5, 0.0, 1.4999, 1.5001, 4.0]:
+            t = jnp.asarray(tv, jnp.float64)
+            z = ref.prox_enet_conj(t, sigma, lam1, lam2)
+            grad_pstar = ref.soft_threshold(z, lam1) / lam2
+            np.testing.assert_allclose(
+                float(t / sigma - z), float(grad_pstar / sigma), atol=1e-10
+            )
+
+
+class TestPerfEstimators:
+    def test_vmem_budget_within_tpu_limits(self):
+        # the default tile at the bench shape must fit VMEM with 2x buffering
+        assert vmem_bytes(DEFAULT_BLOCK_N, 500) * 2 < 16 * 2**20
+
+    def test_mxu_estimate_bounds(self):
+        assert 0.0 < mxu_utilization_estimate(512, 500) <= 1.0
+        assert mxu_utilization_estimate(512, 128) == 1.0

@@ -1,0 +1,77 @@
+//! `cargo bench` — scaled-down versions of every paper table/figure runner
+//! (criterion is unavailable offline; this is a plain harness=false binary).
+//!
+//! Full-size reproductions run via the CLI (`ssnal-en bench-table1 ...`); this
+//! binary proves every row-generator works and gives quick comparative numbers
+//! on CI-sized instances. Output mirrors the paper's table structure.
+
+use ssnal_en::bench::tables;
+use ssnal_en::data::libsvm::ReferenceSet;
+use ssnal_en::data::snp::SnpSpec;
+use ssnal_en::util::timer::time_it;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let scale = if quick { 1 } else { 4 };
+
+    println!("== ssnal-en benchmark suite (scaled; see EXPERIMENTS.md for full sizes) ==\n");
+
+    // Figure 1 — analytic series (always instant)
+    let ((_, rows), secs) = time_it(|| tables::fig1_series(241));
+    println!("fig1: {} series points in {secs:.3}s\n", rows.len());
+
+    // Table 1 — sim1–3 across n
+    let ns: Vec<usize> = vec![2_000 * scale, 10_000 * scale];
+    let (t1, secs) = time_it(|| tables::table1(&ns, 200, 2020, 1e-6));
+    t1.print();
+    println!("(table1 took {secs:.1}s)\n");
+
+    // Table 2 — polynomial expansion (truncated)
+    let (t2, secs) =
+        time_it(|| tables::table2(&[ReferenceSet::Housing], 4_000 * scale, 2020, 1e-6));
+    t2.print();
+    println!("(table2 took {secs:.1}s)\n");
+
+    // Figure 2 + Table 3 — INSIGHT-style cohort (one phenotype, scaled)
+    let spec = SnpSpec {
+        m: 120,
+        n_snps: 2_000 * scale,
+        n_causal: 6,
+        dominant_effect: 1.5,
+        seed: 2020,
+        ..Default::default()
+    };
+    let (run, secs) = time_it(|| tables::insight_run(&spec, &[0.9, 0.6], 15, 0));
+    let hits = run.selected.iter().filter(|(s, _)| run.causal.contains(s)).count();
+    println!(
+        "insight (fig2+table3): {} curve rows, selected {} SNPs ({} causal) in {secs:.1}s\n",
+        run.curves.len(),
+        run.selected.len(),
+        hits
+    );
+
+    // Table D.1 — replication standard errors
+    let (d1, secs) = time_it(|| tables::table_d1(&[2_000 * scale], &[0.5], 200, 5, 1e-6));
+    d1.print();
+    println!("(d1 took {secs:.1}s)\n");
+
+    // Table D.2 — parameter sweeps (two panels)
+    let (d2, secs) = time_it(|| {
+        tables::table_d2(&[2_000 * scale], &[("m", 1000.0), ("alpha", 0.3)], 1e-6, 2020)
+    });
+    d2.print();
+    println!("(d2 took {secs:.1}s)\n");
+
+    // Table D.3 — screening solvers
+    let (d3, secs) =
+        time_it(|| tables::table_d3(&[(4_000 * scale, 200, 50)], &[0.9, 0.5, 0.3], 1e-6, 2020));
+    d3.print();
+    println!("(d3 took {secs:.1}s)\n");
+
+    // Table D.4 — solution paths
+    let (d4, secs) = time_it(|| tables::table_d4(&[5_000 * scale], &[0.8], 200, 40, 1e-6, 2020));
+    d4.print();
+    println!("(d4 took {secs:.1}s)\n");
+
+    println!("== benchmark suite complete ==");
+}

@@ -1,0 +1,71 @@
+//! Measurement harness (criterion is unavailable offline).
+//!
+//! Times closures with optional warmup and repetition, reporting
+//! mean ± standard error like the paper's Supplement D.1.
+
+use crate::util::timer::{stats, Stats, Stopwatch};
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasureConfig {
+    /// Untimed warmup runs.
+    pub warmup: usize,
+    /// Timed repetitions.
+    pub reps: usize,
+}
+
+impl Default for MeasureConfig {
+    fn default() -> Self {
+        Self { warmup: 0, reps: 1 }
+    }
+}
+
+/// Time `f` per the config; the closure's output is returned from the last run
+/// (and black-boxed so the optimizer cannot elide the work).
+pub fn measure<T>(config: MeasureConfig, mut f: impl FnMut() -> T) -> (Stats, T) {
+    for _ in 0..config.warmup {
+        std::hint::black_box(f());
+    }
+    assert!(config.reps >= 1);
+    let mut samples = Vec::with_capacity(config.reps);
+    let mut out = None;
+    for _ in 0..config.reps {
+        let sw = Stopwatch::new();
+        let v = f();
+        samples.push(sw.elapsed_s());
+        out = Some(std::hint::black_box(v));
+    }
+    (stats(&samples), out.expect("reps >= 1"))
+}
+
+/// Time a single run.
+pub fn measure_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let sw = Stopwatch::new();
+    let v = f();
+    (sw.elapsed_s(), v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_runs_expected_times() {
+        let mut calls = 0;
+        let (st, v) = measure(MeasureConfig { warmup: 2, reps: 3 }, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 5);
+        assert_eq!(v, 5);
+        assert_eq!(st.n, 3);
+        assert!(st.mean >= 0.0);
+    }
+
+    #[test]
+    fn measure_once_returns_value() {
+        let (t, v) = measure_once(|| 7);
+        assert_eq!(v, 7);
+        assert!(t >= 0.0);
+    }
+}

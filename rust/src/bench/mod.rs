@@ -1,0 +1,8 @@
+//! Benchmark harness: measurement utilities plus one runner per paper
+//! table/figure (see `tables`). The CLI (`ssnal-en bench-*`) runs full-size
+//! versions; `cargo bench` (rust/benches/bench_main.rs) runs scaled-down ones.
+
+pub mod harness;
+pub mod tables;
+
+pub use harness::{measure, measure_once, MeasureConfig};

@@ -1,0 +1,656 @@
+//! One runner per table/figure of the paper (see DESIGN.md §3 for the index).
+//!
+//! Each runner is parameterized by problem sizes so that `cargo bench` can run
+//! scaled-down versions while the CLI (`ssnal-en bench-*`) runs the full-size
+//! reproductions. All runners print the same row structure as the paper's
+//! tables and return the [`Table`] for capture into EXPERIMENTS.md.
+
+use crate::bench::harness::{measure, MeasureConfig};
+use crate::data::libsvm::ReferenceSet;
+use crate::data::snp::{generate as generate_snp, SnpSpec};
+use crate::data::{generate_synthetic, rho_hat, standardize, SyntheticSpec};
+use crate::linalg::Mat;
+use crate::path::{c_lambda_grid, first_reaching_active, solve_path, PathOptions};
+use crate::prox;
+use crate::solver::types::{Algorithm, EnetProblem, SsnalOptions};
+use crate::solver::{solve_with, ssnal};
+use crate::tuning::{tune, TuningOptions};
+use crate::util::table::{fmt_secs, fmt_secs_iters, Table};
+
+/// Find the largest `c_λ` whose solution has ≥ `target` active features
+/// (paper: "we select the largest c_λ which gives a solution with n₀ active
+/// components"), by walking a descending grid with warm starts.
+pub fn c_lambda_for_active(
+    a: &Mat,
+    b: &[f64],
+    alpha: f64,
+    target: usize,
+    grid_points: usize,
+) -> (f64, f64, f64) {
+    let opts = PathOptions {
+        alpha,
+        c_grid: c_lambda_grid(0.99, 0.01, grid_points),
+        max_active: target,
+        tol: 1e-4, // scouting pass only
+        algorithm: Algorithm::SsnalEn,
+    };
+    let path = solve_path(a, b, &opts);
+    let idx = first_reaching_active(&path, target).unwrap_or(path.points.len() - 1);
+    let pt = &path.points[idx];
+    (pt.c_lambda, pt.lam1, pt.lam2)
+}
+
+/// Time one `(algorithm, λ)` cell; returns `(seconds, iterations, active)`.
+fn time_solver(
+    a: &Mat,
+    b: &[f64],
+    lam1: f64,
+    lam2: f64,
+    algo: Algorithm,
+    tol: f64,
+) -> (f64, usize, usize) {
+    let p = EnetProblem::new(a, b, lam1, lam2);
+    let (stats, res) = measure(MeasureConfig::default(), || solve_with(&p, algo, tol));
+    (stats.mean, res.iterations, res.active_set.len())
+}
+
+// ---------------------------------------------------------------------------
+// Figure 1 — penalty/conjugate/prox curves
+// ---------------------------------------------------------------------------
+
+/// Regenerate Figure 1's series on a grid over [−3, 3] with λ1 = λ2 = σ = 1.
+/// Returns (header, rows) ready for CSV.
+pub fn fig1_series(points: usize) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let (lam1, lam2, sigma) = (1.0, 1.0, 1.0);
+    let header = vec![
+        "x",
+        "lasso_penalty",
+        "lasso_conjugate",
+        "enet_penalty",
+        "enet_conjugate",
+        "lasso_prox",
+        "lasso_prox_conj",
+        "enet_prox",
+        "enet_prox_conj",
+    ];
+    let mut rows = Vec::with_capacity(points);
+    for k in 0..points {
+        let x = -3.0 + 6.0 * k as f64 / (points - 1) as f64;
+        let lasso_pen = lam1 * x.abs();
+        let lasso_conj = if x.abs() <= lam1 { 0.0 } else { f64::INFINITY };
+        let enet_pen = prox::enet_penalty(&[x], lam1, lam2);
+        let enet_conj = prox::enet_conjugate(&[x], lam1, lam2);
+        let lasso_prox = prox::soft_threshold(x, sigma * lam1);
+        let lasso_prox_conj = if x >= sigma * lam1 {
+            lam1
+        } else if x <= -sigma * lam1 {
+            -lam1
+        } else {
+            x / sigma
+        };
+        let enet_prox = prox::prox_enet_scalar(x, sigma, lam1, lam2);
+        let enet_prox_conj = prox::prox_enet_conj_scalar(x, sigma, lam1, lam2);
+        rows.push(vec![
+            format!("{x:.4}"),
+            format!("{lasso_pen:.6}"),
+            if lasso_conj.is_finite() { format!("{lasso_conj:.6}") } else { "inf".into() },
+            format!("{enet_pen:.6}"),
+            format!("{enet_conj:.6}"),
+            format!("{lasso_prox:.6}"),
+            format!("{lasso_prox_conj:.6}"),
+            format!("{enet_prox:.6}"),
+            format!("{enet_prox_conj:.6}"),
+        ]);
+    }
+    (header, rows)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — CPU time on sim1–3 across n
+// ---------------------------------------------------------------------------
+
+/// Table 1: for each scenario (sim1–3) and each n, time the CD baselines
+/// (glmnet-like, sklearn-like) and SsNAL-EN at the c_λ giving n₀ active.
+pub fn table1(ns: &[usize], m: usize, seed: u64, tol: f64) -> Table {
+    let mut t = Table::new(&[
+        "scenario",
+        "n",
+        "rho_hat",
+        "cd-cov(glmnet)",
+        "cd-naive(sklearn)",
+        "ssnal-en",
+    ])
+    .with_title("Table 1: CPU time (s); ssnal-en shows (outer iterations)");
+    for scenario in 1..=3usize {
+        let alpha = match scenario {
+            1 => 0.6,
+            2 => 0.75,
+            _ => 0.9,
+        };
+        for &n in ns {
+            let mut spec = SyntheticSpec::sim(scenario, n, seed + n as u64);
+            spec.m = m;
+            spec.n0 = spec.n0.min(n / 4).max(1);
+            let prob = generate_synthetic(&spec);
+            let rho = rho_hat(&prob.a, 20, 0);
+            let (_c, lam1, lam2) = c_lambda_for_active(&prob.a, &prob.b, alpha, spec.n0, 25);
+            let (t_cov, _, _) =
+                time_solver(&prob.a, &prob.b, lam1, lam2, Algorithm::CdCovariance, tol);
+            let (t_naive, _, _) =
+                time_solver(&prob.a, &prob.b, lam1, lam2, Algorithm::CdNaive, tol);
+            let (t_ssnal, iters, _) =
+                time_solver(&prob.a, &prob.b, lam1, lam2, Algorithm::SsnalEn, tol);
+            t.row(vec![
+                format!("sim{scenario}"),
+                format!("{n}"),
+                format!("{rho:.1}"),
+                fmt_secs(t_cov),
+                fmt_secs(t_naive),
+                fmt_secs_iters(t_ssnal, iters),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — polynomial-expansion reference datasets
+// ---------------------------------------------------------------------------
+
+/// Table 2: synthesized base tables → real polynomial expansion → standardize →
+/// time solvers at the c_λ giving r ∈ {20, 5} active, α ∈ {0.8, 0.5}.
+/// `max_n` truncates the expansion (0 = the paper's full feature count).
+pub fn table2(sets: &[ReferenceSet], max_n: usize, seed: u64, tol: f64) -> Table {
+    let mut t = Table::new(&[
+        "dataset",
+        "m",
+        "n",
+        "rho_hat",
+        "alpha",
+        "r",
+        "cd-cov(glmnet)",
+        "cd-naive(sklearn)",
+        "ssnal-en",
+    ])
+    .with_title("Table 2: CPU time (s) on polynomial-expansion datasets");
+    for &set in sets {
+        let (name, _, _, order) = set.spec();
+        let base = crate::data::libsvm::synthesize_base(set, seed);
+        let (clean, _) = crate::data::polyexp::drop_constant_columns(&base.a, 1e-9);
+        let (expanded, _) = crate::data::polyexp::expand(&clean, order, max_n);
+        let std = standardize(&expanded);
+        let (b, _) = crate::data::center(&base.b);
+        let rho = rho_hat(&std.a, 20, 0);
+        for &alpha in &[0.8, 0.5] {
+            for &target_r in &[20usize, 5] {
+                let (_c, lam1, lam2) = c_lambda_for_active(&std.a, &b, alpha, target_r, 30);
+                let (t_cov, _, _) =
+                    time_solver(&std.a, &b, lam1, lam2, Algorithm::CdCovariance, tol);
+                let (t_naive, _, _) =
+                    time_solver(&std.a, &b, lam1, lam2, Algorithm::CdNaive, tol);
+                let (t_ssnal, iters, r_got) =
+                    time_solver(&std.a, &b, lam1, lam2, Algorithm::SsnalEn, tol);
+                t.row(vec![
+                    name.to_string(),
+                    format!("{}", std.a.rows()),
+                    format!("{}", std.a.cols()),
+                    format!("{rho:.0}"),
+                    format!("{alpha}"),
+                    format!("{r_got}"),
+                    fmt_secs(t_cov),
+                    fmt_secs(t_naive),
+                    fmt_secs_iters(t_ssnal, iters),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2 + Table 3 — INSIGHT GWAS (simulated cohorts)
+// ---------------------------------------------------------------------------
+
+/// Output of the INSIGHT-substitute experiment for one phenotype.
+pub struct InsightRun {
+    /// Criteria curves: (alpha, c_lambda, active, gcv, ebic, cv?) rows — Fig. 2.
+    pub curves: Vec<Vec<String>>,
+    /// Selected SNPs at the e-BIC optimum: (snp, de-biased coefficient) — Table 3.
+    pub selected: Vec<(String, f64)>,
+    /// True causal SNPs (ground truth the paper cannot have).
+    pub causal: Vec<String>,
+}
+
+/// Column header for [`InsightRun::curves`].
+pub const INSIGHT_CURVE_HEADER: [&str; 6] = ["alpha", "c_lambda", "active", "gcv", "ebic", "cv"];
+
+/// Run the GWAS tuning experiment for one simulated cohort.
+pub fn insight_run(
+    spec: &SnpSpec,
+    alphas: &[f64],
+    grid_points: usize,
+    cv_folds: usize,
+) -> InsightRun {
+    let cohort = generate_snp(spec);
+    let mut curves = Vec::new();
+    let mut best: Option<(f64, Vec<usize>)> = None; // (ebic, active set)
+    for &alpha in alphas {
+        let topts = TuningOptions {
+            path: PathOptions {
+                alpha,
+                c_grid: c_lambda_grid(0.99, 0.05, grid_points),
+                max_active: 40,
+                tol: 1e-5,
+                algorithm: Algorithm::SsnalEn,
+            },
+            cv_folds,
+            cv_seed: spec.seed,
+        };
+        let tr = tune(&cohort.a, &cohort.b, &topts);
+        for p in &tr.points {
+            curves.push(vec![
+                format!("{alpha}"),
+                format!("{:.4}", p.c_lambda),
+                format!("{}", p.active),
+                format!("{:.6}", p.gcv),
+                format!("{:.6}", p.ebic),
+                p.cv.map(|v| format!("{v:.6}")).unwrap_or_else(|| "NA".into()),
+            ]);
+        }
+        let bp = &tr.points[tr.best_ebic];
+        let active = tr.path.points[tr.best_ebic].result.active_set.clone();
+        if best.as_ref().map(|(e, _)| bp.ebic < *e).unwrap_or(true) {
+            best = Some((bp.ebic, active));
+        }
+    }
+    let (_, active) = best.expect("at least one alpha");
+    // de-biased coefficients on the selected set (paper Table 3 reports x̂)
+    let coefs = crate::linalg::lstsq::ridge_on_support(&cohort.a, &active, &cohort.b, 0.0);
+    let selected: Vec<(String, f64)> = active
+        .iter()
+        .zip(coefs.iter())
+        .map(|(&j, &c)| (cohort.snp_names[j].clone(), c))
+        .collect();
+    let causal = cohort.causal.iter().map(|&j| cohort.snp_names[j].clone()).collect();
+    InsightRun { curves, selected, causal }
+}
+
+// ---------------------------------------------------------------------------
+// Table D.1 — replication standard errors
+// ---------------------------------------------------------------------------
+
+/// Table D.1: mean ± se over `reps` replications of sim1 at fixed c_λ.
+pub fn table_d1(ns: &[usize], c_lambdas: &[f64], m: usize, reps: usize, tol: f64) -> Table {
+    assert_eq!(ns.len(), c_lambdas.len());
+    let title = format!("Table D.1: mean (se) seconds over {reps} replications of sim1");
+    let mut t = Table::new(&["n", "c_lambda", "cd-cov(glmnet)", "cd-naive(sklearn)", "ssnal-en"])
+        .with_title(&title);
+    let alpha = 0.6;
+    for (k, &n) in ns.iter().enumerate() {
+        let c = c_lambdas[k];
+        let mut times: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for rep in 0..reps {
+            let mut spec = SyntheticSpec::sim(1, n, 1000 + rep as u64);
+            spec.m = m;
+            spec.n0 = spec.n0.min(n / 4).max(1);
+            let prob = generate_synthetic(&spec);
+            let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, alpha);
+            let (lam1, lam2) = EnetProblem::lambdas_from_alpha(alpha, c, lmax);
+            for (i, algo) in [Algorithm::CdCovariance, Algorithm::CdNaive, Algorithm::SsnalEn]
+                .iter()
+                .enumerate()
+            {
+                let (secs, _, _) = time_solver(&prob.a, &prob.b, lam1, lam2, *algo, tol);
+                times[i].push(secs);
+            }
+        }
+        let fmt = |s: &[f64]| {
+            let st = crate::util::timer::stats(s);
+            format!("{:.3}({:.3})", st.mean, st.se)
+        };
+        t.row(vec![
+            format!("{n}"),
+            format!("{c}"),
+            fmt(&times[0]),
+            fmt(&times[1]),
+            fmt(&times[2]),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table D.2 — parameter sweeps (m, snr, α, x*)
+// ---------------------------------------------------------------------------
+
+/// Table D.2: one panel per varied parameter; base (n₀=5, m=500, snr=5, α=0.9, x*=5).
+pub fn table_d2(ns: &[usize], panels: &[(&str, f64)], tol: f64, seed: u64) -> Table {
+    let mut t = Table::new(&["panel", "n", "cd-cov(glmnet)", "cd-naive(sklearn)", "ssnal-en"])
+        .with_title("Table D.2: parameter sweeps (base: n0=5, m=500, snr=5, alpha=0.9, x*=5)");
+    for &(param, value) in panels {
+        for &n in ns {
+            let mut m = 500usize;
+            let mut snr = 5.0;
+            let mut alpha = 0.9;
+            let mut x_star = 5.0;
+            match param {
+                "m" => m = value as usize,
+                "snr" => snr = value,
+                "alpha" => alpha = value,
+                "x*" => x_star = value,
+                other => panic!("unknown panel {other}"),
+            }
+            let spec = SyntheticSpec { m, n, n0: 5.min(n), x_star, snr, seed: seed + n as u64 };
+            let prob = generate_synthetic(&spec);
+            let (_c, lam1, lam2) = c_lambda_for_active(&prob.a, &prob.b, alpha, spec.n0, 25);
+            let (t_cov, _, _) =
+                time_solver(&prob.a, &prob.b, lam1, lam2, Algorithm::CdCovariance, tol);
+            let (t_naive, _, _) =
+                time_solver(&prob.a, &prob.b, lam1, lam2, Algorithm::CdNaive, tol);
+            let (t_ssnal, iters, _) =
+                time_solver(&prob.a, &prob.b, lam1, lam2, Algorithm::SsnalEn, tol);
+            t.row(vec![
+                format!("{param}={value}"),
+                format!("{n}"),
+                fmt_secs(t_cov),
+                fmt_secs(t_naive),
+                fmt_secs_iters(t_ssnal, iters),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table D.3 — screening solvers comparison
+// ---------------------------------------------------------------------------
+
+/// Table D.3: scenarios × sparsity levels × all solver families, α = 0.999,
+/// σ⁰ = 1 ×10 for SsNAL-EN (the paper's screening-study schedule).
+pub fn table_d3(
+    scenarios: &[(usize, usize, usize)],
+    c_lambdas: &[f64],
+    tol: f64,
+    seed: u64,
+) -> Table {
+    let mut t = Table::new(&[
+        "scenario", "c_lambda", "r", "cd-cov", "gap-safe", "cd-naive", "celer", "ssnal-en",
+    ])
+    .with_title("Table D.3: CPU time (s) vs screening solvers (alpha=0.999)");
+    let alpha = 0.999;
+    for &(n, m, n0) in scenarios {
+        let spec = SyntheticSpec { m, n, n0, x_star: 5.0, snr: 5.0, seed };
+        let prob = generate_synthetic(&spec);
+        let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, alpha);
+        for &c in c_lambdas {
+            let (lam1, lam2) = EnetProblem::lambdas_from_alpha(alpha, c, lmax);
+            let p = EnetProblem::new(&prob.a, &prob.b, lam1, lam2);
+            // SsNAL with the screening-study σ schedule
+            let (st, res_ssnal) = measure(MeasureConfig::default(), || {
+                ssnal::solve(&p, &SsnalOptions { tol, ..SsnalOptions::screening_sigma() })
+            });
+            let t_ssnal = st.mean;
+            let r = res_ssnal.active_set.len();
+            let (t_cov, _, _) =
+                time_solver(&prob.a, &prob.b, lam1, lam2, Algorithm::CdCovariance, tol);
+            let (t_gs, _, _) = time_solver(&prob.a, &prob.b, lam1, lam2, Algorithm::CdGapSafe, tol);
+            let (t_naive, _, _) =
+                time_solver(&prob.a, &prob.b, lam1, lam2, Algorithm::CdNaive, tol);
+            let (t_celer, _, _) = time_solver(&prob.a, &prob.b, lam1, lam2, Algorithm::Celer, tol);
+            t.row(vec![
+                format!("n={n},m={m},n0={n0}"),
+                format!("{c}"),
+                format!("{r}"),
+                fmt_secs(t_cov),
+                fmt_secs(t_gs),
+                fmt_secs(t_naive),
+                fmt_secs(t_celer),
+                fmt_secs(t_ssnal),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table D.4 — solution-path timing
+// ---------------------------------------------------------------------------
+
+/// Table D.4: full warm-started path (log-spaced c_λ from 1 to 0.1, truncated
+/// at 100 active), for SsNAL-EN and the CD drivers; the Gap-Safe column is the
+/// biglasso stand-in (screened CD per point).
+pub fn table_d4(
+    ns: &[usize],
+    alphas: &[f64],
+    m: usize,
+    grid_points: usize,
+    tol: f64,
+    seed: u64,
+) -> Table {
+    let mut t = Table::new(&[
+        "alpha",
+        "n",
+        "runs",
+        "cd-cov(glmnet)",
+        "cd-naive(sklearn)",
+        "gap-safe(biglasso)",
+        "ssnal-en",
+    ])
+    .with_title("Table D.4: solution-path CPU time (s), truncated at 100 active");
+    for &alpha in alphas {
+        for &n in ns {
+            let mut spec = SyntheticSpec::sim(1, n, seed + n as u64);
+            spec.m = m;
+            spec.n0 = spec.n0.min(n / 4).max(1);
+            let prob = generate_synthetic(&spec);
+            let grid = c_lambda_grid(1.0, 0.1, grid_points);
+            let max_active = 100.min(n / 2);
+            let popts = |algorithm| PathOptions {
+                alpha,
+                c_grid: grid.clone(),
+                max_active,
+                tol,
+                algorithm,
+            };
+            let (st_ssnal, path_ssnal) = measure(MeasureConfig::default(), || {
+                solve_path(&prob.a, &prob.b, &popts(Algorithm::SsnalEn))
+            });
+            let (st_cov, _) = measure(MeasureConfig::default(), || {
+                solve_path(&prob.a, &prob.b, &popts(Algorithm::CdCovariance))
+            });
+            let (st_naive, _) = measure(MeasureConfig::default(), || {
+                solve_path(&prob.a, &prob.b, &popts(Algorithm::CdNaive))
+            });
+            // gap-safe "path": screened CD per explored grid point (no warm
+            // start across points — biglasso-style safe rules recomputed per λ)
+            let (st_gs, _) = measure(MeasureConfig::default(), || {
+                let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, alpha);
+                let mut count = 0;
+                for &c in grid.iter() {
+                    let (l1, l2) = EnetProblem::lambdas_from_alpha(alpha, c, lmax);
+                    let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+                    let r = solve_with(&p, Algorithm::CdGapSafe, tol);
+                    count += 1;
+                    if r.active_set.len() >= max_active || count >= path_ssnal.runs {
+                        break;
+                    }
+                }
+            });
+            t.row(vec![
+                format!("{alpha}"),
+                format!("{n}"),
+                format!("{}", path_ssnal.runs),
+                fmt_secs(st_cov.mean),
+                fmt_secs(st_naive.mean),
+                fmt_secs(st_gs.mean),
+                fmt_secs(st_ssnal.mean),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_series_shape_and_kinks() {
+        let (header, rows) = fig1_series(61);
+        assert_eq!(header.len(), 9);
+        assert_eq!(rows.len(), 61);
+        // at x=0 proxes are 0
+        let mid = &rows[30];
+        assert_eq!(mid[0], "0.0000");
+        assert_eq!(mid[5], "0.000000"); // lasso prox
+        assert_eq!(mid[7], "0.000000"); // enet prox
+        // at x=3: enet prox = (3−1)/2 = 1, conj prox = (3·1+1)/2 = 2
+        let last = rows.last().unwrap();
+        assert_eq!(last[7], "1.000000");
+        assert_eq!(last[8], "2.000000");
+        // lasso conjugate is infinite outside [−1, 1]
+        assert_eq!(last[2], "inf");
+    }
+
+    #[test]
+    fn c_lambda_for_active_hits_target() {
+        let prob = generate_synthetic(&SyntheticSpec {
+            m: 60,
+            n: 300,
+            n0: 8,
+            x_star: 5.0,
+            snr: 10.0,
+            seed: 5,
+        });
+        let (c, lam1, lam2) = c_lambda_for_active(&prob.a, &prob.b, 0.8, 8, 25);
+        assert!(c > 0.0 && c < 1.0);
+        let p = EnetProblem::new(&prob.a, &prob.b, lam1, lam2);
+        let res = solve_with(&p, Algorithm::SsnalEn, 1e-6);
+        assert!(res.active_set.len() >= 8, "active {}", res.active_set.len());
+        assert!(res.active_set.len() <= 24, "not wildly over target");
+    }
+
+    #[test]
+    fn table1_tiny_runs() {
+        let t = table1(&[500], 60, 7, 1e-6);
+        assert_eq!(t.len(), 3); // 3 scenarios × 1 n
+    }
+
+    #[test]
+    fn table_d3_tiny_runs() {
+        let t = table_d3(&[(400, 50, 20)], &[0.9, 0.5], 1e-6, 3);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn insight_tiny_runs() {
+        let spec = SnpSpec {
+            m: 60,
+            n_snps: 400,
+            n_causal: 3,
+            dominant_effect: 2.0,
+            noise_sd: 0.5,
+            seed: 11,
+            ..Default::default()
+        };
+        let run = insight_run(&spec, &[0.9], 10, 0);
+        assert!(!run.curves.is_empty());
+        assert!(!run.selected.is_empty());
+        assert_eq!(run.causal.len(), 3);
+        // the dominant causal SNP should be selected
+        assert!(
+            run.selected.iter().any(|(name, _)| name == &run.causal[0]),
+            "dominant SNP not selected: selected={:?} causal={:?}",
+            run.selected,
+            run.causal
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ablations — design choices called out in DESIGN.md
+// ---------------------------------------------------------------------------
+
+/// Ablation A: Newton-system strategy (direct vs Woodbury vs CG vs the cost
+/// model's Auto) across sparsity regimes. Validates the §Perf cost model.
+pub fn ablation_newton(n: usize, m: usize, tol: f64, seed: u64) -> Table {
+    use crate::solver::types::NewtonStrategy;
+    let mut t = Table::new(&["c_lambda", "r", "direct", "woodbury", "cg", "auto"])
+        .with_title("Ablation A: Newton-system strategy, CPU time (s)");
+    let spec = SyntheticSpec { m, n, n0: m / 5, x_star: 5.0, snr: 5.0, seed };
+    let prob = generate_synthetic(&spec);
+    let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, 0.8);
+    for &c in &[0.9, 0.5, 0.2] {
+        let (lam1, lam2) = EnetProblem::lambdas_from_alpha(0.8, c, lmax);
+        let p = EnetProblem::new(&prob.a, &prob.b, lam1, lam2);
+        let mut row = vec![format!("{c}")];
+        let mut r_seen = 0usize;
+        let mut cells = Vec::new();
+        for strat in [
+            NewtonStrategy::Direct,
+            NewtonStrategy::Woodbury,
+            NewtonStrategy::ConjugateGradient,
+            NewtonStrategy::Auto,
+        ] {
+            let opts = SsnalOptions {
+                tol,
+                strategy: strat,
+                max_outer: 20,
+                max_inner: 40,
+                cg_max_iters: 200,
+                ..Default::default()
+            };
+            let (stats, res) = measure(MeasureConfig::default(), || ssnal::solve(&p, &opts));
+            r_seen = res.active_set.len();
+            cells.push(fmt_secs(stats.mean));
+        }
+        row.push(format!("{r_seen}"));
+        row.extend(cells);
+        t.row(row);
+    }
+    t
+}
+
+/// Ablation B: σ schedule sensitivity — the paper's §4.1 remark ("smaller σ⁰
+/// needs more iterations; too large σ⁰ fails to converge to the optimum").
+pub fn ablation_sigma(n: usize, m: usize, tol: f64, seed: u64) -> Table {
+    let mut t = Table::new(&["sigma0", "mult", "time", "outer", "inner", "converged", "obj_gap"])
+        .with_title("Ablation B: sigma schedule (paper default: 5e-3, x5)");
+    let spec = SyntheticSpec { m, n, n0: 20, x_star: 5.0, snr: 5.0, seed };
+    let prob = generate_synthetic(&spec);
+    let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, 0.8);
+    let (lam1, lam2) = EnetProblem::lambdas_from_alpha(0.8, 0.3, lmax);
+    let p = EnetProblem::new(&prob.a, &prob.b, lam1, lam2);
+    // reference objective from the default schedule at tight tolerance
+    let reference = ssnal::solve(&p, &SsnalOptions { tol: 1e-10, ..Default::default() });
+    for &(s0, mult) in &[
+        (5e-5, 5.0),
+        (5e-4, 5.0),
+        (5e-3, 5.0),
+        (5e-2, 5.0),
+        (1.0, 10.0),
+        (1e2, 10.0),
+    ] {
+        let opts = SsnalOptions {
+            tol,
+            sigma0: s0,
+            sigma_mult: mult,
+            max_outer: 25,
+            max_inner: 40,
+            cg_max_iters: 200,
+            ..Default::default()
+        };
+        let (stats, res) = measure(MeasureConfig::default(), || ssnal::solve(&p, &opts));
+        t.row(vec![
+            format!("{s0:.0e}"),
+            format!("{mult}"),
+            fmt_secs(stats.mean),
+            format!("{}", res.iterations),
+            format!("{}", res.inner_iterations),
+            format!("{}", res.converged),
+            format!("{:.2e}", (res.objective - reference.objective).abs()
+                / (1.0 + reference.objective)),
+        ]);
+    }
+    t
+}

@@ -1,0 +1,93 @@
+//! Coordinator configuration.
+
+use crate::solver::types::{NewtonStrategy, SsnalOptions};
+use std::path::PathBuf;
+
+/// Which execution backend runs the SsNAL-EN inner computations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust f64 kernels (default; fastest on this CPU testbed).
+    Native,
+    /// AOT-compiled JAX + Pallas graphs executed via PJRT (f32). Demonstrates
+    /// the full three-layer stack; requires `make artifacts` for the problem
+    /// shape.
+    Pjrt,
+}
+
+impl Backend {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(format!("unknown backend {other:?} (native|pjrt)")),
+        }
+    }
+}
+
+/// High-level configuration for [`super::Coordinator`].
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Execution backend.
+    pub backend: Backend,
+    /// Artifacts directory for the PJRT backend.
+    pub artifacts_dir: PathBuf,
+    /// Solver options (tolerance, σ schedule, Newton strategy, ...).
+    pub ssnal: SsnalOptions,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            backend: Backend::Native,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            ssnal: SsnalOptions::default(),
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Convenience: native backend with a given tolerance.
+    pub fn native(tol: f64) -> Self {
+        Self { ssnal: SsnalOptions { tol, ..Default::default() }, ..Default::default() }
+    }
+
+    /// Convenience: PJRT backend (looser default tolerance — artifacts are f32).
+    pub fn pjrt(artifacts_dir: PathBuf) -> Self {
+        Self {
+            backend: Backend::Pjrt,
+            artifacts_dir,
+            ssnal: SsnalOptions {
+                tol: 1e-4,
+                strategy: NewtonStrategy::ConjugateGradient,
+                ..Default::default()
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parsing() {
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        assert!(Backend::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn default_config_is_native() {
+        let c = CoordinatorConfig::default();
+        assert_eq!(c.backend, Backend::Native);
+        assert_eq!(c.ssnal.tol, 1e-6);
+    }
+
+    #[test]
+    fn pjrt_config_loosens_tolerance() {
+        let c = CoordinatorConfig::pjrt(PathBuf::from("artifacts"));
+        assert_eq!(c.backend, Backend::Pjrt);
+        assert!(c.ssnal.tol >= 1e-5, "f32 artifacts need a looser tol");
+    }
+}

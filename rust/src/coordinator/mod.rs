@@ -1,0 +1,146 @@
+//! The coordinator — the high-level entry point a downstream user works with.
+//!
+//! Owns backend selection (native f64 kernels vs PJRT-executed JAX/Pallas
+//! artifacts), lazy engine initialization, and the high-level operations:
+//! single solves, warm-started λ-paths, and parameter tuning.
+
+pub mod config;
+mod pjrt_solver;
+
+pub use config::{Backend, CoordinatorConfig};
+
+use crate::linalg::Mat;
+use crate::path::{PathOptions, PathResult};
+use crate::runtime::PjrtEngine;
+use crate::solver::ssnal;
+use crate::solver::types::{EnetProblem, SolveResult};
+use crate::tuning::{tune, TuningOptions, TuningResult};
+use anyhow::{Context, Result};
+use std::cell::OnceCell;
+
+/// High-level solver coordinator.
+pub struct Coordinator {
+    config: CoordinatorConfig,
+    engine: OnceCell<PjrtEngine>,
+}
+
+impl Coordinator {
+    /// Create a coordinator; the PJRT engine (if configured) loads lazily on
+    /// first use so native-only runs never touch the artifacts directory.
+    pub fn new(config: CoordinatorConfig) -> Self {
+        Self { config, engine: OnceCell::new() }
+    }
+
+    /// Access the configuration.
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.config
+    }
+
+    /// The PJRT engine (loading it on first call).
+    pub fn engine(&self) -> Result<&PjrtEngine> {
+        if self.engine.get().is_none() {
+            let engine = PjrtEngine::load_dir(&self.config.artifacts_dir).with_context(|| {
+                format!("loading artifacts from {}", self.config.artifacts_dir.display())
+            })?;
+            let _ = self.engine.set(engine);
+        }
+        Ok(self.engine.get().expect("just set"))
+    }
+
+    /// Solve one Elastic Net instance on the configured backend.
+    pub fn solve(&self, a: &Mat, b: &[f64], lam1: f64, lam2: f64) -> Result<SolveResult> {
+        let p = EnetProblem::new(a, b, lam1, lam2);
+        match self.config.backend {
+            Backend::Native => Ok(ssnal::solve(&p, &self.config.ssnal)),
+            Backend::Pjrt => pjrt_solver::solve_pjrt(self.engine()?, &p, &self.config.ssnal),
+        }
+    }
+
+    /// Solve with an explicit warm start (native backend; the PJRT demo
+    /// backend ignores the warm start).
+    pub fn solve_warm(
+        &self,
+        a: &Mat,
+        b: &[f64],
+        lam1: f64,
+        lam2: f64,
+        x0: Option<&[f64]>,
+    ) -> Result<SolveResult> {
+        let p = EnetProblem::new(a, b, lam1, lam2);
+        match self.config.backend {
+            Backend::Native => Ok(ssnal::solve_warm(&p, &self.config.ssnal, x0).0),
+            Backend::Pjrt => pjrt_solver::solve_pjrt(self.engine()?, &p, &self.config.ssnal),
+        }
+    }
+
+    /// Warm-started λ-path (always native — the path driver is the
+    /// performance-critical mode the paper benchmarks).
+    pub fn solve_path(&self, a: &Mat, b: &[f64], opts: &PathOptions) -> PathResult {
+        crate::path::solve_path(a, b, opts)
+    }
+
+    /// Parameter tuning sweep (§3.3): path + GCV/e-BIC (+ optional k-fold CV).
+    pub fn tune(&self, a: &Mat, b: &[f64], opts: &TuningOptions) -> TuningResult {
+        tune(a, b, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_synthetic, SyntheticSpec};
+
+    #[test]
+    fn native_solve_via_coordinator() {
+        let prob = generate_synthetic(&SyntheticSpec {
+            m: 40,
+            n: 120,
+            n0: 5,
+            x_star: 5.0,
+            snr: 5.0,
+            seed: 3,
+        });
+        let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, 0.8);
+        let (l1, l2) = EnetProblem::lambdas_from_alpha(0.8, 0.3, lmax);
+        let coord = Coordinator::new(CoordinatorConfig::native(1e-6));
+        let fit = coord.solve(&prob.a, &prob.b, l1, l2).unwrap();
+        assert!(fit.converged);
+        assert!(!fit.active_set.is_empty());
+    }
+
+    #[test]
+    fn pjrt_backend_without_artifacts_errors_helpfully() {
+        let cfg = CoordinatorConfig::pjrt(std::path::PathBuf::from("/nonexistent_artifacts"));
+        let coord = Coordinator::new(cfg);
+        let a = Mat::zeros(2, 3);
+        let b = [1.0, 2.0];
+        let err = coord.solve(&a, &b, 0.5, 0.5).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn path_and_tune_through_coordinator() {
+        let prob = generate_synthetic(&SyntheticSpec {
+            m: 40,
+            n: 100,
+            n0: 4,
+            x_star: 5.0,
+            snr: 20.0,
+            seed: 5,
+        });
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let popts = PathOptions {
+            alpha: 0.9,
+            c_grid: crate::path::c_lambda_grid(0.9, 0.2, 6),
+            max_active: 0,
+            tol: 1e-6,
+            ..Default::default()
+        };
+        let path = coord.solve_path(&prob.a, &prob.b, &popts);
+        assert_eq!(path.runs, 6);
+        let topts = TuningOptions { path: popts, cv_folds: 0, cv_seed: 0 };
+        let tuned = coord.tune(&prob.a, &prob.b, &topts);
+        assert_eq!(tuned.points.len(), 6);
+    }
+}

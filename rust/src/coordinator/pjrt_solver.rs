@@ -1,0 +1,188 @@
+//! SsNAL-EN with the inner computations executed as AOT-compiled JAX/Pallas
+//! graphs via PJRT — the full three-layer stack on the solve path.
+//!
+//! The control flow (AL outer loop, SsN inner loop, CG, line search, σ
+//! schedule) stays in Rust (L3). The numerical building blocks run as two
+//! compiled graphs produced by `python/compile/aot.py`:
+//!
+//! * `dual_prox_grad(at, b, x, y, σ, λ1, λ2) → (∇ψ, u, mask, ψ)` — the fused
+//!   Aᵀy → prox/mask sweep implemented as the L1 Pallas kernel inside the
+//!   L2 jax function,
+//! * `hess_vec(at, mask, κ, d) → V·d` — the generalized-Hessian mat-vec used
+//!   by the matrix-free CG solve.
+//!
+//! Artifacts are f32, so the backend targets a 1e-4 KKT tolerance: it is a
+//! stack-composition demonstrator, not the performance path (the native f64
+//! backend is; see DESIGN.md §Perf).
+
+use crate::linalg::blas;
+use crate::runtime::{literal_at, literal_from_f64, literal_scalar, literal_to_f64, PjrtEngine};
+use crate::solver::objective::{primal_objective, support_of};
+use crate::solver::types::{Algorithm, EnetProblem, SolveResult, SsnalOptions};
+use anyhow::Result;
+
+/// One `dual_prox_grad` evaluation via PJRT.
+struct ProxGradOut {
+    grad: Vec<f64>,
+    u: Vec<f64>,
+    mask: Vec<f64>,
+    psi: f64,
+}
+
+fn dual_prox_grad(
+    engine: &PjrtEngine,
+    at_lit: &xla::Literal,
+    b_lit: &xla::Literal,
+    x: &[f64],
+    y: &[f64],
+    sigma: f64,
+    p: &EnetProblem,
+) -> Result<ProxGradOut> {
+    let g = engine.graph("dual_prox_grad", p.m(), p.n())?;
+    let x_lit = literal_from_f64(x, &[p.n()])?;
+    let y_lit = literal_from_f64(y, &[p.m()])?;
+    let outs = g.run(&[
+        at_lit.clone(),
+        b_lit.clone(),
+        x_lit,
+        y_lit,
+        literal_scalar(sigma),
+        literal_scalar(p.lam1),
+        literal_scalar(p.lam2),
+    ])?;
+    anyhow::ensure!(outs.len() == 4, "dual_prox_grad returns 4 outputs, got {}", outs.len());
+    Ok(ProxGradOut {
+        grad: literal_to_f64(&outs[0])?,
+        u: literal_to_f64(&outs[1])?,
+        mask: literal_to_f64(&outs[2])?,
+        psi: literal_to_f64(&outs[3])?[0],
+    })
+}
+
+fn hess_vec(
+    engine: &PjrtEngine,
+    at_lit: &xla::Literal,
+    mask: &[f64],
+    kappa: f64,
+    d: &[f64],
+    p: &EnetProblem,
+) -> Result<Vec<f64>> {
+    let g = engine.graph("hess_vec", p.m(), p.n())?;
+    let mask_lit = literal_from_f64(mask, &[p.n()])?;
+    let d_lit = literal_from_f64(d, &[p.m()])?;
+    let outs = g.run(&[at_lit.clone(), mask_lit, literal_scalar(kappa), d_lit])?;
+    anyhow::ensure!(outs.len() == 1, "hess_vec returns 1 output");
+    literal_to_f64(&outs[0])
+}
+
+/// Solve one Elastic Net instance on the PJRT backend.
+pub fn solve_pjrt(
+    engine: &PjrtEngine,
+    p: &EnetProblem,
+    opts: &SsnalOptions,
+) -> Result<SolveResult> {
+    let m = p.m();
+    let n = p.n();
+    let at_lit = literal_at(p.a)?;
+    let b_lit = literal_from_f64(p.b, &[m])?;
+
+    let mut x = vec![0.0; n];
+    let mut y: Vec<f64> = p.b.iter().map(|v| -v).collect(); // y = Ax − b at x=0
+    let mut sigma = opts.sigma0;
+    let bnorm = blas::nrm2(p.b);
+
+    let mut total_inner = 0usize;
+    let mut converged = false;
+    let mut final_res = f64::INFINITY;
+    let mut outer = 0usize;
+    // f32 graphs: cap the effective precision we ask of the inner loop
+    let tol = opts.tol.max(5e-5);
+    let mut inner_tol = (tol * 1e2).min(1e-2).max(tol);
+
+    while outer < opts.max_outer {
+        outer += 1;
+        let mut inner = 0usize;
+        let mut last_u: Vec<f64>;
+        loop {
+            let eval = dual_prox_grad(engine, &at_lit, &b_lit, &x, &y, sigma, p)?;
+            last_u = eval.u;
+            let res1 = blas::nrm2(&eval.grad) / (1.0 + bnorm);
+            if res1 <= inner_tol || inner >= opts.max_inner {
+                break;
+            }
+            inner += 1;
+
+            // CG on V d = −grad with the PJRT hess_vec operator
+            let kappa = sigma / (1.0 + sigma * p.lam2);
+            let rhs: Vec<f64> = eval.grad.iter().map(|g| -g).collect();
+            let mut d = vec![0.0; m];
+            let mask = eval.mask.clone();
+            crate::linalg::solve_cg(
+                |v, out| {
+                    let hv = hess_vec(engine, &at_lit, &mask, kappa, v, p)
+                        .expect("pjrt hess_vec failed");
+                    out.copy_from_slice(&hv);
+                },
+                &rhs,
+                &mut d,
+                1e-6,
+                200,
+            );
+
+            // Armijo backtracking using ψ from the graph
+            let gtd = blas::dot(&eval.grad, &d);
+            let mut s = 1.0;
+            let mut y_trial = vec![0.0; m];
+            let mut accepted = false;
+            for _ in 0..opts.max_ls {
+                for i in 0..m {
+                    y_trial[i] = y[i] + s * d[i];
+                }
+                let trial = dual_prox_grad(engine, &at_lit, &b_lit, &x, &y_trial, sigma, p)?;
+                if trial.psi <= eval.psi + opts.ls_mu * s * gtd {
+                    accepted = true;
+                    break;
+                }
+                s *= opts.ls_beta;
+            }
+            if !accepted {
+                // keep the smallest step; f32 ψ comparisons can be noisy
+            }
+            y.copy_from_slice(&y_trial);
+        }
+        total_inner += inner;
+
+        // multiplier update x ← u and kkt3 via the Moreau identity
+        let xu = blas::dist2(&x, &last_u);
+        let ynorm = blas::nrm2(&y);
+        let res3 = xu / sigma / (1.0 + ynorm + 1.0);
+        final_res = res3;
+        x.copy_from_slice(&last_u);
+        if res3 <= tol {
+            converged = true;
+            break;
+        }
+        sigma = (sigma * opts.sigma_mult).min(opts.sigma_max);
+        inner_tol = (inner_tol * 0.1).max(tol);
+    }
+
+    // sparsify tiny f32 round-off
+    for v in x.iter_mut() {
+        if v.abs() < 1e-7 {
+            *v = 0.0;
+        }
+    }
+    let active_set = support_of(&x, 0.0);
+    let objective = primal_objective(p, &x);
+    Ok(SolveResult {
+        x,
+        y,
+        active_set,
+        objective,
+        iterations: outer,
+        inner_iterations: total_inner,
+        residual: final_res,
+        converged,
+        algorithm: Algorithm::SsnalEn,
+    })
+}

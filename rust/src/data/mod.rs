@@ -1,0 +1,19 @@
+//! Data pipelines for every experiment in the paper:
+//!
+//! * [`synthetic`] — §4.1 Gaussian designs with sparse truth and SNR control
+//!   (Tables 1, D.1, D.2, D.3, D.4),
+//! * [`libsvm`] — LIBSVM-format parsing + synthesized base tables for the
+//!   offline substitute of the Table 2 reference sets,
+//! * [`polyexp`] — the polynomial basis expansion that creates Table 2's
+//!   ultra-high-dimensional collinear designs,
+//! * [`snp`] — the INSIGHT GWAS substitute (Figure 2, Table 3),
+//! * [`standardize`] — design standardization / response centering.
+
+pub mod libsvm;
+pub mod polyexp;
+pub mod snp;
+pub mod standardize;
+pub mod synthetic;
+
+pub use standardize::{center, standardize, Standardized};
+pub use synthetic::{generate as generate_synthetic, rho_hat, SyntheticProblem, SyntheticSpec};

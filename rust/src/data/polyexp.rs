@@ -1,0 +1,195 @@
+//! Polynomial basis expansion (Huang et al. 2010) — how the paper builds the
+//! ultra-high-dimensional, highly collinear designs of Table 2.
+//!
+//! Given a base table with d features, the expansion contains **all monomials of
+//! total degree 1..=k**: `x_{j1}·x_{j2}·…·x_{jt}` with `j1 ≤ j2 ≤ … ≤ jt`, t ≤ k.
+//! That yields `C(d+k, k) − 1` columns, matching the paper's feature counts
+//! (housing d=13, k=8 → 203 489; bodyfat d=14, k=8 → 319 769; triazines has 58
+//! non-constant base features, k=4 → 557 844).
+//!
+//! Columns are produced in DFS order with a running partial product, so each new
+//! column costs one length-m multiply and the expansion is O(m·n_expanded) total.
+
+use crate::linalg::Mat;
+
+/// Number of expanded features: `C(d+k, k) − 1` (checked arithmetic; panics on
+/// overflow because such a request would be absurd anyway).
+pub fn expanded_count(d: usize, k: usize) -> usize {
+    // C(d+k, k) computed multiplicatively.
+    let mut c: u128 = 1;
+    for i in 1..=k as u128 {
+        c = c * (d as u128 + i) / i;
+    }
+    let total = c - 1;
+    assert!(total <= usize::MAX as u128, "expansion too large");
+    total as usize
+}
+
+/// Expand `base` (m × d) to all monomials of degree 1..=k, visiting columns in
+/// DFS order and stopping after `max_cols` columns (0 = no limit).
+///
+/// Returns the expanded matrix and, for bookkeeping, the multi-index (list of
+/// base-feature indices, with repetition) of each produced column.
+pub fn expand(base: &Mat, k: usize, max_cols: usize) -> (Mat, Vec<Vec<usize>>) {
+    assert!(k >= 1, "expansion order must be ≥ 1");
+    let m = base.rows();
+    let d = base.cols();
+    let limit = if max_cols == 0 { expanded_count(d, k) } else { max_cols.min(expanded_count(d, k)) };
+    let mut data: Vec<f64> = Vec::with_capacity(limit.saturating_mul(m));
+    let mut indices: Vec<Vec<usize>> = Vec::with_capacity(limit);
+
+    // DFS with an explicit stack of (next_start_feature, depth); partial products
+    // are kept in a stack of buffers (one per depth level).
+    let mut products: Vec<Vec<f64>> = Vec::with_capacity(k);
+    let mut path: Vec<usize> = Vec::with_capacity(k);
+
+    fn rec(
+        base: &Mat,
+        k: usize,
+        limit: usize,
+        start: usize,
+        products: &mut Vec<Vec<f64>>,
+        path: &mut Vec<usize>,
+        data: &mut Vec<f64>,
+        indices: &mut Vec<Vec<usize>>,
+    ) -> bool {
+        let m = base.rows();
+        for j in start..base.cols() {
+            if indices.len() >= limit {
+                return true; // truncated
+            }
+            // new partial product = previous level product (or ones) * col_j
+            let mut col = vec![0.0; m];
+            match products.last() {
+                Some(prev) => {
+                    let cj = base.col(j);
+                    for i in 0..m {
+                        col[i] = prev[i] * cj[i];
+                    }
+                }
+                None => col.copy_from_slice(base.col(j)),
+            }
+            path.push(j);
+            data.extend_from_slice(&col);
+            indices.push(path.clone());
+            if path.len() < k {
+                products.push(col);
+                let truncated =
+                    rec(base, k, limit, j, products, path, data, indices);
+                products.pop();
+                if truncated {
+                    path.pop();
+                    return true;
+                }
+            }
+            path.pop();
+        }
+        false
+    }
+
+    rec(base, k, limit, 0, &mut products, &mut path, &mut data, &mut indices);
+    let n = indices.len();
+    (Mat::from_col_major(m, n, data), indices)
+}
+
+/// Drop (near-)constant columns of a base table before expansion — constant
+/// features generate duplicate monomials and the paper's triazines count
+/// implies they were removed.
+pub fn drop_constant_columns(base: &Mat, tol: f64) -> (Mat, Vec<usize>) {
+    let m = base.rows();
+    let mut keep = Vec::new();
+    for j in 0..base.cols() {
+        let c = base.col(j);
+        let mean = c.iter().sum::<f64>() / m as f64;
+        let var = c.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / m as f64;
+        if var.sqrt() > tol {
+            keep.push(j);
+        }
+    }
+    (base.gather_cols(&keep), keep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn counts_match_paper_table2() {
+        assert_eq!(expanded_count(13, 8), 203_489); // housing8
+        assert_eq!(expanded_count(14, 8), 319_769); // bodyfat8
+        assert_eq!(expanded_count(58, 4), 557_844); // triazines4 (58 non-constant)
+    }
+
+    #[test]
+    fn small_expansion_by_hand() {
+        // d=2, k=2: columns x0, x0², x0x1, x1, x1² (DFS order) → C(4,2)−1 = 5.
+        let base = Mat::from_row_major(3, 2, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let (ex, idx) = expand(&base, 2, 0);
+        assert_eq!(ex.cols(), 5);
+        assert_eq!(idx, vec![vec![0], vec![0, 0], vec![0, 1], vec![1], vec![1, 1]]);
+        // x0 ⊙ x1 column
+        assert_eq!(ex.col(2), &[1.0 * 2.0, 3.0 * 4.0, 5.0 * 6.0]);
+        // x1² column
+        assert_eq!(ex.col(4), &[4.0, 16.0, 36.0]);
+    }
+
+    #[test]
+    fn degree_one_is_base() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let base = Mat::from_fn(10, 4, |_, _| rng.next_gaussian());
+        let (ex, idx) = expand(&base, 1, 0);
+        assert_eq!(ex.cols(), 4);
+        for j in 0..4 {
+            assert_eq!(ex.col(j), base.col(j));
+            assert_eq!(idx[j], vec![j]);
+        }
+    }
+
+    #[test]
+    fn truncation_respects_limit() {
+        let base = Mat::from_fn(5, 6, |i, j| (i + j) as f64 * 0.1 + 0.5);
+        let (ex, idx) = expand(&base, 3, 17);
+        assert_eq!(ex.cols(), 17);
+        assert_eq!(idx.len(), 17);
+    }
+
+    #[test]
+    fn columns_are_products_of_base() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let base = Mat::from_fn(7, 3, |_, _| rng.next_gaussian());
+        let (ex, idx) = expand(&base, 3, 0);
+        assert_eq!(ex.cols(), expanded_count(3, 3));
+        for (c, mi) in idx.iter().enumerate() {
+            for i in 0..7 {
+                let expect: f64 = mi.iter().map(|&j| base.get(i, j)).product();
+                assert!((ex.get(i, c) - expect).abs() < 1e-12);
+            }
+            // multi-index sorted (combinations with repetition)
+            for w in mi.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn expansion_is_collinear() {
+        // ρ̂ = λmax(AAᵀ)/n should be notably larger than for i.i.d. designs.
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let base = Mat::from_fn(40, 5, |_, _| rng.next_gaussian());
+        let (ex, _) = expand(&base, 4, 0);
+        let std = crate::data::standardize::standardize(&ex);
+        let rho = crate::data::synthetic::rho_hat(&std.a, 40, 0);
+        assert!(rho > 2.0, "expanded design should be collinear, rho={rho}");
+    }
+
+    #[test]
+    fn drop_constants() {
+        let base = Mat::from_fn(10, 3, |i, j| if j == 1 { 2.5 } else { i as f64 + j as f64 });
+        let (reduced, keep) = drop_constant_columns(&base, 1e-9);
+        assert_eq!(keep, vec![0, 2]);
+        assert_eq!(reduced.cols(), 2);
+        assert_eq!(reduced.col(0), base.col(0));
+        assert_eq!(reduced.col(1), base.col(2));
+    }
+}

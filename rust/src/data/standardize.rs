@@ -1,0 +1,117 @@
+//! Column standardization — the paper assumes "A is the standardized design
+//! matrix"; glmnet-family solvers additionally center the response.
+
+use crate::linalg::Mat;
+
+/// A standardized design plus the statistics needed to map coefficients back.
+#[derive(Clone, Debug)]
+pub struct Standardized {
+    /// Design with each column centered to mean 0 and scaled to unit standard
+    /// deviation (columns with zero variance are left at 0).
+    pub a: Mat,
+    /// Per-column means of the original design.
+    pub means: Vec<f64>,
+    /// Per-column standard deviations (population, 1/m) of the original design.
+    pub sds: Vec<f64>,
+}
+
+/// Standardize all columns of `a`.
+pub fn standardize(a: &Mat) -> Standardized {
+    let m = a.rows();
+    let n = a.cols();
+    let mut out = Mat::zeros(m, n);
+    let mut means = vec![0.0; n];
+    let mut sds = vec![0.0; n];
+    for j in 0..n {
+        let c = a.col(j);
+        let mean = c.iter().sum::<f64>() / m as f64;
+        let var = c.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / m as f64;
+        let sd = var.sqrt();
+        means[j] = mean;
+        sds[j] = sd;
+        let oc = out.col_mut(j);
+        if sd > 0.0 {
+            let inv = 1.0 / sd;
+            for i in 0..m {
+                oc[i] = (c[i] - mean) * inv;
+            }
+        }
+    }
+    Standardized { a: out, means, sds }
+}
+
+/// Center a response vector; returns `(centered, mean)`.
+pub fn center(b: &[f64]) -> (Vec<f64>, f64) {
+    let mean = b.iter().sum::<f64>() / b.len().max(1) as f64;
+    (b.iter().map(|v| v - mean).collect(), mean)
+}
+
+/// Map coefficients fit on the standardized design back to the original scale:
+/// `β_orig[j] = β_std[j] / sd[j]`, intercept `= b_mean − Σ β_orig[j]·mean[j]`.
+pub fn unstandardize_coefs(std: &Standardized, beta: &[f64], b_mean: f64) -> (Vec<f64>, f64) {
+    assert_eq!(beta.len(), std.sds.len());
+    let mut orig = vec![0.0; beta.len()];
+    let mut intercept = b_mean;
+    for j in 0..beta.len() {
+        if std.sds[j] > 0.0 {
+            orig[j] = beta[j] / std.sds[j];
+            intercept -= orig[j] * std.means[j];
+        }
+    }
+    (orig, intercept)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn columns_have_zero_mean_unit_sd() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let a = Mat::from_fn(100, 5, |_, _| 3.0 + 2.0 * rng.next_gaussian());
+        let s = standardize(&a);
+        for j in 0..5 {
+            let c = s.a.col(j);
+            let mean = c.iter().sum::<f64>() / 100.0;
+            let var = c.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 100.0;
+            assert!(mean.abs() < 1e-12, "col {j} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-10, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn constant_column_left_zero() {
+        let a = Mat::from_fn(10, 2, |i, j| if j == 0 { 7.0 } else { i as f64 });
+        let s = standardize(&a);
+        assert!(s.a.col(0).iter().all(|&v| v == 0.0));
+        assert_eq!(s.sds[0], 0.0);
+        assert_eq!(s.means[0], 7.0);
+    }
+
+    #[test]
+    fn center_returns_mean() {
+        let (c, mean) = center(&[1.0, 2.0, 3.0]);
+        assert_eq!(mean, 2.0);
+        assert_eq!(c, vec![-1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn unstandardize_roundtrip_predictions() {
+        // predictions from (std design, std coefs) must equal
+        // predictions from (original design, unstd coefs + intercept)
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let a = Mat::from_fn(50, 3, |_, _| 1.0 + 0.5 * rng.next_gaussian());
+        let s = standardize(&a);
+        let beta_std = [0.7, -1.2, 0.1];
+        let b_mean = 4.0;
+        let (beta, intercept) = unstandardize_coefs(&s, &beta_std, b_mean);
+        for i in 0..50 {
+            let pred_std: f64 =
+                (0..3).map(|j| s.a.get(i, j) * beta_std[j]).sum::<f64>() + b_mean;
+            let pred_orig: f64 =
+                (0..3).map(|j| a.get(i, j) * beta[j]).sum::<f64>() + intercept;
+            assert!((pred_std - pred_orig).abs() < 1e-10);
+        }
+    }
+}

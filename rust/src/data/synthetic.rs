@@ -1,0 +1,191 @@
+//! Synthetic regression designs — paper §4.1.
+//!
+//! "The entries of the design matrix A ∈ R^{m×n} are drawn from a standard normal
+//! distribution. We compute the response vector as b = A x_t + ε, where x_t is a
+//! sparse vector with n₀ non-zero values all equal to x* = 5, and ε_i ~ N(0, s_ε).
+//! We fix s_ε to have signal-to-noise ratio snr = var(A x_t)/s_ε² = 5."
+
+use crate::linalg::Mat;
+use crate::rng::Xoshiro256pp;
+
+/// Parameters of the paper's generator.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    /// Observations m.
+    pub m: usize,
+    /// Features n (n ≫ m).
+    pub n: usize,
+    /// Number of non-zero true coefficients n₀.
+    pub n0: usize,
+    /// Value of the non-zero coefficients (paper: x* = 5).
+    pub x_star: f64,
+    /// Signal-to-noise ratio (paper: 5).
+    pub snr: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl SyntheticSpec {
+    /// The paper's three scenarios share (m=500, snr=5, x*=5) and vary n₀:
+    /// sim1: n₀=100, sim2: n₀=20, sim3: n₀=5 (α differs at solve time, not here).
+    pub fn sim(scenario: usize, n: usize, seed: u64) -> Self {
+        let n0 = match scenario {
+            1 => 100,
+            2 => 20,
+            3 => 5,
+            other => panic!("unknown scenario sim{other}"),
+        };
+        Self { m: 500, n, n0, x_star: 5.0, snr: 5.0, seed }
+    }
+}
+
+/// A generated problem instance.
+#[derive(Clone, Debug)]
+pub struct SyntheticProblem {
+    /// Design matrix, column-major m × n.
+    pub a: Mat,
+    /// Response vector, length m.
+    pub b: Vec<f64>,
+    /// True coefficient vector (sparse), length n.
+    pub x_true: Vec<f64>,
+    /// Indices of the true support.
+    pub support: Vec<usize>,
+    /// Noise standard deviation actually used.
+    pub noise_sd: f64,
+}
+
+/// Generate an instance per the paper's recipe.
+pub fn generate(spec: &SyntheticSpec) -> SyntheticProblem {
+    assert!(spec.n0 <= spec.n, "n0 must not exceed n");
+    assert!(spec.m > 1, "need at least 2 observations");
+    let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
+
+    // Design: i.i.d. standard normals, column-major fill (cache-friendly).
+    let mut a = Mat::zeros(spec.m, spec.n);
+    rng.fill_gaussian(a.as_mut_slice());
+
+    // Sparse truth on a random support.
+    let support = rng.sample_indices(spec.n, spec.n0);
+    let mut x_true = vec![0.0; spec.n];
+    for &j in &support {
+        x_true[j] = spec.x_star;
+    }
+
+    // Signal and its empirical variance.
+    let mut signal = vec![0.0; spec.m];
+    a.mul_vec_support_into(&x_true, &support, &mut signal);
+    let mean = signal.iter().sum::<f64>() / spec.m as f64;
+    let var = signal.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / (spec.m - 1) as f64;
+
+    // snr = var(Ax_t) / s_ε²  ⇒  s_ε = sqrt(var / snr)
+    let noise_sd = if spec.n0 == 0 { 1.0 } else { (var / spec.snr).sqrt() };
+    let b: Vec<f64> = signal.iter().map(|&s| s + noise_sd * rng.next_gaussian()).collect();
+
+    SyntheticProblem { a, b, x_true, support, noise_sd }
+}
+
+/// Largest eigenvalue of `AAᵀ` via power iteration, normalized by n — the
+/// collinearity gauge ρ̂ the paper reports beside Tables 1 and 2.
+pub fn rho_hat(a: &Mat, iters: usize, seed: u64) -> f64 {
+    let m = a.rows();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut v = vec![0.0; m];
+    rng.fill_gaussian(&mut v);
+    let mut atv = vec![0.0; a.cols()];
+    let mut av = vec![0.0; m];
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        // w = A Aᵀ v
+        a.t_mul_vec_into(&v, &mut atv);
+        a.mul_vec_into(&atv, &mut av);
+        let norm = crate::linalg::blas::nrm2(&av);
+        if norm == 0.0 {
+            return 0.0;
+        }
+        lam = norm; // Rayleigh approx since ‖v‖=1
+        for i in 0..m {
+            v[i] = av[i] / norm;
+        }
+    }
+    lam / a.cols() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_support() {
+        let spec = SyntheticSpec { m: 50, n: 200, n0: 7, x_star: 5.0, snr: 5.0, seed: 1 };
+        let p = generate(&spec);
+        assert_eq!(p.a.rows(), 50);
+        assert_eq!(p.a.cols(), 200);
+        assert_eq!(p.b.len(), 50);
+        assert_eq!(p.support.len(), 7);
+        let nnz = p.x_true.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nnz, 7);
+        for &j in &p.support {
+            assert_eq!(p.x_true[j], 5.0);
+        }
+    }
+
+    #[test]
+    fn snr_is_respected() {
+        let spec = SyntheticSpec { m: 2000, n: 100, n0: 10, x_star: 5.0, snr: 5.0, seed: 2 };
+        let p = generate(&spec);
+        // empirical: var(signal)/sd² should be ≈ snr
+        let signal = p.a.mul_vec(&p.x_true);
+        let mean = signal.iter().sum::<f64>() / signal.len() as f64;
+        let var = signal.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / (signal.len() - 1) as f64;
+        let snr = var / (p.noise_sd * p.noise_sd);
+        assert!((snr - 5.0).abs() < 1e-9, "snr={snr}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = SyntheticSpec { m: 20, n: 50, n0: 3, x_star: 5.0, snr: 5.0, seed: 9 };
+        let p1 = generate(&spec);
+        let p2 = generate(&spec);
+        assert_eq!(p1.a, p2.a);
+        assert_eq!(p1.b, p2.b);
+        let spec2 = SyntheticSpec { seed: 10, ..spec };
+        let p3 = generate(&spec2);
+        assert_ne!(p1.b, p3.b);
+    }
+
+    #[test]
+    fn sim_scenarios_match_paper() {
+        let s1 = SyntheticSpec::sim(1, 1000, 0);
+        let s2 = SyntheticSpec::sim(2, 1000, 0);
+        let s3 = SyntheticSpec::sim(3, 1000, 0);
+        assert_eq!((s1.m, s1.n0), (500, 100));
+        assert_eq!(s2.n0, 20);
+        assert_eq!(s3.n0, 5);
+        assert_eq!(s1.x_star, 5.0);
+        assert_eq!(s1.snr, 5.0);
+    }
+
+    #[test]
+    fn rho_hat_near_one_for_gaussian() {
+        // For i.i.d. N(0,1), λ_max(AAᵀ)/n → (1+√(m/n))² ≈ 1 for n ≫ m (paper: ρ̂≈1).
+        let spec = SyntheticSpec { m: 50, n: 5000, n0: 0, x_star: 0.0, snr: 5.0, seed: 3 };
+        let p = generate(&spec);
+        let rho = rho_hat(&p.a, 30, 0);
+        assert!((0.8..1.6).contains(&rho), "rho={rho}");
+    }
+
+    #[test]
+    fn rho_hat_large_for_duplicated_columns() {
+        // Perfectly collinear design: A = [c c c ... c] ⇒ λmax(AAᵀ) = n‖c‖² ⇒ ρ̂ = ‖c‖².
+        let m = 30;
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let mut c = vec![0.0; m];
+        rng.fill_gaussian(&mut c);
+        let a = Mat::from_fn(m, 100, |i, _| c[i]);
+        let rho = rho_hat(&a, 50, 0);
+        let c2: f64 = c.iter().map(|v| v * v).sum();
+        assert!((rho - c2).abs() / c2 < 0.05, "rho={rho} c2={c2}");
+    }
+}

@@ -1,0 +1,33 @@
+//! # SsNAL-EN — Semi-smooth Newton Augmented Lagrangian method for the Elastic Net
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of
+//! *An Efficient Semi-smooth Newton Augmented Lagrangian Method for Elastic Net*
+//! (Boschi, Reimherr, Chiaromonte, 2020).
+//!
+//! The crate is organized as:
+//!
+//! * [`solver`] — the paper's contribution: the SsNAL-EN solver plus every
+//!   baseline it is benchmarked against (coordinate descent, FISTA, ADMM,
+//!   Gap-Safe screening, celer-style working sets),
+//! * [`prox`] — the Elastic Net proximal/conjugate toolbox (paper §2),
+//! * [`path`] / [`tuning`] — warm-started λ-paths and CV/GCV/e-BIC tuning (§3.3),
+//! * [`data`] — synthetic, LIBSVM/polynomial-expansion and SNP/GWAS pipelines (§4),
+//! * [`runtime`] — the PJRT engine that loads the AOT-compiled JAX/Pallas
+//!   artifacts and executes them from Rust (layer boundary; Python never runs
+//!   on the solve path),
+//! * [`coordinator`] — the high-level API tying solver, path, tuning, data and
+//!   backend selection together,
+//! * [`linalg`] / [`rng`] / [`util`] / [`bench`] — the from-scratch substrates
+//!   (the offline build has no BLAS, rand, clap, serde or criterion).
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod path;
+pub mod prox;
+pub mod rng;
+pub mod runtime;
+pub mod solver;
+pub mod tuning;
+pub mod util;

@@ -1,0 +1,165 @@
+//! BLAS-like level-1 kernels, hand-written for the offline single-core testbed.
+//!
+//! The SsNAL-EN hot loop is dominated by long contiguous dot products (`Aᵀy`,
+//! `A_JᵀA_J`) and axpys (`Ax` over the active set). Each kernel uses 4-way
+//! unrolled independent accumulators so LLVM auto-vectorizes them to packed
+//! AVX ops; see EXPERIMENTS.md §Perf for measured throughput.
+
+/// Dot product with 4 independent accumulators (auto-vectorization friendly).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    // Slice reborrow of exact length lets the compiler drop bounds checks.
+    let (a4, at) = a.split_at(chunks * 4);
+    let (b4, bt) = b.split_at(chunks * 4);
+    let mut i = 0;
+    while i < a4.len() {
+        s0 += a4[i] * b4[i];
+        s1 += a4[i + 1] * b4[i + 1];
+        s2 += a4[i + 2] * b4[i + 2];
+        s3 += a4[i + 3] * b4[i + 3];
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for (x, y) in at.iter().zip(bt.iter()) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y += alpha * x`, unrolled.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let chunks = x.len() / 4;
+    let (x4, xt) = x.split_at(chunks * 4);
+    let (y4, yt) = y.split_at_mut(chunks * 4);
+    let mut i = 0;
+    while i < x4.len() {
+        y4[i] += alpha * x4[i];
+        y4[i + 1] += alpha * x4[i + 1];
+        y4[i + 2] += alpha * x4[i + 2];
+        y4[i + 3] += alpha * x4[i + 3];
+        i += 4;
+    }
+    for (xi, yi) in xt.iter().zip(yt.iter_mut()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm (no over/underflow guard needed at our scales, but we scale
+/// by the max element to stay safe on extreme inputs).
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    let mx = x.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    if mx == 0.0 || !mx.is_finite() {
+        return if mx.is_finite() { 0.0 } else { f64::INFINITY };
+    }
+    let inv = 1.0 / mx;
+    let mut s = 0.0;
+    for &v in x {
+        let t = v * inv;
+        s += t * t;
+    }
+    mx * s.sqrt()
+}
+
+/// Squared Euclidean norm (fast path, no scaling).
+#[inline]
+pub fn nrm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scal(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Infinity norm.
+#[inline]
+pub fn nrm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+}
+
+/// `out = a - b` elementwise.
+#[inline]
+pub fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// `||a - b||₂` without allocating.
+#[inline]
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        for n in 0..40 {
+            let a: Vec<f64> = (0..n).map(|i| (i as f64) * 0.5 - 3.0).collect();
+            let b: Vec<f64> = (0..n).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-12, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_naive() {
+        for n in [0usize, 1, 3, 4, 5, 17, 64] {
+            let x: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let mut y: Vec<f64> = (0..n).map(|i| -(i as f64) * 0.25).collect();
+            let mut y2 = y.clone();
+            axpy(2.5, &x, &mut y);
+            for i in 0..n {
+                y2[i] += 2.5 * x[i];
+            }
+            assert_eq!(y, y2);
+        }
+    }
+
+    #[test]
+    fn nrm2_basic_and_scaled() {
+        assert_eq!(nrm2(&[]), 0.0);
+        assert_eq!(nrm2(&[0.0, 0.0]), 0.0);
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        // huge values: naive sum-of-squares would overflow
+        let big = vec![1e200, 1e200];
+        assert!((nrm2(&big) - 1e200 * 2f64.sqrt()).abs() / 1e200 < 1e-12);
+    }
+
+    #[test]
+    fn inf_norm_and_dist() {
+        assert_eq!(nrm_inf(&[-3.0, 2.0, 0.5]), 3.0);
+        assert!((dist2(&[1.0, 2.0], &[4.0, 6.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn scal_and_sub() {
+        let mut v = vec![1.0, -2.0, 3.0];
+        scal(-2.0, &mut v);
+        assert_eq!(v, vec![-2.0, 4.0, -6.0]);
+        let mut out = vec![0.0; 3];
+        sub_into(&[5.0, 5.0, 5.0], &v, &mut out);
+        assert_eq!(out, vec![7.0, 1.0, 11.0]);
+    }
+}

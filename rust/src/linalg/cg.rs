@@ -1,0 +1,150 @@
+//! Conjugate gradient for symmetric positive-definite operators.
+//!
+//! The third Newton-system strategy of SsNAL-EN (paper §3.2): when both m and r are
+//! large, `V d = −∇ψ` is solved approximately and **matrix-free** — each CG iteration
+//! needs only `v ↦ v + κ A_J (A_Jᵀ v)`, two streaming passes over the active columns.
+
+use crate::linalg::blas;
+
+/// Outcome of a CG solve.
+#[derive(Clone, Debug)]
+pub struct CgResult {
+    /// Number of iterations performed.
+    pub iters: usize,
+    /// Final residual norm `‖b − Mx‖₂`.
+    pub residual: f64,
+    /// Whether the tolerance was met before `max_iters`.
+    pub converged: bool,
+}
+
+/// Solve `M x = b` for SPD operator `M` given as a mat-vec closure.
+///
+/// * `matvec(v, out)` must write `M v` into `out`.
+/// * `x` holds the initial guess on entry and the solution on exit.
+/// * Stops when `‖r‖ ≤ tol·max(1, ‖b‖)`.
+pub fn solve_cg(
+    mut matvec: impl FnMut(&[f64], &mut [f64]),
+    b: &[f64],
+    x: &mut [f64],
+    tol: f64,
+    max_iters: usize,
+) -> CgResult {
+    let n = b.len();
+    assert_eq!(x.len(), n);
+    let mut r = vec![0.0; n];
+    let mut ap = vec![0.0; n];
+
+    // r = b - M x
+    matvec(x, &mut ap);
+    for i in 0..n {
+        r[i] = b[i] - ap[i];
+    }
+    let bnorm = blas::nrm2(b).max(1.0);
+    let stop = tol * bnorm;
+
+    let mut rsold = blas::nrm2_sq(&r);
+    if rsold.sqrt() <= stop {
+        return CgResult { iters: 0, residual: rsold.sqrt(), converged: true };
+    }
+    let mut p = r.clone();
+
+    for it in 1..=max_iters {
+        matvec(&p, &mut ap);
+        let pap = blas::dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            // operator not SPD (numerically) — bail with what we have
+            return CgResult { iters: it - 1, residual: rsold.sqrt(), converged: false };
+        }
+        let alpha = rsold / pap;
+        blas::axpy(alpha, &p, x);
+        blas::axpy(-alpha, &ap, &mut r);
+        let rsnew = blas::nrm2_sq(&r);
+        if rsnew.sqrt() <= stop {
+            return CgResult { iters: it, residual: rsnew.sqrt(), converged: true };
+        }
+        let beta = rsnew / rsold;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rsold = rsnew;
+    }
+    CgResult { iters: max_iters, residual: rsold.sqrt(), converged: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Mat;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn solves_identity_instantly() {
+        let b = [1.0, -2.0, 3.0];
+        let mut x = [0.0; 3];
+        let res = solve_cg(|v, out| out.copy_from_slice(v), &b, &mut x, 1e-12, 10);
+        assert!(res.converged);
+        assert!(res.iters <= 2);
+        for i in 0..3 {
+            assert!((x[i] - b[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matches_direct_solve_on_spd() {
+        let n = 30;
+        let mut r = Xoshiro256pp::seed_from_u64(1);
+        let bmat = Mat::from_fn(n, n, |_, _| r.next_gaussian());
+        let mut m = bmat.transpose().matmul(&bmat);
+        for i in 0..n {
+            m.set(i, i, m.get(i, i) + n as f64);
+        }
+        let rhs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mut x = vec![0.0; n];
+        let res = solve_cg(|v, out| m.mul_vec_into(v, out), &rhs, &mut x, 1e-12, 500);
+        assert!(res.converged, "residual {}", res.residual);
+        let direct = crate::linalg::chol::Cholesky::factor(&m).unwrap().solve(&rhs);
+        for i in 0..n {
+            assert!((x[i] - direct[i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn exact_in_n_iterations() {
+        // CG converges in at most n iterations in exact arithmetic.
+        let m = Mat::from_row_major(2, 2, &[4.0, 1.0, 1.0, 3.0]);
+        let b = [1.0, 2.0];
+        let mut x = [2.0, 1.0]; // nonzero start
+        let res = solve_cg(|v, out| m.mul_vec_into(v, out), &b, &mut x, 1e-14, 3);
+        assert!(res.converged);
+        assert!(res.iters <= 2);
+    }
+
+    #[test]
+    fn warm_start_reduces_iterations() {
+        let n = 40;
+        let mut r = Xoshiro256pp::seed_from_u64(5);
+        let bmat = Mat::from_fn(n, n, |_, _| r.next_gaussian());
+        let mut m = bmat.transpose().matmul(&bmat);
+        for i in 0..n {
+            m.set(i, i, m.get(i, i) + 2.0 * n as f64);
+        }
+        let rhs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mut cold = vec![0.0; n];
+        let rc = solve_cg(|v, out| m.mul_vec_into(v, out), &rhs, &mut cold, 1e-10, 500);
+        // start from the solution: should converge in 0 iterations
+        let mut warm = cold.clone();
+        let rw = solve_cg(|v, out| m.mul_vec_into(v, out), &rhs, &mut warm, 1e-10, 500);
+        assert!(rw.iters <= rc.iters);
+        assert_eq!(rw.iters, 0);
+    }
+
+    #[test]
+    fn reports_nonconvergence() {
+        let m = Mat::from_row_major(2, 2, &[1.0, 0.0, 0.0, 1e8]);
+        let b = [1.0, 1.0];
+        let mut x = [0.0, 0.0];
+        let res = solve_cg(|v, out| m.mul_vec_into(v, out), &b, &mut x, 1e-16, 1);
+        assert!(!res.converged);
+        assert_eq!(res.iters, 1);
+    }
+}

@@ -1,0 +1,178 @@
+//! Dense Cholesky factorization and solves.
+//!
+//! Used for the two *direct* Newton-system strategies of SsNAL-EN (paper §3.2):
+//!
+//! * m×m factorization of `V = I_m + κ A_J A_Jᵀ` — cost O(m³),
+//! * r×r factorization of `κ⁻¹I_r + A_JᵀA_J` inside the Sherman–Morrison–Woodbury
+//!   identity (Eq. 19) — cost O(r³), the paper's key saving when r < m,
+//!
+//! and for the ridge/least-squares systems in parameter tuning.
+
+use crate::linalg::matrix::Mat;
+
+/// Cholesky factor `L` (lower triangular) with `M = L Lᵀ`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+/// Error for non-positive-definite inputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NotPositiveDefinite {
+    /// Pivot index at which the factorization broke down.
+    pub pivot: usize,
+}
+
+impl std::fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix not positive definite (pivot {})", self.pivot)
+    }
+}
+
+impl std::error::Error for NotPositiveDefinite {}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix (only the lower triangle of
+    /// `m` is read). Right-looking, column-oriented to match `Mat`'s layout.
+    pub fn factor(m: &Mat) -> Result<Self, NotPositiveDefinite> {
+        assert_eq!(m.rows(), m.cols(), "cholesky requires square input");
+        let n = m.rows();
+        let mut l = m.clone();
+        // zero the strict upper triangle so `l` is a clean factor
+        for j in 0..n {
+            for i in 0..j {
+                l.set(i, j, 0.0);
+            }
+        }
+        for j in 0..n {
+            // d = M[j,j] - Σ_{k<j} L[j,k]²
+            let mut d = l.get(j, j);
+            for k in 0..j {
+                let ljk = l.get(j, k);
+                d -= ljk * ljk;
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(NotPositiveDefinite { pivot: j });
+            }
+            let djj = d.sqrt();
+            l.set(j, j, djj);
+            let inv = 1.0 / djj;
+            for i in (j + 1)..n {
+                let mut s = l.get(i, j);
+                for k in 0..j {
+                    s -= l.get(i, k) * l.get(j, k);
+                }
+                l.set(i, j, s * inv);
+            }
+        }
+        Ok(Self { l })
+    }
+
+    /// Dimension of the factored matrix.
+    pub fn dim(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// Access to the lower factor.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve `M x = rhs` in place via forward + backward substitution.
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        let n = self.dim();
+        assert_eq!(x.len(), n);
+        // forward: L w = rhs
+        for i in 0..n {
+            let mut s = x[i];
+            for k in 0..i {
+                s -= self.l.get(i, k) * x[k];
+            }
+            x[i] = s / self.l.get(i, i);
+        }
+        // backward: Lᵀ x = w
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in (i + 1)..n {
+                s -= self.l.get(k, i) * x[k];
+            }
+            x[i] = s / self.l.get(i, i);
+        }
+    }
+
+    /// Solve returning a fresh vector.
+    pub fn solve(&self, rhs: &[f64]) -> Vec<f64> {
+        let mut x = rhs.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// log-determinant of `M` (used by diagnostics): `2 Σ log L[i,i]`.
+    pub fn log_det(&self) -> f64 {
+        (0..self.dim()).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn spd_random(n: usize, seed: u64) -> Mat {
+        // B random, M = BᵀB + n·I is SPD.
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let b = Mat::from_fn(n, n, |_, _| r.next_gaussian());
+        let mut m = b.transpose().matmul(&b);
+        for i in 0..n {
+            m.set(i, i, m.get(i, i) + n as f64);
+        }
+        m
+    }
+
+    #[test]
+    fn factor_solve_roundtrip() {
+        for n in [1usize, 2, 5, 20] {
+            let m = spd_random(n, 42 + n as u64);
+            let ch = Cholesky::factor(&m).unwrap();
+            let mut r = Xoshiro256pp::seed_from_u64(7);
+            let rhs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+            let x = ch.solve(&rhs);
+            let back = m.mul_vec(&x);
+            for i in 0..n {
+                assert!((back[i] - rhs[i]).abs() < 1e-8, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn l_times_lt_reconstructs() {
+        let m = spd_random(6, 3);
+        let ch = Cholesky::factor(&m).unwrap();
+        let rec = ch.l().matmul(&ch.l().transpose());
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((rec.get(i, j) - m.get(i, j)).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let m = Mat::from_row_major(2, 2, &[1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(Cholesky::factor(&m).is_err());
+    }
+
+    #[test]
+    fn rejects_semidefinite() {
+        let m = Mat::from_row_major(2, 2, &[1.0, 1.0, 1.0, 1.0]); // rank 1
+        let e = Cholesky::factor(&m).unwrap_err();
+        assert_eq!(e.pivot, 1);
+    }
+
+    #[test]
+    fn identity_logdet_zero() {
+        let ch = Cholesky::factor(&Mat::eye(4)).unwrap();
+        assert!(ch.log_det().abs() < 1e-14);
+        assert_eq!(ch.solve(&[1.0, 2.0, 3.0, 4.0]), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

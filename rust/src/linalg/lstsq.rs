@@ -1,0 +1,137 @@
+//! Small regularized least-squares solves.
+//!
+//! Used by the tuning module (paper §3.3): least-squares **de-biasing** on the
+//! selected features, and the Elastic Net degrees of freedom
+//! `ν = tr(A_J (A_JᵀA_J + λ2 I_r)⁻¹ A_Jᵀ)`. The active set is small
+//! (r ≲ a few hundred), so normal equations + Cholesky are appropriate.
+
+use crate::linalg::chol::{Cholesky, NotPositiveDefinite};
+use crate::linalg::matrix::Mat;
+
+/// Solve `min_w ‖A_J w − b‖² + ridge·‖w‖²` via normal equations on the gathered
+/// columns `idx` of `a`. With `ridge = 0` a tiny jitter is added if the Gram
+/// matrix is numerically singular (collinear selected columns).
+pub fn ridge_on_support(a: &Mat, idx: &[usize], b: &[f64], ridge: f64) -> Vec<f64> {
+    assert_eq!(a.rows(), b.len());
+    if idx.is_empty() {
+        return Vec::new();
+    }
+    let mut reg = ridge;
+    let rhs: Vec<f64> = idx.iter().map(|&j| crate::linalg::blas::dot(a.col(j), b)).collect();
+    // escalate jitter until the (PSD + reg I) system factors
+    for _attempt in 0..6 {
+        let gram = a.gram_of_cols(idx, reg);
+        match Cholesky::factor(&gram) {
+            Ok(ch) => return ch.solve(&rhs),
+            Err(NotPositiveDefinite { .. }) => {
+                let scale = gram_diag_max(&gram).max(1.0);
+                reg = if reg == 0.0 { 1e-10 * scale } else { reg * 100.0 };
+            }
+        }
+    }
+    panic!("ridge_on_support: system did not factor even with jitter");
+}
+
+fn gram_diag_max(g: &Mat) -> f64 {
+    (0..g.rows()).fold(0.0f64, |m, i| m.max(g.get(i, i)))
+}
+
+/// Elastic Net degrees of freedom (Tibshirani et al. 2012, paper Eq. after 21):
+/// `ν = tr(A_J (A_JᵀA_J + λ2 I_r)⁻¹ A_Jᵀ) = tr((G + λ2 I)⁻¹ G)` with `G = A_JᵀA_J`.
+pub fn enet_degrees_of_freedom(a: &Mat, idx: &[usize], lam2: f64) -> f64 {
+    if idx.is_empty() {
+        return 0.0;
+    }
+    let r = idx.len();
+    let g = a.gram_of_cols(idx, 0.0);
+    let greg = a.gram_of_cols(idx, lam2.max(1e-12));
+    let ch = match Cholesky::factor(&greg) {
+        Ok(c) => c,
+        Err(_) => {
+            // collinear active set with λ2≈0: escalate jitter
+            let jit = gram_diag_max(&g).max(1.0) * 1e-8;
+            Cholesky::factor(&a.gram_of_cols(idx, lam2 + jit))
+                .expect("dof gram should factor with jitter")
+        }
+    };
+    // tr((G+λ2I)⁻¹G) = Σ_k eₖᵀ(G+λ2I)⁻¹ G eₖ — r solves of an r×r system.
+    let mut trace = 0.0;
+    for k in 0..r {
+        let col: Vec<f64> = (0..r).map(|i| g.get(i, k)).collect();
+        let s = ch.solve(&col);
+        trace += s[k];
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn random_design(m: usize, n: usize, seed: u64) -> Mat {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        Mat::from_fn(m, n, |_, _| r.next_gaussian())
+    }
+
+    #[test]
+    fn ols_recovers_exact_coefficients() {
+        let m = 50;
+        let a = random_design(m, 5, 1);
+        let w_true = [2.0, -1.0, 0.5, 3.0, -0.25];
+        let b = a.mul_vec(&w_true);
+        let w = ridge_on_support(&a, &[0, 1, 2, 3, 4], &b, 0.0);
+        for i in 0..5 {
+            assert!((w[i] - w_true[i]).abs() < 1e-8, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn ridge_shrinks_toward_zero() {
+        let a = random_design(30, 3, 2);
+        let b = a.mul_vec(&[1.0, 1.0, 1.0]);
+        let w0 = ridge_on_support(&a, &[0, 1, 2], &b, 0.0);
+        let w1 = ridge_on_support(&a, &[0, 1, 2], &b, 100.0);
+        let n0: f64 = w0.iter().map(|v| v * v).sum();
+        let n1: f64 = w1.iter().map(|v| v * v).sum();
+        assert!(n1 < n0);
+    }
+
+    #[test]
+    fn handles_duplicate_columns_with_jitter() {
+        let m = 20;
+        let base = random_design(m, 1, 3);
+        // two identical columns → singular Gram; jitter must kick in
+        let a = Mat::from_fn(m, 2, |i, _| base.get(i, 0));
+        let b: Vec<f64> = (0..m).map(|i| base.get(i, 0) * 2.0).collect();
+        let w = ridge_on_support(&a, &[0, 1], &b, 0.0);
+        assert_eq!(w.len(), 2);
+        // predictions should still be near-perfect
+        let pred = a.mul_vec(&w);
+        for i in 0..m {
+            assert!((pred[i] - b[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_support_returns_empty() {
+        let a = random_design(5, 2, 4);
+        assert!(ridge_on_support(&a, &[], &[0.0; 5], 0.0).is_empty());
+        assert_eq!(enet_degrees_of_freedom(&a, &[], 1.0), 0.0);
+    }
+
+    #[test]
+    fn dof_limits() {
+        // λ2 → 0: ν → r (OLS dof). λ2 → ∞: ν → 0.
+        let a = random_design(40, 6, 5);
+        let idx: Vec<usize> = (0..6).collect();
+        let nu0 = enet_degrees_of_freedom(&a, &idx, 1e-10);
+        assert!((nu0 - 6.0).abs() < 1e-4, "nu0={nu0}");
+        let nu_inf = enet_degrees_of_freedom(&a, &idx, 1e9);
+        assert!(nu_inf < 1e-3, "nu_inf={nu_inf}");
+        // monotone decreasing in λ2
+        let nu_a = enet_degrees_of_freedom(&a, &idx, 0.1);
+        let nu_b = enet_degrees_of_freedom(&a, &idx, 10.0);
+        assert!(nu_a > nu_b);
+    }
+}

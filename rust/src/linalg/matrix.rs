@@ -1,0 +1,293 @@
+//! Column-major dense matrix.
+//!
+//! The design matrix `A` (m × n, n ≫ m) is stored **column-major** because every hot
+//! operation in SsNAL-EN streams over columns:
+//!
+//! * `Aᵀy` — one contiguous dot product per column,
+//! * `Ax` with sparse `x` — an axpy per *active* column only,
+//! * `A_J` — gathering active columns is a contiguous copy,
+//! * `A_JᵀA_J` — dots of column pairs.
+
+use crate::linalg::blas;
+
+/// Dense column-major matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    /// Column-major storage: element (i, j) lives at `data[j * rows + i]`.
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m.data[j * rows + i] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Wrap existing column-major storage.
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "storage length mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from row-major data (e.g. parsed text files).
+    pub fn from_row_major(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols, "storage length mismatch");
+        Self::from_fn(rows, cols, |i, j| data[i * cols + j])
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Immutable view of column `j` (length `rows`, contiguous).
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.cols);
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable view of column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.cols);
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Element access (row, col).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i]
+    }
+
+    /// Element assignment (row, col).
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i] = v;
+    }
+
+    /// Raw column-major storage.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Raw mutable column-major storage.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// `out = Aᵀ y` — the O(mn) dual sweep; one contiguous dot per column.
+    pub fn t_mul_vec_into(&self, y: &[f64], out: &mut [f64]) {
+        assert_eq!(y.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        for j in 0..self.cols {
+            out[j] = blas::dot(self.col(j), y);
+        }
+    }
+
+    /// `Aᵀ y`, allocating.
+    pub fn t_mul_vec(&self, y: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        self.t_mul_vec_into(y, &mut out);
+        out
+    }
+
+    /// `out = A x` — accumulated column-wise; skips exact zeros in `x`, which makes
+    /// this O(m·nnz(x)) on the sparse primal iterates SsNAL produces.
+    pub fn mul_vec_into(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for j in 0..self.cols {
+            let xj = x[j];
+            if xj != 0.0 {
+                blas::axpy(xj, self.col(j), out);
+            }
+        }
+    }
+
+    /// `A x`, allocating.
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        self.mul_vec_into(x, &mut out);
+        out
+    }
+
+    /// `A x` restricted to a support set: `out = Σ_{j∈support} x[j]·A[:,j]`.
+    pub fn mul_vec_support_into(&self, x: &[f64], support: &[usize], out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for &j in support {
+            let xj = x[j];
+            if xj != 0.0 {
+                blas::axpy(xj, self.col(j), out);
+            }
+        }
+    }
+
+    /// Gather columns `idx` into a dense m × |idx| matrix (contiguous copies).
+    pub fn gather_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for (k, &j) in idx.iter().enumerate() {
+            out.col_mut(k).copy_from_slice(self.col(j));
+        }
+        out
+    }
+
+    /// Gram matrix of a column subset: `G = A_JᵀA_J + ridge·I` (|J| × |J|, row-major
+    /// packed into a `Mat` — symmetric so the layout question is moot).
+    pub fn gram_of_cols(&self, idx: &[usize], ridge: f64) -> Mat {
+        let r = idx.len();
+        let mut g = Mat::zeros(r, r);
+        for a in 0..r {
+            let ca = self.col(idx[a]);
+            for b in a..r {
+                let v = blas::dot(ca, self.col(idx[b]));
+                g.set(a, b, v);
+                g.set(b, a, v);
+            }
+            let d = g.get(a, a) + ridge;
+            g.set(a, a, d);
+        }
+        g
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        blas::nrm2(&self.data)
+    }
+
+    /// Transpose (used only in small/test contexts — the solver never transposes A).
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+
+    /// Dense matrix–matrix product (small matrices: tuning, tests).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for j in 0..other.cols {
+            let bcol = other.col(j);
+            let ocol = out.col_mut(j);
+            for (k, &bkj) in bcol.iter().enumerate() {
+                if bkj != 0.0 {
+                    blas::axpy(bkj, self.col(k), ocol);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Mat {
+        // [[1, 2, 3],
+        //  [4, 5, 6]]
+        Mat::from_row_major(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn storage_is_column_major() {
+        let a = small();
+        assert_eq!(a.col(0), &[1.0, 4.0]);
+        assert_eq!(a.col(2), &[3.0, 6.0]);
+        assert_eq!(a.get(1, 1), 5.0);
+    }
+
+    #[test]
+    fn t_mul_vec_correct() {
+        let a = small();
+        let y = [1.0, -1.0];
+        assert_eq!(a.t_mul_vec(&y), vec![-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn mul_vec_correct_and_skips_zeros() {
+        let a = small();
+        let x = [1.0, 0.0, 2.0];
+        assert_eq!(a.mul_vec(&x), vec![7.0, 16.0]);
+    }
+
+    #[test]
+    fn mul_vec_support_matches_dense() {
+        let a = small();
+        let x = [1.0, -2.0, 2.0];
+        let support = [0usize, 1, 2];
+        let mut out = vec![0.0; 2];
+        a.mul_vec_support_into(&x, &support, &mut out);
+        assert_eq!(out, a.mul_vec(&x));
+    }
+
+    #[test]
+    fn gather_and_gram() {
+        let a = small();
+        let g = a.gather_cols(&[0, 2]);
+        assert_eq!(g.rows(), 2);
+        assert_eq!(g.cols(), 2);
+        assert_eq!(g.col(1), &[3.0, 6.0]);
+        let gram = a.gram_of_cols(&[0, 2], 0.5);
+        // col0·col0 = 17, col0·col2 = 27, col2·col2 = 45
+        assert_eq!(gram.get(0, 0), 17.5);
+        assert_eq!(gram.get(0, 1), 27.0);
+        assert_eq!(gram.get(1, 0), 27.0);
+        assert_eq!(gram.get(1, 1), 45.5);
+    }
+
+    #[test]
+    fn matmul_against_hand_computed() {
+        let a = small(); // 2x3
+        let b = Mat::from_row_major(3, 2, &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.cols(), 2);
+        // [[1+3, 2+3],[4+6, 5+6]]
+        assert_eq!(c.get(0, 0), 4.0);
+        assert_eq!(c.get(0, 1), 5.0);
+        assert_eq!(c.get(1, 0), 10.0);
+        assert_eq!(c.get(1, 1), 11.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = small();
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn eye_matmul_identity() {
+        let a = small();
+        let i3 = Mat::eye(3);
+        assert_eq!(a.matmul(&i3), a);
+    }
+}

@@ -1,0 +1,18 @@
+//! Dense linear-algebra substrate (built from scratch — the offline environment
+//! ships no BLAS/LAPACK bindings).
+//!
+//! Everything SsNAL-EN and its baselines need: a column-major [`matrix::Mat`],
+//! level-1 kernels tuned for the solver's streaming access patterns
+//! ([`blas`]), [`chol::Cholesky`] for the direct/Woodbury Newton strategies,
+//! matrix-free [`cg`] for the large-active-set regime, and small
+//! least-squares/dof solves for tuning ([`lstsq`]).
+
+pub mod blas;
+pub mod cg;
+pub mod chol;
+pub mod lstsq;
+pub mod matrix;
+
+pub use cg::{solve_cg, CgResult};
+pub use chol::{Cholesky, NotPositiveDefinite};
+pub use matrix::Mat;

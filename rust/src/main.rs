@@ -1,0 +1,394 @@
+//! `ssnal-en` — the command-line launcher.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §3):
+//!
+//! ```text
+//! ssnal-en solve          one Elastic Net solve on synthetic data (native|pjrt)
+//! ssnal-en path           warm-started λ-path
+//! ssnal-en tune           GCV / e-BIC / CV tuning sweep
+//! ssnal-en fig1           Figure 1 series → CSV
+//! ssnal-en bench-table1   Table 1   (sim1–3 × n)
+//! ssnal-en bench-table2   Table 2   (polynomial-expansion datasets)
+//! ssnal-en bench-insight  Figure 2 + Table 3 (simulated INSIGHT cohorts)
+//! ssnal-en bench-d1..d4   Supplement tables D.1–D.4
+//! ssnal-en artifacts-check  verify the PJRT artifacts load and run
+//! ```
+//!
+//! Paper-scale sizes are the defaults where feasible on this testbed; every
+//! size is overridable (e.g. `--ns 1e4,1e5,1e6`).
+
+use ssnal_en::bench::tables;
+use ssnal_en::coordinator::{Backend, Coordinator, CoordinatorConfig};
+use ssnal_en::data::libsvm::ReferenceSet;
+use ssnal_en::data::snp::SnpSpec;
+use ssnal_en::data::{generate_synthetic, SyntheticSpec};
+use ssnal_en::path::{c_lambda_grid, PathOptions};
+use ssnal_en::solver::types::{Algorithm, EnetProblem};
+use ssnal_en::tuning::TuningOptions;
+use ssnal_en::util::csv::write_csv;
+use ssnal_en::util::table::Table;
+use ssnal_en::util::Args;
+use std::path::PathBuf;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
+    let result = match cmd.as_str() {
+        "solve" => cmd_solve(&args),
+        "path" => cmd_path(&args),
+        "tune" => cmd_tune(&args),
+        "fig1" => cmd_fig1(&args),
+        "bench-table1" => cmd_table1(&args),
+        "bench-table2" => cmd_table2(&args),
+        "bench-insight" => cmd_insight(&args),
+        "bench-d1" => cmd_d1(&args),
+        "bench-d2" => cmd_d2(&args),
+        "bench-d3" => cmd_d3(&args),
+        "bench-d4" => cmd_d4(&args),
+        "bench-ablation" => cmd_ablation(&args),
+        "artifacts-check" => cmd_artifacts_check(&args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "ssnal-en — Semi-smooth Newton Augmented Lagrangian solver for the Elastic Net\n\
+         \n\
+         USAGE: ssnal-en <subcommand> [--key value]...\n\
+         \n\
+         SUBCOMMANDS\n\
+         solve            --n 1e4 --m 500 --n0 10 --alpha 0.8 --c 0.5 --backend native|pjrt\n\
+         path             --n 1e4 --m 500 --alpha 0.8 --grid 100 --max-active 100\n\
+         tune             --n 1e4 --m 200 --alpha 0.9 --grid 30 --cv 0\n\
+         fig1             --points 241 --out results/fig1.csv\n\
+         bench-table1     --ns 1e4,1e5,5e5 --m 500 [--tol 1e-6]\n\
+         bench-table2     --sets housing,bodyfat,triazines --max-n 50000\n\
+         bench-insight    --n-snps 50000 --grid 25 --cv 0 --out-dir results\n\
+         bench-d1         --ns 1e4,1e5 --reps 20\n\
+         bench-d2         --ns 1e4,1e5\n\
+         bench-d3         [--tol 1e-6]\n\
+         bench-d4         --ns 1e5 --grid 100\n\
+         bench-ablation   --n 5e4 --m 500\n\
+         artifacts-check  [--artifacts-dir artifacts]\n"
+    );
+}
+
+fn parse_tol(args: &Args) -> Result<f64, anyhow::Error> {
+    args.get_f64("tol", 1e-6).map_err(anyhow::Error::msg)
+}
+
+fn maybe_write(table: &Table, args: &Args) -> anyhow::Result<()> {
+    table.print();
+    if let Some(path) = args.get("out") {
+        std::fs::create_dir_all(PathBuf::from(path).parent().unwrap_or(&PathBuf::from(".")))?;
+        std::fs::write(path, table.to_csv())?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 10_000).map_err(anyhow::Error::msg)?;
+    let m = args.get_usize("m", 500).map_err(anyhow::Error::msg)?;
+    let n0 = args.get_usize("n0", 10).map_err(anyhow::Error::msg)?;
+    let alpha = args.get_f64("alpha", 0.8).map_err(anyhow::Error::msg)?;
+    let c = args.get_f64("c", 0.5).map_err(anyhow::Error::msg)?;
+    let seed = args.get_usize("seed", 2020).map_err(anyhow::Error::msg)? as u64;
+    let backend = Backend::parse(&args.get_str("backend", "native")).map_err(anyhow::Error::msg)?;
+    let tol = parse_tol(args)?;
+
+    let prob = generate_synthetic(&SyntheticSpec { m, n, n0, x_star: 5.0, snr: 5.0, seed });
+    let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, alpha);
+    let (lam1, lam2) = EnetProblem::lambdas_from_alpha(alpha, c, lmax);
+
+    let mut cfg = match backend {
+        Backend::Native => CoordinatorConfig::native(tol),
+        Backend::Pjrt => CoordinatorConfig::pjrt(PathBuf::from(
+            args.get_str("artifacts-dir", "artifacts"),
+        )),
+    };
+    cfg.ssnal.verbose = args.get_flag("verbose");
+    let coord = Coordinator::new(cfg);
+    let (res, secs) = ssnal_en::util::timer::time_it(|| coord.solve(&prob.a, &prob.b, lam1, lam2));
+    let res = res?;
+    println!(
+        "solved m={m} n={n} λ1={lam1:.4} λ2={lam2:.4} backend={backend:?}\n\
+         time={secs:.3}s outer={} inner={} active={} residual={:.2e} objective={:.6}",
+        res.iterations,
+        res.inner_iterations,
+        res.active_set.len(),
+        res.residual,
+        res.objective
+    );
+    let hits = prob.support.iter().filter(|j| res.x[**j] != 0.0).count();
+    println!("true-support recovery: {hits}/{}", prob.support.len());
+    Ok(())
+}
+
+fn cmd_path(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 10_000).map_err(anyhow::Error::msg)?;
+    let m = args.get_usize("m", 500).map_err(anyhow::Error::msg)?;
+    let alpha = args.get_f64("alpha", 0.8).map_err(anyhow::Error::msg)?;
+    let grid = args.get_usize("grid", 100).map_err(anyhow::Error::msg)?;
+    let max_active = args.get_usize("max-active", 100).map_err(anyhow::Error::msg)?;
+    let seed = args.get_usize("seed", 2020).map_err(anyhow::Error::msg)? as u64;
+    let tol = parse_tol(args)?;
+
+    let prob = generate_synthetic(&SyntheticSpec { m, n, n0: 100.min(n / 10).max(1), x_star: 5.0, snr: 5.0, seed });
+    let opts = PathOptions {
+        alpha,
+        c_grid: c_lambda_grid(1.0, 0.1, grid),
+        max_active,
+        tol,
+        algorithm: Algorithm::SsnalEn,
+    };
+    let (path, secs) =
+        ssnal_en::util::timer::time_it(|| ssnal_en::path::solve_path(&prob.a, &prob.b, &opts));
+    let mut t = Table::new(&["c_lambda", "active", "outer_iters", "objective"])
+        .with_title(&format!("λ-path: {} points in {secs:.3}s (truncated={})", path.runs, path.truncated));
+    for p in &path.points {
+        t.row(vec![
+            format!("{:.4}", p.c_lambda),
+            format!("{}", p.result.active_set.len()),
+            format!("{}", p.result.iterations),
+            format!("{:.4}", p.result.objective),
+        ]);
+    }
+    maybe_write(&t, args)
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 10_000).map_err(anyhow::Error::msg)?;
+    let m = args.get_usize("m", 200).map_err(anyhow::Error::msg)?;
+    let alpha = args.get_f64("alpha", 0.9).map_err(anyhow::Error::msg)?;
+    let grid = args.get_usize("grid", 30).map_err(anyhow::Error::msg)?;
+    let cv = args.get_usize("cv", 0).map_err(anyhow::Error::msg)?;
+    let seed = args.get_usize("seed", 2020).map_err(anyhow::Error::msg)? as u64;
+    let tol = parse_tol(args)?;
+
+    let prob = generate_synthetic(&SyntheticSpec { m, n, n0: 10.min(n / 10).max(1), x_star: 5.0, snr: 10.0, seed });
+    let topts = TuningOptions {
+        path: PathOptions {
+            alpha,
+            c_grid: c_lambda_grid(0.99, 0.05, grid),
+            max_active: 50,
+            tol,
+            algorithm: Algorithm::SsnalEn,
+        },
+        cv_folds: cv,
+        cv_seed: seed,
+    };
+    let coord = Coordinator::new(CoordinatorConfig::native(tol));
+    let tr = coord.tune(&prob.a, &prob.b, &topts);
+    let mut t = Table::new(&["c_lambda", "active", "gcv", "ebic", "cv"])
+        .with_title("tuning criteria (paper §3.3)");
+    for p in &tr.points {
+        t.row(vec![
+            format!("{:.4}", p.c_lambda),
+            format!("{}", p.active),
+            format!("{:.5}", p.gcv),
+            format!("{:.5}", p.ebic),
+            p.cv.map(|v| format!("{v:.5}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    maybe_write(&t, args)?;
+    println!(
+        "\nbest: gcv → c={:.4} (r={}), e-bic → c={:.4} (r={})",
+        tr.points[tr.best_gcv].c_lambda,
+        tr.points[tr.best_gcv].active,
+        tr.points[tr.best_ebic].c_lambda,
+        tr.points[tr.best_ebic].active
+    );
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> anyhow::Result<()> {
+    let points = args.get_usize("points", 241).map_err(anyhow::Error::msg)?;
+    let out = args.get_str("out", "results/fig1.csv");
+    let (header, rows) = tables::fig1_series(points);
+    write_csv(&PathBuf::from(&out), &header, &rows)?;
+    println!("Figure 1 series ({points} points, λ1=λ2=σ=1) written to {out}");
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> anyhow::Result<()> {
+    let ns = args.get_usize_list("ns", &[10_000, 100_000, 500_000]).map_err(anyhow::Error::msg)?;
+    let m = args.get_usize("m", 500).map_err(anyhow::Error::msg)?;
+    let seed = args.get_usize("seed", 2020).map_err(anyhow::Error::msg)? as u64;
+    let tol = parse_tol(args)?;
+    let t = tables::table1(&ns, m, seed, tol);
+    maybe_write(&t, args)
+}
+
+fn cmd_table2(args: &Args) -> anyhow::Result<()> {
+    let sets_str = args.get_str("sets", "housing,bodyfat,triazines");
+    let max_n = args.get_usize("max-n", 50_000).map_err(anyhow::Error::msg)?;
+    let seed = args.get_usize("seed", 2020).map_err(anyhow::Error::msg)? as u64;
+    let tol = parse_tol(args)?;
+    let mut sets = Vec::new();
+    for s in sets_str.split(',') {
+        sets.push(match s.trim() {
+            "housing" => ReferenceSet::Housing,
+            "bodyfat" => ReferenceSet::Bodyfat,
+            "triazines" => ReferenceSet::Triazines,
+            other => anyhow::bail!("unknown dataset {other:?}"),
+        });
+    }
+    let t = tables::table2(&sets, max_n, seed, tol);
+    maybe_write(&t, args)
+}
+
+fn cmd_insight(args: &Args) -> anyhow::Result<()> {
+    let n_snps = args.get_usize("n-snps", 50_000).map_err(anyhow::Error::msg)?;
+    let grid = args.get_usize("grid", 25).map_err(anyhow::Error::msg)?;
+    let cv = args.get_usize("cv", 0).map_err(anyhow::Error::msg)?;
+    let out_dir = PathBuf::from(args.get_str("out-dir", "results"));
+    let alphas = args.get_f64_list("alphas", &[0.9, 0.8, 0.6]).map_err(anyhow::Error::msg)?;
+
+    // the two INSIGHT cohorts: CWG-like (m=226, 13 causal) and BMI-like (m=210, 6 causal)
+    let cohorts = [
+        ("cwg", SnpSpec { m: 226, n_snps, n_causal: 13, seed: 2020, ..Default::default() }),
+        ("bmi", SnpSpec { m: 210, n_snps, n_causal: 6, seed: 2021, ..Default::default() }),
+    ];
+    for (name, spec) in cohorts {
+        println!("== cohort {name}: m={} n_snps={} causal={}", spec.m, spec.n_snps, spec.n_causal);
+        let (run, secs) =
+            ssnal_en::util::timer::time_it(|| tables::insight_run(&spec, &alphas, grid, cv));
+        let curve_path = out_dir.join(format!("fig2_{name}.csv"));
+        write_csv(&curve_path, &tables::INSIGHT_CURVE_HEADER, &run.curves)?;
+        println!("criteria curves → {} ({} rows, {secs:.1}s)", curve_path.display(), run.curves.len());
+        let mut t = Table::new(&["snp", "coef", "is_causal"])
+            .with_title(&format!("Table 3 ({name}): SNPs selected at the e-BIC optimum"));
+        for (snp, coef) in &run.selected {
+            t.row(vec![
+                snp.clone(),
+                format!("{coef:.3}"),
+                format!("{}", run.causal.contains(snp)),
+            ]);
+        }
+        t.print();
+        let hit = run.selected.iter().filter(|(s, _)| run.causal.contains(s)).count();
+        println!("causal recovery: {hit}/{} selected are true causal SNPs\n", run.selected.len());
+        std::fs::write(out_dir.join(format!("table3_{name}.csv")), t.to_csv())?;
+    }
+    Ok(())
+}
+
+fn cmd_d1(args: &Args) -> anyhow::Result<()> {
+    let ns = args.get_usize_list("ns", &[10_000, 100_000, 500_000]).map_err(anyhow::Error::msg)?;
+    let cs = args.get_f64_list("cs", &[0.5, 0.6, 0.7]).map_err(anyhow::Error::msg)?;
+    let reps = args.get_usize("reps", 20).map_err(anyhow::Error::msg)?;
+    let m = args.get_usize("m", 500).map_err(anyhow::Error::msg)?;
+    let tol = parse_tol(args)?;
+    anyhow::ensure!(ns.len() == cs.len(), "--ns and --cs must have equal length");
+    let t = tables::table_d1(&ns, &cs, m, reps, tol);
+    maybe_write(&t, args)
+}
+
+fn cmd_d2(args: &Args) -> anyhow::Result<()> {
+    let ns = args.get_usize_list("ns", &[10_000, 100_000]).map_err(anyhow::Error::msg)?;
+    let tol = parse_tol(args)?;
+    let seed = args.get_usize("seed", 2020).map_err(anyhow::Error::msg)? as u64;
+    let panels: Vec<(&str, f64)> = vec![
+        ("m", 1000.0),
+        ("m", 5000.0),
+        ("snr", 10.0),
+        ("snr", 2.0),
+        ("snr", 1.0),
+        ("alpha", 0.1),
+        ("alpha", 0.3),
+        ("alpha", 0.6),
+        ("x*", 100.0),
+        ("x*", 0.1),
+        ("x*", 0.01),
+    ];
+    let t = tables::table_d2(&ns, &panels, tol, seed);
+    maybe_write(&t, args)
+}
+
+fn cmd_d3(args: &Args) -> anyhow::Result<()> {
+    let tol = parse_tol(args)?;
+    let seed = args.get_usize("seed", 2020).map_err(anyhow::Error::msg)? as u64;
+    // paper scenarios: (n=1e4, m=5e3, n0=500) and (n=5e5, m=500, n0=100)
+    let scen1_n = args.get_usize("scen1-n", 10_000).map_err(anyhow::Error::msg)?;
+    let scen1_m = args.get_usize("scen1-m", 5_000).map_err(anyhow::Error::msg)?;
+    let scen2_n = args.get_usize("scen2-n", 500_000).map_err(anyhow::Error::msg)?;
+    let scenarios = [(scen1_n, scen1_m, 500.min(scen1_n / 4)), (scen2_n, 500, 100)];
+    let cs = args.get_f64_list("cs", &[0.9, 0.7, 0.5, 0.3]).map_err(anyhow::Error::msg)?;
+    let t = tables::table_d3(&scenarios, &cs, tol, seed);
+    maybe_write(&t, args)
+}
+
+fn cmd_d4(args: &Args) -> anyhow::Result<()> {
+    let ns = args.get_usize_list("ns", &[100_000, 500_000]).map_err(anyhow::Error::msg)?;
+    let alphas = args.get_f64_list("alphas", &[0.8, 0.6]).map_err(anyhow::Error::msg)?;
+    let m = args.get_usize("m", 500).map_err(anyhow::Error::msg)?;
+    let grid = args.get_usize("grid", 100).map_err(anyhow::Error::msg)?;
+    let seed = args.get_usize("seed", 2020).map_err(anyhow::Error::msg)? as u64;
+    let tol = parse_tol(args)?;
+    let t = tables::table_d4(&ns, &alphas, m, grid, tol, seed);
+    maybe_write(&t, args)
+}
+
+fn cmd_artifacts_check(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.get_str("artifacts-dir", "artifacts"));
+    let engine = ssnal_en::runtime::PjrtEngine::load_dir(&dir)?;
+    println!(
+        "loaded {} graphs from {} on platform {}",
+        engine.len(),
+        dir.display(),
+        engine.platform()
+    );
+    for (m, n) in engine.manifest.shapes() {
+        println!("  shape ({m}, {n})");
+    }
+    // run a tiny end-to-end pjrt solve on the smallest shape
+    let (m, n) = engine.manifest.shapes().first().copied().expect("at least one shape");
+    let prob = generate_synthetic(&SyntheticSpec { m, n, n0: 5, x_star: 5.0, snr: 5.0, seed: 1 });
+    let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, 0.9);
+    let (l1, l2) = EnetProblem::lambdas_from_alpha(0.9, 0.4, lmax);
+    let coord = Coordinator::new(CoordinatorConfig::pjrt(dir));
+    let res = coord.solve(&prob.a, &prob.b, l1, l2)?;
+    println!(
+        "pjrt solve ({m}×{n}): converged={} active={} outer={}",
+        res.converged,
+        res.active_set.len(),
+        res.iterations
+    );
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 50_000).map_err(anyhow::Error::msg)?;
+    let m = args.get_usize("m", 500).map_err(anyhow::Error::msg)?;
+    let seed = args.get_usize("seed", 2020).map_err(anyhow::Error::msg)? as u64;
+    let tol = parse_tol(args)?;
+    let ta = ssnal_en::bench::tables::ablation_newton(n, m, tol, seed);
+    ta.print();
+    println!();
+    let tb = ssnal_en::bench::tables::ablation_sigma(n, m, tol, seed);
+    tb.print();
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, format!("{}\n{}", ta.to_csv(), tb.to_csv()))?;
+    }
+    Ok(())
+}

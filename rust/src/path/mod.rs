@@ -1,0 +1,247 @@
+//! Warm-started λ-path driver (paper §3.3).
+//!
+//! "We start from values of λ1 very close to ‖Aᵀb‖∞ … when we move to the next
+//! value of λ1, we use the solution at the previous value for initialization
+//! (warm-start) … we allow the user to fix the maximum number of active
+//! features: when this number is reached, no further λ values are explored."
+
+use crate::solver::types::{Algorithm, BaselineOptions, EnetProblem, SolveResult, SsnalOptions};
+use crate::solver::{cd, ssnal};
+
+/// Log-spaced grid of `c_λ` values from `hi` down to `lo` (paper D.4 uses 100
+/// log-spaced points between 1 and 0.1).
+pub fn c_lambda_grid(hi: f64, lo: f64, count: usize) -> Vec<f64> {
+    assert!(hi > lo && lo > 0.0 && count >= 2);
+    let (lh, ll) = (hi.ln(), lo.ln());
+    (0..count)
+        .map(|k| (lh + (ll - lh) * k as f64 / (count - 1) as f64).exp())
+        .collect()
+}
+
+/// Options for a path run.
+#[derive(Clone, Debug)]
+pub struct PathOptions {
+    /// Mixing parameter α (λ1 = α·c·λmax, λ2 = (1−α)·c·λmax).
+    pub alpha: f64,
+    /// Descending c_λ grid.
+    pub c_grid: Vec<f64>,
+    /// Stop exploring once this many features are active (0 = no cap).
+    pub max_active: usize,
+    /// Solver tolerance.
+    pub tol: f64,
+    /// Which solver drives the path (SsnalEn, CdNaive or CdCovariance).
+    pub algorithm: Algorithm,
+}
+
+impl Default for PathOptions {
+    fn default() -> Self {
+        Self {
+            alpha: 0.8,
+            c_grid: c_lambda_grid(1.0, 0.1, 100),
+            max_active: 100,
+            tol: 1e-6,
+            algorithm: Algorithm::SsnalEn,
+        }
+    }
+}
+
+/// One solved point on the path.
+#[derive(Clone, Debug)]
+pub struct PathPoint {
+    pub c_lambda: f64,
+    pub lam1: f64,
+    pub lam2: f64,
+    pub result: SolveResult,
+}
+
+/// A complete path run.
+#[derive(Clone, Debug)]
+pub struct PathResult {
+    pub points: Vec<PathPoint>,
+    /// λ^max = ‖Aᵀb‖∞/α used for the parametrization.
+    pub lambda_max: f64,
+    /// Number of grid values actually explored ("runs" column of Table D.4).
+    pub runs: usize,
+    /// Whether the max-active cap triggered early stop.
+    pub truncated: bool,
+}
+
+/// Run the warm-started path.
+pub fn solve_path(a: &crate::linalg::Mat, b: &[f64], opts: &PathOptions) -> PathResult {
+    assert!(!opts.c_grid.is_empty());
+    for w in opts.c_grid.windows(2) {
+        assert!(w[0] > w[1], "c_grid must be strictly descending");
+    }
+    let lambda_max = EnetProblem::lambda_max(a, b, opts.alpha);
+    let mut points = Vec::with_capacity(opts.c_grid.len());
+    let mut warm: Option<Vec<f64>> = None;
+    let mut truncated = false;
+    // carry σ between warm-started solves: near the previous solution the AL
+    // multiplier is already accurate, so restarting at σ0 = 5e-3 would waste
+    // outer iterations re-growing σ (paper: warm-started points converge in ~1
+    // iteration). Capped to keep the subproblem well conditioned.
+    let mut sigma_carry: Option<f64> = None;
+
+    for &c in &opts.c_grid {
+        let (lam1, lam2) = EnetProblem::lambdas_from_alpha(opts.alpha, c, lambda_max);
+        let p = EnetProblem::new(a, b, lam1, lam2);
+        let result = match opts.algorithm {
+            Algorithm::SsnalEn => {
+                let defaults = SsnalOptions::default();
+                let sigma0 = sigma_carry.unwrap_or(defaults.sigma0).min(1e4);
+                let sopts = SsnalOptions { tol: opts.tol, sigma0, ..defaults };
+                let (res, trace) = ssnal::solve_warm(&p, &sopts, warm.as_deref());
+                sigma_carry = Some(trace.final_sigma);
+                res
+            }
+            Algorithm::CdNaive => cd::solve_naive_warm(
+                &p,
+                &BaselineOptions { tol: opts.tol, ..Default::default() },
+                warm.as_deref(),
+            ),
+            Algorithm::CdCovariance => cd::solve_covariance_warm(
+                &p,
+                &BaselineOptions { tol: opts.tol, ..Default::default() },
+                warm.as_deref(),
+            ),
+            other => panic!("path driver supports ssnal/cd algorithms, not {other:?}"),
+        };
+        warm = Some(result.x.clone());
+        let r = result.active_set.len();
+        points.push(PathPoint { c_lambda: c, lam1, lam2, result });
+        if opts.max_active > 0 && r >= opts.max_active {
+            truncated = true;
+            break;
+        }
+    }
+    let runs = points.len();
+    PathResult { points, lambda_max, runs, truncated }
+}
+
+/// Find the largest `c_λ` in a descending grid whose solution has exactly (or
+/// first reaches ≥) `target_active` active features — how the paper selects
+/// the c_λ column of Tables 1 and 2. Returns the matching path point index.
+pub fn first_reaching_active(path: &PathResult, target_active: usize) -> Option<usize> {
+    path.points.iter().position(|pt| pt.result.active_set.len() >= target_active)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_synthetic, SyntheticSpec};
+
+    fn small_problem() -> crate::data::SyntheticProblem {
+        generate_synthetic(&SyntheticSpec {
+            m: 50,
+            n: 200,
+            n0: 10,
+            x_star: 5.0,
+            snr: 10.0,
+            seed: 42,
+        })
+    }
+
+    #[test]
+    fn grid_is_log_spaced_descending() {
+        let g = c_lambda_grid(1.0, 0.1, 5);
+        assert_eq!(g.len(), 5);
+        assert!((g[0] - 1.0).abs() < 1e-12);
+        assert!((g[4] - 0.1).abs() < 1e-12);
+        for w in g.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+        // log-spacing: ratios constant
+        let r0 = g[1] / g[0];
+        let r1 = g[3] / g[2];
+        assert!((r0 - r1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn active_set_grows_along_path() {
+        let prob = small_problem();
+        let opts = PathOptions {
+            alpha: 0.8,
+            c_grid: c_lambda_grid(0.95, 0.1, 12),
+            max_active: 0,
+            tol: 1e-6,
+            algorithm: Algorithm::SsnalEn,
+        };
+        let path = solve_path(&prob.a, &prob.b, &opts);
+        assert_eq!(path.runs, 12);
+        let sizes: Vec<usize> = path.points.iter().map(|p| p.result.active_set.len()).collect();
+        // allow small non-monotonicity but overall growth
+        assert!(sizes.last().unwrap() > sizes.first().unwrap());
+        assert!(*sizes.last().unwrap() >= 10, "end of path should catch the truth");
+    }
+
+    #[test]
+    fn max_active_truncates() {
+        let prob = small_problem();
+        let opts = PathOptions {
+            alpha: 0.8,
+            c_grid: c_lambda_grid(0.95, 0.05, 50),
+            max_active: 10,
+            tol: 1e-6,
+            algorithm: Algorithm::SsnalEn,
+        };
+        let path = solve_path(&prob.a, &prob.b, &opts);
+        assert!(path.truncated);
+        assert!(path.runs < 50);
+        assert!(path.points.last().unwrap().result.active_set.len() >= 10);
+    }
+
+    #[test]
+    fn ssnal_and_cd_paths_agree() {
+        let prob = small_problem();
+        let grid = c_lambda_grid(0.9, 0.3, 6);
+        let mk = |algorithm| PathOptions {
+            alpha: 0.7,
+            c_grid: grid.clone(),
+            max_active: 0,
+            tol: 1e-8,
+            algorithm,
+        };
+        let ps = solve_path(&prob.a, &prob.b, &mk(Algorithm::SsnalEn));
+        let pc = solve_path(&prob.a, &prob.b, &mk(Algorithm::CdCovariance));
+        for (a, b) in ps.points.iter().zip(pc.points.iter()) {
+            let dist = crate::linalg::blas::dist2(&a.result.x, &b.result.x);
+            assert!(dist < 1e-3, "c={}: dist {dist}", a.c_lambda);
+        }
+    }
+
+    #[test]
+    fn warm_start_means_few_iterations_late_in_path() {
+        let prob = small_problem();
+        let opts = PathOptions {
+            alpha: 0.8,
+            c_grid: c_lambda_grid(0.95, 0.2, 30),
+            max_active: 0,
+            tol: 1e-6,
+            algorithm: Algorithm::SsnalEn,
+        };
+        let path = solve_path(&prob.a, &prob.b, &opts);
+        // paper: "usually SsNAL-EN converges in just one iteration" on warm starts
+        let late = &path.points[10..];
+        let avg: f64 = late.iter().map(|p| p.result.iterations as f64).sum::<f64>()
+            / late.len() as f64;
+        assert!(avg <= 2.5, "avg late-path iterations {avg} (paper: ≈1 with warm starts)");
+    }
+
+    #[test]
+    fn first_reaching_active_finds_target() {
+        let prob = small_problem();
+        let opts = PathOptions {
+            alpha: 0.8,
+            c_grid: c_lambda_grid(0.95, 0.05, 40),
+            max_active: 0,
+            tol: 1e-6,
+            algorithm: Algorithm::SsnalEn,
+        };
+        let path = solve_path(&prob.a, &prob.b, &opts);
+        let idx = first_reaching_active(&path, 5).expect("should reach 5 active");
+        assert!(path.points[idx].result.active_set.len() >= 5);
+        if idx > 0 {
+            assert!(path.points[idx - 1].result.active_set.len() < 5);
+        }
+    }
+}

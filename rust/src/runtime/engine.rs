@@ -1,0 +1,164 @@
+//! PJRT execution engine — the runtime layer of the three-layer stack.
+//!
+//! Loads the HLO-text artifacts produced once by `python/compile/aot.py`
+//! (`make artifacts`), compiles them on the PJRT CPU client, and executes them
+//! from the Rust hot path. Python never runs here.
+//!
+//! Conventions shared with `python/compile/model.py`:
+//!
+//! * the design matrix is passed **transposed** (`at`, shape `(n, m)`): our
+//!   column-major `Mat` storage is exactly jax's row-major `(n, m)` layout, so
+//!   the buffer crosses the boundary without a transpose copy;
+//! * buffers are `f32` (the artifacts' dtype; the native path stays `f64`);
+//! * every graph returns a tuple (jax lowered with `return_tuple=True`).
+
+use crate::linalg::Mat;
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled graph plus its shape metadata.
+pub struct LoadedGraph {
+    exe: xla::PjRtLoadedExecutable,
+    /// Metadata (name, m, n, file).
+    pub meta: ArtifactMeta,
+}
+
+impl LoadedGraph {
+    /// Execute with the given literals; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing graph {}", self.meta.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", self.meta.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The engine: one PJRT client + all compiled graphs keyed by (name, m, n).
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    graphs: HashMap<(String, usize, usize), LoadedGraph>,
+    /// The manifest the engine was built from.
+    pub manifest: Manifest,
+}
+
+impl PjrtEngine {
+    /// Load every artifact in `dir` and compile it.
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        if manifest.dtype != "f32" {
+            return Err(anyhow!("unsupported artifact dtype {}", manifest.dtype));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let mut graphs = HashMap::new();
+        for meta in manifest.artifacts.clone() {
+            let path = manifest.path_of(&meta);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", meta.name))?;
+            graphs.insert((meta.name.clone(), meta.m, meta.n), LoadedGraph { exe, meta });
+        }
+        Ok(Self { client, graphs, manifest })
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch a graph for a given problem shape.
+    pub fn graph(&self, name: &str, m: usize, n: usize) -> Result<&LoadedGraph> {
+        self.graphs.get(&(name.to_string(), m, n)).ok_or_else(|| {
+            anyhow!(
+                "no artifact `{name}` for shape ({m}, {n}); available shapes: {:?} — \
+                 re-run `make artifacts SHAPES=...`",
+                self.manifest.shapes()
+            )
+        })
+    }
+
+    /// Number of loaded graphs.
+    pub fn len(&self) -> usize {
+        self.graphs.len()
+    }
+
+    /// True if no graphs are loaded.
+    pub fn is_empty(&self) -> bool {
+        self.graphs.is_empty()
+    }
+}
+
+/// Convert an f64 slice to an f32 literal of the given dimensions.
+pub fn literal_from_f64(values: &[f64], dims: &[usize]) -> Result<xla::Literal> {
+    let expected: usize = dims.iter().product();
+    if expected != values.len() {
+        return Err(anyhow!("literal shape {:?} wants {expected} values, got {}", dims, values.len()));
+    }
+    let f32s: Vec<f32> = values.iter().map(|&v| v as f32).collect();
+    let lit = xla::Literal::vec1(&f32s);
+    if dims.len() == 1 {
+        Ok(lit)
+    } else {
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims_i64)?)
+    }
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f64) -> xla::Literal {
+    xla::Literal::scalar(v as f32)
+}
+
+/// The design matrix as the `(n, m)` transposed literal the graphs expect —
+/// column-major `Mat` storage *is* row-major `(n, m)`, so this is a plain
+/// cast-copy with no transpose.
+pub fn literal_at(a: &Mat) -> Result<xla::Literal> {
+    literal_from_f64(a.as_slice(), &[a.cols(), a.rows()])
+}
+
+/// Read an output literal back to f64.
+pub fn literal_to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    let v: Vec<f32> = lit.to_vec()?;
+    Ok(v.into_iter().map(|x| x as f64).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let vals = [1.0f64, -2.5, 3.25];
+        let lit = literal_from_f64(&vals, &[3]).unwrap();
+        let back = literal_to_f64(&lit).unwrap();
+        assert_eq!(back, vals.to_vec());
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(literal_from_f64(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn at_literal_matches_transposed_layout() {
+        // Mat column-major (2×3): col j contiguous ⇒ row-major (3, 2) = Aᵀ
+        let a = Mat::from_row_major(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = literal_at(&a).unwrap();
+        let flat = literal_to_f64(&lit).unwrap();
+        // expected Aᵀ row-major: rows are columns of A
+        assert_eq!(flat, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    // Engine loading is covered by rust/tests/pjrt_integration.rs, which
+    // requires `make artifacts` to have produced the HLO files.
+}

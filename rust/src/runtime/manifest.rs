@@ -1,0 +1,144 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` (which
+//! lowers the L2 JAX graphs to HLO text) and the Rust PJRT engine that loads
+//! them. The manifest is plain JSON parsed with [`crate::util::json`].
+//!
+//! ```json
+//! {
+//!   "dtype": "f32",
+//!   "artifacts": [
+//!     {"name": "dual_prox_grad", "m": 200, "n": 4000,
+//!      "file": "dual_prox_grad_200x4000.hlo.txt"}
+//!   ]
+//! }
+//! ```
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One lowered graph at a fixed shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    /// Graph name (`dual_prox_grad`, `hess_vec`, ...).
+    pub name: String,
+    /// Rows of the design matrix the graph was lowered for.
+    pub m: usize,
+    /// Columns of the design matrix.
+    pub n: usize,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Buffer element type the graphs were lowered with (currently "f32").
+    pub dtype: String,
+    pub artifacts: Vec<ArtifactMeta>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self, String> {
+        let j = Json::parse(text)?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .unwrap_or("f32")
+            .to_string();
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or("manifest missing artifacts array")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for (i, a) in arts.iter().enumerate() {
+            let get_str = |k: &str| {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or(format!("artifact {i}: missing string {k}"))
+            };
+            let get_usize = |k: &str| {
+                a.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or(format!("artifact {i}: missing integer {k}"))
+            };
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?,
+                m: get_usize("m")?,
+                n: get_usize("n")?,
+                file: get_str("file")?,
+            });
+        }
+        Ok(Self { dtype, artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Find an artifact by graph name and shape.
+    pub fn find(&self, name: &str, m: usize, n: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name && a.m == m && a.n == n)
+    }
+
+    /// All distinct `(m, n)` shapes present.
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self.artifacts.iter().map(|a| (a.m, a.n)).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "dtype": "f32",
+      "artifacts": [
+        {"name": "dual_prox_grad", "m": 200, "n": 4000, "file": "dual_prox_grad_200x4000.hlo.txt"},
+        {"name": "hess_vec", "m": 200, "n": 4000, "file": "hess_vec_200x4000.hlo.txt"},
+        {"name": "dual_prox_grad", "m": 500, "n": 10000, "file": "dual_prox_grad_500x10000.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_and_find() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.dtype, "f32");
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.find("dual_prox_grad", 200, 4000).unwrap();
+        assert_eq!(a.file, "dual_prox_grad_200x4000.hlo.txt");
+        assert!(m.find("dual_prox_grad", 999, 4000).is_none());
+        assert_eq!(m.shapes(), vec![(200, 4000), (500, 10000)]);
+        assert_eq!(
+            m.path_of(a),
+            PathBuf::from("/tmp/artifacts/dual_prox_grad_200x4000.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"artifacts":[{"name":"x"}]}"#, Path::new(".")).is_err());
+        assert!(Manifest::parse("not json", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent_dir_xyz")).unwrap_err();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

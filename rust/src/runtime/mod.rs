@@ -1,0 +1,22 @@
+//! Runtime layer: loads `artifacts/*.hlo.txt` (AOT-lowered JAX + Pallas graphs)
+//! and executes them on the PJRT CPU client from the Rust request path.
+//!
+//! See DESIGN.md §2 for the three-layer architecture and
+//! `python/compile/aot.py` for the producer side of the contract.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{
+    literal_at, literal_from_f64, literal_scalar, literal_to_f64, LoadedGraph, PjrtEngine,
+};
+pub use manifest::{ArtifactMeta, Manifest};
+
+/// Default artifacts directory (relative to the repo root); can be overridden
+/// with the `SSNAL_ARTIFACTS_DIR` environment variable.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("SSNAL_ARTIFACTS_DIR") {
+        return std::path::PathBuf::from(dir);
+    }
+    std::path::PathBuf::from("artifacts")
+}

@@ -1,0 +1,185 @@
+//! Objective values, KKT residuals (paper Eq. 8 & 20) and the duality gap —
+//! the agreed-upon yardsticks every solver in the crate is tested against.
+
+use crate::linalg::blas;
+use crate::prox;
+use crate::solver::types::EnetProblem;
+
+/// Primal objective `½‖Ax − b‖² + λ1‖x‖₁ + (λ2/2)‖x‖₂²` (Eq. 1).
+pub fn primal_objective(p: &EnetProblem, x: &[f64]) -> f64 {
+    let ax = p.a.mul_vec(x);
+    let mut loss = 0.0;
+    for i in 0..p.m() {
+        let d = ax[i] - p.b[i];
+        loss += d * d;
+    }
+    0.5 * loss + prox::enet_penalty(x, p.lam1, p.lam2)
+}
+
+/// Dual objective `−(h*(y) + p*(z))` of (D); feasibility `Aᵀy + z = 0` is the
+/// caller's concern (see [`kkt_residuals`]). Requires λ2 > 0 for the Elastic
+/// Net conjugate; with λ2 = 0 the Lasso indicator is used.
+pub fn dual_objective(p: &EnetProblem, y: &[f64], z: &[f64]) -> f64 {
+    let pstar = if p.lam2 > 0.0 {
+        prox::enet_conjugate(z, p.lam1, p.lam2)
+    } else {
+        prox::lasso_conjugate(z, p.lam1)
+    };
+    -(prox::h_star(y, p.b) + pstar)
+}
+
+/// Duality gap `primal(x) − dual(y, z)` — nonnegative for feasible pairs,
+/// and → 0 at the optimum.
+pub fn duality_gap(p: &EnetProblem, x: &[f64], y: &[f64], z: &[f64]) -> f64 {
+    primal_objective(p, x) - dual_objective(p, y, z)
+}
+
+/// The three KKT residuals of Eq. (8), normalized per Eq. (20):
+///
+/// * `res1 = ‖y + b − Ax‖ / (1 + ‖b‖)` — dual-variable consistency,
+/// * `res2 = ‖∇p*(z) − x‖ / (1 + ‖x‖)` — conjugate-gradient consistency
+///   (λ2 > 0 required; reported as 0 when λ2 = 0 and z is dual-feasible),
+/// * `res3 = ‖Aᵀy + z‖ / (1 + ‖y‖ + ‖z‖)` — dual feasibility.
+#[derive(Clone, Copy, Debug)]
+pub struct KktResiduals {
+    pub res1: f64,
+    pub res2: f64,
+    pub res3: f64,
+}
+
+impl KktResiduals {
+    /// Largest of the three.
+    pub fn max(&self) -> f64 {
+        self.res1.max(self.res2).max(self.res3)
+    }
+}
+
+/// Evaluate all three KKT residuals at `(x, y, z)`.
+pub fn kkt_residuals(p: &EnetProblem, x: &[f64], y: &[f64], z: &[f64]) -> KktResiduals {
+    let m = p.m();
+    let n = p.n();
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    assert_eq!(z.len(), n);
+
+    // res1: ∇h*(y) − Ax = y + b − Ax
+    let ax = p.a.mul_vec(x);
+    let mut s1 = 0.0;
+    for i in 0..m {
+        let d = y[i] + p.b[i] - ax[i];
+        s1 += d * d;
+    }
+    let res1 = s1.sqrt() / (1.0 + blas::nrm2(p.b));
+
+    // res2: ∇p*(z) − x with ∇p*(z) from Proposition 1 (λ2 > 0)
+    let res2 = if p.lam2 > 0.0 {
+        let mut s2 = 0.0;
+        for j in 0..n {
+            let g = if z[j] >= p.lam1 {
+                (z[j] - p.lam1) / p.lam2
+            } else if z[j] <= -p.lam1 {
+                (z[j] + p.lam1) / p.lam2
+            } else {
+                0.0
+            };
+            let d = g - x[j];
+            s2 += d * d;
+        }
+        s2.sqrt() / (1.0 + blas::nrm2(x))
+    } else {
+        0.0
+    };
+
+    // res3: Aᵀy + z
+    let aty = p.a.t_mul_vec(y);
+    let mut s3 = 0.0;
+    for j in 0..n {
+        let d = aty[j] + z[j];
+        s3 += d * d;
+    }
+    let res3 = s3.sqrt() / (1.0 + blas::nrm2(y) + blas::nrm2(z));
+
+    KktResiduals { res1, res2, res3 }
+}
+
+/// Extract the support (indices of nonzero coefficients) with a tolerance.
+pub fn support_of(x: &[f64], tol: f64) -> Vec<usize> {
+    x.iter()
+        .enumerate()
+        .filter(|(_, &v)| v.abs() > tol)
+        .map(|(j, _)| j)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn tiny() -> (Mat, Vec<f64>) {
+        let a = Mat::from_row_major(2, 3, &[1.0, 0.0, 1.0, 0.0, 1.0, -1.0]);
+        let b = vec![1.0, 2.0];
+        (a, b)
+    }
+
+    #[test]
+    fn primal_objective_by_hand() {
+        let (a, b) = tiny();
+        let p = EnetProblem::new(&a, &b, 0.5, 1.0);
+        let x = [1.0, 0.0, -1.0];
+        // Ax = [0, 1]; ½‖Ax−b‖² = ½(1+1) = 1; λ1‖x‖₁ = 1; λ2/2‖x‖² = 1
+        assert!((primal_objective(&p, &x) - 3.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn gap_zero_at_optimum_of_unconstrained_case() {
+        // With λ1 = 0, λ2 > 0: ridge regression; KKT solution known in closed form.
+        // Use x* solving (AᵀA + λ2 I)x = Aᵀb, y* = Ax*−b, z* = −Aᵀy*.
+        let (a, b) = tiny();
+        let lam2 = 0.7;
+        let p = EnetProblem::new(&a, &b, 0.0, lam2);
+        // normal equations on the 3-feature problem
+        let mut g = a.gram_of_cols(&[0, 1, 2], lam2);
+        let rhs = a.t_mul_vec(&b);
+        let x = crate::linalg::Cholesky::factor(&mut g).unwrap().solve(&rhs);
+        let y: Vec<f64> = {
+            let ax = a.mul_vec(&x);
+            (0..2).map(|i| ax[i] - b[i]).collect()
+        };
+        let z: Vec<f64> = a.t_mul_vec(&y).iter().map(|v| -v).collect();
+        let gap = duality_gap(&p, &x, &y, &z);
+        assert!(gap.abs() < 1e-10, "gap={gap}");
+        let res = kkt_residuals(&p, &x, &y, &z);
+        assert!(res.max() < 1e-10, "{res:?}");
+    }
+
+    #[test]
+    fn gap_positive_away_from_optimum() {
+        let (a, b) = tiny();
+        let p = EnetProblem::new(&a, &b, 0.3, 0.5);
+        let x = [5.0, -5.0, 5.0];
+        let y = vec![0.1, 0.1];
+        let z: Vec<f64> = a.t_mul_vec(&y).iter().map(|v| -v).collect();
+        assert!(duality_gap(&p, &x, &y, &z) > 0.0);
+    }
+
+    #[test]
+    fn residuals_zero_only_with_consistent_triple() {
+        let (a, b) = tiny();
+        let p = EnetProblem::new(&a, &b, 0.3, 0.5);
+        let x = vec![0.0; 3];
+        let y = vec![-1.0, -2.0]; // = Ax − b with x = 0
+        let z: Vec<f64> = a.t_mul_vec(&y).iter().map(|v| -v).collect();
+        let res = kkt_residuals(&p, &x, &y, &z);
+        assert!(res.res1 < 1e-14);
+        assert!(res.res3 < 1e-14);
+        // res2 may be nonzero (x=0 need not be optimal for these λ)
+    }
+
+    #[test]
+    fn support_extraction() {
+        let x = [0.0, 1e-12, -0.5, 2.0, -1e-9];
+        assert_eq!(support_of(&x, 1e-8), vec![2, 3]);
+        assert_eq!(support_of(&x, 0.0), vec![1, 2, 3, 4]);
+    }
+}

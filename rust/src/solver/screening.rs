@@ -1,0 +1,286 @@
+//! Gap-Safe sphere screening (Ndiaye et al. 2017) — the "GSR" competitor of
+//! Supplement D.3, plus the screening machinery reused by the celer-style
+//! working-set solver.
+//!
+//! The Elastic Net is handled **exactly** through the standard augmented-Lasso
+//! reduction: `½‖Ax−b‖² + λ1‖x‖₁ + (λ2/2)‖x‖₂² = ½‖Ãx−b̃‖² + λ1‖x‖₁` with
+//! `Ã = [A; √λ2·I]`, `b̃ = [b; 0]`. The augmented rows are never materialized —
+//! every inner product against `Ã` decomposes as `Ã_jᵀṽ = A_jᵀv_top + √λ2·v_j`.
+//!
+//! Lasso dual (on the augmented problem): `θ ∈ Δ = {θ : ‖Ãᵀθ‖∞ ≤ λ1}`,
+//! optimal `θ* = (b̃ − Ãx*)/1` scaled by λ1. Gap-Safe sphere: any feature with
+//! `|Ã_jᵀθ| + r·‖Ã_j‖ < λ1` where `r = √(2·gap)` can be *safely* discarded
+//! (its coefficient is zero at the optimum).
+
+use crate::linalg::blas;
+use crate::solver::objective::{primal_objective, support_of};
+use crate::solver::types::{Algorithm, BaselineOptions, EnetProblem, SolveResult};
+
+/// Augmented-design helper: all screening math for `Ã = [A; √λ2 I]`.
+pub struct AugmentedView<'a> {
+    p: &'a EnetProblem<'a>,
+    sqrt_lam2: f64,
+    /// ‖Ã_j‖ = √(‖A_j‖² + λ2) for every feature.
+    pub col_norms: Vec<f64>,
+}
+
+impl<'a> AugmentedView<'a> {
+    /// Precompute augmented column norms.
+    pub fn new(p: &'a EnetProblem<'a>) -> Self {
+        let col_norms = (0..p.n())
+            .map(|j| (blas::nrm2_sq(p.a.col(j)) + p.lam2).sqrt())
+            .collect();
+        Self { p, sqrt_lam2: p.lam2.sqrt(), col_norms }
+    }
+
+    /// Augmented residual `r̃ = b̃ − Ãx = [b − Ax; −√λ2·x]`, stored split.
+    pub fn residual(&self, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let ax = self.p.a.mul_vec(x);
+        let top: Vec<f64> = (0..self.p.m()).map(|i| self.p.b[i] - ax[i]).collect();
+        let bottom: Vec<f64> = x.iter().map(|&v| -self.sqrt_lam2 * v).collect();
+        (top, bottom)
+    }
+
+    /// `Ã_jᵀ ṽ` for split vector `(v_top, v_bottom)`.
+    #[inline]
+    pub fn col_dot(&self, j: usize, v_top: &[f64], v_bottom: &[f64]) -> f64 {
+        blas::dot(self.p.a.col(j), v_top) + self.sqrt_lam2 * v_bottom[j]
+    }
+
+    /// Primal objective of the augmented Lasso = the Elastic Net objective.
+    pub fn primal(&self, x: &[f64]) -> f64 {
+        primal_objective(self.p, x)
+    }
+
+    /// Dual objective of the augmented Lasso at the **feasible** scaled point
+    /// `θ = r̃·s` with `s = min(1, λ1/‖Ãᵀr̃‖∞)`:
+    /// `D(θ) = ½‖b̃‖² − ½‖b̃ − θ‖²` (with the λ1 scaling folded in the classic
+    /// way: D(θ) = ½‖b̃‖² − ½‖θ − b̃‖²). Returns `(dual_value, θ_top, θ_bottom)`.
+    pub fn dual_point(&self, x: &[f64]) -> (f64, Vec<f64>, Vec<f64>) {
+        let (mut top, mut bottom) = self.residual(x);
+        // ‖Ãᵀr̃‖∞
+        let mut zmax = 0.0f64;
+        for j in 0..self.p.n() {
+            zmax = zmax.max(self.col_dot(j, &top, &bottom).abs());
+        }
+        let s = if zmax > self.p.lam1 && zmax > 0.0 { self.p.lam1 / zmax } else { 1.0 };
+        for v in top.iter_mut() {
+            *v *= s;
+        }
+        for v in bottom.iter_mut() {
+            *v *= s;
+        }
+        // D(θ) = ½‖b̃‖² − ½‖b̃ − θ‖²; b̃ bottom = 0.
+        let b_sq = blas::nrm2_sq(self.p.b);
+        let mut diff_sq = 0.0;
+        for i in 0..self.p.m() {
+            let d = self.p.b[i] - top[i];
+            diff_sq += d * d;
+        }
+        diff_sq += blas::nrm2_sq(&bottom);
+        (0.5 * b_sq - 0.5 * diff_sq, top, bottom)
+    }
+
+    /// Gap-Safe screen: returns the surviving feature indices given iterate `x`.
+    /// Every discarded feature provably has `x*_j = 0`.
+    pub fn gap_safe_survivors(&self, x: &[f64]) -> Vec<usize> {
+        let (dual, theta_top, theta_bottom) = self.dual_point(x);
+        let gap = (self.primal(x) - dual).max(0.0);
+        let radius = (2.0 * gap).sqrt();
+        let mut keep = Vec::new();
+        for j in 0..self.p.n() {
+            let score = self.col_dot(j, &theta_top, &theta_bottom).abs()
+                + radius * self.col_norms[j];
+            if score >= self.p.lam1 - 1e-12 {
+                keep.push(j);
+            }
+        }
+        keep
+    }
+}
+
+/// Coordinate descent restricted to a feature subset, on the *original*
+/// problem (the λ2 term is handled in the CD update itself) — shared by the
+/// GSR-like and celer-like solvers.
+pub fn cd_on_set(
+    p: &EnetProblem,
+    x: &mut [f64],
+    res: &mut [f64],
+    col_sq: &[f64],
+    set: &[usize],
+    tol: f64,
+    max_sweeps: usize,
+) -> usize {
+    let mut sweeps = 0;
+    for _ in 0..max_sweeps {
+        sweeps += 1;
+        let mut max_change = 0.0f64;
+        let mut max_x = 0.0f64;
+        for &j in set {
+            let cj = col_sq[j];
+            if cj == 0.0 {
+                continue;
+            }
+            let aj = p.a.col(j);
+            let rho = blas::dot(aj, res) + cj * x[j];
+            let new = crate::prox::soft_threshold(rho, p.lam1) / (cj + p.lam2);
+            let delta = new - x[j];
+            if delta != 0.0 {
+                blas::axpy(-delta, aj, res);
+                x[j] = new;
+            }
+            max_change = max_change.max(delta.abs());
+            max_x = max_x.max(x[j].abs());
+        }
+        if max_change <= tol * max_x.max(1e-12) {
+            break;
+        }
+    }
+    sweeps
+}
+
+/// Gap-Safe screened coordinate descent (the GSR competitor).
+///
+/// Outer rounds: screen with the current iterate, then run CD on the survivors
+/// until the *global* duality gap is below tolerance.
+pub fn solve_gap_safe(p: &EnetProblem, opts: &BaselineOptions) -> SolveResult {
+    let n = p.n();
+    let aug = AugmentedView::new(p);
+    let mut x = vec![0.0; n];
+    let ax = p.a.mul_vec(&x);
+    let mut res: Vec<f64> = (0..p.m()).map(|i| p.b[i] - ax[i]).collect();
+    let col_sq: Vec<f64> = (0..n).map(|j| blas::nrm2_sq(p.a.col(j))).collect();
+
+    let mut rounds = 0usize;
+    let mut inner = 0usize;
+    let mut converged = false;
+    let mut last_gap = f64::INFINITY;
+    let obj_scale = 1.0 + blas::nrm2_sq(p.b);
+    let mut survivors: Vec<usize> = (0..n).collect();
+
+    while rounds < 100 {
+        rounds += 1;
+        survivors = aug.gap_safe_survivors(&x);
+        // keep current nonzeros (they survive by definition, but be safe)
+        inner += cd_on_set(p, &mut x, &mut res, &col_sq, &survivors, opts.tol, 1000);
+        let (dual, _, _) = aug.dual_point(&x);
+        last_gap = aug.primal(&x) - dual;
+        if last_gap <= opts.tol * obj_scale {
+            converged = true;
+            break;
+        }
+    }
+
+    let _ = survivors; // final survivor count is visible via active_set
+    let active_set = support_of(&x, 0.0);
+    let objective = primal_objective(p, &x);
+    let y: Vec<f64> = res.iter().map(|r| -r).collect();
+    SolveResult {
+        x,
+        y,
+        active_set,
+        objective,
+        iterations: rounds,
+        inner_iterations: inner,
+        residual: last_gap,
+        converged,
+        algorithm: Algorithm::CdGapSafe,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_synthetic, SyntheticSpec};
+    use crate::solver::types::BaselineOptions;
+
+    fn problem(seed: u64, alpha: f64, c: f64) -> (crate::data::SyntheticProblem, f64, f64) {
+        let prob = generate_synthetic(&SyntheticSpec {
+            m: 50,
+            n: 200,
+            n0: 5,
+            x_star: 5.0,
+            snr: 10.0,
+            seed,
+        });
+        let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, alpha);
+        let (l1, l2) = EnetProblem::lambdas_from_alpha(alpha, c, lmax);
+        (prob, l1, l2)
+    }
+
+    #[test]
+    fn screening_is_safe() {
+        // No feature of the true optimum's support may be screened out.
+        let (prob, l1, l2) = problem(1, 0.9, 0.3);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let exact = crate::solver::cd::solve_naive(
+            &p,
+            &BaselineOptions { tol: 1e-10, ..Default::default() },
+        );
+        let aug = AugmentedView::new(&p);
+        // screen at a crude iterate (x = 0)
+        let survivors = aug.gap_safe_survivors(&vec![0.0; p.n()]);
+        for &j in &exact.active_set {
+            assert!(survivors.contains(&j), "safe rule discarded active feature {j}");
+        }
+    }
+
+    #[test]
+    fn screening_tightens_with_better_iterates() {
+        let (prob, l1, l2) = problem(2, 0.9, 0.5);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let aug = AugmentedView::new(&p);
+        let at_zero = aug.gap_safe_survivors(&vec![0.0; p.n()]).len();
+        let exact = crate::solver::cd::solve_naive(
+            &p,
+            &BaselineOptions { tol: 1e-12, ..Default::default() },
+        );
+        let at_opt = aug.gap_safe_survivors(&exact.x).len();
+        assert!(at_opt <= at_zero);
+        // near the optimum the sphere is tiny: survivors ≈ active set
+        assert!(
+            at_opt <= exact.active_set.len() + 25,
+            "survivors {at_opt} vs active {}",
+            exact.active_set.len()
+        );
+    }
+
+    #[test]
+    fn gap_safe_solver_matches_cd() {
+        let (prob, l1, l2) = problem(3, 0.999, 0.4);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let gs = solve_gap_safe(&p, &BaselineOptions { tol: 1e-9, ..Default::default() });
+        let cd = crate::solver::cd::solve_naive(
+            &p,
+            &BaselineOptions { tol: 1e-10, ..Default::default() },
+        );
+        assert!(gs.converged);
+        assert!(blas::dist2(&gs.x, &cd.x) < 1e-4);
+    }
+
+    #[test]
+    fn dual_point_is_feasible() {
+        let (prob, l1, l2) = problem(4, 0.8, 0.3);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let aug = AugmentedView::new(&p);
+        for x_scale in [0.0, 0.1, 1.0] {
+            let x: Vec<f64> = prob.x_true.iter().map(|v| v * x_scale).collect();
+            let (_, top, bottom) = aug.dual_point(&x);
+            for j in 0..p.n() {
+                let v = aug.col_dot(j, &top, &bottom).abs();
+                assert!(v <= p.lam1 + 1e-8, "infeasible dual at {j}: {v} > {}", p.lam1);
+            }
+        }
+    }
+
+    #[test]
+    fn augmented_norms() {
+        let (prob, l1, l2) = problem(5, 0.7, 0.3);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let aug = AugmentedView::new(&p);
+        for j in [0usize, 10, 199] {
+            let expect = (blas::nrm2_sq(prob.a.col(j)) + l2).sqrt();
+            assert!((aug.col_norms[j] - expect).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! The semi-smooth Newton linear system `V d = −∇ψ(y)` with
+//! `V = I_m + κ A_J A_Jᵀ`, `κ = σ/(1+σλ2)` (paper §3.2, Eq. 16–19).
+//!
+//! Three strategies, chosen per-iteration from `(m, r)`:
+//!
+//! * **Direct** — form the m×m matrix and Cholesky it: `O(m²r + m³)`.
+//! * **Woodbury** — Eq. (19): factor `κ⁻¹I_r + A_JᵀA_J` (r×r): `O(r²m + r³)`.
+//!   The paper's headline trick when the Elastic Net solution is sparse (r < m).
+//! * **CG** — matrix-free `v ↦ v + κ A_J(A_Jᵀv)`: `O(mr)` per iteration, for the
+//!   early iterations where both m and r exceed ~10⁴.
+//!
+//! Columns of `A_J` are addressed in place (column-major `Mat` makes them
+//! contiguous), so no gather/copy is performed.
+
+use crate::linalg::{blas, solve_cg, Cholesky, Mat};
+use crate::solver::types::NewtonStrategy;
+
+/// Which strategy actually ran (Auto resolves to one of the concrete three).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResolvedStrategy {
+    Identity,
+    Direct,
+    Woodbury,
+    Cg,
+}
+
+/// Solve `(I + κ A_J A_Jᵀ) d = rhs`, writing `d` (length m).
+///
+/// Returns the resolved strategy (for diagnostics / EXPERIMENTS.md §Perf).
+pub fn solve_newton_system(
+    a: &Mat,
+    active: &[usize],
+    kappa: f64,
+    rhs: &[f64],
+    d: &mut [f64],
+    strategy: NewtonStrategy,
+    cg_tol: f64,
+    cg_max_iters: usize,
+) -> ResolvedStrategy {
+    let m = a.rows();
+    let r = active.len();
+    assert_eq!(rhs.len(), m);
+    assert_eq!(d.len(), m);
+
+    if r == 0 || kappa == 0.0 {
+        // V = I
+        d.copy_from_slice(rhs);
+        return ResolvedStrategy::Identity;
+    }
+
+    let resolved = match strategy {
+        NewtonStrategy::Direct => ResolvedStrategy::Direct,
+        NewtonStrategy::Woodbury => ResolvedStrategy::Woodbury,
+        NewtonStrategy::ConjugateGradient => ResolvedStrategy::Cg,
+        NewtonStrategy::Auto => {
+            // Cost-based choice (flop estimates):
+            //   direct   ≈ m²·r/2 + m³/6       (gram build + Cholesky)
+            //   woodbury ≈ r²·m/2 + r³/6       (Eq. 19)
+            //   cg       ≈ 2·m·r·iters          (matrix-free)
+            // CG's iteration count scales with √cond(V); V = I + κA_JA_Jᵀ has
+            // cond ≤ 1 + κ·λmax(A_JA_Jᵀ) ≈ 1 + κ·r on standardized designs, so
+            // with λ2 > 0 (κ = σ/(1+σλ2) small) CG converges in a handful of
+            // iterations even when r ≫ m — the regime where direct/Woodbury
+            // cost explodes. This refines the paper's §3.2 guidance ("use CG
+            // when m and r are both large") with an explicit model.
+            let mf = m as f64;
+            let rf = r as f64;
+            let cond_est = 1.0 + kappa * rf;
+            let cg_iters_est = (6.0 * cond_est.sqrt()).clamp(8.0, 120.0);
+            let cost_direct = 0.5 * mf * mf * rf + mf * mf * mf / 6.0;
+            let cost_woodbury = 0.5 * rf * rf * mf + rf * rf * rf / 6.0;
+            let cost_cg = 2.0 * mf * rf * cg_iters_est;
+            if cost_woodbury <= cost_direct && cost_woodbury <= cost_cg {
+                ResolvedStrategy::Woodbury
+            } else if cost_direct <= cost_cg {
+                ResolvedStrategy::Direct
+            } else {
+                ResolvedStrategy::Cg
+            }
+        }
+    };
+
+    match resolved {
+        ResolvedStrategy::Identity => unreachable!(),
+        ResolvedStrategy::Direct => solve_direct(a, active, kappa, rhs, d),
+        ResolvedStrategy::Woodbury => solve_woodbury(a, active, kappa, rhs, d),
+        ResolvedStrategy::Cg => solve_cg_strategy(a, active, kappa, rhs, d, cg_tol, cg_max_iters),
+    }
+    resolved
+}
+
+/// Direct: build `M = I + κ Σ_{j∈J} a_j a_jᵀ` and Cholesky-solve.
+fn solve_direct(a: &Mat, active: &[usize], kappa: f64, rhs: &[f64], d: &mut [f64]) {
+    let m = a.rows();
+    let mut v = Mat::zeros(m, m);
+    for &j in active {
+        let col = a.col(j);
+        // rank-1 update, lower triangle only (factor reads lower)
+        for c in 0..m {
+            let s = kappa * col[c];
+            if s != 0.0 {
+                let vc = v.col_mut(c);
+                for rrow in c..m {
+                    vc[rrow] += s * col[rrow];
+                }
+            }
+        }
+    }
+    for i in 0..m {
+        v.set(i, i, v.get(i, i) + 1.0);
+    }
+    let ch = Cholesky::factor(&v).expect("I + κ A_J A_Jᵀ is SPD");
+    d.copy_from_slice(rhs);
+    ch.solve_in_place(d);
+}
+
+/// Woodbury (Eq. 19): `V⁻¹ rhs = rhs − A_J (κ⁻¹I_r + A_JᵀA_J)⁻¹ A_Jᵀ rhs`.
+fn solve_woodbury(a: &Mat, active: &[usize], kappa: f64, rhs: &[f64], d: &mut [f64]) {
+    let g = a.gram_of_cols(active, 1.0 / kappa);
+    let ch = Cholesky::factor(&g).expect("κ⁻¹I + A_JᵀA_J is SPD");
+    // w = A_Jᵀ rhs
+    let mut w: Vec<f64> = active.iter().map(|&j| blas::dot(a.col(j), rhs)).collect();
+    ch.solve_in_place(&mut w);
+    // d = rhs − A_J w
+    d.copy_from_slice(rhs);
+    for (k, &j) in active.iter().enumerate() {
+        blas::axpy(-w[k], a.col(j), d);
+    }
+}
+
+/// Matrix-free CG on `v ↦ v + κ A_J (A_Jᵀ v)`.
+fn solve_cg_strategy(
+    a: &Mat,
+    active: &[usize],
+    kappa: f64,
+    rhs: &[f64],
+    d: &mut [f64],
+    cg_tol: f64,
+    cg_max_iters: usize,
+) {
+    d.iter_mut().for_each(|v| *v = 0.0);
+    let mut coeffs = vec![0.0; active.len()];
+    solve_cg(
+        |v, out| {
+            for (k, &j) in active.iter().enumerate() {
+                coeffs[k] = kappa * blas::dot(a.col(j), v);
+            }
+            out.copy_from_slice(v);
+            for (k, &j) in active.iter().enumerate() {
+                if coeffs[k] != 0.0 {
+                    blas::axpy(coeffs[k], a.col(j), out);
+                }
+            }
+        },
+        rhs,
+        d,
+        cg_tol,
+        cg_max_iters,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn apply_v(a: &Mat, active: &[usize], kappa: f64, v: &[f64]) -> Vec<f64> {
+        let mut out = v.to_vec();
+        for &j in active {
+            let c = blas::dot(a.col(j), v) * kappa;
+            blas::axpy(c, a.col(j), &mut out);
+        }
+        out
+    }
+
+    fn random_case(m: usize, n: usize, r: usize, seed: u64) -> (Mat, Vec<usize>, Vec<f64>) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let a = Mat::from_fn(m, n, |_, _| rng.next_gaussian());
+        let active = rng.sample_indices(n, r);
+        let rhs: Vec<f64> = (0..m).map(|_| rng.next_gaussian()).collect();
+        (a, active, rhs)
+    }
+
+    fn check_strategy(strategy: NewtonStrategy, m: usize, n: usize, r: usize, seed: u64) {
+        let (a, active, rhs) = random_case(m, n, r, seed);
+        let kappa = 0.7;
+        let mut d = vec![0.0; m];
+        solve_newton_system(&a, &active, kappa, &rhs, &mut d, strategy, 1e-12, 2000);
+        let back = apply_v(&a, &active, kappa, &d);
+        for i in 0..m {
+            assert!(
+                (back[i] - rhs[i]).abs() < 1e-6,
+                "{strategy:?} m={m} r={r}: residual {} at {i}",
+                (back[i] - rhs[i]).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn direct_solves_exactly() {
+        check_strategy(NewtonStrategy::Direct, 20, 100, 7, 1);
+        check_strategy(NewtonStrategy::Direct, 30, 50, 40, 2); // r > m
+    }
+
+    #[test]
+    fn woodbury_solves_exactly() {
+        check_strategy(NewtonStrategy::Woodbury, 25, 120, 5, 3);
+        check_strategy(NewtonStrategy::Woodbury, 25, 120, 24, 4);
+    }
+
+    #[test]
+    fn cg_solves_to_tolerance() {
+        check_strategy(NewtonStrategy::ConjugateGradient, 40, 200, 15, 5);
+    }
+
+    #[test]
+    fn auto_matches_direct_result() {
+        let (a, active, rhs) = random_case(30, 80, 6, 6);
+        let kappa = 1.3;
+        let mut d_auto = vec![0.0; 30];
+        let mut d_dir = vec![0.0; 30];
+        let res = solve_newton_system(
+            &a, &active, kappa, &rhs, &mut d_auto, NewtonStrategy::Auto, 1e-12, 1000,
+        );
+        assert_eq!(res, ResolvedStrategy::Woodbury, "r < m should pick Woodbury");
+        solve_newton_system(
+            &a, &active, kappa, &rhs, &mut d_dir, NewtonStrategy::Direct, 1e-12, 1000,
+        );
+        for i in 0..30 {
+            assert!((d_auto[i] - d_dir[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn empty_active_set_is_identity() {
+        let (a, _, rhs) = random_case(10, 20, 0, 7);
+        let mut d = vec![0.0; 10];
+        let res = solve_newton_system(
+            &a, &[], 0.9, &rhs, &mut d, NewtonStrategy::Auto, 1e-10, 100,
+        );
+        assert_eq!(res, ResolvedStrategy::Identity);
+        assert_eq!(d, rhs);
+    }
+
+    #[test]
+    fn auto_picks_direct_when_r_ge_m_small() {
+        let (a, active, rhs) = random_case(15, 30, 20, 8);
+        let mut d = vec![0.0; 15];
+        let res = solve_newton_system(
+            &a, &active, 0.5, &rhs, &mut d, NewtonStrategy::Auto, 1e-10, 100,
+        );
+        assert_eq!(res, ResolvedStrategy::Direct);
+    }
+}

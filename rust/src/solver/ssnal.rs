@@ -1,0 +1,443 @@
+//! SsNAL-EN — the paper's algorithm (Algorithm 1).
+//!
+//! Outer loop: inexact augmented Lagrangian on the dual (D), multiplier `x`.
+//! Inner loop: semi-smooth Newton on `ψ(y) = L_σ(y | z̄, x)` (Proposition 2),
+//! with the generalized-Hessian system solved by [`crate::solver::ssn_system`].
+//!
+//! Cost anatomy per SsN step (m×n design, r active):
+//!   * one `Aᵀd` — O(mn), the unavoidable dual sweep (kept *incremental*:
+//!     `Aᵀ(y + s·d) = Aᵀy + s·Aᵀd`, so backtracking line search costs O(n), not O(mn)),
+//!   * one `A_J u_J` — O(mr) (sparse primal mat-vec),
+//!   * the Newton solve — O(r²m + r³) via Woodbury when r < m.
+//!
+//! The outer multiplier update uses the Moreau identity
+//! `x − σ(Aᵀy + z) = prox_{σp}(x − σAᵀy)`, so `res(kkt₃) = ‖x − u‖/(σ·(1+‖y‖+‖z‖))`
+//! costs O(n) instead of another O(mn) sweep.
+
+use crate::linalg::blas;
+use crate::prox;
+use crate::solver::objective::{primal_objective, support_of};
+use crate::solver::ssn_system::solve_newton_system;
+use crate::solver::types::{Algorithm, EnetProblem, SolveResult, SsnalOptions};
+
+/// Detailed per-solve diagnostics (used by tests and the §Perf log).
+#[derive(Clone, Debug, Default)]
+pub struct SsnalTrace {
+    /// res(kkt₃) after each outer iteration.
+    pub outer_residuals: Vec<f64>,
+    /// SsN iterations per outer iteration.
+    pub inner_counts: Vec<usize>,
+    /// Active-set size after each outer iteration.
+    pub active_sizes: Vec<usize>,
+    /// σ at the final iteration — the λ-path driver carries this into the next
+    /// warm-started solve so nearby problems converge in ~1 outer iteration
+    /// (paper §3.3).
+    pub final_sigma: f64,
+}
+
+/// Solve with the default zero start.
+pub fn solve(p: &EnetProblem, opts: &SsnalOptions) -> SolveResult {
+    solve_warm(p, opts, None).0
+}
+
+/// Solve with an optional warm start `x0` (used by the λ-path driver, §3.3).
+/// Returns the result and the iteration trace.
+pub fn solve_warm(
+    p: &EnetProblem,
+    opts: &SsnalOptions,
+    x0: Option<&[f64]>,
+) -> (SolveResult, SsnalTrace) {
+    let m = p.m();
+    let n = p.n();
+    assert!(p.lam1 > 0.0 || p.lam2 > 0.0, "need a nontrivial penalty");
+
+    // ---- state -------------------------------------------------------------
+    let mut x: Vec<f64> = match x0 {
+        Some(x0) => {
+            assert_eq!(x0.len(), n);
+            x0.to_vec()
+        }
+        None => vec![0.0; n],
+    };
+    // y is initialized at the KKT-consistent point y = Ax − b.
+    let mut y: Vec<f64> = {
+        let ax = p.a.mul_vec(&x);
+        (0..m).map(|i| ax[i] - p.b[i]).collect()
+    };
+    let mut sigma = opts.sigma0;
+
+    // ---- workspaces (allocated once; the hot loop is allocation-free) -------
+    let mut aty = vec![0.0; n]; // Aᵀy, maintained incrementally
+    let mut atd = vec![0.0; n]; // Aᵀd per Newton step
+    let mut t = vec![0.0; n]; // x − σAᵀy
+    let mut u = vec![0.0; n]; // prox_{σp}(t)
+    let mut active: Vec<usize> = Vec::new();
+    let mut grad = vec![0.0; m]; // ∇ψ(y)
+    let mut d = vec![0.0; m]; // Newton direction
+    let mut au = vec![0.0; m]; // A u (sparse)
+    let mut z = vec![0.0; n];
+
+    let bnorm = blas::nrm2(p.b);
+    let xnorm_sq_of = |x: &[f64]| blas::nrm2_sq(x);
+
+    let mut trace = SsnalTrace::default();
+    let mut total_inner = 0usize;
+    let mut converged = false;
+    let mut final_res = f64::INFINITY;
+
+    // Inner tolerance schedule: start loose, tighten toward tol (standard
+    // inexact-ALM practice; the paper fixes the final tolerance at 1e-6).
+    // Early AL iterations only steer the multiplier, so solving them sharply
+    // wastes O(mn) sweeps — see EXPERIMENTS.md §Perf.
+    let mut inner_tol = (opts.tol * 3e4).min(3e-2).max(opts.tol);
+
+    p_verbose(opts, || {
+        format!("[ssnal] m={m} n={n} λ1={:.3e} λ2={:.3e} σ0={:.1e}", p.lam1, p.lam2, opts.sigma0)
+    });
+
+    let mut outer = 0usize;
+    // Aᵀy is maintained incrementally across *all* iterations (y only changes
+    // through y += s·d, and Aᵀ(y+s·d) = Aᵀy + s·Aᵀd). A periodic refresh wipes
+    // accumulated floating-point drift. Saves one O(mn) sweep per outer
+    // iteration — see EXPERIMENTS.md §Perf.
+    p.a.t_mul_vec_into(&y, &mut aty);
+    let mut steps_since_refresh = 0usize;
+    while outer < opts.max_outer {
+        outer += 1;
+        if steps_since_refresh >= 20 {
+            p.a.t_mul_vec_into(&y, &mut aty);
+            steps_since_refresh = 0;
+        }
+
+        // ---- inner SsN loop ------------------------------------------------
+        let mut inner = 0usize;
+        let mut psi_val;
+        loop {
+            // t = x − σAᵀy ; u = prox_{σp}(t) ; J = active set (Eq. 17)
+            for j in 0..n {
+                t[j] = x[j] - sigma * aty[j];
+            }
+            prox::prox_enet_with_support(&t, sigma, p.lam1, p.lam2, &mut u, &mut active);
+
+            // ∇ψ(y) = y + b − A u  (Eq. 15)
+            p.a.mul_vec_support_into(&u, &active, &mut au);
+            for i in 0..m {
+                grad[i] = y[i] + p.b[i] - au[i];
+            }
+            let res1 = blas::nrm2(&grad) / (1.0 + bnorm);
+            if res1 <= inner_tol || inner >= opts.max_inner {
+                break;
+            }
+            inner += 1;
+
+            // ψ(y) (Proposition 2, part 1)
+            let unorm_sq = blas::nrm2_sq(&u);
+            psi_val = prox::h_star(&y, p.b)
+                + (1.0 + sigma * p.lam2) / (2.0 * sigma) * unorm_sq
+                - xnorm_sq_of(&x) / (2.0 * sigma);
+
+            // Newton direction: V d = −∇ψ. When CG is used, an inexact-Newton
+            // forcing term ties the CG accuracy to the current gradient norm
+            // (Eisenstat–Walker): early steps don't deserve 1e-8 solves.
+            let kappa = sigma / (1.0 + sigma * p.lam2);
+            let neg_grad: Vec<f64> = grad.iter().map(|g| -g).collect();
+            let cg_tol = (0.1 * res1).clamp(opts.cg_tol, 1e-2);
+            solve_newton_system(
+                p.a,
+                &active,
+                kappa,
+                &neg_grad,
+                &mut d,
+                opts.strategy,
+                cg_tol,
+                opts.cg_max_iters,
+            );
+
+            // Armijo backtracking (Eq. 12) with incremental Aᵀ(y+s·d).
+            p.a.t_mul_vec_into(&d, &mut atd);
+            let gtd = blas::dot(&grad, &d);
+            debug_assert!(gtd <= 1e-12 * (1.0 + gtd.abs()), "d must be a descent direction");
+            let mut s = 1.0;
+            let mut accepted = false;
+            for _ in 0..opts.max_ls {
+                // ψ(y + s d) via the O(n) update of t
+                let mut unorm_trial = 0.0;
+                let thr = sigma * p.lam1;
+                let scale = 1.0 / (1.0 + sigma * p.lam2);
+                for j in 0..n {
+                    let tj = t[j] - sigma * s * atd[j];
+                    let uj = if tj > thr {
+                        (tj - thr) * scale
+                    } else if tj < -thr {
+                        (tj + thr) * scale
+                    } else {
+                        0.0
+                    };
+                    unorm_trial += uj * uj;
+                }
+                // h*(y + s d) = h*(y) + s(yᵀd + bᵀd) + s²/2‖d‖²
+                let hstar_trial = prox::h_star(&y, p.b)
+                    + s * (blas::dot(&y, &d) + blas::dot(p.b, &d))
+                    + 0.5 * s * s * blas::nrm2_sq(&d);
+                let psi_trial = hstar_trial
+                    + (1.0 + sigma * p.lam2) / (2.0 * sigma) * unorm_trial
+                    - xnorm_sq_of(&x) / (2.0 * sigma);
+                if psi_trial <= psi_val + opts.ls_mu * s * gtd {
+                    accepted = true;
+                    break;
+                }
+                s *= opts.ls_beta;
+            }
+            if !accepted {
+                // step too small to make progress — accept the last s anyway
+                p_verbose(opts, || format!("[ssnal]   line search exhausted at s={s:.2e}"));
+            }
+
+            // y ← y + s d ; maintain Aᵀy incrementally (O(n), not O(mn))
+            blas::axpy(s, &d, &mut y);
+            blas::axpy(s, &atd, &mut aty);
+            steps_since_refresh += 1;
+        }
+        total_inner += inner;
+
+        // ---- z-update (Proposition 2, part 2) and multiplier update ---------
+        // z = prox_{p*/σ}(x/σ − Aᵀy); t = x − σAᵀy is current.
+        prox::prox_enet_conj(&t, sigma, p.lam1, p.lam2, &mut z);
+
+        // res(kkt₃) via the Moreau identity: Aᵀy + z = (x − u)/σ.
+        let xu_dist = blas::dist2(&x, &u);
+        let res3 = xu_dist / sigma / (1.0 + blas::nrm2(&y) + blas::nrm2(&z));
+        final_res = res3;
+
+        // multiplier update: x ← prox_{σp}(x − σAᵀy) = u
+        x.copy_from_slice(&u);
+
+        trace.outer_residuals.push(res3);
+        trace.inner_counts.push(inner);
+        trace.active_sizes.push(active.len());
+        p_verbose(opts, || {
+            format!(
+                "[ssnal] outer {outer}: res3={res3:.3e} inner={inner} r={} σ={sigma:.1e}",
+                active.len()
+            )
+        });
+
+        if res3 <= opts.tol {
+            converged = true;
+            break;
+        }
+        sigma = (sigma * opts.sigma_mult).min(opts.sigma_max);
+        inner_tol = (inner_tol * 0.1).max(opts.tol);
+    }
+    trace.final_sigma = sigma;
+
+    let active_set = support_of(&x, 0.0);
+    let objective = primal_objective(p, &x);
+    (
+        SolveResult {
+            x,
+            y,
+            active_set,
+            objective,
+            iterations: outer,
+            inner_iterations: total_inner,
+            residual: final_res,
+            converged,
+            algorithm: Algorithm::SsnalEn,
+        },
+        trace,
+    )
+}
+
+#[inline]
+fn p_verbose(opts: &SsnalOptions, msg: impl FnOnce() -> String) {
+    if opts.verbose {
+        eprintln!("{}", msg());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_synthetic, SyntheticSpec};
+    use crate::linalg::Mat;
+    use crate::solver::objective::{duality_gap, kkt_residuals};
+    use crate::solver::types::NewtonStrategy;
+
+    fn spec_small() -> SyntheticSpec {
+        SyntheticSpec { m: 60, n: 300, n0: 8, x_star: 5.0, snr: 5.0, seed: 11 }
+    }
+
+    fn lambdas(a: &Mat, b: &[f64], alpha: f64, c: f64) -> (f64, f64) {
+        let lmax = EnetProblem::lambda_max(a, b, alpha);
+        EnetProblem::lambdas_from_alpha(alpha, c, lmax)
+    }
+
+    #[test]
+    fn converges_and_satisfies_kkt() {
+        let prob = generate_synthetic(&spec_small());
+        let (l1, l2) = lambdas(&prob.a, &prob.b, 0.8, 0.3);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let res = solve(&p, &SsnalOptions::default());
+        assert!(res.converged, "residual {}", res.residual);
+        assert!(res.iterations <= 12, "paper: few outer iterations, got {}", res.iterations);
+        // full KKT check with the dual pair (y, z = −Aᵀy projected is implicit):
+        let z: Vec<f64> = {
+            // at optimality z = −Aᵀy
+            p.a.t_mul_vec(&res.y).iter().map(|v| -v).collect()
+        };
+        let kkt = kkt_residuals(&p, &res.x, &res.y, &z);
+        assert!(kkt.res1 < 1e-4, "{kkt:?}");
+        assert!(kkt.res3 < 1e-4, "{kkt:?}");
+        let gap = duality_gap(&p, &res.x, &res.y, &z);
+        assert!(gap.abs() < 1e-3 * (1.0 + res.objective), "gap={gap}");
+    }
+
+    #[test]
+    fn zero_solution_above_lambda_max() {
+        let prob = generate_synthetic(&spec_small());
+        let alpha = 0.9;
+        let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, alpha);
+        let (l1, l2) = EnetProblem::lambdas_from_alpha(alpha, 1.05, lmax);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let res = solve(&p, &SsnalOptions::default());
+        assert!(res.converged);
+        assert_eq!(res.active_set.len(), 0, "x must be exactly 0 above λmax");
+        assert!(res.x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn recovers_sparse_truth_support() {
+        let prob = generate_synthetic(&SyntheticSpec {
+            m: 100,
+            n: 400,
+            n0: 5,
+            x_star: 5.0,
+            snr: 50.0,
+            seed: 3,
+        });
+        let (l1, l2) = lambdas(&prob.a, &prob.b, 0.9, 0.2);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let res = solve(&p, &SsnalOptions::default());
+        assert!(res.converged);
+        // all true support should be selected at this λ with high SNR
+        for &j in &prob.support {
+            assert!(res.x[j].abs() > 1e-3, "missed true feature {j}");
+        }
+    }
+
+    #[test]
+    fn strategies_agree() {
+        let prob = generate_synthetic(&spec_small());
+        let (l1, l2) = lambdas(&prob.a, &prob.b, 0.7, 0.4);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let mut results = Vec::new();
+        for strat in [
+            NewtonStrategy::Direct,
+            NewtonStrategy::Woodbury,
+            NewtonStrategy::ConjugateGradient,
+            NewtonStrategy::Auto,
+        ] {
+            let opts = SsnalOptions { strategy: strat, ..Default::default() };
+            let res = solve(&p, &opts);
+            assert!(res.converged, "{strat:?}");
+            results.push(res);
+        }
+        let x0 = &results[0].x;
+        for res in &results[1..] {
+            let dist = blas::dist2(x0, &res.x);
+            assert!(dist < 1e-4, "strategy solutions differ by {dist}");
+        }
+    }
+
+    #[test]
+    fn warm_start_converges_faster() {
+        let prob = generate_synthetic(&spec_small());
+        let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, 0.8);
+        let (l1a, l2a) = EnetProblem::lambdas_from_alpha(0.8, 0.5, lmax);
+        let pa = EnetProblem::new(&prob.a, &prob.b, l1a, l2a);
+        let cold = solve(&pa, &SsnalOptions::default());
+
+        // nearby λ, warm-started from the previous solution
+        let (l1b, l2b) = EnetProblem::lambdas_from_alpha(0.8, 0.45, lmax);
+        let pb = EnetProblem::new(&prob.a, &prob.b, l1b, l2b);
+        let (warm, _) = solve_warm(&pb, &SsnalOptions::default(), Some(&cold.x));
+        let coldb = solve(&pb, &SsnalOptions::default());
+        assert!(warm.converged);
+        assert!(
+            warm.iterations <= coldb.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            coldb.iterations
+        );
+    }
+
+    #[test]
+    fn matches_coordinate_descent_solution() {
+        // cross-algorithm agreement is the strongest correctness signal we have
+        let prob = generate_synthetic(&SyntheticSpec {
+            m: 40,
+            n: 120,
+            n0: 6,
+            x_star: 5.0,
+            snr: 5.0,
+            seed: 21,
+        });
+        let (l1, l2) = lambdas(&prob.a, &prob.b, 0.75, 0.3);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let ssnal = solve(&p, &SsnalOptions::default());
+        let cd = crate::solver::cd::solve_naive(
+            &p,
+            &crate::solver::types::BaselineOptions { tol: 1e-10, ..Default::default() },
+        );
+        let dist = blas::dist2(&ssnal.x, &cd.x);
+        assert!(dist < 1e-4, "ssnal vs cd distance {dist}");
+        assert!((ssnal.objective - cd.objective).abs() < 1e-6 * (1.0 + cd.objective));
+    }
+
+    #[test]
+    fn objective_never_worse_than_truth_vector() {
+        // x̂ minimizes the objective, so obj(x̂) ≤ obj(x_true)
+        let prob = generate_synthetic(&spec_small());
+        let (l1, l2) = lambdas(&prob.a, &prob.b, 0.8, 0.1);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let res = solve(&p, &SsnalOptions::default());
+        assert!(res.objective <= primal_objective(&p, &prob.x_true) + 1e-8);
+    }
+
+    #[test]
+    fn trace_records_iterations() {
+        let prob = generate_synthetic(&spec_small());
+        let (l1, l2) = lambdas(&prob.a, &prob.b, 0.8, 0.3);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let (res, trace) = solve_warm(&p, &SsnalOptions::default(), None);
+        assert_eq!(trace.outer_residuals.len(), res.iterations);
+        assert_eq!(trace.inner_counts.len(), res.iterations);
+        assert_eq!(trace.inner_counts.iter().sum::<usize>(), res.inner_iterations);
+        // residuals should reach below tol at the end
+        assert!(*trace.outer_residuals.last().unwrap() <= 1e-6);
+    }
+
+    #[test]
+    fn pure_ridge_matches_closed_form() {
+        // λ1 = 0 (allowed since λ2 > 0): solution solves (AᵀA + λ2I)x = Aᵀb.
+        let prob = generate_synthetic(&SyntheticSpec {
+            m: 50,
+            n: 20,
+            n0: 5,
+            x_star: 2.0,
+            snr: 10.0,
+            seed: 5,
+        });
+        let lam2 = 3.0;
+        let p = EnetProblem::new(&prob.a, &prob.b, 0.0, lam2);
+        let res = solve(&p, &SsnalOptions { tol: 1e-9, ..Default::default() });
+        let idx: Vec<usize> = (0..20).collect();
+        let gram = prob.a.gram_of_cols(&idx, lam2);
+        let rhs = prob.a.t_mul_vec(&prob.b);
+        let closed = crate::linalg::Cholesky::factor(&gram).unwrap().solve(&rhs);
+        for j in 0..20 {
+            assert!((res.x[j] - closed[j]).abs() < 1e-5, "j={j}");
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! Shared types for all Elastic Net solvers in this crate.
+
+use crate::linalg::Mat;
+
+/// A borrowed view of one Elastic Net instance:
+/// `min_x ½‖Ax − b‖² + λ1‖x‖₁ + (λ2/2)‖x‖₂²` (paper Eq. 1).
+#[derive(Clone, Copy, Debug)]
+pub struct EnetProblem<'a> {
+    /// Design matrix (column-major, m × n, typically n ≫ m).
+    pub a: &'a Mat,
+    /// Response vector, length m.
+    pub b: &'a [f64],
+    /// ℓ1 penalty weight λ1 ≥ 0.
+    pub lam1: f64,
+    /// squared-ℓ2 penalty weight λ2 ≥ 0.
+    pub lam2: f64,
+}
+
+impl<'a> EnetProblem<'a> {
+    /// Construct and validate.
+    pub fn new(a: &'a Mat, b: &'a [f64], lam1: f64, lam2: f64) -> Self {
+        assert_eq!(a.rows(), b.len(), "A rows must match b length");
+        assert!(lam1 >= 0.0 && lam2 >= 0.0, "penalties must be nonnegative");
+        Self { a, b, lam1, lam2 }
+    }
+
+    /// Observations m.
+    pub fn m(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// Features n.
+    pub fn n(&self) -> usize {
+        self.a.cols()
+    }
+
+    /// `λ^max = ‖Aᵀb‖∞ / α` — the smallest λ scale with an all-zero solution,
+    /// under the paper's parametrization `λ1 = α·c·λ^max`, `λ2 = (1−α)·c·λ^max`
+    /// (§4.1). `alpha = 1` gives the Lasso λ_max.
+    pub fn lambda_max(a: &Mat, b: &[f64], alpha: f64) -> f64 {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha in (0,1]");
+        crate::linalg::blas::nrm_inf(&a.t_mul_vec(b)) / alpha
+    }
+
+    /// The paper's `(λ1, λ2)` from `(α, c_λ, λ^max)`.
+    pub fn lambdas_from_alpha(alpha: f64, c_lambda: f64, lambda_max: f64) -> (f64, f64) {
+        (alpha * c_lambda * lambda_max, (1.0 - alpha) * c_lambda * lambda_max)
+    }
+}
+
+/// Which algorithm produced a [`SolveResult`] (for harness reporting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// The paper's method.
+    SsnalEn,
+    /// Naive full-sweep coordinate descent (sklearn-like).
+    CdNaive,
+    /// Covariance-updating coordinate descent with active-set sweeps (glmnet-like).
+    CdCovariance,
+    /// FISTA / accelerated proximal gradient.
+    Fista,
+    /// Plain proximal gradient (ISTA).
+    ProximalGradient,
+    /// ADMM.
+    Admm,
+    /// Coordinate descent + Gap-Safe sphere screening (GSR-like).
+    CdGapSafe,
+    /// Working-set solver with dual extrapolation (celer-like).
+    Celer,
+}
+
+impl Algorithm {
+    /// Short display name used in benchmark tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::SsnalEn => "ssnal-en",
+            Algorithm::CdNaive => "cd-naive",
+            Algorithm::CdCovariance => "cd-cov",
+            Algorithm::Fista => "fista",
+            Algorithm::ProximalGradient => "prox-grad",
+            Algorithm::Admm => "admm",
+            Algorithm::CdGapSafe => "gap-safe",
+            Algorithm::Celer => "celer",
+        }
+    }
+}
+
+/// Result of one Elastic Net solve.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    /// Primal solution x (length n).
+    pub x: Vec<f64>,
+    /// Dual variable y (length m) — `y = Ax − b` at optimality; solvers that do
+    /// not maintain a dual iterate report the primal residual here.
+    pub y: Vec<f64>,
+    /// Indices of the active (nonzero) coefficients.
+    pub active_set: Vec<usize>,
+    /// Primal objective value at `x`.
+    pub objective: f64,
+    /// Outer iterations (AL iterations for SsNAL; sweeps/epochs for others).
+    pub iterations: usize,
+    /// Total inner iterations (SsN steps for SsNAL; 0 for single-loop methods).
+    pub inner_iterations: usize,
+    /// Final stopping criterion value (solver-specific; KKT residual for SsNAL,
+    /// duality gap or max coefficient change for baselines).
+    pub residual: f64,
+    /// Whether the tolerance was reached before the iteration cap.
+    pub converged: bool,
+    /// Which algorithm produced this.
+    pub algorithm: Algorithm,
+}
+
+impl SolveResult {
+    /// Number of active coefficients r = |J|.
+    pub fn r(&self) -> usize {
+        self.active_set.len()
+    }
+}
+
+/// Strategy for solving the semi-smooth Newton linear system (paper §3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NewtonStrategy {
+    /// Pick per-iteration based on (m, r) — the paper's recommendation.
+    Auto,
+    /// Cholesky on the m×m matrix `I + κ A_J A_Jᵀ`.
+    Direct,
+    /// Sherman–Morrison–Woodbury: factor the r×r matrix (Eq. 19).
+    Woodbury,
+    /// Matrix-free conjugate gradient.
+    ConjugateGradient,
+}
+
+/// SsNAL-EN options (defaults follow §4.1 of the paper).
+#[derive(Clone, Debug)]
+pub struct SsnalOptions {
+    /// KKT tolerance (paper: 1e-6).
+    pub tol: f64,
+    /// Max AL (outer) iterations.
+    pub max_outer: usize,
+    /// Max SsN (inner) iterations per outer iteration.
+    pub max_inner: usize,
+    /// Initial σ (paper: 5e-3).
+    pub sigma0: f64,
+    /// σ growth factor per outer iteration (paper: 5).
+    pub sigma_mult: f64,
+    /// σ cap (σ^∞ in Algorithm 1).
+    pub sigma_max: f64,
+    /// Armijo constant μ ∈ (0, ½) (paper: 0.2).
+    pub ls_mu: f64,
+    /// Line-search backtracking factor.
+    pub ls_beta: f64,
+    /// Max backtracking steps.
+    pub max_ls: usize,
+    /// Newton system strategy.
+    pub strategy: NewtonStrategy,
+    /// CG tolerance (when CG strategy is used).
+    pub cg_tol: f64,
+    /// CG iteration cap.
+    pub cg_max_iters: usize,
+    /// Print per-iteration diagnostics.
+    pub verbose: bool,
+}
+
+impl Default for SsnalOptions {
+    fn default() -> Self {
+        Self {
+            tol: 1e-6,
+            max_outer: 100,
+            max_inner: 100,
+            sigma0: 5e-3,
+            sigma_mult: 5.0,
+            sigma_max: 1e8,
+            ls_mu: 0.2,
+            ls_beta: 0.5,
+            max_ls: 40,
+            strategy: NewtonStrategy::Auto,
+            cg_tol: 1e-8,
+            cg_max_iters: 500,
+            verbose: false,
+        }
+    }
+}
+
+impl SsnalOptions {
+    /// The σ schedule the paper uses for the screening-solver comparison
+    /// (Supplement D.3): σ⁰ = 1, ×10 per iteration.
+    pub fn screening_sigma() -> Self {
+        Self { sigma0: 1.0, sigma_mult: 10.0, ..Self::default() }
+    }
+}
+
+/// Options shared by the first-order baselines.
+#[derive(Clone, Debug)]
+pub struct BaselineOptions {
+    /// Stopping tolerance (on the solver's own criterion).
+    pub tol: f64,
+    /// Max iterations / sweeps.
+    pub max_iters: usize,
+    /// Verbose diagnostics.
+    pub verbose: bool,
+}
+
+impl Default for BaselineOptions {
+    fn default() -> Self {
+        Self { tol: 1e-6, max_iters: 100_000, verbose: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_parametrization_matches_paper() {
+        // λ1 = α·c·λmax, λ2 = (1−α)·c·λmax
+        let (l1, l2) = EnetProblem::lambdas_from_alpha(0.75, 0.5, 8.0);
+        assert!((l1 - 3.0).abs() < 1e-15);
+        assert!((l2 - 1.0).abs() < 1e-15);
+        // α=1 is pure Lasso
+        let (l1, l2) = EnetProblem::lambdas_from_alpha(1.0, 1.0, 4.0);
+        assert_eq!(l1, 4.0);
+        assert_eq!(l2, 0.0);
+    }
+
+    #[test]
+    fn lambda_max_zero_solution_boundary() {
+        let a = Mat::from_row_major(2, 3, &[1.0, 0.0, 2.0, 0.0, 1.0, -2.0]);
+        let b = [1.0, 1.0];
+        // Aᵀb = [1, 1, 0] → ‖·‖∞ = 1
+        assert_eq!(EnetProblem::lambda_max(&a, &b, 1.0), 1.0);
+        assert_eq!(EnetProblem::lambda_max(&a, &b, 0.5), 2.0);
+    }
+
+    #[test]
+    fn defaults_match_paper() {
+        let o = SsnalOptions::default();
+        assert_eq!(o.tol, 1e-6);
+        assert_eq!(o.sigma0, 5e-3);
+        assert_eq!(o.sigma_mult, 5.0);
+        assert_eq!(o.ls_mu, 0.2);
+        let s = SsnalOptions::screening_sigma();
+        assert_eq!(s.sigma0, 1.0);
+        assert_eq!(s.sigma_mult, 10.0);
+    }
+
+    #[test]
+    fn problem_validation() {
+        let a = Mat::zeros(3, 2);
+        let b = [0.0; 3];
+        let p = EnetProblem::new(&a, &b, 1.0, 0.5);
+        assert_eq!(p.m(), 3);
+        assert_eq!(p.n(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "A rows")]
+    fn problem_shape_mismatch_panics() {
+        let a = Mat::zeros(3, 2);
+        let b = [0.0; 4];
+        let _ = EnetProblem::new(&a, &b, 1.0, 0.5);
+    }
+
+    #[test]
+    fn algorithm_names_unique() {
+        let algos = [
+            Algorithm::SsnalEn,
+            Algorithm::CdNaive,
+            Algorithm::CdCovariance,
+            Algorithm::Fista,
+            Algorithm::ProximalGradient,
+            Algorithm::Admm,
+            Algorithm::CdGapSafe,
+            Algorithm::Celer,
+        ];
+        let names: std::collections::HashSet<&str> = algos.iter().map(|a| a.name()).collect();
+        assert_eq!(names.len(), algos.len());
+    }
+}

@@ -1,0 +1,332 @@
+//! Parameter tuning (paper §3.3): k-fold CV, GCV and e-BIC over a warm-started
+//! λ-path, with least-squares de-biasing on the active set.
+//!
+//! * `gcv(x̂) = rss(x̂)/m / (1 − ν/m)²`
+//! * `e-bic(x̂) = log(rss(x̂)/m) + (ν/m)(log m + log n)`
+//!
+//! where `ν = tr(A_J (A_JᵀA_J + λ2 I)⁻¹ A_Jᵀ)` is the Elastic Net degrees of
+//! freedom and the residual sum of squares is computed **after de-biasing**:
+//! ordinary least squares refit on the selected features (Belloni et al. 2014).
+
+use crate::linalg::{blas, lstsq, Mat};
+use crate::path::{solve_path, PathOptions, PathResult};
+use crate::rng::Xoshiro256pp;
+use crate::solver::types::{BaselineOptions, EnetProblem, SsnalOptions};
+use crate::solver::{cd, ssnal};
+
+/// Tuning criteria evaluated at one path point.
+#[derive(Clone, Debug)]
+pub struct CriteriaPoint {
+    pub c_lambda: f64,
+    pub lam1: f64,
+    pub lam2: f64,
+    /// Active-set size r.
+    pub active: usize,
+    /// k-fold cross-validation MSE (None if CV was not requested).
+    pub cv: Option<f64>,
+    /// Generalized cross validation.
+    pub gcv: f64,
+    /// Extended BIC.
+    pub ebic: f64,
+    /// De-biased residual sum of squares.
+    pub rss: f64,
+    /// Degrees of freedom ν.
+    pub dof: f64,
+}
+
+/// Result of a tuning sweep.
+#[derive(Clone, Debug)]
+pub struct TuningResult {
+    pub points: Vec<CriteriaPoint>,
+    /// Index minimizing GCV.
+    pub best_gcv: usize,
+    /// Index minimizing e-BIC.
+    pub best_ebic: usize,
+    /// Index minimizing CV (if computed).
+    pub best_cv: Option<usize>,
+    /// The underlying path (for coefficient extraction).
+    pub path: PathResult,
+}
+
+/// De-biased residual sum of squares: OLS refit on the active set `idx`.
+pub fn debiased_rss(a: &Mat, b: &[f64], idx: &[usize]) -> f64 {
+    let m = a.rows();
+    if idx.is_empty() {
+        return blas::nrm2_sq(b);
+    }
+    let w = lstsq::ridge_on_support(a, idx, b, 0.0);
+    let mut rss = 0.0;
+    for i in 0..m {
+        let mut pred = 0.0;
+        for (k, &j) in idx.iter().enumerate() {
+            pred += a.get(i, j) * w[k];
+        }
+        let d = b[i] - pred;
+        rss += d * d;
+    }
+    rss
+}
+
+/// GCV (Eq. 21 left).
+pub fn gcv(rss: f64, m: usize, dof: f64) -> f64 {
+    let denom = 1.0 - dof / m as f64;
+    if denom <= 0.0 {
+        return f64::INFINITY;
+    }
+    rss / m as f64 / (denom * denom)
+}
+
+/// e-BIC (Eq. 21 right).
+pub fn ebic(rss: f64, m: usize, n: usize, dof: f64) -> f64 {
+    let rss = rss.max(1e-300);
+    (rss / m as f64).ln() + dof / m as f64 * ((m as f64).ln() + (n as f64).ln())
+}
+
+/// Assign each of `m` observations to one of `k` CV folds (shuffled, balanced).
+pub fn cv_folds(m: usize, k: usize, seed: u64) -> Vec<usize> {
+    assert!(k >= 2 && k <= m);
+    let mut idx: Vec<usize> = (0..m).collect();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    rng.shuffle(&mut idx);
+    let mut fold = vec![0usize; m];
+    for (pos, &i) in idx.iter().enumerate() {
+        fold[i] = pos % k;
+    }
+    fold
+}
+
+/// Options for a tuning sweep.
+#[derive(Clone, Debug)]
+pub struct TuningOptions {
+    /// Underlying path options (grid, α, max-active cap, algorithm).
+    pub path: PathOptions,
+    /// Number of CV folds (0 disables CV — it is by far the costliest criterion).
+    pub cv_folds: usize,
+    /// Seed for fold assignment.
+    pub cv_seed: u64,
+}
+
+impl Default for TuningOptions {
+    fn default() -> Self {
+        Self { path: PathOptions::default(), cv_folds: 0, cv_seed: 0 }
+    }
+}
+
+/// Run the full tuning sweep: solve the path, evaluate GCV/e-BIC (and
+/// optionally k-fold CV) at every explored point.
+pub fn tune(a: &Mat, b: &[f64], opts: &TuningOptions) -> TuningResult {
+    let path = solve_path(a, b, &opts.path);
+    let m = a.rows();
+    let n = a.cols();
+
+    // Pre-split folds once so every λ sees the same folds (paper's 10-fold cv).
+    let folds = if opts.cv_folds >= 2 { Some(cv_folds(m, opts.cv_folds, opts.cv_seed)) } else { None };
+
+    let mut points = Vec::with_capacity(path.points.len());
+    for pt in &path.points {
+        let idx = &pt.result.active_set;
+        let rss = debiased_rss(a, b, idx);
+        let dof = lstsq::enet_degrees_of_freedom(a, idx, pt.lam2);
+        let cv = folds.as_ref().map(|f| cv_mse(a, b, f, opts.cv_folds, pt.lam1, pt.lam2, &opts.path));
+        points.push(CriteriaPoint {
+            c_lambda: pt.c_lambda,
+            lam1: pt.lam1,
+            lam2: pt.lam2,
+            active: idx.len(),
+            cv,
+            gcv: gcv(rss, m, dof),
+            ebic: ebic(rss, m, n, dof),
+            rss,
+            dof,
+        });
+    }
+
+    let argmin = |f: &dyn Fn(&CriteriaPoint) -> f64| {
+        points
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| f(a).partial_cmp(&f(b)).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    };
+    let best_gcv = argmin(&|p: &CriteriaPoint| p.gcv);
+    let best_ebic = argmin(&|p: &CriteriaPoint| p.ebic);
+    let best_cv = folds.as_ref().map(|_| argmin(&|p: &CriteriaPoint| p.cv.unwrap_or(f64::INFINITY)));
+
+    TuningResult { points, best_gcv, best_ebic, best_cv, path }
+}
+
+/// k-fold CV mean-squared prediction error at one (λ1, λ2).
+fn cv_mse(
+    a: &Mat,
+    b: &[f64],
+    fold_of: &[usize],
+    k: usize,
+    lam1: f64,
+    lam2: f64,
+    popts: &PathOptions,
+) -> f64 {
+    let m = a.rows();
+    let mut total_sq = 0.0;
+    for fold in 0..k {
+        let train: Vec<usize> = (0..m).filter(|&i| fold_of[i] != fold).collect();
+        let test: Vec<usize> = (0..m).filter(|&i| fold_of[i] == fold).collect();
+        if test.is_empty() || train.len() < 2 {
+            continue;
+        }
+        // build the training submatrix (rows) — column-major gather by rows
+        let at = Mat::from_fn(train.len(), a.cols(), |i, j| a.get(train[i], j));
+        let bt: Vec<f64> = train.iter().map(|&i| b[i]).collect();
+        let p = EnetProblem::new(&at, &bt, lam1, lam2);
+        let x = match popts.algorithm {
+            crate::solver::types::Algorithm::SsnalEn => {
+                ssnal::solve(&p, &SsnalOptions { tol: popts.tol, ..Default::default() }).x
+            }
+            _ => cd::solve_covariance(
+                &p,
+                &BaselineOptions { tol: popts.tol, ..Default::default() },
+            )
+            .x,
+        };
+        for &i in &test {
+            let mut pred = 0.0;
+            for (j, &xj) in x.iter().enumerate() {
+                if xj != 0.0 {
+                    pred += a.get(i, j) * xj;
+                }
+            }
+            let d = b[i] - pred;
+            total_sq += d * d;
+        }
+    }
+    total_sq / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_synthetic, SyntheticSpec};
+    use crate::path::c_lambda_grid;
+
+    fn problem() -> crate::data::SyntheticProblem {
+        generate_synthetic(&SyntheticSpec {
+            m: 60,
+            n: 150,
+            n0: 4,
+            x_star: 5.0,
+            snr: 20.0,
+            seed: 17,
+        })
+    }
+
+    #[test]
+    fn criteria_formulas() {
+        // by hand: rss=10, m=100, ν=5 → gcv = 0.1/(0.95²); ebic = ln(0.1)+0.05(ln100+ln1000)
+        let g = gcv(10.0, 100, 5.0);
+        assert!((g - 0.1 / (0.95 * 0.95)).abs() < 1e-12);
+        let e = ebic(10.0, 100, 1000, 5.0);
+        let expect = (0.1f64).ln() + 0.05 * ((100f64).ln() + (1000f64).ln());
+        assert!((e - expect).abs() < 1e-12);
+        // degenerate dof ≥ m → infinite gcv
+        assert_eq!(gcv(1.0, 10, 10.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn folds_are_balanced_and_deterministic() {
+        let f1 = cv_folds(103, 10, 5);
+        let f2 = cv_folds(103, 10, 5);
+        assert_eq!(f1, f2);
+        let mut counts = [0usize; 10];
+        for &f in &f1 {
+            counts[f] += 1;
+        }
+        let (mn, mx) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(mx - mn <= 1, "balanced folds: {counts:?}");
+    }
+
+    #[test]
+    fn debiased_rss_decreases_with_more_features() {
+        let prob = problem();
+        let r1 = debiased_rss(&prob.a, &prob.b, &prob.support[..2]);
+        let r2 = debiased_rss(&prob.a, &prob.b, &prob.support);
+        assert!(r2 <= r1 + 1e-9);
+        let r0 = debiased_rss(&prob.a, &prob.b, &[]);
+        assert!(r1 <= r0);
+    }
+
+    #[test]
+    fn tuning_selects_near_truth_support_size() {
+        let prob = problem();
+        let opts = TuningOptions {
+            path: PathOptions {
+                alpha: 0.9,
+                c_grid: c_lambda_grid(0.95, 0.05, 30),
+                max_active: 30,
+                tol: 1e-6,
+                ..Default::default()
+            },
+            cv_folds: 0,
+            cv_seed: 0,
+        };
+        let tr = tune(&prob.a, &prob.b, &opts);
+        // e-BIC is consistent for sparse truths: selected size near n₀=4
+        let chosen = &tr.points[tr.best_ebic];
+        assert!(
+            (2..=8).contains(&chosen.active),
+            "ebic chose active={} (expected ≈4)",
+            chosen.active
+        );
+        // gcv also lands on a sparse model for this high-snr instance
+        let g = &tr.points[tr.best_gcv];
+        assert!(g.active <= 30);
+    }
+
+    #[test]
+    fn cv_runs_and_selects_reasonable_model() {
+        let prob = generate_synthetic(&SyntheticSpec {
+            m: 40,
+            n: 60,
+            n0: 3,
+            x_star: 5.0,
+            snr: 20.0,
+            seed: 23,
+        });
+        let opts = TuningOptions {
+            path: PathOptions {
+                alpha: 0.9,
+                c_grid: c_lambda_grid(0.9, 0.1, 8),
+                max_active: 20,
+                tol: 1e-5,
+                ..Default::default()
+            },
+            cv_folds: 5,
+            cv_seed: 1,
+        };
+        let tr = tune(&prob.a, &prob.b, &opts);
+        let best = tr.best_cv.expect("cv requested");
+        let cvs: Vec<f64> = tr.points.iter().map(|p| p.cv.unwrap()).collect();
+        assert!(cvs.iter().all(|v| v.is_finite()));
+        // chosen point must not have trivially-zero support if signal exists
+        assert!(tr.points[best].active > 0);
+    }
+
+    #[test]
+    fn dof_between_zero_and_r() {
+        let prob = problem();
+        let opts = TuningOptions {
+            path: PathOptions {
+                alpha: 0.7,
+                c_grid: c_lambda_grid(0.9, 0.2, 10),
+                max_active: 0,
+                tol: 1e-6,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let tr = tune(&prob.a, &prob.b, &opts);
+        for p in &tr.points {
+            assert!(p.dof >= -1e-9, "dof {}", p.dof);
+            assert!(p.dof <= p.active as f64 + 1e-9, "dof {} > r {}", p.dof, p.active);
+        }
+    }
+}

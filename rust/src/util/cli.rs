@@ -1,0 +1,200 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Grammar: `binary <subcommand> [--flag] [--key value] [--key=value] ...`.
+//! Typed accessors parse on demand and report readable errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: one optional subcommand plus `--key [value]` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` pairs; bare flags map to `"true"`.
+    opts: BTreeMap<String, String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut tokens = iter.into_iter().peekable();
+        while let Some(tok) = tokens.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err("bare `--` is not supported".into());
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // value is next token unless it looks like another flag
+                    match tokens.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = tokens.next().unwrap();
+                            out.opts.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.opts.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// Raw string option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Boolean flag: present (or `--key true`) ⇒ true.
+    pub fn get_flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Typed numeric option with default; errors on malformed values.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("option --{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// `usize` convenience.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        // accept scientific notation like 1e5 for experiment sizes
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                if let Ok(u) = v.parse::<usize>() {
+                    return Ok(u);
+                }
+                v.parse::<f64>()
+                    .ok()
+                    .filter(|f| *f >= 0.0 && f.fract() == 0.0)
+                    .map(|f| f as usize)
+                    .ok_or_else(|| format!("option --{key}: cannot parse {v:?} as usize"))
+            }
+        }
+    }
+
+    /// `f64` convenience.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        self.get_parse(key, default)
+    }
+
+    /// Comma-separated list of f64.
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<f64>()
+                        .map_err(|_| format!("option --{key}: bad element {s:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of usize (scientific notation allowed).
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    let s = s.trim();
+                    if let Ok(u) = s.parse::<usize>() {
+                        return Ok(u);
+                    }
+                    s.parse::<f64>()
+                        .ok()
+                        .filter(|f| *f >= 0.0)
+                        .map(|f| f as usize)
+                        .ok_or_else(|| format!("option --{key}: bad element {s:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["solve", "--n", "1000", "--alpha=0.9", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("solve"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 1000);
+        assert_eq!(a.get_f64("alpha", 0.0).unwrap(), 0.9);
+        assert!(a.get_flag("verbose"));
+        assert!(!a.get_flag("quiet"));
+    }
+
+    #[test]
+    fn scientific_notation_sizes() {
+        let a = parse(&["bench", "--n", "1e5"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 100_000);
+        let a = parse(&["bench", "--ns", "1e4,1e5,5e5"]);
+        assert_eq!(a.get_usize_list("ns", &[]).unwrap(), vec![10_000, 100_000, 500_000]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_str("mode", "native"), "native");
+        assert_eq!(a.get_f64("tol", 1e-6).unwrap(), 1e-6);
+    }
+
+    #[test]
+    fn f64_list() {
+        let a = parse(&["x", "--alphas", "0.9, 0.8,0.6"]);
+        assert_eq!(a.get_f64_list("alphas", &[]).unwrap(), vec![0.9, 0.8, 0.6]);
+    }
+
+    #[test]
+    fn malformed_value_is_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn positional_after_command() {
+        let a = parse(&["solve", "file1", "file2", "--k", "3"]);
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+        assert_eq!(a.get_usize("k", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--fast", "--n", "5"]);
+        assert!(a.get_flag("fast"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+    }
+}

@@ -1,0 +1,80 @@
+//! Tiny CSV writer/reader — enough for dumping benchmark series (Figure 1/2 data)
+//! and reading them back in tests. No quoting of embedded commas is needed for
+//! our numeric tables; fields containing commas are rejected at write time.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a CSV file with a header row and numeric-ish string rows.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    validate(header.iter().copied())?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        assert_eq!(row.len(), header.len(), "csv row arity mismatch");
+        validate(row.iter().map(|s| s.as_str()))?;
+        writeln!(f, "{}", row.join(","))?;
+    }
+    f.flush()
+}
+
+fn validate<'a>(cells: impl Iterator<Item = &'a str>) -> std::io::Result<()> {
+    for c in cells {
+        if c.contains(',') || c.contains('\n') {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("csv cell contains separator: {c:?}"),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Read a CSV file back: `(header, rows)`.
+pub fn read_csv(path: &Path) -> std::io::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "empty csv"))?
+        .split(',')
+        .map(|s| s.to_string())
+        .collect::<Vec<_>>();
+    let mut rows = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        rows.push(line.split(',').map(|s| s.to_string()).collect());
+    }
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("ssnal_csv_test");
+        let path = dir.join("t.csv");
+        let rows = vec![vec!["1".to_string(), "2.5".to_string()]];
+        write_csv(&path, &["a", "b"], &rows).unwrap();
+        let (h, r) = read_csv(&path).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(r, rows);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_embedded_comma() {
+        let dir = std::env::temp_dir().join("ssnal_csv_test2");
+        let path = dir.join("t.csv");
+        let rows = vec![vec!["1,2".to_string()]];
+        assert!(write_csv(&path, &["a"], &rows).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

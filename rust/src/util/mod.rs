@@ -1,0 +1,14 @@
+//! Utility substrates built in-repo (the offline environment has no clap, serde,
+//! criterion or proptest): a mini CLI argument parser, wall-clock timers, table
+//! and CSV/JSON emitters, and a tiny property-testing helper.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod quickcheck;
+pub mod table;
+pub mod timer;
+
+pub use cli::Args;
+pub use table::Table;
+pub use timer::Stopwatch;

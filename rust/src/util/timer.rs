@@ -1,0 +1,125 @@
+//! Wall-clock measurement utilities for the benchmark harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed as a `Duration`.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Restart and return the elapsed seconds of the previous lap.
+    pub fn lap(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::new();
+    let out = f();
+    (out, sw.elapsed_s())
+}
+
+/// Summary statistics over repeated measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stats {
+    pub mean: f64,
+    /// Standard error of the mean (0 for a single measurement).
+    pub se: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+/// Compute mean / standard error / range of a sample.
+pub fn stats(samples: &[f64]) -> Stats {
+    assert!(!samples.is_empty(), "stats of empty sample");
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    Stats {
+        mean,
+        se: (var / n as f64).sqrt(),
+        min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures_positive_time() {
+        let sw = Stopwatch::new();
+        let mut acc = 0u64;
+        for i in 0..10_000 {
+            acc = acc.wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        assert!(sw.elapsed_s() >= 0.0);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, t) = time_it(|| 42);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn stats_single_sample() {
+        let s = stats(&[2.5]);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.se, 0.0);
+        assert_eq!(s.n, 1);
+    }
+
+    #[test]
+    fn stats_known_values() {
+        let s = stats(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-15);
+        // sample var = 5/3, se = sqrt(5/12)
+        assert!((s.se - (5.0f64 / 12.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut sw = Stopwatch::new();
+        let a = sw.lap();
+        let b = sw.elapsed_s();
+        assert!(a >= 0.0 && b >= 0.0);
+    }
+}

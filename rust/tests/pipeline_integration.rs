@@ -1,0 +1,170 @@
+//! End-to-end pipeline tests: data generation → standardization → path →
+//! tuning → de-biasing, on each of the paper's three workload families
+//! (synthetic §4.1, polynomial expansion Table 2, SNP/GWAS §4.2).
+
+use ssnal_en::data::libsvm::{synthesize_base, ReferenceSet};
+use ssnal_en::data::polyexp::{drop_constant_columns, expand};
+use ssnal_en::data::snp::{generate as generate_snp, SnpSpec};
+use ssnal_en::data::{center, generate_synthetic, rho_hat, standardize, SyntheticSpec};
+use ssnal_en::path::{c_lambda_grid, solve_path, PathOptions};
+use ssnal_en::solver::types::Algorithm;
+use ssnal_en::tuning::{tune, TuningOptions};
+
+#[test]
+fn synthetic_pipeline_selects_truth_with_ebic() {
+    let prob = generate_synthetic(&SyntheticSpec {
+        m: 120,
+        n: 1_500,
+        n0: 6,
+        x_star: 5.0,
+        snr: 20.0,
+        seed: 2,
+    });
+    let topts = TuningOptions {
+        path: PathOptions {
+            alpha: 0.9,
+            c_grid: c_lambda_grid(0.95, 0.05, 25),
+            max_active: 30,
+            tol: 1e-6,
+            algorithm: Algorithm::SsnalEn,
+        },
+        cv_folds: 0,
+        cv_seed: 0,
+    };
+    let tr = tune(&prob.a, &prob.b, &topts);
+    let chosen = &tr.path.points[tr.best_ebic].result;
+    // e-BIC should recover (nearly) exactly the truth at this SNR
+    let hits = prob.support.iter().filter(|j| chosen.x[**j] != 0.0).count();
+    assert!(hits >= 5, "e-bic model hits {hits}/6 true features");
+    assert!(chosen.active_set.len() <= 12, "e-bic should stay parsimonious");
+}
+
+#[test]
+fn polyexp_pipeline_handles_collinearity() {
+    let base = synthesize_base(ReferenceSet::Housing, 3);
+    let (clean, _) = drop_constant_columns(&base.a, 1e-9);
+    let (expanded, _) = expand(&clean, 4, 3_000);
+    let std = standardize(&expanded);
+    let (b, _) = center(&base.b);
+    // the expansion is heavily collinear — exactly the Elastic Net's regime
+    let rho = rho_hat(&std.a, 30, 0);
+    assert!(rho > 5.0, "expanded design should be collinear (ρ̂ = {rho})");
+    // path must run to completion without numerical failure
+    let path = solve_path(
+        &std.a,
+        &b,
+        &PathOptions {
+            alpha: 0.5,
+            c_grid: c_lambda_grid(0.9, 0.2, 10),
+            max_active: 40,
+            tol: 1e-6,
+            algorithm: Algorithm::SsnalEn,
+        },
+    );
+    assert!(path.runs >= 3);
+    for p in &path.points {
+        assert!(p.result.converged, "c={} did not converge", p.c_lambda);
+    }
+}
+
+#[test]
+fn snp_pipeline_finds_dominant_snp() {
+    let spec = SnpSpec {
+        m: 150,
+        n_snps: 3_000,
+        n_causal: 5,
+        dominant_effect: 2.0,
+        noise_sd: 0.6,
+        seed: 4,
+        ..Default::default()
+    };
+    let cohort = generate_snp(&spec);
+    let topts = TuningOptions {
+        path: PathOptions {
+            alpha: 0.9,
+            c_grid: c_lambda_grid(0.99, 0.1, 20),
+            max_active: 25,
+            tol: 1e-5,
+            algorithm: Algorithm::SsnalEn,
+        },
+        cv_folds: 0,
+        cv_seed: 0,
+    };
+    let tr = tune(&cohort.a, &cohort.b, &topts);
+    // the paper's Figure 2 pattern: the first feature to enter the path is the
+    // dominant SNP (active set of 1 at large λ)
+    let first_active = tr
+        .path
+        .points
+        .iter()
+        .find(|p| !p.result.active_set.is_empty())
+        .expect("someone must activate");
+    assert_eq!(
+        first_active.result.active_set.len(),
+        1,
+        "first path point with actives should have exactly 1 (the dominant SNP)"
+    );
+    assert_eq!(
+        first_active.result.active_set[0], cohort.causal[0],
+        "the first selected SNP should be the dominant causal one"
+    );
+    // and the e-BIC model should include it
+    let chosen = &tr.path.points[tr.best_ebic].result;
+    assert!(chosen.x[cohort.causal[0]] != 0.0);
+}
+
+#[test]
+fn cv_and_information_criteria_are_consistent() {
+    // On an easy problem all three §3.3 criteria should pick models in the
+    // same sparsity ballpark.
+    let prob = generate_synthetic(&SyntheticSpec {
+        m: 60,
+        n: 300,
+        n0: 4,
+        x_star: 5.0,
+        snr: 25.0,
+        seed: 6,
+    });
+    let topts = TuningOptions {
+        path: PathOptions {
+            alpha: 0.9,
+            c_grid: c_lambda_grid(0.9, 0.1, 12),
+            max_active: 20,
+            tol: 1e-5,
+            algorithm: Algorithm::SsnalEn,
+        },
+        cv_folds: 5,
+        cv_seed: 1,
+    };
+    let tr = tune(&prob.a, &prob.b, &topts);
+    let r_gcv = tr.points[tr.best_gcv].active;
+    let r_ebic = tr.points[tr.best_ebic].active;
+    let r_cv = tr.points[tr.best_cv.unwrap()].active;
+    for (name, r) in [("gcv", r_gcv), ("ebic", r_ebic), ("cv", r_cv)] {
+        assert!((2..=16).contains(&r), "{name} picked r={r}, expected near 4");
+    }
+}
+
+#[test]
+fn path_driver_agrees_between_algorithms_on_pipeline_data() {
+    let base = synthesize_base(ReferenceSet::Bodyfat, 9);
+    let (clean, _) = drop_constant_columns(&base.a, 1e-9);
+    let (expanded, _) = expand(&clean, 3, 1_500);
+    let std = standardize(&expanded);
+    let (b, _) = center(&base.b);
+    let grid = c_lambda_grid(0.9, 0.3, 6);
+    let mk = |algorithm| PathOptions {
+        alpha: 0.8,
+        c_grid: grid.clone(),
+        max_active: 0,
+        tol: 1e-8,
+        algorithm,
+    };
+    let ps = solve_path(&std.a, &b, &mk(Algorithm::SsnalEn));
+    let pc = solve_path(&std.a, &b, &mk(Algorithm::CdCovariance));
+    for (a, c) in ps.points.iter().zip(pc.points.iter()) {
+        let dist = ssnal_en::linalg::blas::dist2(&a.result.x, &c.result.x);
+        let scale = ssnal_en::linalg::blas::nrm2(&a.result.x) + 1.0;
+        assert!(dist / scale < 1e-3, "c={}: dist {dist}", a.c_lambda);
+    }
+}

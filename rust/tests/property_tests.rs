@@ -1,0 +1,218 @@
+//! Property-based tests on solver and prox invariants, using the in-repo
+//! quickcheck substrate (`util::quickcheck`) over randomized problems.
+
+use ssnal_en::linalg::{blas, Mat};
+use ssnal_en::prox;
+use ssnal_en::rng::Xoshiro256pp;
+use ssnal_en::solver::types::{EnetProblem, SsnalOptions};
+use ssnal_en::solver::{primal_objective, ssnal};
+use ssnal_en::util::quickcheck::{log_uniform_usize, run_prop, PropConfig};
+
+/// A random Elastic Net instance for property checks.
+#[derive(Debug)]
+struct RandomInstance {
+    a: Mat,
+    b: Vec<f64>,
+    lam1: f64,
+    lam2: f64,
+}
+
+fn gen_instance(rng: &mut Xoshiro256pp) -> RandomInstance {
+    let m = log_uniform_usize(rng, 10, 60);
+    let n = log_uniform_usize(rng, 20, 300);
+    let a = Mat::from_fn(m, n, |_, _| rng.next_gaussian());
+    let b: Vec<f64> = (0..m).map(|_| 3.0 * rng.next_gaussian()).collect();
+    let lmax = EnetProblem::lambda_max(&a, &b, 1.0).max(1e-6);
+    let lam1 = lmax * (0.05 + 0.9 * rng.next_f64());
+    let lam2 = lmax * rng.next_f64();
+    RandomInstance { a, b, lam1, lam2 }
+}
+
+#[test]
+fn prop_solution_is_a_minimizer() {
+    // obj(x̂) ≤ obj(x̂ + δ) for random perturbations δ.
+    run_prop(
+        PropConfig { cases: 25, seed: 0xA1 },
+        gen_instance,
+        |inst| {
+            let p = EnetProblem::new(&inst.a, &inst.b, inst.lam1, inst.lam2);
+            let res = ssnal::solve(&p, &SsnalOptions { tol: 1e-9, ..Default::default() });
+            if !res.converged {
+                return Err("did not converge".into());
+            }
+            let f0 = primal_objective(&p, &res.x);
+            let mut rng = Xoshiro256pp::seed_from_u64(7);
+            for scale in [1e-3, 1e-2, 0.1] {
+                let mut xp = res.x.clone();
+                for v in xp.iter_mut() {
+                    *v += scale * rng.next_gaussian();
+                }
+                let fp = primal_objective(&p, &xp);
+                if fp < f0 - 1e-7 * (1.0 + f0.abs()) {
+                    return Err(format!("perturbation improved objective: {fp} < {f0}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_zero_above_lambda_max() {
+    run_prop(
+        PropConfig { cases: 30, seed: 0xB2 },
+        |rng| {
+            let m = log_uniform_usize(rng, 5, 40);
+            let n = log_uniform_usize(rng, 10, 200);
+            let a = Mat::from_fn(m, n, |_, _| rng.next_gaussian());
+            let b: Vec<f64> = (0..m).map(|_| rng.next_gaussian()).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let lmax = EnetProblem::lambda_max(a, b, 1.0);
+            let p = EnetProblem::new(a, b, lmax * 1.0001, 0.5);
+            let res = ssnal::solve(&p, &SsnalOptions::default());
+            if res.x.iter().any(|&v| v != 0.0) {
+                return Err("nonzero solution above λmax".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scaling_invariance() {
+    // scaling (b, λ1) by t scales the Lasso solution path point by t when
+    // λ2 also scales by t — homogeneity of the optimality conditions.
+    run_prop(
+        PropConfig { cases: 15, seed: 0xC3 },
+        gen_instance,
+        |inst| {
+            let t = 3.0;
+            let p1 = EnetProblem::new(&inst.a, &inst.b, inst.lam1, inst.lam2);
+            let bt: Vec<f64> = inst.b.iter().map(|v| v * t).collect();
+            let p2 = EnetProblem::new(&inst.a, &bt, inst.lam1 * t, inst.lam2);
+            let opts = SsnalOptions { tol: 1e-10, ..Default::default() };
+            let r1 = ssnal::solve(&p1, &opts);
+            let r2 = ssnal::solve(&p2, &opts);
+            if !(r1.converged && r2.converged) {
+                return Err("no convergence".into());
+            }
+            let scaled: Vec<f64> = r1.x.iter().map(|v| v * t).collect();
+            let dist = blas::dist2(&scaled, &r2.x);
+            let scale = blas::nrm2(&scaled) + 1.0;
+            if dist / scale > 1e-5 {
+                return Err(format!("homogeneity violated: {dist}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_prox_nonexpansive() {
+    // proximal operators are 1-Lipschitz: |prox(a) − prox(b)| ≤ |a − b|.
+    run_prop(
+        PropConfig { cases: 200, seed: 0xD4 },
+        |rng| {
+            let a = 10.0 * (rng.next_f64() - 0.5);
+            let b = 10.0 * (rng.next_f64() - 0.5);
+            let sigma = 0.01 + 2.0 * rng.next_f64();
+            let lam1 = 2.0 * rng.next_f64();
+            let lam2 = 2.0 * rng.next_f64();
+            (a, b, sigma, lam1, lam2)
+        },
+        |&(a, b, sigma, lam1, lam2)| {
+            let pa = prox::prox_enet_scalar(a, sigma, lam1, lam2);
+            let pb = prox::prox_enet_scalar(b, sigma, lam1, lam2);
+            if (pa - pb).abs() > (a - b).abs() + 1e-12 {
+                return Err(format!("prox expansive: |{pa}−{pb}| > |{a}−{b}|"));
+            }
+            // conjugate prox too (firmly nonexpansive in the Moreau pair)
+            let ca = prox::prox_enet_conj_scalar(a, sigma, lam1, lam2);
+            let cb = prox::prox_enet_conj_scalar(b, sigma, lam1, lam2);
+            if sigma * (ca - cb).abs() > (a - b).abs() + 1e-12 {
+                return Err("conjugate prox expansive".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_moreau_vector_identity() {
+    run_prop(
+        PropConfig { cases: 60, seed: 0xE5 },
+        |rng| {
+            let n = log_uniform_usize(rng, 1, 100);
+            let t: Vec<f64> = (0..n).map(|_| 8.0 * (rng.next_f64() - 0.5)).collect();
+            let sigma = 0.05 + 2.0 * rng.next_f64();
+            let lam1 = 2.0 * rng.next_f64();
+            let lam2 = 0.01 + 2.0 * rng.next_f64();
+            (t, sigma, lam1, lam2)
+        },
+        |(t, sigma, lam1, lam2)| {
+            let n = t.len();
+            let mut u = vec![0.0; n];
+            let mut z = vec![0.0; n];
+            prox::prox_enet(t, *sigma, *lam1, *lam2, &mut u);
+            prox::prox_enet_conj(t, *sigma, *lam1, *lam2, &mut z);
+            for i in 0..n {
+                let recon = u[i] + sigma * z[i];
+                if (recon - t[i]).abs() > 1e-10 * (1.0 + t[i].abs()) {
+                    return Err(format!("Moreau identity broken at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_duality_gap_nonnegative() {
+    // For any feasible-ish dual pair built from an arbitrary x, gap ≥ 0.
+    run_prop(
+        PropConfig { cases: 40, seed: 0xF6 },
+        gen_instance,
+        |inst| {
+            if inst.lam2 == 0.0 {
+                return Ok(()); // handled by the scaled-point construction elsewhere
+            }
+            let p = EnetProblem::new(&inst.a, &inst.b, inst.lam1, inst.lam2);
+            let mut rng = Xoshiro256pp::seed_from_u64(3);
+            let x: Vec<f64> = (0..p.n()).map(|_| 0.5 * rng.next_gaussian()).collect();
+            let ax = p.a.mul_vec(&x);
+            let y: Vec<f64> = (0..p.m()).map(|i| ax[i] - p.b[i]).collect();
+            let z: Vec<f64> = p.a.t_mul_vec(&y).iter().map(|v| -v).collect();
+            let gap = ssnal_en::solver::duality_gap(&p, &x, &y, &z);
+            if gap < -1e-9 {
+                return Err(format!("negative duality gap {gap}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_warm_start_never_slower_by_much() {
+    run_prop(
+        PropConfig { cases: 10, seed: 0x1234 },
+        gen_instance,
+        |inst| {
+            let p = EnetProblem::new(&inst.a, &inst.b, inst.lam1, inst.lam2);
+            let opts = SsnalOptions::default();
+            let cold = ssnal::solve(&p, &opts);
+            if !cold.converged {
+                return Err("cold no convergence".into());
+            }
+            let (warm, _) = ssnal::solve_warm(&p, &opts, Some(&cold.x));
+            if warm.iterations > cold.iterations + 1 {
+                return Err(format!(
+                    "warm start slower: {} vs {}",
+                    warm.iterations, cold.iterations
+                ));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,186 @@
+//! Cross-solver integration tests: every algorithm family must agree on the
+//! optimum across problem regimes (the paper's premise: "the three methods
+//! solve the same objective function and converge to the same solution").
+
+use ssnal_en::data::{generate_synthetic, SyntheticSpec};
+use ssnal_en::linalg::blas;
+use ssnal_en::solver::types::{Algorithm, BaselineOptions, EnetProblem, SsnalOptions};
+use ssnal_en::solver::{cd, duality_gap, kkt_residuals, solve_with, ssnal};
+
+fn lambdas_for(a: &ssnal_en::linalg::Mat, b: &[f64], alpha: f64, c: f64) -> (f64, f64) {
+    let lmax = EnetProblem::lambda_max(a, b, alpha);
+    EnetProblem::lambdas_from_alpha(alpha, c, lmax)
+}
+
+/// One regime descriptor for the agreement matrix.
+struct Regime {
+    name: &'static str,
+    m: usize,
+    n: usize,
+    n0: usize,
+    alpha: f64,
+    c: f64,
+    snr: f64,
+}
+
+const REGIMES: &[Regime] = &[
+    Regime { name: "sparse-tall", m: 80, n: 400, n0: 5, alpha: 0.9, c: 0.4, snr: 10.0 },
+    Regime { name: "denser", m: 60, n: 200, n0: 30, alpha: 0.6, c: 0.2, snr: 5.0 },
+    Regime { name: "lasso-like", m: 50, n: 300, n0: 8, alpha: 0.999, c: 0.5, snr: 5.0 },
+    Regime { name: "ridge-heavy", m: 50, n: 150, n0: 10, alpha: 0.2, c: 0.3, snr: 5.0 },
+    Regime { name: "low-snr", m: 70, n: 250, n0: 6, alpha: 0.8, c: 0.6, snr: 1.0 },
+];
+
+#[test]
+fn agreement_matrix_across_regimes() {
+    for (k, r) in REGIMES.iter().enumerate() {
+        let prob = generate_synthetic(&SyntheticSpec {
+            m: r.m,
+            n: r.n,
+            n0: r.n0,
+            x_star: 5.0,
+            snr: r.snr,
+            seed: 100 + k as u64,
+        });
+        let (l1, l2) = lambdas_for(&prob.a, &prob.b, r.alpha, r.c);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let reference =
+            cd::solve_naive(&p, &BaselineOptions { tol: 1e-12, ..Default::default() });
+        for algo in [
+            Algorithm::SsnalEn,
+            Algorithm::CdCovariance,
+            Algorithm::CdGapSafe,
+            Algorithm::Celer,
+        ] {
+            let res = solve_with(&p, algo, 1e-9);
+            assert!(res.converged, "{}: {algo:?} did not converge", r.name);
+            let dist = blas::dist2(&reference.x, &res.x);
+            let scale = blas::nrm2(&reference.x) + 1.0;
+            assert!(dist / scale < 1e-4, "{}: {algo:?} off by {dist}", r.name);
+        }
+    }
+}
+
+#[test]
+fn ssnal_kkt_optimality_certificate() {
+    // For each regime, SsNAL's (x, y, z=−Aᵀy) must satisfy all three KKT
+    // conditions and exhibit a vanishing duality gap.
+    for (k, r) in REGIMES.iter().enumerate() {
+        let prob = generate_synthetic(&SyntheticSpec {
+            m: r.m,
+            n: r.n,
+            n0: r.n0,
+            x_star: 5.0,
+            snr: r.snr,
+            seed: 200 + k as u64,
+        });
+        let (l1, l2) = lambdas_for(&prob.a, &prob.b, r.alpha, r.c);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let res = ssnal::solve(&p, &SsnalOptions { tol: 1e-9, ..Default::default() });
+        assert!(res.converged, "{}", r.name);
+        let z: Vec<f64> = p.a.t_mul_vec(&res.y).iter().map(|v| -v).collect();
+        let kkt = kkt_residuals(&p, &res.x, &res.y, &z);
+        assert!(kkt.max() < 1e-6, "{}: {kkt:?}", r.name);
+        if l2 > 0.0 {
+            let gap = duality_gap(&p, &res.x, &res.y, &z);
+            assert!(gap.abs() < 1e-5 * (1.0 + res.objective), "{}: gap {gap}", r.name);
+        }
+    }
+}
+
+#[test]
+fn solution_is_piecewise_stable_in_lambda() {
+    // tiny λ perturbations must not blow up the solution (continuity of the
+    // solution path — underpins warm starting).
+    let prob = generate_synthetic(&SyntheticSpec {
+        m: 60,
+        n: 200,
+        n0: 8,
+        x_star: 5.0,
+        snr: 10.0,
+        seed: 7,
+    });
+    let (l1, l2) = lambdas_for(&prob.a, &prob.b, 0.8, 0.4);
+    let p1 = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+    let l1b = l1 * 1.001;
+    let l2b = l2 * 1.001;
+    let p2 = EnetProblem::new(&prob.a, &prob.b, l1b, l2b);
+    let opts = SsnalOptions { tol: 1e-9, ..Default::default() };
+    let r1 = ssnal::solve(&p1, &opts);
+    let r2 = ssnal::solve(&p2, &opts);
+    let dist = blas::dist2(&r1.x, &r2.x);
+    let scale = blas::nrm2(&r1.x) + 1.0;
+    assert!(dist / scale < 0.05, "solution jumped by {dist} for 0.1% λ change");
+}
+
+#[test]
+fn iteration_counts_match_paper_band() {
+    // Paper Tables 1–2: convergence in ≤ 6 AL iterations at tol 1e-6.
+    let prob = generate_synthetic(&SyntheticSpec {
+        m: 100,
+        n: 2_000,
+        n0: 20,
+        x_star: 5.0,
+        snr: 5.0,
+        seed: 31,
+    });
+    for (alpha, max_outer) in [(0.9, 8), (0.6, 8), (0.2, 6)] {
+        let (l1, l2) = lambdas_for(&prob.a, &prob.b, alpha, 0.4);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let res = ssnal::solve(&p, &SsnalOptions::default());
+        assert!(res.converged);
+        assert!(
+            res.iterations <= max_outer,
+            "α={alpha}: {} outer iterations (paper band ≤ {max_outer})",
+            res.iterations
+        );
+    }
+}
+
+#[test]
+fn fista_admm_reach_same_objective() {
+    let prob = generate_synthetic(&SyntheticSpec {
+        m: 40,
+        n: 120,
+        n0: 5,
+        x_star: 5.0,
+        snr: 8.0,
+        seed: 41,
+    });
+    let (l1, l2) = lambdas_for(&prob.a, &prob.b, 0.75, 0.3);
+    let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+    let reference = solve_with(&p, Algorithm::SsnalEn, 1e-10);
+    for algo in [Algorithm::Fista, Algorithm::ProximalGradient, Algorithm::Admm] {
+        let res = solve_with(&p, algo, 1e-10);
+        assert!(res.converged, "{algo:?}");
+        assert!(
+            (res.objective - reference.objective).abs() < 1e-5 * (1.0 + reference.objective),
+            "{algo:?}: {} vs {}",
+            res.objective,
+            reference.objective
+        );
+    }
+}
+
+#[test]
+fn active_set_grows_as_lambda_decreases() {
+    let prob = generate_synthetic(&SyntheticSpec {
+        m: 80,
+        n: 500,
+        n0: 20,
+        x_star: 5.0,
+        snr: 10.0,
+        seed: 51,
+    });
+    let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, 0.8);
+    let mut last_r = 0usize;
+    for c in [0.9, 0.7, 0.5, 0.3, 0.15] {
+        let (l1, l2) = EnetProblem::lambdas_from_alpha(0.8, c, lmax);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let res = ssnal::solve(&p, &SsnalOptions::default());
+        let r = res.active_set.len();
+        assert!(r + 2 >= last_r, "active set shrank sharply: {last_r} → {r}");
+        last_r = last_r.max(r);
+    }
+    assert!(last_r >= 20, "smallest λ should include the truth support");
+}
