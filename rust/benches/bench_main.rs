@@ -73,5 +73,12 @@ fn main() {
     d4.print();
     println!("(d4 took {secs:.1}s)\n");
 
+    // Parallel λ-path engine — threads vs wall-clock
+    let ((tp, _, _), secs) = time_it(|| {
+        tables::parallel_path_rows(5_000 * scale, 200, 30, &[1, 2, 4], 1e-6, 2020, true)
+    });
+    tp.print();
+    println!("(parallel-path took {secs:.1}s)\n");
+
     println!("== benchmark suite complete ==");
 }

@@ -24,7 +24,7 @@ use ssnal_en::util::table::Table;
 use ssnal_en::util::timer::time_it;
 use std::path::PathBuf;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ssnal_en::util::error::Result<()> {
     let n_snps: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -33,15 +33,41 @@ fn main() -> anyhow::Result<()> {
 
     // the two cohorts of the paper's §4.2 (m=226 / m=210; 13 / 6 selected SNPs)
     let cohorts = [
-        ("cwg", SnpSpec { m: 226, n_snps, n_causal: 13, dominant_effect: 1.2, seed: 2020, ..Default::default() }),
-        ("bmi", SnpSpec { m: 210, n_snps, n_causal: 6, dominant_effect: 1.4, seed: 2021, ..Default::default() }),
+        (
+            "cwg",
+            SnpSpec {
+                m: 226,
+                n_snps,
+                n_causal: 13,
+                dominant_effect: 1.2,
+                seed: 2020,
+                ..Default::default()
+            },
+        ),
+        (
+            "bmi",
+            SnpSpec {
+                m: 210,
+                n_snps,
+                n_causal: 6,
+                dominant_effect: 1.4,
+                seed: 2021,
+                ..Default::default()
+            },
+        ),
     ];
     let alphas = [0.9, 0.8, 0.6];
 
     for (name, spec) in &cohorts {
-        println!("=== cohort {name}: m={}, {} SNPs, {} causal ===", spec.m, spec.n_snps, spec.n_causal);
+        println!(
+            "=== cohort {name}: m={}, {} SNPs, {} causal ===",
+            spec.m, spec.n_snps, spec.n_causal
+        );
         let (run, secs) = time_it(|| insight_run(spec, &alphas, 25, 0));
-        println!("tuning sweep over α ∈ {alphas:?}: {secs:.1}s, {} curve rows", run.curves.len());
+        println!(
+            "tuning sweep over α ∈ {alphas:?}: {secs:.1}s, {} curve rows",
+            run.curves.len()
+        );
 
         let curve_path = out_dir.join(format!("fig2_{name}.csv"));
         write_csv(&curve_path, &INSIGHT_CURVE_HEADER, &run.curves)?;
@@ -61,7 +87,14 @@ fn main() -> anyhow::Result<()> {
     let artifacts = ssnal_en::runtime::default_artifacts_dir();
     if artifacts.join("manifest.json").exists() {
         // artifacts ship a (200, 4096) shape — build a matching mini-cohort
-        let spec = SnpSpec { m: 200, n_snps: 4096, n_causal: 5, dominant_effect: 2.0, seed: 7, ..Default::default() };
+        let spec = SnpSpec {
+            m: 200,
+            n_snps: 4096,
+            n_causal: 5,
+            dominant_effect: 2.0,
+            seed: 7,
+            ..Default::default()
+        };
         let cohort = generate_snp(&spec);
         let lmax = EnetProblem::lambda_max(&cohort.a, &cohort.b, 0.9);
         let (l1, l2) = EnetProblem::lambdas_from_alpha(0.9, 0.5, lmax);
@@ -72,19 +105,22 @@ fn main() -> anyhow::Result<()> {
 
         let pjrt = Coordinator::new(CoordinatorConfig::pjrt(artifacts));
         let (fit_pjrt, t_pjrt) = time_it(|| pjrt.solve(&cohort.a, &cohort.b, l1, l2));
-        let fit_pjrt = fit_pjrt?;
-
-        let dist = ssnal_en::linalg::blas::dist2(&fit_native.x, &fit_pjrt.x);
-        println!(
-            "=== PJRT three-layer check (200×4096 SNP cohort) ===\n\
-             native  : {t_native:.3}s, active={}, obj={:.5}\n\
-             pjrt    : {t_pjrt:.3}s, active={}, obj={:.5} (AOT JAX+Pallas graphs, f32)\n\
-             ‖x_native − x_pjrt‖ = {dist:.2e}",
-            fit_native.active_set.len(),
-            fit_native.objective,
-            fit_pjrt.active_set.len(),
-            fit_pjrt.objective
-        );
+        match fit_pjrt {
+            Ok(fit_pjrt) => {
+                let dist = ssnal_en::linalg::blas::dist2(&fit_native.x, &fit_pjrt.x);
+                println!(
+                    "=== PJRT three-layer check (200×4096 SNP cohort) ===\n\
+                     native  : {t_native:.3}s, active={}, obj={:.5}\n\
+                     pjrt    : {t_pjrt:.3}s, active={}, obj={:.5} (AOT JAX+Pallas, f32)\n\
+                     ‖x_native − x_pjrt‖ = {dist:.2e}",
+                    fit_native.active_set.len(),
+                    fit_native.objective,
+                    fit_pjrt.active_set.len(),
+                    fit_pjrt.objective
+                );
+            }
+            Err(e) => println!("(PJRT backend unavailable in this build: {e})"),
+        }
     } else {
         println!("(artifacts not built — run `make artifacts` to include the PJRT check)");
     }

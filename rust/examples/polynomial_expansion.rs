@@ -18,7 +18,7 @@ use ssnal_en::solver::types::{Algorithm, EnetProblem};
 use ssnal_en::solver::solve_with;
 use ssnal_en::util::timer::time_it;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ssnal_en::util::error::Result<()> {
     let max_n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(30_000);
 
     let set = ReferenceSet::Housing;
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     // LIBSVM-format round-trip to exercise the parser on realistic data
     let base = synthesize_base(set, 11);
     let text = to_libsvm(&base);
-    let parsed = parse_libsvm(&text, 0).map_err(anyhow::Error::msg)?;
+    let parsed = parse_libsvm(&text, 0).map_err(ssnal_en::util::error::Error::msg)?;
     assert_eq!(parsed.b.len(), base.b.len());
     println!("LIBSVM round-trip: {} rows, {} bytes", parsed.b.len(), text.len());
 

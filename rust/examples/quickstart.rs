@@ -11,7 +11,7 @@ use ssnal_en::solver::types::{Algorithm, EnetProblem};
 use ssnal_en::solver::{kkt_residuals, solve_with};
 use ssnal_en::util::timer::time_it;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ssnal_en::util::error::Result<()> {
     // 1. a synthetic instance in the paper's ultra-high-dimensional regime:
     //    n = 50 000 features, m = 500 observations, 20 true nonzeros.
     let spec = SyntheticSpec { m: 500, n: 50_000, n0: 20, x_star: 5.0, snr: 5.0, seed: 42 };

@@ -15,7 +15,7 @@ use ssnal_en::tuning::{tune, TuningOptions};
 use ssnal_en::util::table::Table;
 use ssnal_en::util::timer::time_it;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ssnal_en::util::error::Result<()> {
     // sim1 shape (scaled for an example): m=500, n₀=100 true features
     let spec = SyntheticSpec { m: 500, n: 20_000, n0: 100, x_star: 5.0, snr: 5.0, seed: 7 };
     println!("generating sim1-style instance ({}×{}) ...", spec.m, spec.n);
@@ -32,7 +32,10 @@ fn main() -> anyhow::Result<()> {
 
     let (path, secs) =
         time_it(|| ssnal_en::path::solve_path(&prob.a, &prob.b, &mk_opts(Algorithm::SsnalEn)));
-    println!("\nSsNAL-EN path: {} points in {secs:.2}s (truncated = {})", path.runs, path.truncated);
+    println!(
+        "\nSsNAL-EN path: {} points in {secs:.2}s (truncated = {})",
+        path.runs, path.truncated
+    );
 
     let mut t = Table::new(&["c_lambda", "active", "outer", "inner"])
         .with_title("path milestones (every 5th point)");

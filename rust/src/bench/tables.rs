@@ -9,12 +9,14 @@ use crate::bench::harness::{measure, MeasureConfig};
 use crate::data::libsvm::ReferenceSet;
 use crate::data::snp::{generate as generate_snp, SnpSpec};
 use crate::data::{generate_synthetic, rho_hat, standardize, SyntheticSpec};
-use crate::linalg::Mat;
+use crate::linalg::{blas, Mat};
+use crate::parallel::{solve_path_parallel, Chunking, ParallelPathOptions};
 use crate::path::{c_lambda_grid, first_reaching_active, solve_path, PathOptions};
 use crate::prox;
 use crate::solver::types::{Algorithm, EnetProblem, SsnalOptions};
 use crate::solver::{solve_with, ssnal};
 use crate::tuning::{tune, TuningOptions};
+use crate::util::json::Json;
 use crate::util::table::{fmt_secs, fmt_secs_iters, Table};
 
 /// Find the largest `c_λ` whose solution has ≥ `target` active features
@@ -543,6 +545,19 @@ mod tests {
     }
 
     #[test]
+    fn parallel_bench_rows_tiny() {
+        let (t, rows, seq_secs) = parallel_path_rows(300, 40, 6, &[1, 2], 1e-5, 3, true);
+        assert_eq!(t.len(), 2);
+        assert_eq!(rows.len(), 2);
+        assert!(seq_secs > 0.0);
+        assert!(rows.iter().all(|r| r.runs == 6), "{rows:?}");
+        assert!(rows.iter().all(|r| r.max_dist < 1e-2), "{rows:?}");
+        let js = parallel_path_json(&rows, 300, 40, 6, seq_secs, true);
+        assert!(js.contains("parallel_path"), "{js}");
+        assert!(js.contains("rows"), "{js}");
+    }
+
+    #[test]
     fn insight_tiny_runs() {
         let spec = SnpSpec {
             m: 60,
@@ -565,6 +580,135 @@ mod tests {
             run.causal
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel λ-path engine — threads vs wall-clock
+// ---------------------------------------------------------------------------
+
+/// One measured configuration of the parallel λ-path engine.
+#[derive(Clone, Debug)]
+pub struct ParallelBenchRow {
+    /// Worker threads requested (chains = threads for these rows).
+    pub threads: usize,
+    /// Wall-clock seconds for the full path.
+    pub seconds: f64,
+    /// Sequential `path::solve_path` wall-clock divided by `seconds`.
+    pub speedup: f64,
+    /// Max ‖x_engine − x_seq‖₂ over all path points (solution agreement).
+    pub max_dist: f64,
+    /// Grid points explored.
+    pub runs: usize,
+}
+
+/// Measure the parallel λ-path engine against the sequential driver on one
+/// synthetic instance: one row per thread count (chains = threads), plus the
+/// sequential baseline timing. Returns the printable table and the raw rows
+/// (for the `BENCH_*.json` artifact).
+pub fn parallel_path_rows(
+    n: usize,
+    m: usize,
+    grid_points: usize,
+    threads_list: &[usize],
+    tol: f64,
+    seed: u64,
+    screening: bool,
+) -> (Table, Vec<ParallelBenchRow>, f64) {
+    let spec = SyntheticSpec {
+        m,
+        n,
+        n0: (n / 100).clamp(5, 50),
+        x_star: 5.0,
+        snr: 5.0,
+        seed,
+    };
+    let prob = generate_synthetic(&spec);
+    let base = PathOptions {
+        alpha: 0.8,
+        c_grid: c_lambda_grid(0.95, 0.1, grid_points),
+        max_active: 0,
+        tol,
+        algorithm: Algorithm::SsnalEn,
+    };
+    let (st_seq, seq) =
+        measure(MeasureConfig::default(), || solve_path(&prob.a, &prob.b, &base));
+
+    let title = format!(
+        "Parallel λ-path: {m}×{n}, {grid_points}-point grid, screening={screening} \
+         (sequential baseline {:.3}s)",
+        st_seq.mean
+    );
+    let mut t = Table::new(&["threads", "chains", "time(s)", "speedup", "max_dist", "runs"])
+        .with_title(&title);
+    let mut rows = Vec::with_capacity(threads_list.len());
+    for &threads in threads_list {
+        let popts = ParallelPathOptions {
+            base: base.clone(),
+            num_threads: threads.max(1),
+            chunking: Chunking::Chains(threads.max(1)),
+            screening,
+        };
+        let (st, res) = measure(MeasureConfig::default(), || {
+            solve_path_parallel(&prob.a, &prob.b, &popts)
+        });
+        let max_dist = res
+            .path
+            .points
+            .iter()
+            .zip(seq.points.iter())
+            .map(|(p, q)| blas::dist2(&p.result.x, &q.result.x))
+            .fold(0.0f64, f64::max);
+        let row = ParallelBenchRow {
+            threads: threads.max(1),
+            seconds: st.mean,
+            speedup: st_seq.mean / st.mean.max(1e-12),
+            max_dist,
+            runs: res.path.runs,
+        };
+        t.row(vec![
+            format!("{}", row.threads),
+            format!("{}", row.threads),
+            fmt_secs(row.seconds),
+            format!("{:.2}x", row.speedup),
+            format!("{:.2e}", row.max_dist),
+            format!("{}", row.runs),
+        ]);
+        rows.push(row);
+    }
+    (t, rows, st_seq.mean)
+}
+
+/// Render the parallel-path bench as the JSON payload CI uploads.
+pub fn parallel_path_json(
+    rows: &[ParallelBenchRow],
+    n: usize,
+    m: usize,
+    grid_points: usize,
+    sequential_seconds: f64,
+    screening: bool,
+) -> String {
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("threads", Json::Num(r.threads as f64)),
+                ("seconds", Json::Num(r.seconds)),
+                ("speedup", Json::Num(r.speedup)),
+                ("max_dist", Json::Num(r.max_dist)),
+                ("runs", Json::Num(r.runs as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("parallel_path".to_string())),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("grid_points", Json::Num(grid_points as f64)),
+        ("screening", Json::Bool(screening)),
+        ("sequential_seconds", Json::Num(sequential_seconds)),
+        ("rows", Json::Arr(row_objs)),
+    ])
+    .to_string()
 }
 
 // ---------------------------------------------------------------------------

@@ -34,6 +34,11 @@ pub struct CoordinatorConfig {
     pub artifacts_dir: PathBuf,
     /// Solver options (tolerance, σ schedule, Newton strategy, ...).
     pub ssnal: SsnalOptions,
+    /// Worker threads for λ-paths and CV sweeps (`0` = all available cores,
+    /// `1` = single-threaded). The coordinator pins the chain split to
+    /// [`crate::parallel::DEFAULT_CHAINS`], so every `num_threads` value
+    /// yields identical results — the setting only changes wall-clock.
+    pub num_threads: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -42,6 +47,7 @@ impl Default for CoordinatorConfig {
             backend: Backend::Native,
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             ssnal: SsnalOptions::default(),
+            num_threads: 0,
         }
     }
 }
@@ -62,6 +68,7 @@ impl CoordinatorConfig {
                 strategy: NewtonStrategy::ConjugateGradient,
                 ..Default::default()
             },
+            ..Default::default()
         }
     }
 }

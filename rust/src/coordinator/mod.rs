@@ -10,12 +10,15 @@ mod pjrt_solver;
 pub use config::{Backend, CoordinatorConfig};
 
 use crate::linalg::Mat;
+use crate::parallel::{
+    solve_path_parallel, Chunking, ParallelPathOptions, ParallelPathResult, DEFAULT_CHAINS,
+};
 use crate::path::{PathOptions, PathResult};
 use crate::runtime::PjrtEngine;
 use crate::solver::ssnal;
 use crate::solver::types::{EnetProblem, SolveResult};
-use crate::tuning::{tune, TuningOptions, TuningResult};
-use anyhow::{Context, Result};
+use crate::tuning::{tune_with_threads, TuningOptions, TuningResult};
+use crate::util::error::{Context, Result};
 use std::cell::OnceCell;
 
 /// High-level solver coordinator.
@@ -74,14 +77,38 @@ impl Coordinator {
     }
 
     /// Warm-started λ-path (always native — the path driver is the
-    /// performance-critical mode the paper benchmarks).
+    /// performance-critical mode the paper benchmarks). Routed through the
+    /// parallel engine with a *fixed* chain split ([`DEFAULT_CHAINS`]), so the
+    /// result is identical for every `config.num_threads` value;
+    /// `num_threads == 1` is the single-threaded fallback (no workers
+    /// spawned). Solutions agree with [`crate::path::solve_path`] to solver
+    /// tolerance; for bit-identical sequential output call the engine with
+    /// [`ParallelPathOptions::sequential`].
     pub fn solve_path(&self, a: &Mat, b: &[f64], opts: &PathOptions) -> PathResult {
-        crate::path::solve_path(a, b, opts)
+        self.solve_path_parallel(a, b, opts).path
     }
 
-    /// Parameter tuning sweep (§3.3): path + GCV/e-BIC (+ optional k-fold CV).
+    /// Warm-started λ-path with the engine's diagnostics (chain reports,
+    /// survivor fractions, thread count).
+    pub fn solve_path_parallel(
+        &self,
+        a: &Mat,
+        b: &[f64],
+        opts: &PathOptions,
+    ) -> ParallelPathResult {
+        let popts = ParallelPathOptions {
+            base: opts.clone(),
+            num_threads: self.config.num_threads,
+            chunking: Chunking::Chains(DEFAULT_CHAINS),
+            screening: true,
+        };
+        solve_path_parallel(a, b, &popts)
+    }
+
+    /// Parameter tuning sweep (§3.3): path + GCV/e-BIC (+ optional k-fold CV),
+    /// with the per-point criteria fanned out over `config.num_threads`.
     pub fn tune(&self, a: &Mat, b: &[f64], opts: &TuningOptions) -> TuningResult {
-        tune(a, b, opts)
+        tune_with_threads(a, b, opts, self.config.num_threads)
     }
 }
 

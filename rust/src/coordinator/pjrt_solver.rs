@@ -16,10 +16,12 @@
 //! backend is; see DESIGN.md §Perf).
 
 use crate::linalg::blas;
-use crate::runtime::{literal_at, literal_from_f64, literal_scalar, literal_to_f64, PjrtEngine};
+use crate::runtime::{
+    literal_at, literal_from_f64, literal_scalar, literal_to_f64, Literal, PjrtEngine,
+};
 use crate::solver::objective::{primal_objective, support_of};
 use crate::solver::types::{Algorithm, EnetProblem, SolveResult, SsnalOptions};
-use anyhow::Result;
+use crate::util::error::{Error, Result};
 
 /// One `dual_prox_grad` evaluation via PJRT.
 struct ProxGradOut {
@@ -31,8 +33,8 @@ struct ProxGradOut {
 
 fn dual_prox_grad(
     engine: &PjrtEngine,
-    at_lit: &xla::Literal,
-    b_lit: &xla::Literal,
+    at_lit: &Literal,
+    b_lit: &Literal,
     x: &[f64],
     y: &[f64],
     sigma: f64,
@@ -50,7 +52,9 @@ fn dual_prox_grad(
         literal_scalar(p.lam1),
         literal_scalar(p.lam2),
     ])?;
-    anyhow::ensure!(outs.len() == 4, "dual_prox_grad returns 4 outputs, got {}", outs.len());
+    if outs.len() != 4 {
+        return Err(Error::msg(format!("dual_prox_grad returns 4 outputs, got {}", outs.len())));
+    }
     Ok(ProxGradOut {
         grad: literal_to_f64(&outs[0])?,
         u: literal_to_f64(&outs[1])?,
@@ -61,7 +65,7 @@ fn dual_prox_grad(
 
 fn hess_vec(
     engine: &PjrtEngine,
-    at_lit: &xla::Literal,
+    at_lit: &Literal,
     mask: &[f64],
     kappa: f64,
     d: &[f64],
@@ -71,7 +75,9 @@ fn hess_vec(
     let mask_lit = literal_from_f64(mask, &[p.n()])?;
     let d_lit = literal_from_f64(d, &[p.m()])?;
     let outs = g.run(&[at_lit.clone(), mask_lit, literal_scalar(kappa), d_lit])?;
-    anyhow::ensure!(outs.len() == 1, "hess_vec returns 1 output");
+    if outs.len() != 1 {
+        return Err(Error::msg("hess_vec returns 1 output"));
+    }
     literal_to_f64(&outs[0])
 }
 

@@ -52,7 +52,10 @@ pub fn parse_libsvm(text: &str, n_features: usize) -> Result<Dataset, String> {
                 return Err(format!("line {}: LIBSVM indices are 1-based", lineno + 1));
             }
             if idx <= prev {
-                return Err(format!("line {}: indices must increase ({idx} after {prev})", lineno + 1));
+                return Err(format!(
+                    "line {}: indices must increase ({idx} after {prev})",
+                    lineno + 1
+                ));
             }
             prev = idx;
             let val: f64 = vs

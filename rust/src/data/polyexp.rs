@@ -34,7 +34,8 @@ pub fn expand(base: &Mat, k: usize, max_cols: usize) -> (Mat, Vec<Vec<usize>>) {
     assert!(k >= 1, "expansion order must be ≥ 1");
     let m = base.rows();
     let d = base.cols();
-    let limit = if max_cols == 0 { expanded_count(d, k) } else { max_cols.min(expanded_count(d, k)) };
+    let full = expanded_count(d, k);
+    let limit = if max_cols == 0 { full } else { max_cols.min(full) };
     let mut data: Vec<f64> = Vec::with_capacity(limit.saturating_mul(m));
     let mut indices: Vec<Vec<usize>> = Vec::with_capacity(limit);
 

@@ -1,0 +1,115 @@
+//! Splitting a descending c_λ grid into warm-start chains.
+//!
+//! Warm starts only pay off along a *contiguous* run of nearby λ values, so
+//! the grid is cut into contiguous segments ("chains"); each chain is solved
+//! sequentially with warm starts and the chains run concurrently. The split is
+//! a pure function of `(grid length, chunking, thread count)` — never of
+//! runtime timing — which is what makes the engine's output deterministic.
+
+use crate::parallel::pool::resolve_threads;
+
+/// How to cut the λ-grid into warm-start chains.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Chunking {
+    /// One chain per worker thread.
+    Auto,
+    /// Exactly this many chains (clamped to the grid length; `0` acts like 1).
+    Chains(usize),
+    /// Chains of (at most) this many grid points.
+    PointsPerChain(usize),
+}
+
+/// One contiguous chain: grid indices `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chain {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Chain {
+    /// Number of grid points in the chain.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// True for a degenerate empty chain (never produced by [`split_chains`]).
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
+/// Split `grid_len` points into contiguous chains per the chunking policy.
+/// Chains are returned in grid order and differ in length by at most one.
+pub fn split_chains(grid_len: usize, chunking: &Chunking, num_threads: usize) -> Vec<Chain> {
+    if grid_len == 0 {
+        return Vec::new();
+    }
+    let count = match chunking {
+        Chunking::Auto => resolve_threads(num_threads),
+        Chunking::Chains(k) => (*k).max(1),
+        Chunking::PointsPerChain(p) => grid_len.div_ceil((*p).max(1)),
+    }
+    .min(grid_len);
+    let base = grid_len / count;
+    let extra = grid_len % count;
+    let mut chains = Vec::with_capacity(count);
+    let mut start = 0;
+    for k in 0..count {
+        let len = base + usize::from(k < extra);
+        chains.push(Chain { start, end: start + len });
+        start += len;
+    }
+    chains
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cover(chains: &[Chain], len: usize) {
+        assert_eq!(chains.first().unwrap().start, 0);
+        assert_eq!(chains.last().unwrap().end, len);
+        for w in chains.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "chains must tile the grid");
+        }
+        for c in chains {
+            assert!(!c.is_empty());
+        }
+    }
+
+    #[test]
+    fn chains_tile_the_grid() {
+        for len in [1usize, 2, 7, 100, 101] {
+            for k in [1usize, 2, 3, 8] {
+                let chains = split_chains(len, &Chunking::Chains(k), 1);
+                assert_eq!(chains.len(), k.min(len));
+                cover(&chains, len);
+                let sizes: Vec<usize> = chains.iter().map(Chain::len).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "balanced: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn points_per_chain() {
+        let chains = split_chains(10, &Chunking::PointsPerChain(4), 1);
+        assert_eq!(chains.len(), 3);
+        cover(&chains, 10);
+        assert!(chains.iter().all(|c| c.len() <= 4));
+    }
+
+    #[test]
+    fn auto_uses_thread_count() {
+        let chains = split_chains(100, &Chunking::Auto, 4);
+        assert_eq!(chains.len(), 4);
+        cover(&chains, 100);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(split_chains(0, &Chunking::Auto, 4).is_empty());
+        assert_eq!(split_chains(3, &Chunking::Chains(0), 1).len(), 1);
+        assert_eq!(split_chains(2, &Chunking::Chains(9), 1).len(), 2);
+    }
+}

@@ -1,0 +1,419 @@
+//! Parallel warm-started λ-path engine.
+//!
+//! `path::solve_path` walks the λ-grid strictly sequentially; λ-paths and
+//! K-fold CV are embarrassingly parallel *between* warm-start chains. This
+//! subsystem supplies the missing machinery, dependency-free
+//! (`std::thread` + channels):
+//!
+//! * [`pool`] — a work-scheduling pool ([`run_tasks`]) with order-preserving
+//!   result collection,
+//! * [`chain`] — deterministic splitting of the grid into contiguous
+//!   warm-start chains ([`Chunking`]),
+//! * [`shared`] — the [`SharedScreen`] scoreboard workers use to coordinate
+//!   max-active truncation across chains,
+//! * [`solve_path_parallel`] — the engine: chains solved concurrently, each
+//!   sequentially warm-started via the exact [`crate::path::solve_point`]
+//!   primitive the sequential driver uses.
+//!
+//! **Determinism.** Every per-point float depends only on chain-local state
+//! and results are assembled by grid index, so for a **fixed chunking**
+//! ([`Chunking::Chains`] / [`Chunking::PointsPerChain`]) the output is
+//! bitwise-identical across thread counts, and a one-chain run is
+//! bitwise-identical to `path::solve_path`. [`Chunking::Auto`] instead ties
+//! the chain count to the resolved thread count for maximum parallelism —
+//! different thread requests then take different warm-start chains and agree
+//! only to solver tolerance. Cross-worker sharing (the scoreboard) only
+//! prunes work that provably cannot appear in the final path.
+//!
+//! **Screening.** With [`ParallelPathOptions::screening`] on, each
+//! warm-started point first runs the Gap-Safe sphere test (paper D.3) at the
+//! *current* λ against the chain's previous solution and solves the reduced
+//! design. The rule is safe — discarded features are provably zero at this
+//! λ — so solutions match the unscreened path to solver tolerance while the
+//! per-point cost drops from O(mn) to O(m·|survivors|) sweeps.
+
+pub mod chain;
+pub mod pool;
+pub mod shared;
+
+pub use chain::{Chain, Chunking};
+pub use pool::{available_threads, resolve_threads, run_tasks};
+pub use shared::SharedScreen;
+
+/// Chain count the coordinator uses: fixed (not tied to the thread count) so
+/// coordinator results are identical for every `num_threads` setting.
+pub const DEFAULT_CHAINS: usize = 8;
+
+use crate::linalg::{blas, Mat};
+use crate::path::{
+    assert_descending_grid, solve_point, PathOptions, PathPoint, PathResult, WarmState,
+};
+use crate::solver::screening::AugmentedView;
+use crate::solver::types::{EnetProblem, SolveResult};
+use crate::util::timer::Stopwatch;
+
+/// Options for a parallel path run.
+#[derive(Clone, Debug)]
+pub struct ParallelPathOptions {
+    /// The underlying path options (grid, α, cap, tolerance, algorithm).
+    pub base: PathOptions,
+    /// Worker threads (`0` = all available cores).
+    pub num_threads: usize,
+    /// How the grid is cut into warm-start chains.
+    pub chunking: Chunking,
+    /// Restrict each warm-started solve to its Gap-Safe survivors.
+    pub screening: bool,
+}
+
+impl Default for ParallelPathOptions {
+    fn default() -> Self {
+        Self {
+            base: PathOptions::default(),
+            num_threads: 0,
+            chunking: Chunking::Auto,
+            screening: true,
+        }
+    }
+}
+
+impl ParallelPathOptions {
+    /// Single-chain, unscreened configuration: semantics (and bits) identical
+    /// to [`crate::path::solve_path`], just executed through the engine.
+    pub fn sequential(base: PathOptions) -> Self {
+        Self { base, num_threads: 1, chunking: Chunking::Chains(1), screening: false }
+    }
+}
+
+/// Per-chain diagnostics.
+#[derive(Clone, Debug)]
+pub struct ChainReport {
+    /// The grid segment this chain covered.
+    pub chain: Chain,
+    /// Points actually solved (may stop early on cap hit / frontier skip).
+    pub solved: usize,
+    /// Wall-clock seconds spent in the chain.
+    pub seconds: f64,
+    /// Mean fraction of features surviving the Gap-Safe screen (1.0 when
+    /// screening is off or never bit).
+    pub survivor_fraction: f64,
+}
+
+/// Result of a parallel path run: the assembled path plus engine diagnostics.
+#[derive(Clone, Debug)]
+pub struct ParallelPathResult {
+    /// The path, identical in shape to the sequential driver's output.
+    pub path: PathResult,
+    /// Per-chain diagnostics, in grid order.
+    pub chains: Vec<ChainReport>,
+    /// Worker threads the engine ran with.
+    pub threads: usize,
+}
+
+/// Run the warm-started λ-path with chains distributed over a worker pool.
+pub fn solve_path_parallel(
+    a: &Mat,
+    b: &[f64],
+    opts: &ParallelPathOptions,
+) -> ParallelPathResult {
+    assert_descending_grid(&opts.base.c_grid);
+    let grid_len = opts.base.c_grid.len();
+    let lambda_max = EnetProblem::lambda_max(a, b, opts.base.alpha);
+    let chains = chain::split_chains(grid_len, &opts.chunking, opts.num_threads);
+    let board = SharedScreen::new();
+    let threads = resolve_threads(opts.num_threads).min(chains.len().max(1));
+
+    let jobs: Vec<_> = chains
+        .iter()
+        .map(|&seg| {
+            let board = &board;
+            let base = &opts.base;
+            let screening = opts.screening;
+            move || run_chain(a, b, lambda_max, seg, base, screening, board)
+        })
+        .collect();
+    let outputs = run_tasks(opts.num_threads, jobs);
+
+    // Deterministic assembly: place every solved point at its grid index, then
+    // walk ascending until the grid ends, a cap hit truncates the path, or an
+    // unsolved index marks the pruned tail.
+    let mut per_index: Vec<Option<PathPoint>> = (0..grid_len).map(|_| None).collect();
+    let mut reports = Vec::with_capacity(outputs.len());
+    for (report, points) in outputs {
+        reports.push(report);
+        for (index, point) in points {
+            per_index[index] = Some(point);
+        }
+    }
+    let cap = opts.base.max_active;
+    let mut points = Vec::with_capacity(grid_len);
+    let mut truncated = false;
+    for slot in per_index {
+        match slot {
+            Some(point) => {
+                let r = point.result.active_set.len();
+                points.push(point);
+                if cap > 0 && r >= cap {
+                    truncated = true;
+                    break;
+                }
+            }
+            None => break,
+        }
+    }
+    let runs = points.len();
+    ParallelPathResult {
+        path: PathResult { points, lambda_max, runs, truncated },
+        chains: reports,
+        threads,
+    }
+}
+
+/// Solve one chain sequentially with warm starts, publishing to the board.
+fn run_chain(
+    a: &Mat,
+    b: &[f64],
+    lambda_max: f64,
+    seg: Chain,
+    base: &PathOptions,
+    screening: bool,
+    board: &SharedScreen,
+) -> (ChainReport, Vec<(usize, PathPoint)>) {
+    let sw = Stopwatch::new();
+    let n = a.cols();
+    let mut warm = WarmState::default();
+    let mut out: Vec<(usize, PathPoint)> = Vec::with_capacity(seg.len());
+    let mut survivor_sum = 0usize;
+    for index in seg.start..seg.end {
+        if board.should_skip(index) {
+            // The frontier only moves down, so every later index is also out.
+            break;
+        }
+        let c = base.c_grid[index];
+        let (point, survivors) = if screening {
+            let prev = warm.x.clone();
+            solve_point_screened(a, b, lambda_max, c, base, &mut warm, prev.as_deref())
+        } else {
+            (solve_point(a, b, lambda_max, c, base, &mut warm), n)
+        };
+        let r = point.result.active_set.len();
+        let cap_hit = base.max_active > 0 && r >= base.max_active;
+        if cap_hit {
+            board.note_cap_hit(index);
+        }
+        survivor_sum += survivors;
+        out.push((index, point));
+        if cap_hit {
+            break;
+        }
+    }
+    let solved = out.len();
+    let survivor_fraction = if solved == 0 || n == 0 {
+        1.0
+    } else {
+        survivor_sum as f64 / (solved * n) as f64
+    };
+    (ChainReport { chain: seg, solved, seconds: sw.elapsed_s(), survivor_fraction }, out)
+}
+
+/// Warm-started solve restricted to the Gap-Safe survivors of `prev_x`.
+///
+/// The screen runs at the *current* (λ1, λ2) — valid for any reference primal
+/// point — so discarded features are provably zero at this grid point and the
+/// reduced solve recovers the full solution exactly (to solver tolerance).
+fn solve_point_screened(
+    a: &Mat,
+    b: &[f64],
+    lambda_max: f64,
+    c: f64,
+    base: &PathOptions,
+    warm: &mut WarmState,
+    prev_x: Option<&[f64]>,
+) -> (PathPoint, usize) {
+    let n = a.cols();
+    let Some(prev) = prev_x else {
+        // Chain head: no reference point, the sphere has infinite radius.
+        return (solve_point(a, b, lambda_max, c, base, &mut *warm), n);
+    };
+    let (lam1, lam2) = EnetProblem::lambdas_from_alpha(base.alpha, c, lambda_max);
+    let survivors = {
+        let p = EnetProblem::new(a, b, lam1, lam2);
+        AugmentedView::new(&p).gap_safe_survivors(prev)
+    };
+    if survivors.is_empty() {
+        // Everything screened out: the solution at this λ is exactly zero.
+        let result = SolveResult {
+            x: vec![0.0; n],
+            y: b.iter().map(|v| -v).collect(),
+            active_set: Vec::new(),
+            objective: 0.5 * blas::nrm2_sq(b),
+            iterations: 0,
+            inner_iterations: 0,
+            residual: 0.0,
+            converged: true,
+            algorithm: base.algorithm,
+        };
+        warm.x = Some(result.x.clone());
+        return (PathPoint { c_lambda: c, lam1, lam2, result }, 0);
+    }
+    if survivors.len() * 2 > n {
+        // Screen barely bites: the gather copy would outweigh the savings.
+        return (solve_point(a, b, lambda_max, c, base, &mut *warm), n);
+    }
+
+    let kept = survivors.len();
+    let a_sub = a.gather_cols(&survivors);
+    let mut warm_sub = WarmState {
+        x: warm.x.as_ref().map(|x| survivors.iter().map(|&j| x[j]).collect()),
+        sigma: warm.sigma,
+    };
+    let sub = solve_point(&a_sub, b, lambda_max, c, base, &mut warm_sub);
+
+    // Scatter the reduced solution back into full coordinates.
+    let mut x_full = vec![0.0; n];
+    for (k, &j) in survivors.iter().enumerate() {
+        x_full[j] = sub.result.x[k];
+    }
+    let active_set: Vec<usize> = sub.result.active_set.iter().map(|&k| survivors[k]).collect();
+    warm.x = Some(x_full.clone());
+    warm.sigma = warm_sub.sigma;
+    let result = SolveResult { x: x_full, active_set, ..sub.result };
+    (PathPoint { c_lambda: c, lam1, lam2, result }, kept)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_synthetic, SyntheticSpec};
+    use crate::path::{c_lambda_grid, solve_path};
+    use crate::solver::types::Algorithm;
+
+    fn problem() -> crate::data::SyntheticProblem {
+        generate_synthetic(&SyntheticSpec {
+            m: 50,
+            n: 200,
+            n0: 8,
+            x_star: 5.0,
+            snr: 10.0,
+            seed: 42,
+        })
+    }
+
+    fn base_opts() -> PathOptions {
+        PathOptions {
+            alpha: 0.8,
+            c_grid: c_lambda_grid(0.95, 0.1, 16),
+            max_active: 0,
+            tol: 1e-6,
+            algorithm: Algorithm::SsnalEn,
+        }
+    }
+
+    #[test]
+    fn single_chain_engine_is_bitwise_sequential() {
+        let prob = problem();
+        let seq = solve_path(&prob.a, &prob.b, &base_opts());
+        let eng = solve_path_parallel(
+            &prob.a,
+            &prob.b,
+            &ParallelPathOptions::sequential(base_opts()),
+        );
+        assert_eq!(eng.path.runs, seq.runs);
+        assert_eq!(eng.path.truncated, seq.truncated);
+        for (p, q) in eng.path.points.iter().zip(seq.points.iter()) {
+            assert_eq!(p.result.x, q.result.x, "c={}", p.c_lambda);
+            assert_eq!(p.result.active_set, q.result.active_set);
+        }
+    }
+
+    #[test]
+    fn output_is_thread_count_invariant() {
+        let prob = problem();
+        let mk = |threads| ParallelPathOptions {
+            base: base_opts(),
+            num_threads: threads,
+            chunking: Chunking::Chains(4),
+            screening: true,
+        };
+        let one = solve_path_parallel(&prob.a, &prob.b, &mk(1));
+        let four = solve_path_parallel(&prob.a, &prob.b, &mk(4));
+        assert_eq!(one.path.runs, four.path.runs);
+        for (p, q) in one.path.points.iter().zip(four.path.points.iter()) {
+            assert_eq!(p.result.x, q.result.x, "c={}", p.c_lambda);
+        }
+    }
+
+    #[test]
+    fn chunked_path_agrees_with_sequential_to_tolerance() {
+        let prob = problem();
+        let seq = solve_path(&prob.a, &prob.b, &base_opts());
+        for screening in [false, true] {
+            let eng = solve_path_parallel(
+                &prob.a,
+                &prob.b,
+                &ParallelPathOptions {
+                    base: base_opts(),
+                    num_threads: 4,
+                    chunking: Chunking::Chains(4),
+                    screening,
+                },
+            );
+            assert_eq!(eng.path.runs, seq.runs);
+            for (p, q) in eng.path.points.iter().zip(seq.points.iter()) {
+                let dist = blas::dist2(&p.result.x, &q.result.x);
+                let scale = blas::nrm2(&q.result.x) + 1.0;
+                assert!(
+                    dist / scale < 1e-3,
+                    "screening={screening} c={}: {dist}",
+                    p.c_lambda
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_matches_sequential_semantics() {
+        let prob = problem();
+        let mut base = base_opts();
+        base.c_grid = c_lambda_grid(0.95, 0.05, 40);
+        base.max_active = 8;
+        let eng = solve_path_parallel(
+            &prob.a,
+            &prob.b,
+            &ParallelPathOptions {
+                base: base.clone(),
+                num_threads: 4,
+                chunking: Chunking::Chains(5),
+                screening: false,
+            },
+        );
+        assert!(eng.path.truncated);
+        assert!(eng.path.runs < 40);
+        let last = eng.path.points.last().unwrap();
+        assert!(last.result.active_set.len() >= 8);
+        for p in &eng.path.points[..eng.path.runs - 1] {
+            assert!(p.result.active_set.len() < 8, "only the last point hits the cap");
+        }
+    }
+
+    #[test]
+    fn screening_reports_reduced_survivors() {
+        let prob = problem();
+        let eng = solve_path_parallel(
+            &prob.a,
+            &prob.b,
+            &ParallelPathOptions {
+                base: base_opts(),
+                num_threads: 2,
+                chunking: Chunking::Chains(2),
+                screening: true,
+            },
+        );
+        // warm-started points deep in each chain should screen out features
+        let min_frac = eng
+            .chains
+            .iter()
+            .map(|c| c.survivor_fraction)
+            .fold(f64::INFINITY, f64::min);
+        assert!(min_frac < 1.0, "screen never bit: {:?}", eng.chains);
+    }
+}

@@ -1,0 +1,125 @@
+//! Dependency-free work-scheduling pool: scoped `std::thread` workers pulling
+//! indexed jobs from an `mpsc` channel and pushing results back on another.
+//!
+//! Results are collected by job index, so the output order — and therefore
+//! every downstream float — is independent of worker scheduling. A panicking
+//! job propagates out of [`run_tasks`] when the thread scope joins, exactly
+//! like the sequential loop it replaces.
+
+use std::sync::{mpsc, Mutex};
+
+/// Threads the host exposes (≥ 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a user thread request: `0` means "all available".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        available_threads()
+    } else {
+        requested
+    }
+}
+
+/// Execute `jobs` on up to `num_threads` workers (`0` = all available cores),
+/// returning the outputs in job order.
+pub fn run_tasks<T, F>(num_threads: usize, jobs: Vec<F>) -> Vec<T>
+where
+    F: FnOnce() -> T + Send,
+    T: Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = resolve_threads(num_threads).min(n);
+    if workers <= 1 {
+        // Single-threaded fallback: no channels, no locks, same output.
+        return jobs.into_iter().map(|job| job()).collect();
+    }
+
+    // Job queue: one sender fills it up-front, workers share the receiver.
+    let (job_tx, job_rx) = mpsc::channel::<(usize, F)>();
+    for indexed in jobs.into_iter().enumerate() {
+        job_tx.send(indexed).expect("job queue open");
+    }
+    drop(job_tx); // workers drain until the channel reports disconnect
+    let job_rx = Mutex::new(job_rx);
+
+    let (out_tx, out_rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let out_tx = out_tx.clone();
+            let job_rx = &job_rx;
+            scope.spawn(move || loop {
+                // Take the lock only to pop the next job — the guard must drop
+                // before the job runs, or the pool would serialize.
+                let next = job_rx.lock().expect("job queue lock").recv();
+                let Ok((index, job)) = next else {
+                    break; // queue drained
+                };
+                let value = job();
+                let _ = out_tx.send((index, value));
+            });
+        }
+    });
+    drop(out_tx);
+
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (index, value) in out_rx {
+        slots[index] = Some(value);
+    }
+    slots
+        .into_iter()
+        .map(|slot| slot.expect("every job reports exactly one result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn preserves_job_order() {
+        let jobs: Vec<_> = (0..64).map(|i| move || i * 3).collect();
+        let out = run_tasks(4, jobs);
+        assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_matches_parallel() {
+        let mk = || (0..40).map(|i| move || (i as f64).sqrt().sin()).collect::<Vec<_>>();
+        assert_eq!(run_tasks(1, mk()), run_tasks(4, mk()));
+    }
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let count = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..100)
+            .map(|_| {
+                let count = &count;
+                move || count.fetch_add(1, Ordering::Relaxed)
+            })
+            .collect();
+        let out = run_tasks(0, jobs);
+        assert_eq!(out.len(), 100);
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn empty_and_oversubscribed() {
+        let none: Vec<fn() -> u8> = Vec::new();
+        assert!(run_tasks(8, none).is_empty());
+        let jobs: Vec<_> = (0..3).map(|i| move || i).collect();
+        assert_eq!(run_tasks(64, jobs), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn resolve_semantics() {
+        assert!(available_threads() >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(0), available_threads());
+    }
+}

@@ -1,0 +1,69 @@
+//! State shared across path workers: the cross-chain truncation frontier.
+//!
+//! Sharing is *advisory only*: workers publish cap hits and consult the
+//! frontier to skip grid points that can no longer appear in the final path.
+//! Nothing a worker reads here ever changes the floats it produces for a
+//! point it does solve — that is the invariant that keeps the engine's output
+//! independent of worker scheduling. (Per-point Gap-Safe screening state stays
+//! chain-local for the same reason; its summary is reported per chain via
+//! [`crate::parallel::ChainReport`].)
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Shared truncation scoreboard for one parallel path run.
+pub struct SharedScreen {
+    /// Lowest grid index whose solution hit the max-active cap
+    /// (`usize::MAX` = cap not hit anywhere yet).
+    truncation: AtomicUsize,
+}
+
+impl SharedScreen {
+    /// Fresh scoreboard.
+    pub fn new() -> Self {
+        Self { truncation: AtomicUsize::new(usize::MAX) }
+    }
+
+    /// Record that the solution at `grid_index` hit the max-active cap.
+    pub fn note_cap_hit(&self, grid_index: usize) {
+        self.truncation.fetch_min(grid_index, Ordering::SeqCst);
+    }
+
+    /// Lowest grid index known to have hit the cap, if any.
+    pub fn truncated_at(&self) -> Option<usize> {
+        match self.truncation.load(Ordering::SeqCst) {
+            usize::MAX => None,
+            t => Some(t),
+        }
+    }
+
+    /// True when `grid_index` lies strictly beyond the truncation frontier and
+    /// therefore cannot appear in the assembled path. Skipping is safe: the
+    /// frontier only ever moves down, so a skipped index stays excluded.
+    pub fn should_skip(&self, grid_index: usize) -> bool {
+        grid_index > self.truncation.load(Ordering::SeqCst)
+    }
+}
+
+impl Default for SharedScreen {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truncation_frontier_takes_the_minimum() {
+        let s = SharedScreen::new();
+        assert_eq!(s.truncated_at(), None);
+        assert!(!s.should_skip(9));
+        s.note_cap_hit(7);
+        s.note_cap_hit(3);
+        assert_eq!(s.truncated_at(), Some(3));
+        assert!(s.should_skip(4));
+        assert!(!s.should_skip(3));
+        assert!(!s.should_skip(0));
+    }
+}

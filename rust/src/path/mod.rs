@@ -4,7 +4,14 @@
 //! value of λ1, we use the solution at the previous value for initialization
 //! (warm-start) … we allow the user to fix the maximum number of active
 //! features: when this number is reached, no further λ values are explored."
+//!
+//! This module owns the *sequential* chain primitive ([`WarmState`] +
+//! [`solve_point`]) and the single-chain driver [`solve_path`]. The
+//! multi-threaded engine in [`crate::parallel`] reuses the exact same
+//! primitive, so a path executed as one chain is bitwise-identical no matter
+//! which driver ran it.
 
+use crate::linalg::Mat;
 use crate::solver::types::{Algorithm, BaselineOptions, EnetProblem, SolveResult, SsnalOptions};
 use crate::solver::{cd, ssnal};
 
@@ -66,49 +73,78 @@ pub struct PathResult {
     pub truncated: bool,
 }
 
-/// Run the warm-started path.
-pub fn solve_path(a: &crate::linalg::Mat, b: &[f64], opts: &PathOptions) -> PathResult {
-    assert!(!opts.c_grid.is_empty());
-    for w in opts.c_grid.windows(2) {
+/// Warm state carried along one warm-start chain: the previous solution and
+/// the carried AL penalty σ. Near the previous solution the AL multiplier is
+/// already accurate, so restarting at σ0 = 5e-3 would waste outer iterations
+/// re-growing σ (paper: warm-started points converge in ~1 iteration).
+#[derive(Clone, Debug, Default)]
+pub struct WarmState {
+    /// Previous primal solution (length n), if any.
+    pub x: Option<Vec<f64>>,
+    /// σ carried from the previous SsNAL solve.
+    pub sigma: Option<f64>,
+}
+
+/// Validate a descending c_λ grid (shared by the sequential and parallel
+/// drivers).
+pub fn assert_descending_grid(grid: &[f64]) {
+    assert!(!grid.is_empty());
+    for w in grid.windows(2) {
         assert!(w[0] > w[1], "c_grid must be strictly descending");
     }
+}
+
+/// Solve a single grid point at `c`, reading and updating the chain's warm
+/// state. This is the one primitive both [`solve_path`] and the parallel
+/// engine's chains execute, which keeps their per-point numerics identical.
+pub fn solve_point(
+    a: &Mat,
+    b: &[f64],
+    lambda_max: f64,
+    c: f64,
+    opts: &PathOptions,
+    warm: &mut WarmState,
+) -> PathPoint {
+    let (lam1, lam2) = EnetProblem::lambdas_from_alpha(opts.alpha, c, lambda_max);
+    let p = EnetProblem::new(a, b, lam1, lam2);
+    let result = match opts.algorithm {
+        Algorithm::SsnalEn => {
+            let defaults = SsnalOptions::default();
+            // σ carry capped to keep the subproblem well conditioned.
+            let sigma0 = warm.sigma.unwrap_or(defaults.sigma0).min(1e4);
+            let sopts = SsnalOptions { tol: opts.tol, sigma0, ..defaults };
+            let (res, trace) = ssnal::solve_warm(&p, &sopts, warm.x.as_deref());
+            warm.sigma = Some(trace.final_sigma);
+            res
+        }
+        Algorithm::CdNaive => cd::solve_naive_warm(
+            &p,
+            &BaselineOptions { tol: opts.tol, ..Default::default() },
+            warm.x.as_deref(),
+        ),
+        Algorithm::CdCovariance => cd::solve_covariance_warm(
+            &p,
+            &BaselineOptions { tol: opts.tol, ..Default::default() },
+            warm.x.as_deref(),
+        ),
+        other => panic!("path driver supports ssnal/cd algorithms, not {other:?}"),
+    };
+    warm.x = Some(result.x.clone());
+    PathPoint { c_lambda: c, lam1, lam2, result }
+}
+
+/// Run the warm-started path as a single sequential chain.
+pub fn solve_path(a: &Mat, b: &[f64], opts: &PathOptions) -> PathResult {
+    assert_descending_grid(&opts.c_grid);
     let lambda_max = EnetProblem::lambda_max(a, b, opts.alpha);
     let mut points = Vec::with_capacity(opts.c_grid.len());
-    let mut warm: Option<Vec<f64>> = None;
+    let mut warm = WarmState::default();
     let mut truncated = false;
-    // carry σ between warm-started solves: near the previous solution the AL
-    // multiplier is already accurate, so restarting at σ0 = 5e-3 would waste
-    // outer iterations re-growing σ (paper: warm-started points converge in ~1
-    // iteration). Capped to keep the subproblem well conditioned.
-    let mut sigma_carry: Option<f64> = None;
 
     for &c in &opts.c_grid {
-        let (lam1, lam2) = EnetProblem::lambdas_from_alpha(opts.alpha, c, lambda_max);
-        let p = EnetProblem::new(a, b, lam1, lam2);
-        let result = match opts.algorithm {
-            Algorithm::SsnalEn => {
-                let defaults = SsnalOptions::default();
-                let sigma0 = sigma_carry.unwrap_or(defaults.sigma0).min(1e4);
-                let sopts = SsnalOptions { tol: opts.tol, sigma0, ..defaults };
-                let (res, trace) = ssnal::solve_warm(&p, &sopts, warm.as_deref());
-                sigma_carry = Some(trace.final_sigma);
-                res
-            }
-            Algorithm::CdNaive => cd::solve_naive_warm(
-                &p,
-                &BaselineOptions { tol: opts.tol, ..Default::default() },
-                warm.as_deref(),
-            ),
-            Algorithm::CdCovariance => cd::solve_covariance_warm(
-                &p,
-                &BaselineOptions { tol: opts.tol, ..Default::default() },
-                warm.as_deref(),
-            ),
-            other => panic!("path driver supports ssnal/cd algorithms, not {other:?}"),
-        };
-        warm = Some(result.x.clone());
-        let r = result.active_set.len();
-        points.push(PathPoint { c_lambda: c, lam1, lam2, result });
+        let pt = solve_point(a, b, lambda_max, c, opts, &mut warm);
+        let r = pt.result.active_set.len();
+        points.push(pt);
         if opts.max_active > 0 && r >= opts.max_active {
             truncated = true;
             break;

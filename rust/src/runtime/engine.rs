@@ -1,89 +1,145 @@
 //! PJRT execution engine — the runtime layer of the three-layer stack.
 //!
-//! Loads the HLO-text artifacts produced once by `python/compile/aot.py`
-//! (`make artifacts`), compiles them on the PJRT CPU client, and executes them
-//! from the Rust hot path. Python never runs here.
-//!
-//! Conventions shared with `python/compile/model.py`:
+//! The *contract* side is fully native: [`Manifest`] parsing, artifact
+//! discovery, and the [`Literal`] buffer type with the f64 ⇄ f32 conversion
+//! helpers shared with `python/compile/model.py`:
 //!
 //! * the design matrix is passed **transposed** (`at`, shape `(n, m)`): our
 //!   column-major `Mat` storage is exactly jax's row-major `(n, m)` layout, so
 //!   the buffer crosses the boundary without a transpose copy;
 //! * buffers are `f32` (the artifacts' dtype; the native path stays `f64`);
 //! * every graph returns a tuple (jax lowered with `return_tuple=True`).
+//!
+//! The *execution* side requires an XLA/PJRT binding, which the offline
+//! toolchain does not ship. [`PjrtEngine::load_dir`] therefore validates the
+//! manifest and artifact files but returns a descriptive error instead of a
+//! live engine; callers (the coordinator's `Backend::Pjrt`, the
+//! `artifacts-check` subcommand) degrade gracefully. The native f64 backend is
+//! the performance path either way (see DESIGN notes in the crate docs).
 
 use crate::linalg::Mat;
 use crate::runtime::manifest::{ArtifactMeta, Manifest};
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Error, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
-/// A compiled graph plus its shape metadata.
+/// A host-side tensor of `f32` values with a shape — the buffer type crossing
+/// the Rust ⇄ PJRT boundary. Dimension-major (row-major over `dims`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<usize>,
+}
+
+impl Literal {
+    /// 1-D literal from f32 values.
+    pub fn vec1(values: &[f32]) -> Self {
+        Self { data: values.to_vec(), dims: vec![values.len()] }
+    }
+
+    /// 0-D (scalar) literal.
+    pub fn scalar(v: f32) -> Self {
+        Self { data: vec![v], dims: Vec::new() }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[usize]) -> Result<Self> {
+        let expected: usize = dims.iter().product();
+        if expected != self.data.len() {
+            return Err(Error::msg(format!(
+                "reshape to {:?} wants {expected} values, literal has {}",
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Self { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Shape of the literal.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Flat element view.
+    pub fn values(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// A graph known to the engine plus its shape metadata.
 pub struct LoadedGraph {
-    exe: xla::PjRtLoadedExecutable,
     /// Metadata (name, m, n, file).
     pub meta: ArtifactMeta,
 }
 
 impl LoadedGraph {
     /// Execute with the given literals; returns the decomposed output tuple.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing graph {}", self.meta.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching output of {}", self.meta.name))?;
-        Ok(lit.to_tuple()?)
+    ///
+    /// Always errors in this build: executing the HLO artifacts needs a PJRT
+    /// client, which the offline toolchain does not provide.
+    pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        Err(Error::msg(format!(
+            "cannot execute graph {}: this build has no XLA/PJRT binding \
+             (offline toolchain); use the native backend",
+            self.meta.name
+        )))
     }
 }
 
-/// The engine: one PJRT client + all compiled graphs keyed by (name, m, n).
+/// The engine: all validated graphs keyed by (name, m, n).
 pub struct PjrtEngine {
-    client: xla::PjRtClient,
     graphs: HashMap<(String, usize, usize), LoadedGraph>,
     /// The manifest the engine was built from.
     pub manifest: Manifest,
 }
 
 impl PjrtEngine {
-    /// Load every artifact in `dir` and compile it.
-    pub fn load_dir(dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+    /// Validate an artifacts directory without compiling anything: parse the
+    /// manifest, check the dtype contract, and verify every referenced HLO
+    /// file exists. Succeeds on a healthy directory even in builds with no
+    /// PJRT binding — this is what `ssnal-en artifacts-check` gates on.
+    pub fn validate_dir(dir: &Path) -> Result<Manifest> {
+        let manifest = Manifest::load(dir).map_err(Error::msg)?;
         if manifest.dtype != "f32" {
-            return Err(anyhow!("unsupported artifact dtype {}", manifest.dtype));
+            return Err(Error::msg(format!("unsupported artifact dtype {}", manifest.dtype)));
         }
-        let client = xla::PjRtClient::cpu()?;
-        let mut graphs = HashMap::new();
-        for meta in manifest.artifacts.clone() {
-            let path = manifest.path_of(&meta);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", meta.name))?;
-            graphs.insert((meta.name.clone(), meta.m, meta.n), LoadedGraph { exe, meta });
+        for meta in &manifest.artifacts {
+            let path = manifest.path_of(meta);
+            std::fs::metadata(&path)
+                .with_context(|| format!("artifact file missing: {}", path.display()))?;
         }
-        Ok(Self { client, graphs, manifest })
+        Ok(manifest)
+    }
+
+    /// Load every artifact in `dir` for execution.
+    ///
+    /// In this offline build the directory is validated (see
+    /// [`Self::validate_dir`]) and then a descriptive error is returned:
+    /// compiling HLO artifacts requires an XLA/PJRT binding the toolchain
+    /// does not ship.
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let manifest = Self::validate_dir(dir)?;
+        Err(Error::msg(format!(
+            "{} artifacts validated at {}, but this build has no XLA/PJRT \
+             binding to compile them (offline toolchain); use the native backend",
+            manifest.artifacts.len(),
+            dir.display()
+        )))
     }
 
     /// Platform string of the underlying PJRT client.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "unavailable".to_string()
     }
 
     /// Fetch a graph for a given problem shape.
     pub fn graph(&self, name: &str, m: usize, n: usize) -> Result<&LoadedGraph> {
         self.graphs.get(&(name.to_string(), m, n)).ok_or_else(|| {
-            anyhow!(
+            Error::msg(format!(
                 "no artifact `{name}` for shape ({m}, {n}); available shapes: {:?} — \
                  re-run `make artifacts SHAPES=...`",
                 self.manifest.shapes()
-            )
+            ))
         })
     }
 
@@ -99,37 +155,39 @@ impl PjrtEngine {
 }
 
 /// Convert an f64 slice to an f32 literal of the given dimensions.
-pub fn literal_from_f64(values: &[f64], dims: &[usize]) -> Result<xla::Literal> {
+pub fn literal_from_f64(values: &[f64], dims: &[usize]) -> Result<Literal> {
     let expected: usize = dims.iter().product();
     if expected != values.len() {
-        return Err(anyhow!("literal shape {:?} wants {expected} values, got {}", dims, values.len()));
+        return Err(Error::msg(format!(
+            "literal shape {:?} wants {expected} values, got {}",
+            dims,
+            values.len()
+        )));
     }
     let f32s: Vec<f32> = values.iter().map(|&v| v as f32).collect();
-    let lit = xla::Literal::vec1(&f32s);
+    let lit = Literal::vec1(&f32s);
     if dims.len() == 1 {
         Ok(lit)
     } else {
-        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-        Ok(lit.reshape(&dims_i64)?)
+        lit.reshape(dims)
     }
 }
 
 /// Scalar f32 literal.
-pub fn literal_scalar(v: f64) -> xla::Literal {
-    xla::Literal::scalar(v as f32)
+pub fn literal_scalar(v: f64) -> Literal {
+    Literal::scalar(v as f32)
 }
 
 /// The design matrix as the `(n, m)` transposed literal the graphs expect —
 /// column-major `Mat` storage *is* row-major `(n, m)`, so this is a plain
 /// cast-copy with no transpose.
-pub fn literal_at(a: &Mat) -> Result<xla::Literal> {
+pub fn literal_at(a: &Mat) -> Result<Literal> {
     literal_from_f64(a.as_slice(), &[a.cols(), a.rows()])
 }
 
 /// Read an output literal back to f64.
-pub fn literal_to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
-    let v: Vec<f32> = lit.to_vec()?;
-    Ok(v.into_iter().map(|x| x as f64).collect())
+pub fn literal_to_f64(lit: &Literal) -> Result<Vec<f64>> {
+    Ok(lit.values().iter().map(|&x| x as f64).collect())
 }
 
 #[cfg(test)]
@@ -147,6 +205,7 @@ mod tests {
     #[test]
     fn literal_shape_mismatch_errors() {
         assert!(literal_from_f64(&[1.0, 2.0], &[3]).is_err());
+        assert!(Literal::vec1(&[1.0, 2.0]).reshape(&[3]).is_err());
     }
 
     #[test]
@@ -154,11 +213,15 @@ mod tests {
         // Mat column-major (2×3): col j contiguous ⇒ row-major (3, 2) = Aᵀ
         let a = Mat::from_row_major(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let lit = literal_at(&a).unwrap();
+        assert_eq!(lit.dims(), &[3, 2]);
         let flat = literal_to_f64(&lit).unwrap();
         // expected Aᵀ row-major: rows are columns of A
         assert_eq!(flat, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
     }
 
-    // Engine loading is covered by rust/tests/pjrt_integration.rs, which
-    // requires `make artifacts` to have produced the HLO files.
+    #[test]
+    fn load_dir_without_artifacts_is_a_clean_error() {
+        let err = PjrtEngine::load_dir(Path::new("/nonexistent_dir_xyz")).unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"), "{err}");
+    }
 }

@@ -8,7 +8,7 @@ pub mod engine;
 pub mod manifest;
 
 pub use engine::{
-    literal_at, literal_from_f64, literal_scalar, literal_to_f64, LoadedGraph, PjrtEngine,
+    literal_at, literal_from_f64, literal_scalar, literal_to_f64, Literal, LoadedGraph, PjrtEngine,
 };
 pub use manifest::{ArtifactMeta, Manifest};
 

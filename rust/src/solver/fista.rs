@@ -169,7 +169,8 @@ mod tests {
     fn fista_matches_cd_solution() {
         let (prob, l1, l2) = problem(2);
         let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
-        let f = solve_fista(&p, &BaselineOptions { tol: 1e-10, max_iters: 50_000, verbose: false }, true);
+        let opts = BaselineOptions { tol: 1e-10, max_iters: 50_000, verbose: false };
+        let f = solve_fista(&p, &opts, true);
         let cd = crate::solver::cd::solve_naive(
             &p,
             &BaselineOptions { tol: 1e-10, ..Default::default() },

@@ -113,33 +113,58 @@ impl Default for TuningOptions {
 }
 
 /// Run the full tuning sweep: solve the path, evaluate GCV/e-BIC (and
-/// optionally k-fold CV) at every explored point.
+/// optionally k-fold CV) at every explored point, fanning the per-point
+/// criteria out over all available cores.
 pub fn tune(a: &Mat, b: &[f64], opts: &TuningOptions) -> TuningResult {
+    tune_with_threads(a, b, opts, 0)
+}
+
+/// [`tune`] with an explicit worker-thread count (`0` = all available cores,
+/// `1` = fully sequential). Criteria for different path points are
+/// independent, and each point's work — de-biased RSS, degrees of freedom and
+/// the K refits of cross-validation — is computed whole inside one task, so
+/// the result is bitwise-identical for every thread count (the paper's CV
+/// protocol, §3.3, parallelized across the λ-grid).
+pub fn tune_with_threads(
+    a: &Mat,
+    b: &[f64],
+    opts: &TuningOptions,
+    num_threads: usize,
+) -> TuningResult {
     let path = solve_path(a, b, &opts.path);
     let m = a.rows();
     let n = a.cols();
 
     // Pre-split folds once so every λ sees the same folds (paper's 10-fold cv).
-    let folds = if opts.cv_folds >= 2 { Some(cv_folds(m, opts.cv_folds, opts.cv_seed)) } else { None };
+    let folds =
+        if opts.cv_folds >= 2 { Some(cv_folds(m, opts.cv_folds, opts.cv_seed)) } else { None };
 
-    let mut points = Vec::with_capacity(path.points.len());
-    for pt in &path.points {
-        let idx = &pt.result.active_set;
-        let rss = debiased_rss(a, b, idx);
-        let dof = lstsq::enet_degrees_of_freedom(a, idx, pt.lam2);
-        let cv = folds.as_ref().map(|f| cv_mse(a, b, f, opts.cv_folds, pt.lam1, pt.lam2, &opts.path));
-        points.push(CriteriaPoint {
-            c_lambda: pt.c_lambda,
-            lam1: pt.lam1,
-            lam2: pt.lam2,
-            active: idx.len(),
-            cv,
-            gcv: gcv(rss, m, dof),
-            ebic: ebic(rss, m, n, dof),
-            rss,
-            dof,
-        });
-    }
+    let jobs: Vec<_> = path
+        .points
+        .iter()
+        .map(|pt| {
+            let folds = folds.as_ref();
+            move || {
+                let idx = &pt.result.active_set;
+                let rss = debiased_rss(a, b, idx);
+                let dof = lstsq::enet_degrees_of_freedom(a, idx, pt.lam2);
+                let cv = folds
+                    .map(|f| cv_mse(a, b, f, opts.cv_folds, pt.lam1, pt.lam2, &opts.path));
+                CriteriaPoint {
+                    c_lambda: pt.c_lambda,
+                    lam1: pt.lam1,
+                    lam2: pt.lam2,
+                    active: idx.len(),
+                    cv,
+                    gcv: gcv(rss, m, dof),
+                    ebic: ebic(rss, m, n, dof),
+                    rss,
+                    dof,
+                }
+            }
+        })
+        .collect();
+    let points = crate::parallel::run_tasks(num_threads, jobs);
 
     let argmin = |f: &dyn Fn(&CriteriaPoint) -> f64| {
         points
@@ -151,7 +176,8 @@ pub fn tune(a: &Mat, b: &[f64], opts: &TuningOptions) -> TuningResult {
     };
     let best_gcv = argmin(&|p: &CriteriaPoint| p.gcv);
     let best_ebic = argmin(&|p: &CriteriaPoint| p.ebic);
-    let best_cv = folds.as_ref().map(|_| argmin(&|p: &CriteriaPoint| p.cv.unwrap_or(f64::INFINITY)));
+    let best_cv =
+        folds.as_ref().map(|_| argmin(&|p: &CriteriaPoint| p.cv.unwrap_or(f64::INFINITY)));
 
     TuningResult { points, best_gcv, best_ebic, best_cv, path }
 }

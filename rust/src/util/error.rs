@@ -1,0 +1,101 @@
+//! Minimal error type with context chaining (anyhow is unavailable offline).
+//!
+//! Mirrors the small slice of `anyhow` the crate needs: an opaque [`Error`]
+//! built from any `Display` message or `std::error::Error`, a [`Result`]
+//! alias, and a [`Context`] extension trait that prepends human-readable
+//! context as errors bubble up (`"loading artifacts from X: cannot read ..."`).
+
+use std::fmt;
+
+/// Opaque error carrying a context chain (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from any displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Self { chain: vec![msg.to_string()] }
+    }
+
+    /// Prepend a layer of context.
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Self {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Plain and alternate ({:#}) both render the full chain — keeping the
+        // cause visible is more useful than anyhow's outer-only default.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+// Like anyhow, `Error` intentionally does NOT implement `std::error::Error`,
+// which is what makes this blanket conversion from source errors coherent.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Result alias used across the runtime/coordinator layers.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for results (the `anyhow::Context` subset).
+pub trait Context<T> {
+    /// Attach lazily-built context to the error.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+    /// Attach static context to the error.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(ctx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_and_context_chain() {
+        let e = Error::msg("root cause").context("while loading");
+        assert_eq!(format!("{e}"), "while loading: root cause");
+        assert_eq!(format!("{e:#}"), "while loading: root cause");
+        assert_eq!(format!("{e:?}"), "while loading: root cause");
+    }
+
+    #[test]
+    fn result_context_trait() {
+        let r: std::result::Result<(), String> = Err("inner".to_string());
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: inner");
+        let ok: std::result::Result<u8, String> = Ok(7);
+        assert_eq!(ok.context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn from_std_error() {
+        fn io_fail() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+            Ok(())
+        }
+        let e = io_fail().unwrap_err();
+        assert!(format!("{e}").contains("gone"));
+    }
+}

@@ -330,7 +330,8 @@ mod tests {
         let arts = j.get("artifacts").unwrap().as_arr().unwrap();
         assert_eq!(arts.len(), 1);
         assert_eq!(arts[0].get("m").unwrap().as_usize(), Some(200));
-        assert_eq!(arts[0].get("file").unwrap().as_str().unwrap(), "dual_prox_grad_200x4000.hlo.txt");
+        let file = arts[0].get("file").unwrap().as_str().unwrap();
+        assert_eq!(file, "dual_prox_grad_200x4000.hlo.txt");
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod csv;
+pub mod error;
 pub mod json;
 pub mod quickcheck;
 pub mod table;

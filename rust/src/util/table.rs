@@ -12,7 +12,11 @@ pub struct Table {
 impl Table {
     /// New table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
-        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new(), title: None }
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
     }
 
     /// Attach a title line printed above the table.

@@ -1,0 +1,248 @@
+//! Integration tests for the parallel λ-path/CV engine (`ssnal_en::parallel`):
+//! determinism across thread counts, bitwise agreement between the engine's
+//! sequential configuration and the legacy driver, warm-start-chain active-set
+//! monotonicity (property test), and parallel tuning equivalence.
+
+use ssnal_en::data::{generate_synthetic, SyntheticSpec};
+use ssnal_en::linalg::blas;
+use ssnal_en::parallel::{solve_path_parallel, Chunking, ParallelPathOptions};
+use ssnal_en::path::{c_lambda_grid, solve_path, PathOptions};
+use ssnal_en::solver::types::Algorithm;
+use ssnal_en::tuning::{tune_with_threads, TuningOptions};
+use ssnal_en::util::quickcheck::{log_uniform_usize, run_prop, PropConfig};
+
+fn fixed_problem(seed: u64) -> ssnal_en::data::SyntheticProblem {
+    generate_synthetic(&SyntheticSpec {
+        m: 60,
+        n: 240,
+        n0: 10,
+        x_star: 5.0,
+        snr: 10.0,
+        seed,
+    })
+}
+
+fn base_opts(points: usize) -> PathOptions {
+    PathOptions {
+        alpha: 0.8,
+        c_grid: c_lambda_grid(0.95, 0.1, points),
+        max_active: 0,
+        tol: 1e-6,
+        algorithm: Algorithm::SsnalEn,
+    }
+}
+
+/// Determinism (ISSUE criterion): with a fixed RNG seed and fixed chunking,
+/// the parallel path is bitwise-identical to the same path executed on one
+/// thread — and the engine's one-chain configuration is bitwise-identical to
+/// the sequential `path::solve_path` driver.
+#[test]
+fn parallel_path_is_deterministic_and_matches_sequential() {
+    let prob = fixed_problem(2020);
+
+    // engine (1 chain, any thread count) ≡ sequential driver, bit for bit
+    let seq = solve_path(&prob.a, &prob.b, &base_opts(14));
+    let one_chain = solve_path_parallel(
+        &prob.a,
+        &prob.b,
+        &ParallelPathOptions {
+            base: base_opts(14),
+            num_threads: 4,
+            chunking: Chunking::Chains(1),
+            screening: false,
+        },
+    );
+    assert_eq!(one_chain.path.runs, seq.runs);
+    for (p, q) in one_chain.path.points.iter().zip(seq.points.iter()) {
+        assert_eq!(p.result.x, q.result.x, "bitwise mismatch at c={}", p.c_lambda);
+        assert_eq!(p.result.iterations, q.result.iterations);
+    }
+
+    // chunked engine: output independent of worker count (1 vs 4 vs 8)
+    let chunked = |threads: usize| {
+        solve_path_parallel(
+            &prob.a,
+            &prob.b,
+            &ParallelPathOptions {
+                base: base_opts(14),
+                num_threads: threads,
+                chunking: Chunking::Chains(4),
+                screening: true,
+            },
+        )
+    };
+    let r1 = chunked(1);
+    let r4 = chunked(4);
+    let r8 = chunked(8);
+    assert_eq!(r1.path.runs, r4.path.runs);
+    assert_eq!(r1.path.runs, r8.path.runs);
+    for ((p1, p4), p8) in r1
+        .path
+        .points
+        .iter()
+        .zip(r4.path.points.iter())
+        .zip(r8.path.points.iter())
+    {
+        assert_eq!(p1.result.x, p4.result.x, "threads=1 vs 4 at c={}", p1.c_lambda);
+        assert_eq!(p1.result.x, p8.result.x, "threads=1 vs 8 at c={}", p1.c_lambda);
+        assert_eq!(p1.result.active_set, p4.result.active_set);
+    }
+}
+
+/// Chunked chains agree with the sequential path to solver tolerance (the
+/// λ2 > 0 objective is strictly convex, so both converge to the same optimum).
+#[test]
+fn chunked_chains_reach_the_same_optima() {
+    let prob = fixed_problem(7);
+    let seq = solve_path(&prob.a, &prob.b, &base_opts(12));
+    let par = solve_path_parallel(
+        &prob.a,
+        &prob.b,
+        &ParallelPathOptions {
+            base: base_opts(12),
+            num_threads: 0,
+            chunking: Chunking::Chains(3),
+            screening: true,
+        },
+    );
+    assert_eq!(par.path.runs, seq.runs);
+    for (p, q) in par.path.points.iter().zip(seq.points.iter()) {
+        let dist = blas::dist2(&p.result.x, &q.result.x);
+        let scale = blas::nrm2(&q.result.x) + 1.0;
+        assert!(dist / scale < 1e-3, "c={}: dist {dist}", p.c_lambda);
+    }
+}
+
+/// Property (ISSUE satellite): along every warm-start chain the active set
+/// grows monotone-ish as c_λ decreases — small transient dips are allowed,
+/// collapses are not, and the chain end must dominate the chain start.
+#[test]
+fn prop_active_sets_monotone_along_chains() {
+    run_prop(
+        PropConfig { cases: 8, seed: 0xC4A1 },
+        |rng| {
+            let m = log_uniform_usize(rng, 40, 70);
+            let n = log_uniform_usize(rng, 150, 300);
+            let n0 = log_uniform_usize(rng, 4, 12);
+            let seed = rng.next_u64();
+            let chains = 1 + (rng.next_u64() % 4) as usize;
+            (m, n, n0, seed, chains)
+        },
+        |&(m, n, n0, seed, chains)| {
+            let prob = generate_synthetic(&SyntheticSpec {
+                m,
+                n,
+                n0,
+                x_star: 5.0,
+                snr: 10.0,
+                seed,
+            });
+            let res = solve_path_parallel(
+                &prob.a,
+                &prob.b,
+                &ParallelPathOptions {
+                    base: PathOptions {
+                        alpha: 0.8,
+                        c_grid: c_lambda_grid(0.9, 0.15, 10),
+                        max_active: 0,
+                        tol: 1e-6,
+                        algorithm: Algorithm::SsnalEn,
+                    },
+                    num_threads: 0,
+                    chunking: Chunking::Chains(chains),
+                    screening: true,
+                },
+            );
+            for report in &res.chains {
+                let seg = report.chain;
+                let sizes: Vec<usize> = res.path.points[seg.start..seg.end.min(res.path.runs)]
+                    .iter()
+                    .map(|p| p.result.active_set.len())
+                    .collect();
+                if sizes.len() < 2 {
+                    continue;
+                }
+                let mut running_max = 0usize;
+                for (i, &s) in sizes.iter().enumerate() {
+                    // monotone-ish: never drop far below the chain's high-water mark
+                    if s + 3 < running_max {
+                        return Err(format!(
+                            "active set collapsed along chain {seg:?}: {sizes:?} at {i}"
+                        ));
+                    }
+                    running_max = running_max.max(s);
+                }
+                if sizes.last().unwrap() + 3 < *sizes.first().unwrap() {
+                    return Err(format!("chain {seg:?} shrank overall: {sizes:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Parallel tuning (criteria + K-fold CV fan-out) is bitwise-identical to the
+/// sequential evaluation for every thread count.
+#[test]
+fn parallel_tuning_matches_sequential_bitwise() {
+    let prob = generate_synthetic(&SyntheticSpec {
+        m: 50,
+        n: 120,
+        n0: 4,
+        x_star: 5.0,
+        snr: 20.0,
+        seed: 11,
+    });
+    let opts = TuningOptions {
+        path: PathOptions {
+            alpha: 0.9,
+            c_grid: c_lambda_grid(0.9, 0.1, 10),
+            max_active: 25,
+            tol: 1e-6,
+            algorithm: Algorithm::SsnalEn,
+        },
+        cv_folds: 5,
+        cv_seed: 3,
+    };
+    let serial = tune_with_threads(&prob.a, &prob.b, &opts, 1);
+    let parallel = tune_with_threads(&prob.a, &prob.b, &opts, 4);
+    assert_eq!(serial.points.len(), parallel.points.len());
+    assert_eq!(serial.best_gcv, parallel.best_gcv);
+    assert_eq!(serial.best_ebic, parallel.best_ebic);
+    assert_eq!(serial.best_cv, parallel.best_cv);
+    for (s, p) in serial.points.iter().zip(parallel.points.iter()) {
+        assert_eq!(s.gcv, p.gcv, "gcv at c={}", s.c_lambda);
+        assert_eq!(s.ebic, p.ebic);
+        assert_eq!(s.rss, p.rss);
+        assert_eq!(s.dof, p.dof);
+        assert_eq!(s.cv, p.cv);
+    }
+}
+
+/// Truncation coordination: with a max-active cap and many chains, the
+/// assembled path ends at the first cap hit and wasted tail work is pruned.
+#[test]
+fn truncation_is_coordinated_across_chains() {
+    let prob = fixed_problem(5);
+    let mut base = base_opts(36);
+    base.c_grid = c_lambda_grid(0.95, 0.04, 36);
+    base.max_active = 10;
+    let res = solve_path_parallel(
+        &prob.a,
+        &prob.b,
+        &ParallelPathOptions {
+            base,
+            num_threads: 4,
+            chunking: Chunking::Chains(6),
+            screening: false,
+        },
+    );
+    assert!(res.path.truncated);
+    assert!(res.path.runs < 36);
+    let sizes: Vec<usize> =
+        res.path.points.iter().map(|p| p.result.active_set.len()).collect();
+    assert!(*sizes.last().unwrap() >= 10, "{sizes:?}");
+    for &s in &sizes[..sizes.len() - 1] {
+        assert!(s < 10, "only the final point may hit the cap: {sizes:?}");
+    }
+}
