@@ -798,3 +798,233 @@ pub fn ablation_sigma(n: usize, m: usize, tol: f64, seed: u64) -> Table {
     }
     t
 }
+
+// ---------------------------------------------------------------------------
+// Within-solve sharded linalg — threads vs wall-clock + SIMD-width audit
+// ---------------------------------------------------------------------------
+
+/// One measured thread budget for the within-solve sharded kernels.
+#[derive(Clone, Debug)]
+pub struct ShardBenchRow {
+    /// Shard thread budget ([`crate::parallel::shard::with_threads`]).
+    pub threads: usize,
+    /// `Aᵀy` dual sweep seconds (the dominant O(mn) kernel).
+    pub aty_seconds: f64,
+    /// Active-set `A_J u` accumulation seconds.
+    pub accum_seconds: f64,
+    /// Woodbury Gram build seconds.
+    pub gram_seconds: f64,
+    /// One full single-λ SSNAL solve, seconds.
+    pub ssnal_seconds: f64,
+    /// 1-thread SSNAL seconds divided by this row's.
+    pub ssnal_speedup: f64,
+    /// Whether every kernel output matched the 1-thread run bit for bit.
+    pub bitwise_equal: bool,
+}
+
+/// Result of the unroll-width audit backing `blas::UNROLL`.
+#[derive(Clone, Debug)]
+pub struct WidthAudit {
+    /// Vector length used.
+    pub len: usize,
+    /// Seconds for the 4-way dot (`blas::dot4`).
+    pub dot4_seconds: f64,
+    /// Seconds for the 8-way dot (`blas::dot`).
+    pub dot8_seconds: f64,
+    /// Seconds for the 4-way axpy (`blas::axpy4`).
+    pub axpy4_seconds: f64,
+    /// Seconds for the 8-way axpy (`blas::axpy`).
+    pub axpy8_seconds: f64,
+}
+
+/// Measure the within-solve sharded kernels and a single-λ SSNAL solve at
+/// each thread budget, verifying the determinism contract (bitwise equality
+/// with the 1-thread run) as it goes. Also runs the SIMD-width audit that
+/// justifies `blas::UNROLL = 8`.
+pub fn shard_linalg_rows(
+    n: usize,
+    m: usize,
+    threads_list: &[usize],
+    tol: f64,
+    seed: u64,
+) -> (Table, Vec<ShardBenchRow>, WidthAudit) {
+    use crate::parallel::shard;
+
+    let spec = SyntheticSpec {
+        m,
+        n,
+        n0: (n / 100).clamp(5, 50),
+        x_star: 5.0,
+        snr: 5.0,
+        seed,
+    };
+    let prob = generate_synthetic(&spec);
+    let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, 0.8);
+    let (lam1, lam2) = EnetProblem::lambdas_from_alpha(0.8, 0.3, lmax);
+    let p = EnetProblem::new(&prob.a, &prob.b, lam1, lam2);
+    let sopts = SsnalOptions { tol, ..Default::default() };
+
+    // Deterministic kernel operands: a spread-out pseudo active set and a
+    // smooth dual vector, so every thread budget times identical work.
+    let r = 512.min(n);
+    let idx: Vec<usize> = (0..r).map(|k| k * n / r).collect();
+    let coeffs: Vec<f64> = (0..r).map(|k| ((k % 7) as f64 - 3.0) * 0.25).collect();
+    let y: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.01).sin()).collect();
+    let kcfg = MeasureConfig { warmup: 1, reps: 3 };
+
+    // 1-thread reference outputs for the bitwise check.
+    let (ref_aty, ref_accum, ref_gram, ref_x) = shard::with_threads(1, || {
+        let mut aty = vec![0.0; n];
+        shard::t_mul_vec_into(&prob.a, &y, &mut aty);
+        let mut accum = vec![0.0; m];
+        shard::add_scaled_cols(&prob.a, &idx, &coeffs, &mut accum);
+        let gram = shard::gram_of_cols(&prob.a, &idx, 0.5);
+        let x = ssnal::solve(&p, &sopts).x;
+        (aty, accum, gram, x)
+    });
+
+    let title = format!("Within-solve sharding: {m}×{n}, single λ (c=0.3, α=0.8), r_bench={r}");
+    let mut t = Table::new(&[
+        "threads",
+        "aty(s)",
+        "accum(s)",
+        "gram(s)",
+        "ssnal(s)",
+        "speedup",
+        "bitwise",
+    ])
+    .with_title(&title);
+    let mut rows: Vec<ShardBenchRow> = Vec::with_capacity(threads_list.len());
+    for &threads in threads_list {
+        let threads = threads.max(1);
+        let row = shard::with_threads(threads, || {
+            let mut aty = vec![0.0; n];
+            let (st_aty, _) = measure(kcfg, || shard::t_mul_vec_into(&prob.a, &y, &mut aty));
+            let (st_accum, accum) = measure(kcfg, || {
+                let mut accum = vec![0.0; m];
+                shard::add_scaled_cols(&prob.a, &idx, &coeffs, &mut accum);
+                accum
+            });
+            let (st_gram, gram) = measure(kcfg, || shard::gram_of_cols(&prob.a, &idx, 0.5));
+            let (st_ssnal, res) = measure(MeasureConfig::default(), || ssnal::solve(&p, &sopts));
+            let bitwise_equal = aty == ref_aty
+                && accum == ref_accum
+                && gram.as_slice() == ref_gram.as_slice()
+                && res.x == ref_x;
+            ShardBenchRow {
+                threads,
+                aty_seconds: st_aty.mean,
+                accum_seconds: st_accum.mean,
+                gram_seconds: st_gram.mean,
+                ssnal_seconds: st_ssnal.mean,
+                ssnal_speedup: 0.0,
+                bitwise_equal,
+            }
+        });
+        rows.push(row);
+    }
+    // Normalize against the 1-thread row wherever it sits in the list.
+    let ssnal_base = rows
+        .iter()
+        .find(|r| r.threads == 1)
+        .or_else(|| rows.first())
+        .map(|r| r.ssnal_seconds)
+        .unwrap_or(0.0);
+    for row in rows.iter_mut() {
+        row.ssnal_speedup = ssnal_base / row.ssnal_seconds.max(1e-12);
+        t.row(vec![
+            format!("{}", row.threads),
+            fmt_secs(row.aty_seconds),
+            fmt_secs(row.accum_seconds),
+            fmt_secs(row.gram_seconds),
+            fmt_secs(row.ssnal_seconds),
+            format!("{:.2}x", row.ssnal_speedup),
+            format!("{}", row.bitwise_equal),
+        ]);
+    }
+
+    // SIMD-width audit: 4-way vs 8-way dot on a cache-spilling vector.
+    let audit_len = 1 << 21;
+    let va: Vec<f64> = (0..audit_len).map(|i| ((i % 83) as f64) * 0.03 - 1.0).collect();
+    let vb: Vec<f64> = (0..audit_len).map(|i| ((i % 97) as f64) * 0.02 - 0.9).collect();
+    let acfg = MeasureConfig { warmup: 2, reps: 5 };
+    let (st4, _) = measure(acfg, || blas::dot4(&va, &vb));
+    let (st8, _) = measure(acfg, || blas::dot(&va, &vb));
+    let mut vy = vb.clone();
+    let (sa4, _) = measure(acfg, || blas::axpy4(1e-9, &va, &mut vy));
+    let (sa8, _) = measure(acfg, || blas::axpy(1e-9, &va, &mut vy));
+    let audit = WidthAudit {
+        len: audit_len,
+        dot4_seconds: st4.mean,
+        dot8_seconds: st8.mean,
+        axpy4_seconds: sa4.mean,
+        axpy8_seconds: sa8.mean,
+    };
+
+    (t, rows, audit)
+}
+
+/// Render the shard-linalg bench as the JSON payload CI uploads
+/// (`BENCH_shard_linalg.json`).
+pub fn shard_linalg_json(
+    rows: &[ShardBenchRow],
+    audit: &WidthAudit,
+    n: usize,
+    m: usize,
+) -> String {
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("threads", Json::Num(r.threads as f64)),
+                ("aty_seconds", Json::Num(r.aty_seconds)),
+                ("accum_seconds", Json::Num(r.accum_seconds)),
+                ("gram_seconds", Json::Num(r.gram_seconds)),
+                ("ssnal_seconds", Json::Num(r.ssnal_seconds)),
+                ("ssnal_speedup", Json::Num(r.ssnal_speedup)),
+                ("bitwise_equal", Json::Bool(r.bitwise_equal)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("shard_linalg".to_string())),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        (
+            "width_audit",
+            Json::obj(vec![
+                ("len", Json::Num(audit.len as f64)),
+                ("dot4_seconds", Json::Num(audit.dot4_seconds)),
+                ("dot8_seconds", Json::Num(audit.dot8_seconds)),
+                ("axpy4_seconds", Json::Num(audit.axpy4_seconds)),
+                ("axpy8_seconds", Json::Num(audit.axpy8_seconds)),
+            ]),
+        ),
+        ("rows", Json::Arr(row_objs)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod shard_bench_tests {
+    use super::*;
+
+    #[test]
+    fn shard_bench_rows_tiny() {
+        // n·2m clears TARGET_SHARD_FLOPS so the Aᵀy and Gram kernels really
+        // multi-shard at threads=2 — the bitwise check must not pass
+        // vacuously by both sides running the identical serial code.
+        let (n, m) = (30_000, 70);
+        assert!(crate::parallel::shard::Plan::for_work(n, 2 * m).shards > 1);
+        let (t, rows, audit) = shard_linalg_rows(n, m, &[1, 2], 1e-5, 7);
+        assert_eq!(t.len(), 2);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.bitwise_equal), "{rows:?}");
+        assert!(rows[0].ssnal_speedup > 0.0);
+        assert!(audit.dot4_seconds > 0.0 && audit.dot8_seconds > 0.0);
+        assert!(audit.axpy4_seconds > 0.0 && audit.axpy8_seconds > 0.0);
+        let js = shard_linalg_json(&rows, &audit, n, m);
+        assert!(js.contains("shard_linalg"), "{js}");
+        assert!(js.contains("width_audit"), "{js}");
+    }
+}

@@ -1,18 +1,59 @@
-//! BLAS-like level-1 kernels, hand-written for the offline single-core testbed.
+//! BLAS-like level-1 kernels, hand-written for the offline testbed.
 //!
 //! The SsNAL-EN hot loop is dominated by long contiguous dot products (`Aᵀy`,
-//! `A_JᵀA_J`) and axpys (`Ax` over the active set). Each kernel uses 4-way
-//! unrolled independent accumulators so LLVM auto-vectorizes them to packed
-//! AVX ops; see EXPERIMENTS.md §Perf for measured throughput.
+//! `A_JᵀA_J`) and axpys (`Ax` over the active set). Each kernel uses unrolled
+//! independent accumulators so LLVM auto-vectorizes them to packed SIMD ops.
+//!
+//! **SIMD-width audit.** The unroll width is `UNROLL = 8`: two 4-lane AVX2
+//! registers (or one 8-lane AVX-512 register) of f64 accumulators in flight.
+//! The previous 4-way kernels left half the throughput on the table on AVX2
+//! hosts because a single 4-lane accumulator chain is latency-bound on the
+//! `vaddpd` (4-cycle) dependency; eight independent accumulators cover the
+//! latency×throughput product (4 cycles × 2 ports) exactly. Widths of 16 were
+//! measured no faster (register pressure starts spilling) — see
+//! `ssnal-en bench-parallel --shard-threads` which emits the audit table. The
+//! 4-way variants are kept as `dot4`/`axpy4` so the audit stays reproducible.
 
-/// Dot product with 4 independent accumulators (auto-vectorization friendly).
+/// Unroll width chosen by the SIMD-width audit (see module docs).
+pub const UNROLL: usize = 8;
+
+/// Dot product with 8 independent accumulators (auto-vectorization friendly).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
+    let chunks = n / 8;
+    let mut s = [0.0f64; 8];
+    // Slice reborrow of exact length lets the compiler drop bounds checks.
+    let (a8, at) = a.split_at(chunks * 8);
+    let (b8, bt) = b.split_at(chunks * 8);
+    let mut i = 0;
+    while i < a8.len() {
+        s[0] += a8[i] * b8[i];
+        s[1] += a8[i + 1] * b8[i + 1];
+        s[2] += a8[i + 2] * b8[i + 2];
+        s[3] += a8[i + 3] * b8[i + 3];
+        s[4] += a8[i + 4] * b8[i + 4];
+        s[5] += a8[i + 5] * b8[i + 5];
+        s[6] += a8[i + 6] * b8[i + 6];
+        s[7] += a8[i + 7] * b8[i + 7];
+        i += 8;
+    }
+    let mut acc = ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]));
+    for (x, y) in at.iter().zip(bt.iter()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Dot product with 4 accumulators — the pre-audit kernel, kept for the
+/// width-audit benchmark.
+#[inline]
+pub fn dot4(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
     let chunks = n / 4;
     let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    // Slice reborrow of exact length lets the compiler drop bounds checks.
     let (a4, at) = a.split_at(chunks * 4);
     let (b4, bt) = b.split_at(chunks * 4);
     let mut i = 0;
@@ -30,9 +71,34 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
-/// `y += alpha * x`, unrolled.
+/// `y += alpha * x`, 8-way unrolled.
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let chunks = x.len() / 8;
+    let (x8, xt) = x.split_at(chunks * 8);
+    let (y8, yt) = y.split_at_mut(chunks * 8);
+    let mut i = 0;
+    while i < x8.len() {
+        y8[i] += alpha * x8[i];
+        y8[i + 1] += alpha * x8[i + 1];
+        y8[i + 2] += alpha * x8[i + 2];
+        y8[i + 3] += alpha * x8[i + 3];
+        y8[i + 4] += alpha * x8[i + 4];
+        y8[i + 5] += alpha * x8[i + 5];
+        y8[i + 6] += alpha * x8[i + 6];
+        y8[i + 7] += alpha * x8[i + 7];
+        i += 8;
+    }
+    for (xi, yi) in xt.iter().zip(yt.iter_mut()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y += alpha * x`, 4-way — the pre-audit kernel, kept for the width-audit
+/// bench (`shard_linalg_rows` times it against the 8-way [`axpy`]).
+#[inline]
+pub fn axpy4(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     let chunks = x.len() / 4;
     let (x4, xt) = x.split_at(chunks * 4);
@@ -50,19 +116,68 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
-/// Euclidean norm (no over/underflow guard needed at our scales, but we scale
-/// by the max element to stay safe on extreme inputs).
+/// `y = x + beta * y` (the CG direction update `p ← r + βp`), 8-way unrolled.
+#[inline]
+pub fn xpby(x: &[f64], beta: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let chunks = x.len() / 8;
+    let (x8, xt) = x.split_at(chunks * 8);
+    let (y8, yt) = y.split_at_mut(chunks * 8);
+    let mut i = 0;
+    while i < x8.len() {
+        y8[i] = x8[i] + beta * y8[i];
+        y8[i + 1] = x8[i + 1] + beta * y8[i + 1];
+        y8[i + 2] = x8[i + 2] + beta * y8[i + 2];
+        y8[i + 3] = x8[i + 3] + beta * y8[i + 3];
+        y8[i + 4] = x8[i + 4] + beta * y8[i + 4];
+        y8[i + 5] = x8[i + 5] + beta * y8[i + 5];
+        y8[i + 6] = x8[i + 6] + beta * y8[i + 6];
+        y8[i + 7] = x8[i + 7] + beta * y8[i + 7];
+        i += 8;
+    }
+    for (xi, yi) in xt.iter().zip(yt.iter_mut()) {
+        *yi = xi + beta * *yi;
+    }
+}
+
+/// Euclidean norm, scaled by the max element to stay safe on extreme inputs.
+///
+/// Non-finite semantics follow IEEE-754 vector-norm conventions strictly:
+/// any NaN element makes the norm NaN (a NaN must never be laundered into a
+/// finite value or ±∞), and otherwise any infinite element makes it +∞.
 #[inline]
 pub fn nrm2(x: &[f64]) -> f64 {
-    let mx = x.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
-    if mx == 0.0 || !mx.is_finite() {
-        return if mx.is_finite() { 0.0 } else { f64::INFINITY };
+    let mut mx = 0.0f64;
+    let mut saw_nan = false;
+    for &v in x {
+        let a = v.abs();
+        // f64::max ignores NaN operands, so track them explicitly.
+        saw_nan |= a.is_nan();
+        mx = mx.max(a);
+    }
+    if saw_nan {
+        return f64::NAN;
+    }
+    if mx == 0.0 {
+        return 0.0;
+    }
+    if mx.is_infinite() {
+        return f64::INFINITY;
     }
     let inv = 1.0 / mx;
     let mut s = 0.0;
-    for &v in x {
-        let t = v * inv;
-        s += t * t;
+    if inv.is_finite() {
+        for &v in x {
+            let t = v * inv;
+            s += t * t;
+        }
+    } else {
+        // mx is subnormal: 1/mx overflows to ∞, so divide per element instead
+        // of laundering a tiny vector into +∞.
+        for &v in x {
+            let t = v / mx;
+            s += t * t;
+        }
     }
     mx * s.sqrt()
 }
@@ -120,18 +235,37 @@ mod tests {
             let b: Vec<f64> = (0..n).map(|i| 1.0 / (i as f64 + 1.0)).collect();
             let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert!((dot(&a, &b) - naive).abs() < 1e-12, "n={n}");
+            assert!((dot4(&a, &b) - naive).abs() < 1e-12, "n={n}");
         }
     }
 
     #[test]
     fn axpy_matches_naive() {
-        for n in [0usize, 1, 3, 4, 5, 17, 64] {
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 17, 64] {
             let x: Vec<f64> = (0..n).map(|i| i as f64).collect();
             let mut y: Vec<f64> = (0..n).map(|i| -(i as f64) * 0.25).collect();
+            let mut y4 = y.clone();
             let mut y2 = y.clone();
             axpy(2.5, &x, &mut y);
+            axpy4(2.5, &x, &mut y4);
             for i in 0..n {
                 y2[i] += 2.5 * x[i];
+            }
+            assert_eq!(y, y2);
+            // per-element op is a single mul-add: widths agree bitwise
+            assert_eq!(y4, y2);
+        }
+    }
+
+    #[test]
+    fn xpby_matches_naive() {
+        for n in [0usize, 1, 7, 8, 9, 33] {
+            let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+            let mut y: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+            let mut y2 = y.clone();
+            xpby(&x, 0.75, &mut y);
+            for i in 0..n {
+                y2[i] = x[i] + 0.75 * y2[i];
             }
             assert_eq!(y, y2);
         }
@@ -145,6 +279,28 @@ mod tests {
         // huge values: naive sum-of-squares would overflow
         let big = vec![1e200, 1e200];
         assert!((nrm2(&big) - 1e200 * 2f64.sqrt()).abs() / 1e200 < 1e-12);
+    }
+
+    #[test]
+    fn nrm2_nonfinite_edge_cases() {
+        // NaN anywhere → NaN, never a finite value or ∞
+        assert!(nrm2(&[f64::NAN]).is_nan());
+        assert!(nrm2(&[0.0, f64::NAN, 0.0]).is_nan());
+        assert!(nrm2(&[1.0, f64::NAN]).is_nan());
+        // NaN wins even in the presence of ∞
+        assert!(nrm2(&[f64::INFINITY, f64::NAN]).is_nan());
+        assert!(nrm2(&[f64::NAN, f64::NEG_INFINITY]).is_nan());
+        // ∞ without NaN → +∞ (either sign of the element)
+        assert_eq!(nrm2(&[f64::INFINITY]), f64::INFINITY);
+        assert_eq!(nrm2(&[1.0, f64::NEG_INFINITY, 2.0]), f64::INFINITY);
+        // smallest normal survives the scaling
+        let tiny = f64::MIN_POSITIVE;
+        assert!(nrm2(&[tiny, 0.0]) > 0.0);
+        // true subnormals too: 1/mx overflows there, the divide path kicks in
+        let sub = 1e-320f64;
+        assert_eq!(nrm2(&[sub, 0.0]), sub);
+        assert!(nrm2(&[sub, sub]).is_finite());
+        assert!(nrm2(&[sub, sub]) >= sub);
     }
 
     #[test]

@@ -63,9 +63,7 @@ pub fn solve_cg(
             return CgResult { iters: it, residual: rsnew.sqrt(), converged: true };
         }
         let beta = rsnew / rsold;
-        for i in 0..n {
-            p[i] = r[i] + beta * p[i];
-        }
+        blas::xpby(&r, beta, &mut p);
         rsold = rsnew;
     }
     CgResult { iters: max_iters, residual: rsold.sqrt(), converged: false }

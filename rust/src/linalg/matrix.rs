@@ -7,6 +7,14 @@
 //! * `Ax` with sparse `x` — an axpy per *active* column only,
 //! * `A_J` — gathering active columns is a contiguous copy,
 //! * `A_JᵀA_J` — dots of column pairs.
+//!
+//! The methods here are the *serial reference kernels*. The solver hot paths
+//! call the sharded counterparts in [`crate::parallel::shard`], which split
+//! the column dimension over the worker pool. Element-wise kernels (`Aᵀy`,
+//! Gram entries) reproduce these loops bit for bit at any shard count;
+//! reduction kernels (`Ax` accumulation) match them bit for bit only at
+//! single-shard plans and are otherwise *thread-count-invariant* under a
+//! fixed-order reduction tree (`tests/linalg_parallel.rs` pins both down).
 
 use crate::linalg::blas;
 

@@ -78,7 +78,7 @@ fn print_help() {
          USAGE: ssnal-en <subcommand> [--key value]...\n\
          \n\
          SUBCOMMANDS\n\
-         solve            --n 1e4 --m 500 --n0 10 --alpha 0.8 --c 0.5 --backend native|pjrt\n\
+         solve            --n 1e4 --m 500 --n0 10 --alpha 0.8 --c 0.5 --threads 1 --backend native|pjrt\n\
          path             --n 1e4 --m 500 --alpha 0.8 --grid 100 --max-active 100 --threads 0\n\
          tune             --n 1e4 --m 200 --alpha 0.9 --grid 30 --cv 0\n\
          fig1             --points 241 --out results/fig1.csv\n\
@@ -91,6 +91,8 @@ fn print_help() {
          bench-d4         --ns 1e5 --grid 100\n\
          bench-ablation   --n 5e4 --m 500\n\
          bench-parallel   --n 2e4 --m 200 --grid 40 --threads 1,2,4 [--no-screening] [--out BENCH_parallel_path.json]\n\
+         \x20                --shard-n 1e5 --shard-m 500 --shard-threads 1,2,4 [--no-shard-bench]\n\
+         \x20                [--shard-out BENCH_shard_linalg.json]\n\
          artifacts-check  [--artifacts-dir artifacts]\n"
     );
 }
@@ -118,6 +120,12 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 2020).map_err(Error::msg)? as u64;
     let backend = Backend::parse(&args.get_str("backend", "native")).map_err(Error::msg)?;
     let tol = parse_tol(args)?;
+    // Within-solve shard threads (also settable via SSNAL_THREADS); the
+    // solution is bitwise-identical at every setting.
+    let threads = args.get_usize("threads", 0).map_err(Error::msg)?;
+    if threads > 0 {
+        ssnal_en::parallel::shard::set_threads(threads);
+    }
 
     let prob = generate_synthetic(&SyntheticSpec { m, n, n0, x_star: 5.0, snr: 5.0, seed });
     let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, alpha);
@@ -397,6 +405,39 @@ fn cmd_bench_parallel(args: &Args) -> Result<()> {
         }
         std::fs::write(path, json)?;
         println!("wrote {path}");
+    }
+
+    // Within-solve sharding: single-λ SSNAL + kernel table at each thread
+    // budget, plus the SIMD-width audit backing blas::UNROLL. The default
+    // shard problem (500×1e5) is deliberately big; --no-shard-bench skips it
+    // for path-only runs.
+    if args.get_flag("no-shard-bench") {
+        return Ok(());
+    }
+    let shard_threads = args.get_usize_list("shard-threads", &[1, 2, 4]).map_err(Error::msg)?;
+    let shard_n = args.get_usize("shard-n", 100_000).map_err(Error::msg)?;
+    let shard_m = args.get_usize("shard-m", 500).map_err(Error::msg)?;
+    let (st, srows, audit) = tables::shard_linalg_rows(shard_n, shard_m, &shard_threads, tol, seed);
+    println!();
+    st.print();
+    println!(
+        "width audit (len {}): dot4 {:.3e}s vs dot8 {:.3e}s, axpy4 {:.3e}s vs axpy8 {:.3e}s",
+        audit.len, audit.dot4_seconds, audit.dot8_seconds, audit.axpy4_seconds, audit.axpy8_seconds
+    );
+    if let Some(path) = args.get("shard-out") {
+        let json = tables::shard_linalg_json(&srows, &audit, shard_n, shard_m);
+        if let Some(parent) = PathBuf::from(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, json)?;
+        println!("wrote {path}");
+    }
+    // The determinism contract is load-bearing: a bench run that observes a
+    // bitwise divergence must fail loudly (CI runs this on every push).
+    if srows.iter().any(|r| !r.bitwise_equal) {
+        return Err(Error::msg(
+            "within-solve sharding produced thread-dependent bits (see shard table)",
+        ));
     }
     Ok(())
 }

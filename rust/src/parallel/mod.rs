@@ -1,28 +1,38 @@
-//! Parallel warm-started λ-path engine.
+//! Parallel execution engine: across-grid chains and within-solve shards.
 //!
-//! `path::solve_path` walks the λ-grid strictly sequentially; λ-paths and
-//! K-fold CV are embarrassingly parallel *between* warm-start chains. This
-//! subsystem supplies the missing machinery, dependency-free
-//! (`std::thread` + channels):
+//! The subsystem has **two parallelism layers**, both dependency-free
+//! (`std::thread` + channels + mutexed deques):
 //!
-//! * [`pool`] — a work-scheduling pool ([`run_tasks`]) with order-preserving
-//!   result collection,
-//! * [`chain`] — deterministic splitting of the grid into contiguous
-//!   warm-start chains ([`Chunking`]),
-//! * [`shared`] — the [`SharedScreen`] scoreboard workers use to coordinate
-//!   max-active truncation across chains,
-//! * [`solve_path_parallel`] — the engine: chains solved concurrently, each
-//!   sequentially warm-started via the exact [`crate::path::solve_point`]
-//!   primitive the sequential driver uses.
+//! 1. **Across the λ-grid** — λ-paths and K-fold CV are embarrassingly
+//!    parallel *between* warm-start chains: [`chain`] cuts the grid into
+//!    contiguous chains, [`solve_path_parallel`] solves them concurrently on
+//!    the pool, [`shared`] coordinates max-active truncation.
+//! 2. **Within one solve** — [`shard`] splits the column dimension of the
+//!    solver's O(mn)/O(mr) sweeps (the `Aᵀy` dual sweep, the active-set
+//!    `A_J u` accumulation, the Woodbury Gram build, the CG mat-vec) into
+//!    shards fanned over the same pool. The engine hands each chain worker
+//!    its share of spare cores (`threads / chains`), so the two layers
+//!    compose without oversubscribing.
 //!
-//! **Determinism.** Every per-point float depends only on chain-local state
-//! and results are assembled by grid index, so for a **fixed chunking**
+//! Execution plumbing shared by both layers:
+//!
+//! * [`pool`] — scoped workers drawing indexed jobs from work-stealing
+//!   deques ([`steal`]), with order-preserving result collection,
+//! * [`run_tasks`] — the one scheduling primitive everything routes through.
+//!
+//! **Determinism contract (both layers).** Scheduling never touches floats.
+//! Layer 1: every per-point float depends only on chain-local state and
+//! results are assembled by grid index, so for a **fixed chunking**
 //! ([`Chunking::Chains`] / [`Chunking::PointsPerChain`]) the output is
-//! bitwise-identical across thread counts, and a one-chain run is
+//! bitwise-identical across thread counts — including when the stealing pool
+//! migrates a chain to an idle worker — and a one-chain run is
 //! bitwise-identical to `path::solve_path`. [`Chunking::Auto`] instead ties
 //! the chain count to the resolved thread count for maximum parallelism —
 //! different thread requests then take different warm-start chains and agree
-//! only to solver tolerance. Cross-worker sharing (the scoreboard) only
+//! only to solver tolerance. Layer 2: every shard split is a pure function
+//! of the problem shape and shard partials are combined in a fixed-order
+//! reduction tree, so each kernel's bits are invariant to its thread budget
+//! (see [`shard`]'s module docs). Cross-worker sharing (the scoreboard) only
 //! prunes work that provably cannot appear in the final path.
 //!
 //! **Screening.** With [`ParallelPathOptions::screening`] on, each
@@ -34,7 +44,9 @@
 
 pub mod chain;
 pub mod pool;
+pub mod shard;
 pub mod shared;
+pub mod steal;
 
 pub use chain::{Chain, Chunking};
 pub use pool::{available_threads, resolve_threads, run_tasks};
@@ -121,6 +133,11 @@ pub fn solve_path_parallel(
     let chains = chain::split_chains(grid_len, &opts.chunking, opts.num_threads);
     let board = SharedScreen::new();
     let threads = resolve_threads(opts.num_threads).min(chains.len().max(1));
+    // Spare cores not consumed by chain-level parallelism go to within-solve
+    // sharding (e.g. 8 threads over 2 chains → each solve shards 4-way).
+    // Shard results are thread-budget-invariant, so this choice never
+    // changes the output — only the schedule.
+    let shard_budget = (resolve_threads(opts.num_threads) / chains.len().max(1)).max(1);
 
     let jobs: Vec<_> = chains
         .iter()
@@ -128,7 +145,11 @@ pub fn solve_path_parallel(
             let board = &board;
             let base = &opts.base;
             let screening = opts.screening;
-            move || run_chain(a, b, lambda_max, seg, base, screening, board)
+            move || {
+                shard::with_threads(shard_budget, || {
+                    run_chain(a, b, lambda_max, seg, base, screening, board)
+                })
+            }
         })
         .collect();
     let outputs = run_tasks(opts.num_threads, jobs);

@@ -1,12 +1,16 @@
-//! Dependency-free work-scheduling pool: scoped `std::thread` workers pulling
-//! indexed jobs from an `mpsc` channel and pushing results back on another.
+//! Dependency-free work-scheduling pool: scoped `std::thread` workers drawing
+//! indexed jobs from per-worker work-stealing deques ([`StealQueues`]) and
+//! pushing results back on a channel.
 //!
 //! Results are collected by job index, so the output order — and therefore
-//! every downstream float — is independent of worker scheduling. A panicking
-//! job propagates out of [`run_tasks`] when the thread scope joins, exactly
-//! like the sequential loop it replaces.
+//! every downstream float — is independent of worker scheduling: a job that
+//! ran because it was *stolen* produces exactly the bits it would have
+//! produced under the static split. A panicking job propagates out of
+//! [`run_tasks`] when the thread scope joins, exactly like the sequential
+//! loop it replaces.
 
-use std::sync::{mpsc, Mutex};
+use crate::parallel::steal::StealQueues;
+use std::sync::mpsc;
 
 /// Threads the host exposes (≥ 1).
 pub fn available_threads() -> usize {
@@ -35,32 +39,22 @@ where
     }
     let workers = resolve_threads(num_threads).min(n);
     if workers <= 1 {
-        // Single-threaded fallback: no channels, no locks, same output.
+        // Single-threaded fallback: no deques, no locks, same output.
         return jobs.into_iter().map(|job| job()).collect();
     }
 
-    // Job queue: one sender fills it up-front, workers share the receiver.
-    let (job_tx, job_rx) = mpsc::channel::<(usize, F)>();
-    for indexed in jobs.into_iter().enumerate() {
-        job_tx.send(indexed).expect("job queue open");
-    }
-    drop(job_tx); // workers drain until the channel reports disconnect
-    let job_rx = Mutex::new(job_rx);
-
+    let queues = StealQueues::new(jobs, workers);
     let (out_tx, out_rx) = mpsc::channel::<(usize, T)>();
     std::thread::scope(|scope| {
-        for _ in 0..workers {
+        for w in 0..workers {
             let out_tx = out_tx.clone();
-            let job_rx = &job_rx;
-            scope.spawn(move || loop {
-                // Take the lock only to pop the next job — the guard must drop
-                // before the job runs, or the pool would serialize.
-                let next = job_rx.lock().expect("job queue lock").recv();
-                let Ok((index, job)) = next else {
-                    break; // queue drained
-                };
-                let value = job();
-                let _ = out_tx.send((index, value));
+            let queues = &queues;
+            scope.spawn(move || {
+                // Own block first, then steal from the back of busy peers.
+                while let Some((index, job)) = queues.pop(w) {
+                    let value = job();
+                    let _ = out_tx.send((index, value));
+                }
             });
         }
     });
@@ -114,6 +108,28 @@ mod tests {
         assert!(run_tasks(8, none).is_empty());
         let jobs: Vec<_> = (0..3).map(|i| move || i).collect();
         assert_eq!(run_tasks(64, jobs), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn imbalanced_jobs_finish_and_keep_order() {
+        // One deliberately heavy job in worker 0's block: the stealing pool
+        // must still return every result at its own index.
+        let jobs: Vec<_> = (0..16)
+            .map(|i| {
+                move || {
+                    let mut acc = 0u64;
+                    let reps = if i == 0 { 200_000 } else { 200 };
+                    for k in 0..reps {
+                        acc = acc.wrapping_add(k).rotate_left(1);
+                    }
+                    (i, acc)
+                }
+            })
+            .collect();
+        let out = run_tasks(4, jobs);
+        for (slot, (i, _)) in out.iter().enumerate() {
+            assert_eq!(slot, *i);
+        }
     }
 
     #[test]

@@ -1,0 +1,571 @@
+//! Within-solve sharded linalg: the second parallelism layer.
+//!
+//! [`crate::parallel`]'s chain engine parallelizes *across* λ-grid points;
+//! this module parallelizes *inside* one solve, where the paper's cost
+//! anatomy puts the remaining O(mn) and O(mr) sweeps: the `Aᵀy` dual sweep,
+//! the active-set `A_J u` accumulation, the `A_JᵀA_J` Gram build behind the
+//! Woodbury strategy, and the matrix-free CG mat-vec. Each kernel splits its
+//! column dimension into **shards** and fans the shards out through the
+//! pool's scheduling primitive ([`crate::parallel::run_tasks`], work-stealing
+//! deques). Workers are scoped threads spawned per kernel call — cheap
+//! relative to the O(mn) sweeps that shard today; a persistent pool is the
+//! named next lever in ROADMAP.md for finer-grained kernels.
+//!
+//! # Determinism contract
+//!
+//! Every kernel's floating-point result is a pure function of its inputs and
+//! its [`Plan`] — never of the thread count or of scheduling:
+//!
+//! * the shard split is a pure function of the problem shape
+//!   ([`Plan::for_work`] derives it from element count × flops per element);
+//! * element-wise kernels (`Aᵀy`, per-column dots, the Gram entries) compute
+//!   each output element exactly as the serial loop does, so they are bitwise
+//!   identical to the serial path *regardless* of sharding;
+//! * reduction kernels (sharded `dot`, `A_J u` accumulation) combine shard
+//!   partials with a **fixed-order pairwise tree** executed on the calling
+//!   thread, so a 1-thread and an 8-thread run add the same numbers in the
+//!   same order.
+//!
+//! Thread count only decides whether shards run on pool workers or in a loop
+//! on the calling thread; both schedules produce the same bits. For shapes
+//! that resolve to a single shard (every small problem), the kernels reduce
+//! to exactly the pre-shard serial code paths.
+//!
+//! # Thread configuration
+//!
+//! The shard thread budget is ambient, not threaded through every call site:
+//! a process-global default (initialized from the `SSNAL_THREADS` environment
+//! variable, else 1; see [`set_threads`]) plus a thread-local override
+//! ([`with_threads`]) that the chain engine uses to hand each worker its
+//! share of spare cores — chains × within-solve shards never oversubscribe.
+
+use crate::linalg::{blas, Mat};
+use crate::parallel::pool;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Flops a single shard should amortize; below this, splitting costs more in
+/// partial-buffer traffic than it buys in parallelism.
+pub const TARGET_SHARD_FLOPS: usize = 1 << 21;
+
+/// Cap on shards per kernel call (the reduction tree stays tiny).
+pub const MAX_SHARDS: usize = 64;
+
+/// Process-global shard thread budget (0 = not yet initialized).
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread override (0 = inherit the global budget).
+    static LOCAL_THREADS: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+fn global_threads() -> usize {
+    let cur = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if cur != 0 {
+        return cur;
+    }
+    let init = std::env::var("SSNAL_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or(1);
+    // Racing initializers read the same fixed environment, so they agree.
+    GLOBAL_THREADS.store(init, Ordering::Relaxed);
+    init
+}
+
+/// Set the process-global shard thread budget (≥ 1; overrides `SSNAL_THREADS`).
+pub fn set_threads(t: usize) {
+    GLOBAL_THREADS.store(t.max(1), Ordering::Relaxed);
+}
+
+/// The shard thread budget in effect on this thread.
+pub fn threads() -> usize {
+    let local = LOCAL_THREADS.with(|c| c.get());
+    if local != 0 {
+        local
+    } else {
+        global_threads()
+    }
+}
+
+/// Run `f` with the shard thread budget pinned to `t` on this thread
+/// (restored afterwards, panic-safe). Worker threads spawned by the pool do
+/// **not** inherit the override — each chain worker gets its own.
+pub fn with_threads<T>(t: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_THREADS.with(|c| c.set(self.0));
+        }
+    }
+    let prev = LOCAL_THREADS.with(|c| {
+        let p = c.get();
+        c.set(t.max(1));
+        p
+    });
+    let _restore = Restore(prev);
+    f()
+}
+
+/// A shard split: how many shards a kernel call uses. Pure data, pure
+/// function of the problem shape — never of the thread count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Plan {
+    /// Number of shards (≥ 1).
+    pub shards: usize,
+}
+
+impl Plan {
+    /// One shard: the serial code path, bit for bit.
+    pub fn single() -> Plan {
+        Plan { shards: 1 }
+    }
+
+    /// Force an explicit shard count (tests and the bench harness).
+    pub fn with_shards(shards: usize) -> Plan {
+        Plan { shards: shards.max(1) }
+    }
+
+    /// Derive the shard count from `units` work items costing roughly
+    /// `flops_per_unit` each: one shard per [`TARGET_SHARD_FLOPS`] block,
+    /// capped at [`MAX_SHARDS`] and at the unit count.
+    pub fn for_work(units: usize, flops_per_unit: usize) -> Plan {
+        if units == 0 {
+            return Plan::single();
+        }
+        let total = units.saturating_mul(flops_per_unit.max(1));
+        Plan { shards: (total / TARGET_SHARD_FLOPS).clamp(1, MAX_SHARDS).min(units) }
+    }
+
+    /// Balanced contiguous ranges tiling `0..units` (lengths differ by ≤ 1).
+    pub fn split(&self, units: usize) -> Vec<Range<usize>> {
+        let count = self.shards.clamp(1, units.max(1));
+        let base = units / count;
+        let extra = units % count;
+        let mut out = Vec::with_capacity(count);
+        let mut start = 0;
+        for k in 0..count {
+            let len = base + usize::from(k < extra);
+            out.push(start..start + len);
+            start += len;
+        }
+        out
+    }
+}
+
+/// Run one closure per range, on the pool when the thread budget and the work
+/// size justify it, else inline. Outputs are returned in range order either
+/// way, so callers observe identical results.
+fn run_ranges<T, F>(ranges: &[Range<usize>], f: F) -> Vec<T>
+where
+    F: Fn(Range<usize>) -> T + Sync,
+    T: Send,
+{
+    let t = threads();
+    if t <= 1 || ranges.len() <= 1 {
+        return ranges.iter().map(|r| f(r.clone())).collect();
+    }
+    let jobs: Vec<_> = ranges
+        .iter()
+        .map(|r| {
+            let f = &f;
+            let r = r.clone();
+            move || f(r)
+        })
+        .collect();
+    pool::run_tasks(t, jobs)
+}
+
+/// Fixed-order pairwise tree sum of shard partials: combine `parts[i]` with
+/// `parts[i + ceil(w/2)]`, halve, repeat. The order depends only on the part
+/// count, never on which thread produced which part.
+fn tree_reduce_scalars(mut parts: Vec<f64>) -> f64 {
+    debug_assert!(!parts.is_empty());
+    let mut width = parts.len();
+    while width > 1 {
+        let half = width.div_ceil(2);
+        for i in 0..(width - half) {
+            parts[i] += parts[i + half];
+        }
+        width = half;
+    }
+    parts[0]
+}
+
+/// Tree sum of equal-length vector partials (same pairing as the scalar
+/// reduction), executed on the calling thread.
+fn tree_reduce_vecs(mut parts: Vec<Vec<f64>>) -> Vec<f64> {
+    debug_assert!(!parts.is_empty());
+    let mut width = parts.len();
+    while width > 1 {
+        let half = width.div_ceil(2);
+        for i in 0..(width - half) {
+            let (lo, hi) = parts.split_at_mut(half);
+            let src = &hi[i];
+            for (d, s) in lo[i].iter_mut().zip(src.iter()) {
+                *d += *s;
+            }
+        }
+        width = half;
+    }
+    parts.swap_remove(0)
+}
+
+/// Sharded dot product (tree-reduced shard partials).
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dot_planned(Plan::for_work(a.len(), 2), a, b)
+}
+
+/// [`dot`] with an explicit plan.
+pub fn dot_planned(plan: Plan, a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let ranges = plan.split(a.len());
+    if ranges.len() == 1 {
+        return blas::dot(a, b);
+    }
+    let parts = run_ranges(&ranges, |r| blas::dot(&a[r.clone()], &b[r]));
+    tree_reduce_scalars(parts)
+}
+
+/// Sharded `y += alpha·x`. Disjoint output ranges: bitwise identical to
+/// [`blas::axpy`] at every plan and thread count.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    axpy_planned(Plan::for_work(x.len(), 2), alpha, x, y)
+}
+
+/// [`axpy`] with an explicit plan.
+pub fn axpy_planned(plan: Plan, alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let ranges = plan.split(x.len());
+    if threads() <= 1 || ranges.len() <= 1 {
+        // Same per-element op as the sharded path: y[i] += alpha·x[i].
+        blas::axpy(alpha, x, y);
+        return;
+    }
+    let mut jobs = Vec::with_capacity(ranges.len());
+    let mut rest = &mut y[..];
+    for r in &ranges {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(r.len());
+        let xs = &x[r.start..r.end];
+        jobs.push(move || blas::axpy(alpha, xs, head));
+        rest = tail;
+    }
+    pool::run_tasks(threads(), jobs);
+}
+
+/// Sharded `out = Aᵀy` — the O(mn) dual sweep, one contiguous dot per output
+/// element over disjoint column ranges. Bitwise identical to
+/// [`Mat::t_mul_vec_into`] at every plan and thread count.
+pub fn t_mul_vec_into(a: &Mat, y: &[f64], out: &mut [f64]) {
+    t_mul_vec_into_planned(Plan::for_work(a.cols(), 2 * a.rows()), a, y, out)
+}
+
+/// [`t_mul_vec_into`] with an explicit plan.
+pub fn t_mul_vec_into_planned(plan: Plan, a: &Mat, y: &[f64], out: &mut [f64]) {
+    assert_eq!(y.len(), a.rows());
+    assert_eq!(out.len(), a.cols());
+    let ranges = plan.split(a.cols());
+    if threads() <= 1 || ranges.len() <= 1 {
+        a.t_mul_vec_into(y, out);
+        return;
+    }
+    let mut jobs = Vec::with_capacity(ranges.len());
+    let mut rest = &mut out[..];
+    for r in &ranges {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(r.len());
+        let start = r.start;
+        jobs.push(move || {
+            for (k, o) in head.iter_mut().enumerate() {
+                *o = blas::dot(a.col(start + k), y);
+            }
+        });
+        rest = tail;
+    }
+    pool::run_tasks(threads(), jobs);
+}
+
+/// Sharded sparse mat-vec `out = Σ_{j∈support} x[j]·A[:,j]` (the gradient's
+/// `A_J u_J` term). Single-shard plans run the exact pre-shard serial kernel;
+/// multi-shard plans accumulate per-shard partials and tree-reduce them.
+pub fn mul_vec_support_into(a: &Mat, x: &[f64], support: &[usize], out: &mut [f64]) {
+    mul_vec_support_into_planned(Plan::for_work(support.len(), 2 * a.rows()), a, x, support, out)
+}
+
+/// [`mul_vec_support_into`] with an explicit plan.
+pub fn mul_vec_support_into_planned(
+    plan: Plan,
+    a: &Mat,
+    x: &[f64],
+    support: &[usize],
+    out: &mut [f64],
+) {
+    assert_eq!(out.len(), a.rows());
+    let ranges = plan.split(support.len());
+    if ranges.len() == 1 {
+        a.mul_vec_support_into(x, support, out);
+        return;
+    }
+    let m = a.rows();
+    let parts = run_ranges(&ranges, |r| {
+        let mut part = vec![0.0; m];
+        for &j in &support[r] {
+            let xj = x[j];
+            if xj != 0.0 {
+                blas::axpy(xj, a.col(j), &mut part);
+            }
+        }
+        part
+    });
+    let total = tree_reduce_vecs(parts);
+    out.copy_from_slice(&total);
+}
+
+/// Sharded `out += Σ_k coeffs[k]·A[:, idx[k]]` (Woodbury's `A_J w` and the CG
+/// operator's accumulation half). Zero coefficients are skipped, exactly like
+/// the serial axpy loop. Single-shard plans accumulate in place (the
+/// pre-shard serial bits); multi-shard plans tree-reduce zero-based partials
+/// and add the total once.
+pub fn add_scaled_cols(a: &Mat, idx: &[usize], coeffs: &[f64], out: &mut [f64]) {
+    add_scaled_cols_planned(Plan::for_work(idx.len(), 2 * a.rows()), a, idx, coeffs, out)
+}
+
+/// [`add_scaled_cols`] with an explicit plan.
+pub fn add_scaled_cols_planned(
+    plan: Plan,
+    a: &Mat,
+    idx: &[usize],
+    coeffs: &[f64],
+    out: &mut [f64],
+) {
+    assert_eq!(idx.len(), coeffs.len());
+    assert_eq!(out.len(), a.rows());
+    let ranges = plan.split(idx.len());
+    if ranges.len() == 1 {
+        for (k, &j) in idx.iter().enumerate() {
+            if coeffs[k] != 0.0 {
+                blas::axpy(coeffs[k], a.col(j), out);
+            }
+        }
+        return;
+    }
+    let m = a.rows();
+    let parts = run_ranges(&ranges, |r| {
+        let mut part = vec![0.0; m];
+        for k in r {
+            if coeffs[k] != 0.0 {
+                blas::axpy(coeffs[k], a.col(idx[k]), &mut part);
+            }
+        }
+        part
+    });
+    let total = tree_reduce_vecs(parts);
+    for (o, t) in out.iter_mut().zip(total.iter()) {
+        *o += *t;
+    }
+}
+
+/// Sharded `out[k] = scale·⟨A[:, idx[k]], v⟩` (Woodbury's `A_Jᵀ rhs` and the
+/// CG operator's dot half). Per-element, disjoint outputs: bitwise identical
+/// to the serial loop at every thread count.
+pub fn col_dots(a: &Mat, idx: &[usize], v: &[f64], scale: f64, out: &mut [f64]) {
+    assert_eq!(out.len(), idx.len());
+    assert_eq!(v.len(), a.rows());
+    let plan = Plan::for_work(idx.len(), 2 * a.rows());
+    let ranges = plan.split(idx.len());
+    if threads() <= 1 || ranges.len() <= 1 {
+        for (k, &j) in idx.iter().enumerate() {
+            out[k] = scale * blas::dot(a.col(j), v);
+        }
+        return;
+    }
+    let mut jobs = Vec::with_capacity(ranges.len());
+    let mut rest = &mut out[..];
+    for r in &ranges {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(r.len());
+        let ids = &idx[r.start..r.end];
+        jobs.push(move || {
+            for (k, o) in head.iter_mut().enumerate() {
+                *o = scale * blas::dot(a.col(ids[k]), v);
+            }
+        });
+        rest = tail;
+    }
+    pool::run_tasks(threads(), jobs);
+}
+
+/// Sharded Gram build `G = A_JᵀA_J + ridge·I`, rows assigned to shards in a
+/// **strided** pattern (shard k takes rows k, k+S, k+2S, …) so the shrinking
+/// upper-triangle rows balance. Every entry is the same column-pair dot the
+/// serial [`Mat::gram_of_cols`] computes — the result is bitwise identical at
+/// every thread count.
+pub fn gram_of_cols(a: &Mat, idx: &[usize], ridge: f64) -> Mat {
+    let r = idx.len();
+    // triangle rows cost (r − row)·2m flops; size the plan on the total
+    let plan = Plan::for_work(r * (r + 1) / 2, 2 * a.rows());
+    if threads() <= 1 || plan.shards <= 1 {
+        return a.gram_of_cols(idx, ridge);
+    }
+    let shards = plan.shards.min(r.max(1));
+    let jobs: Vec<_> = (0..shards)
+        .map(|k| {
+            move || {
+                let mut rows = Vec::new();
+                let mut row = k;
+                while row < r {
+                    let ca = a.col(idx[row]);
+                    let vals: Vec<f64> = (row..r).map(|b| blas::dot(ca, a.col(idx[b]))).collect();
+                    rows.push((row, vals));
+                    row += shards;
+                }
+                rows
+            }
+        })
+        .collect();
+    let outs = pool::run_tasks(threads(), jobs);
+    let mut g = Mat::zeros(r, r);
+    for rows in outs {
+        for (row, vals) in rows {
+            for (off, v) in vals.into_iter().enumerate() {
+                let b = row + off;
+                g.set(row, b, v);
+                g.set(b, row, v);
+            }
+        }
+    }
+    for i in 0..r {
+        g.set(i, i, g.get(i, i) + ridge);
+    }
+    g
+}
+
+/// Map a closure over every column, sharded (feature-wise precomputes such as
+/// screening column norms). Per-element: output identical to the serial map.
+pub fn map_cols<T, F>(a: &Mat, flops_per_col: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&[f64]) -> T + Sync,
+{
+    let n = a.cols();
+    let plan = Plan::for_work(n, flops_per_col.max(1));
+    let ranges = plan.split(n);
+    let outs = run_ranges(&ranges, |r| r.map(|j| f(a.col(j))).collect::<Vec<T>>());
+    outs.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn thread_config_roundtrip() {
+        // global default is ≥ 1 whatever the environment says
+        assert!(threads() >= 1);
+        let ambient = threads();
+        let inside = with_threads(3, threads);
+        assert_eq!(inside, 3);
+        assert_eq!(threads(), ambient, "override must restore");
+        let nested = with_threads(2, || with_threads(5, threads));
+        assert_eq!(nested, 5);
+    }
+
+    #[test]
+    fn plan_split_tiles_and_balances() {
+        for units in [0usize, 1, 2, 7, 100, 1000] {
+            for shards in [1usize, 2, 3, 8, 200] {
+                let ranges = Plan::with_shards(shards).split(units);
+                assert!(!ranges.is_empty());
+                assert_eq!(ranges.first().unwrap().start, 0);
+                assert_eq!(ranges.last().unwrap().end, units);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+                let sizes: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "units={units} shards={shards}: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_for_work_is_shape_only() {
+        assert_eq!(Plan::for_work(0, 100).shards, 1);
+        assert_eq!(Plan::for_work(10, 2).shards, 1, "tiny work stays single-shard");
+        let big = Plan::for_work(1 << 20, 1 << 10);
+        assert!(big.shards > 1 && big.shards <= MAX_SHARDS);
+        // never more shards than units
+        assert!(Plan::for_work(3, usize::MAX / 4).shards <= 3);
+    }
+
+    #[test]
+    fn tree_reduction_is_fixed_order() {
+        // scalar: 5 parts → ((p0+p3)+ (p1+p4)) ... verify against a direct
+        // evaluation of the documented pairing
+        let parts = vec![1e-16, 1.0, -1.0, 2.0, 3.0];
+        let got = tree_reduce_scalars(parts.clone());
+        // width 5, half 3: p0+=p3, p1+=p4 → [2+1e-16? ...]; width 3, half 2:
+        // p0+=p2; width 2: p0+=p1
+        let (mut p0, mut p1, p2) = (parts[0] + parts[3], parts[1] + parts[4], parts[2]);
+        p0 += p2;
+        p0 += p1;
+        assert_eq!(got, p0);
+        let vecs = vec![vec![1.0, 2.0], vec![0.5, -1.0], vec![0.25, 4.0]];
+        let got = tree_reduce_vecs(vecs.clone());
+        let expect = vec![
+            (vecs[0][0] + vecs[2][0]) + vecs[1][0],
+            (vecs[0][1] + vecs[2][1]) + vecs[1][1],
+        ];
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn single_shard_kernels_match_serial_bitwise() {
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let a = Mat::from_fn(13, 37, |_, _| rng.next_gaussian());
+        let y: Vec<f64> = (0..13).map(|_| rng.next_gaussian()).collect();
+        let x: Vec<f64> = (0..37).map(|_| rng.next_gaussian()).collect();
+
+        let mut out_serial = vec![0.0; 37];
+        a.t_mul_vec_into(&y, &mut out_serial);
+        let mut out_shard = vec![0.0; 37];
+        t_mul_vec_into(&a, &y, &mut out_shard);
+        assert_eq!(out_serial, out_shard);
+
+        let support: Vec<usize> = (0..37).step_by(3).collect();
+        let mut au_serial = vec![0.0; 13];
+        a.mul_vec_support_into(&x, &support, &mut au_serial);
+        let mut au_shard = vec![0.0; 13];
+        mul_vec_support_into(&a, &x, &support, &mut au_shard);
+        assert_eq!(au_serial, au_shard);
+
+        let g_serial = a.gram_of_cols(&support, 0.3);
+        let g_shard = gram_of_cols(&a, &support, 0.3);
+        assert_eq!(g_serial.as_slice(), g_shard.as_slice());
+
+        assert_eq!(dot(&x, &x), blas::dot(&x, &x));
+    }
+
+    #[test]
+    fn forced_plans_are_thread_count_invariant() {
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        let a: Vec<f64> = (0..4001).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f64> = (0..4001).map(|_| rng.next_gaussian()).collect();
+        for shards in [1usize, 2, 3, 8] {
+            let plan = Plan::with_shards(shards);
+            let reference = with_threads(1, || dot_planned(plan, &a, &b));
+            for t in [2usize, 4, 8] {
+                let got = with_threads(t, || dot_planned(plan, &a, &b));
+                assert_eq!(got.to_bits(), reference.to_bits(), "shards={shards} threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_cols_preserves_order() {
+        let a = Mat::from_fn(4, 9, |i, j| (i + 10 * j) as f64);
+        let sums = map_cols(&a, 4, |col| col.iter().sum::<f64>());
+        let expect: Vec<f64> = (0..9).map(|j| a.col(j).iter().sum::<f64>()).collect();
+        assert_eq!(sums, expect);
+    }
+}

@@ -1,0 +1,159 @@
+//! Work-stealing job queues for the worker pool.
+//!
+//! The pool used to drain one `Mutex<mpsc::Receiver>`: correct, but every pop
+//! contends on a single lock, and the FIFO order means a worker that lands on
+//! a long job ties up the jobs queued behind it until someone else happens to
+//! reach the channel. [`StealQueues`] gives each worker its own deque, seeded
+//! with the contiguous block of jobs a static split would have assigned to it.
+//! A worker pops from the *front* of its own deque (preserving the
+//! cache-friendly static order) and, once empty, steals from the *back* of a
+//! victim's deque — the job farthest from the victim's current position, so
+//! owner and thief never want the same end.
+//!
+//! Stealing only changes *which worker* runs a job, never the job itself or
+//! the index its result is filed under, so [`crate::parallel::run_tasks`]
+//! output — and every float downstream — is identical to the static split.
+//! This is what lets imbalanced λ-grids (low-c tail chains cost several times
+//! their head-chain peers) keep all workers busy without touching numerics.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// One worker's deque of `(job index, job)` pairs.
+type Deque<F> = Mutex<VecDeque<(usize, F)>>;
+
+/// Per-worker job deques with back-stealing.
+pub struct StealQueues<F> {
+    queues: Vec<Deque<F>>,
+}
+
+impl<F> StealQueues<F> {
+    /// Distribute `jobs` over `workers` deques in contiguous index blocks —
+    /// the same assignment a static split would make, so a run with no steals
+    /// (e.g. perfectly balanced work) visits jobs in the static order.
+    pub fn new(jobs: Vec<F>, workers: usize) -> Self {
+        assert!(workers >= 1, "need at least one worker");
+        let n = jobs.len();
+        let mut queues: Vec<VecDeque<(usize, F)>> =
+            (0..workers).map(|_| VecDeque::new()).collect();
+        for (index, job) in jobs.into_iter().enumerate() {
+            // block owner: worker w gets indices [w·n/W, (w+1)·n/W)
+            let owner = index * workers / n.max(1);
+            queues[owner.min(workers - 1)].push_back((index, job));
+        }
+        Self { queues: queues.into_iter().map(Mutex::new).collect() }
+    }
+
+    /// Number of worker deques.
+    pub fn workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Next job for `worker`: front of its own deque, else steal from the back
+    /// of the first non-empty victim (scanning round-robin from `worker + 1`).
+    /// `None` means every deque was empty at the time of the scan.
+    pub fn pop(&self, worker: usize) -> Option<(usize, F)> {
+        debug_assert!(worker < self.queues.len());
+        if let Some(job) = self.queues[worker].lock().expect("steal queue lock").pop_front() {
+            return Some(job);
+        }
+        let w = self.queues.len();
+        for k in 1..w {
+            let victim = (worker + k) % w;
+            if let Some(job) =
+                self.queues[victim].lock().expect("steal queue lock").pop_back()
+            {
+                return Some(job);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain_indices<F>(q: &StealQueues<F>, worker: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        while let Some((i, _)) = q.pop(worker) {
+            out.push(i);
+        }
+        out
+    }
+
+    #[test]
+    fn blocks_mirror_the_static_split() {
+        let q = StealQueues::new((0..8).collect::<Vec<_>>(), 4);
+        assert_eq!(q.workers(), 4);
+        // worker 0 drains its own block first (front order), then steals the
+        // remaining blocks from the other deques' backs.
+        let order = drain_indices(&q, 0);
+        assert_eq!(order.len(), 8);
+        assert_eq!(&order[..2], &[0, 1], "own block first, in order");
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn steals_from_the_back_of_victims() {
+        let q = StealQueues::new((0..6).collect::<Vec<_>>(), 2);
+        // worker 1 owns [3, 4, 5]; worker 0's first steal takes victim's back.
+        assert_eq!(q.pop(0).unwrap().0, 0);
+        assert_eq!(q.pop(0).unwrap().0, 1);
+        assert_eq!(q.pop(0).unwrap().0, 2);
+        assert_eq!(q.pop(0).unwrap().0, 5, "steal takes the victim's coldest job");
+        assert_eq!(q.pop(1).unwrap().0, 3, "owner still pops its front");
+        assert_eq!(q.pop(1).unwrap().0, 4);
+        assert!(q.pop(0).is_none());
+        assert!(q.pop(1).is_none());
+    }
+
+    #[test]
+    fn uneven_job_counts_cover_everything() {
+        for (jobs, workers) in [(1usize, 4usize), (5, 3), (7, 2), (16, 5)] {
+            let q = StealQueues::new((0..jobs).collect::<Vec<_>>(), workers);
+            let mut seen = Vec::new();
+            // drain from every worker alternately to exercise the scan order
+            'outer: loop {
+                let mut any = false;
+                for w in 0..workers {
+                    if let Some((i, _)) = q.pop(w) {
+                        seen.push(i);
+                        any = true;
+                    }
+                }
+                if !any {
+                    break 'outer;
+                }
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, (0..jobs).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn threaded_drain_runs_each_job_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..200)
+            .map(|_| {
+                let count = &count;
+                move || count.fetch_add(1, Ordering::Relaxed)
+            })
+            .collect();
+        let q = StealQueues::new(jobs, 4);
+        std::thread::scope(|scope| {
+            for w in 0..4 {
+                let q = &q;
+                scope.spawn(move || {
+                    while let Some((_, job)) = q.pop(w) {
+                        job();
+                    }
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 200);
+    }
+}

@@ -9,7 +9,10 @@
 //! [`solve_point`]) and the single-chain driver [`solve_path`]. The
 //! multi-threaded engine in [`crate::parallel`] reuses the exact same
 //! primitive, so a path executed as one chain is bitwise-identical no matter
-//! which driver ran it.
+//! which driver ran it. "Sequential" here means grid-sequential: each solve
+//! still shards its O(mn) sweeps over [`crate::parallel::shard`]'s ambient
+//! thread budget (`SSNAL_THREADS`), whose results are thread-count-invariant
+//! — so the bitwise guarantee survives within-solve parallelism too.
 
 use crate::linalg::Mat;
 use crate::solver::types::{Algorithm, BaselineOptions, EnetProblem, SolveResult, SsnalOptions};

@@ -25,11 +25,14 @@ pub struct AugmentedView<'a> {
 }
 
 impl<'a> AugmentedView<'a> {
-    /// Precompute augmented column norms.
+    /// Precompute augmented column norms (an O(mn) feature sweep, sharded
+    /// over the worker pool on large designs — per-column values identical to
+    /// the serial loop at every thread count).
     pub fn new(p: &'a EnetProblem<'a>) -> Self {
-        let col_norms = (0..p.n())
-            .map(|j| (blas::nrm2_sq(p.a.col(j)) + p.lam2).sqrt())
-            .collect();
+        let lam2 = p.lam2;
+        let col_norms = crate::parallel::shard::map_cols(p.a, 2 * p.m(), move |col| {
+            (blas::nrm2_sq(col) + lam2).sqrt()
+        });
         Self { p, sqrt_lam2: p.lam2.sqrt(), col_norms }
     }
 

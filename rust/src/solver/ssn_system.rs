@@ -11,8 +11,16 @@
 //!
 //! Columns of `A_J` are addressed in place (column-major `Mat` makes them
 //! contiguous), so no gather/copy is performed.
+//!
+//! The Woodbury Gram build, its `A_Jᵀrhs`/`A_J w` sweeps, and the CG mat-vec
+//! route through [`crate::parallel::shard`]: on large active sets they fan
+//! out over the worker pool. Per the shard module's determinism contract the
+//! results are bitwise-invariant to the thread count (the Gram and `A_Jᵀrhs`
+//! sweeps are also bitwise-equal to the serial loops; the `A_J w`
+//! accumulation matches serial exactly only while its plan is single-shard).
 
-use crate::linalg::{blas, solve_cg, Cholesky, Mat};
+use crate::linalg::{solve_cg, Cholesky, Mat};
+use crate::parallel::shard;
 use crate::solver::types::NewtonStrategy;
 
 /// Which strategy actually ran (Auto resolves to one of the concrete three).
@@ -116,16 +124,18 @@ fn solve_direct(a: &Mat, active: &[usize], kappa: f64, rhs: &[f64], d: &mut [f64
 
 /// Woodbury (Eq. 19): `V⁻¹ rhs = rhs − A_J (κ⁻¹I_r + A_JᵀA_J)⁻¹ A_Jᵀ rhs`.
 fn solve_woodbury(a: &Mat, active: &[usize], kappa: f64, rhs: &[f64], d: &mut [f64]) {
-    let g = a.gram_of_cols(active, 1.0 / kappa);
+    let g = shard::gram_of_cols(a, active, 1.0 / kappa);
     let ch = Cholesky::factor(&g).expect("κ⁻¹I + A_JᵀA_J is SPD");
     // w = A_Jᵀ rhs
-    let mut w: Vec<f64> = active.iter().map(|&j| blas::dot(a.col(j), rhs)).collect();
+    let mut w = vec![0.0; active.len()];
+    shard::col_dots(a, active, rhs, 1.0, &mut w);
     ch.solve_in_place(&mut w);
     // d = rhs − A_J w
     d.copy_from_slice(rhs);
-    for (k, &j) in active.iter().enumerate() {
-        blas::axpy(-w[k], a.col(j), d);
+    for v in w.iter_mut() {
+        *v = -*v;
     }
+    shard::add_scaled_cols(a, active, &w, d);
 }
 
 /// Matrix-free CG on `v ↦ v + κ A_J (A_Jᵀ v)`.
@@ -142,15 +152,9 @@ fn solve_cg_strategy(
     let mut coeffs = vec![0.0; active.len()];
     solve_cg(
         |v, out| {
-            for (k, &j) in active.iter().enumerate() {
-                coeffs[k] = kappa * blas::dot(a.col(j), v);
-            }
+            shard::col_dots(a, active, v, kappa, &mut coeffs);
             out.copy_from_slice(v);
-            for (k, &j) in active.iter().enumerate() {
-                if coeffs[k] != 0.0 {
-                    blas::axpy(coeffs[k], a.col(j), out);
-                }
-            }
+            shard::add_scaled_cols(a, active, &coeffs, out);
         },
         rhs,
         d,
@@ -162,6 +166,7 @@ fn solve_cg_strategy(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::blas;
     use crate::rng::Xoshiro256pp;
 
     fn apply_v(a: &Mat, active: &[usize], kappa: f64, v: &[f64]) -> Vec<f64> {

@@ -15,6 +15,7 @@
 //! costs O(n) instead of another O(mn) sweep.
 
 use crate::linalg::blas;
+use crate::parallel::shard;
 use crate::prox;
 use crate::solver::objective::{primal_objective, support_of};
 use crate::solver::ssn_system::solve_newton_system;
@@ -78,7 +79,9 @@ pub fn solve_warm(
     let mut z = vec![0.0; n];
 
     let bnorm = blas::nrm2(p.b);
-    let xnorm_sq_of = |x: &[f64]| blas::nrm2_sq(x);
+    // n-length squared norms go through the sharded dot (single-shard — and
+    // therefore bitwise-serial — until n·2 clears the shard work target).
+    let xnorm_sq_of = |x: &[f64]| shard::dot(x, x);
 
     let mut trace = SsnalTrace::default();
     let mut total_inner = 0usize;
@@ -99,13 +102,16 @@ pub fn solve_warm(
     // Aᵀy is maintained incrementally across *all* iterations (y only changes
     // through y += s·d, and Aᵀ(y+s·d) = Aᵀy + s·Aᵀd). A periodic refresh wipes
     // accumulated floating-point drift. Saves one O(mn) sweep per outer
-    // iteration — see EXPERIMENTS.md §Perf.
-    p.a.t_mul_vec_into(&y, &mut aty);
+    // iteration — see EXPERIMENTS.md §Perf. The O(mn) sweeps go through the
+    // sharded kernels: fanned over the worker pool on large problems, with
+    // results invariant to the thread count (see parallel::shard's
+    // determinism contract).
+    shard::t_mul_vec_into(p.a, &y, &mut aty);
     let mut steps_since_refresh = 0usize;
     while outer < opts.max_outer {
         outer += 1;
         if steps_since_refresh >= 20 {
-            p.a.t_mul_vec_into(&y, &mut aty);
+            shard::t_mul_vec_into(p.a, &y, &mut aty);
             steps_since_refresh = 0;
         }
 
@@ -120,7 +126,7 @@ pub fn solve_warm(
             prox::prox_enet_with_support(&t, sigma, p.lam1, p.lam2, &mut u, &mut active);
 
             // ∇ψ(y) = y + b − A u  (Eq. 15)
-            p.a.mul_vec_support_into(&u, &active, &mut au);
+            shard::mul_vec_support_into(p.a, &u, &active, &mut au);
             for i in 0..m {
                 grad[i] = y[i] + p.b[i] - au[i];
             }
@@ -131,7 +137,7 @@ pub fn solve_warm(
             inner += 1;
 
             // ψ(y) (Proposition 2, part 1)
-            let unorm_sq = blas::nrm2_sq(&u);
+            let unorm_sq = shard::dot(&u, &u);
             psi_val = prox::h_star(&y, p.b)
                 + (1.0 + sigma * p.lam2) / (2.0 * sigma) * unorm_sq
                 - xnorm_sq_of(&x) / (2.0 * sigma);
@@ -154,7 +160,7 @@ pub fn solve_warm(
             );
 
             // Armijo backtracking (Eq. 12) with incremental Aᵀ(y+s·d).
-            p.a.t_mul_vec_into(&d, &mut atd);
+            shard::t_mul_vec_into(p.a, &d, &mut atd);
             let gtd = blas::dot(&grad, &d);
             debug_assert!(gtd <= 1e-12 * (1.0 + gtd.abs()), "d must be a descent direction");
             let mut s = 1.0;
@@ -193,9 +199,10 @@ pub fn solve_warm(
                 p_verbose(opts, || format!("[ssnal]   line search exhausted at s={s:.2e}"));
             }
 
-            // y ← y + s d ; maintain Aᵀy incrementally (O(n), not O(mn))
+            // y ← y + s d ; maintain Aᵀy incrementally (O(n), not O(mn)).
+            // The n-length update shards; element-wise, so bitwise-serial.
             blas::axpy(s, &d, &mut y);
-            blas::axpy(s, &atd, &mut aty);
+            shard::axpy(s, &atd, &mut aty);
             steps_since_refresh += 1;
         }
         total_inner += inner;

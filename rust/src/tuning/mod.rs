@@ -145,22 +145,27 @@ pub fn tune_with_threads(
         .map(|pt| {
             let folds = folds.as_ref();
             move || {
-                let idx = &pt.result.active_set;
-                let rss = debiased_rss(a, b, idx);
-                let dof = lstsq::enet_degrees_of_freedom(a, idx, pt.lam2);
-                let cv = folds
-                    .map(|f| cv_mse(a, b, f, opts.cv_folds, pt.lam1, pt.lam2, &opts.path));
-                CriteriaPoint {
-                    c_lambda: pt.c_lambda,
-                    lam1: pt.lam1,
-                    lam2: pt.lam2,
-                    active: idx.len(),
-                    cv,
-                    gcv: gcv(rss, m, dof),
-                    ebic: ebic(rss, m, n, dof),
-                    rss,
-                    dof,
-                }
+                // Criteria tasks are many and small: pin within-solve
+                // sharding to one thread so the grid-level fan-out owns the
+                // cores (shard results don't depend on the budget anyway).
+                crate::parallel::shard::with_threads(1, || {
+                    let idx = &pt.result.active_set;
+                    let rss = debiased_rss(a, b, idx);
+                    let dof = lstsq::enet_degrees_of_freedom(a, idx, pt.lam2);
+                    let cv = folds
+                        .map(|f| cv_mse(a, b, f, opts.cv_folds, pt.lam1, pt.lam2, &opts.path));
+                    CriteriaPoint {
+                        c_lambda: pt.c_lambda,
+                        lam1: pt.lam1,
+                        lam2: pt.lam2,
+                        active: idx.len(),
+                        cv,
+                        gcv: gcv(rss, m, dof),
+                        ebic: ebic(rss, m, n, dof),
+                        rss,
+                        dof,
+                    }
+                })
             }
         })
         .collect();

@@ -1,0 +1,292 @@
+//! Property tests for the within-solve sharded linalg engine
+//! (`ssnal_en::parallel::shard`), pinning the determinism contract for
+//! random shapes — including lengths below the unroll width, empty inputs,
+//! and non-multiple-of-8 tails — at 1, 2, 4 and 8 threads (ISSUE 2
+//! criterion): every kernel is **bitwise thread-count-invariant** for a
+//! fixed plan, element-wise kernels (`Aᵀy`, Gram) are additionally
+//! bitwise-equal to the serial `Mat`/`blas` loops at any shard count, and
+//! reduction kernels (`dot`, `A_J x`) are bitwise-equal to serial at
+//! single-shard plans.
+
+use ssnal_en::data::{generate_synthetic, SyntheticSpec};
+use ssnal_en::linalg::{blas, Mat};
+use ssnal_en::parallel::shard::{self, Plan};
+use ssnal_en::rng::Xoshiro256pp;
+use ssnal_en::solver::types::{EnetProblem, SsnalOptions};
+use ssnal_en::util::quickcheck::{log_uniform_usize, run_prop, PropConfig};
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn random_vec(rng: &mut Xoshiro256pp, len: usize) -> Vec<f64> {
+    (0..len).map(|_| rng.next_gaussian()).collect()
+}
+
+/// Lengths that stress every code path: empty, below the 8-wide unroll,
+/// exactly one unroll block, and ragged tails around shard boundaries.
+fn edge_lengths() -> Vec<usize> {
+    vec![0, 1, 2, 5, 7, 8, 9, 15, 16, 17, 31, 63, 64, 65, 100, 257]
+}
+
+#[test]
+fn sharded_dot_is_bitwise_thread_invariant() {
+    run_prop(
+        PropConfig { cases: 48, seed: 0xD07 },
+        |rng| {
+            let len = log_uniform_usize(rng, 1, 5000) - 1; // include 0
+            let a = random_vec(rng, len);
+            let b = random_vec(rng, len);
+            let shards = [1usize, 2, 3, 8][rng.next_below(4)];
+            (a, b, shards)
+        },
+        |(a, b, shards)| {
+            let plan = Plan::with_shards(*shards);
+            let reference = shard::with_threads(1, || shard::dot_planned(plan, a, b));
+            for &t in &THREADS {
+                let got = shard::with_threads(t, || shard::dot_planned(plan, a, b));
+                if got.to_bits() != reference.to_bits() {
+                    return Err(format!(
+                        "dot len={} shards={shards} threads={t}: {got:e} vs {reference:e}",
+                        a.len()
+                    ));
+                }
+            }
+            // a single shard is the serial kernel, bit for bit
+            let serial = blas::dot(a, b);
+            let one = shard::dot_planned(Plan::single(), a, b);
+            if one.to_bits() != serial.to_bits() {
+                return Err(format!("single-shard dot differs from blas::dot: {one:e}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sharded_axpy_is_bitwise_serial_at_every_plan() {
+    run_prop(
+        PropConfig { cases: 48, seed: 0xA21 },
+        |rng| {
+            let len = log_uniform_usize(rng, 1, 4000) - 1;
+            let alpha = rng.next_gaussian();
+            let x = random_vec(rng, len);
+            let y = random_vec(rng, len);
+            let shards = 1 + rng.next_below(8);
+            (alpha, x, y, shards)
+        },
+        |(alpha, x, y, shards)| {
+            let mut serial = y.clone();
+            blas::axpy(*alpha, x, &mut serial);
+            for &t in &THREADS {
+                let mut got = y.clone();
+                shard::with_threads(t, || {
+                    shard::axpy_planned(Plan::with_shards(*shards), *alpha, x, &mut got)
+                });
+                if got != serial {
+                    return Err(format!(
+                        "axpy len={} shards={shards} threads={t} diverged",
+                        x.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sharded_t_mul_vec_matches_serial_bitwise() {
+    run_prop(
+        PropConfig { cases: 32, seed: 0x7A1 },
+        |rng| {
+            let m = log_uniform_usize(rng, 1, 60);
+            let n = log_uniform_usize(rng, 1, 400);
+            let a = Mat::from_fn(m, n, |_, _| rng.next_gaussian());
+            let y = random_vec(rng, m);
+            let shards = 1 + rng.next_below(8);
+            (a, y, shards)
+        },
+        |(a, y, shards)| {
+            let mut serial = vec![0.0; a.cols()];
+            a.t_mul_vec_into(y, &mut serial);
+            for &t in &THREADS {
+                let mut got = vec![0.0; a.cols()];
+                shard::with_threads(t, || {
+                    shard::t_mul_vec_into_planned(Plan::with_shards(*shards), a, y, &mut got)
+                });
+                if got != serial {
+                    return Err(format!(
+                        "Aᵀy {}×{} shards={shards} threads={t} diverged",
+                        a.rows(),
+                        a.cols()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sharded_support_mat_vec_is_thread_invariant() {
+    run_prop(
+        PropConfig { cases: 32, seed: 0x5B2 },
+        |rng| {
+            let m = log_uniform_usize(rng, 1, 50);
+            let n = log_uniform_usize(rng, 1, 300);
+            let a = Mat::from_fn(m, n, |_, _| rng.next_gaussian());
+            let x = random_vec(rng, n);
+            let support = rng.sample_indices(n, (n / 3).max(1).min(n));
+            let shards = 1 + rng.next_below(8);
+            (a, x, support, shards)
+        },
+        |(a, x, support, shards)| {
+            let plan = Plan::with_shards(*shards);
+            let reference = shard::with_threads(1, || {
+                let mut out = vec![0.0; a.rows()];
+                shard::mul_vec_support_into_planned(plan, a, x, support, &mut out);
+                out
+            });
+            for &t in &THREADS {
+                let got = shard::with_threads(t, || {
+                    let mut out = vec![0.0; a.rows()];
+                    shard::mul_vec_support_into_planned(plan, a, x, support, &mut out);
+                    out
+                });
+                if got != reference {
+                    return Err(format!("A_J x shards={shards} threads={t} diverged"));
+                }
+            }
+            // single shard ≡ the serial Mat kernel
+            let mut serial = vec![0.0; a.rows()];
+            a.mul_vec_support_into(x, support, &mut serial);
+            let mut one = vec![0.0; a.rows()];
+            shard::mul_vec_support_into_planned(Plan::single(), a, x, support, &mut one);
+            if one != serial {
+                return Err("single-shard A_J x differs from serial".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sharded_add_scaled_cols_is_thread_invariant() {
+    run_prop(
+        PropConfig { cases: 32, seed: 0xAD5 },
+        |rng| {
+            let m = log_uniform_usize(rng, 1, 40);
+            let n = log_uniform_usize(rng, 1, 200);
+            let a = Mat::from_fn(m, n, |_, _| rng.next_gaussian());
+            let r = (n / 2).max(1).min(n);
+            let idx = rng.sample_indices(n, r);
+            // include exact zeros: the kernels must skip them identically
+            let coeffs: Vec<f64> = (0..r)
+                .map(|_| if rng.next_below(5) == 0 { 0.0 } else { rng.next_gaussian() })
+                .collect();
+            let base = random_vec(rng, m);
+            let shards = 1 + rng.next_below(8);
+            (a, idx, coeffs, base, shards)
+        },
+        |(a, idx, coeffs, base, shards)| {
+            let plan = Plan::with_shards(*shards);
+            let reference = shard::with_threads(1, || {
+                let mut out = base.clone();
+                shard::add_scaled_cols_planned(plan, a, idx, coeffs, &mut out);
+                out
+            });
+            for &t in &THREADS {
+                let got = shard::with_threads(t, || {
+                    let mut out = base.clone();
+                    shard::add_scaled_cols_planned(plan, a, idx, coeffs, &mut out);
+                    out
+                });
+                if got != reference {
+                    return Err(format!("A_J w shards={shards} threads={t} diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sharded_gram_matches_serial_bitwise_when_it_fans_out() {
+    // big enough that Plan::for_work actually multi-shards the build
+    let mut rng = Xoshiro256pp::seed_from_u64(404);
+    let m = 50;
+    let n = 320;
+    let a = Mat::from_fn(m, n, |_, _| rng.next_gaussian());
+    let idx: Vec<usize> = (0..n).collect();
+    let serial = a.gram_of_cols(&idx, 0.7);
+    for &t in &THREADS {
+        let got = shard::with_threads(t, || shard::gram_of_cols(&a, &idx, 0.7));
+        assert_eq!(got.as_slice(), serial.as_slice(), "gram diverged at threads={t}");
+        assert_eq!(got.rows(), serial.rows());
+    }
+}
+
+#[test]
+fn edge_lengths_cover_tails_and_empty() {
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+    for len in edge_lengths() {
+        let a = random_vec(&mut rng, len);
+        let b = random_vec(&mut rng, len);
+        let serial_dot = blas::dot(&a, &b);
+        for shards in [1usize, 2, 3, 8] {
+            let plan = Plan::with_shards(shards);
+            let reference = shard::with_threads(1, || shard::dot_planned(plan, &a, &b));
+            for &t in &THREADS {
+                let got = shard::with_threads(t, || shard::dot_planned(plan, &a, &b));
+                assert_eq!(
+                    got.to_bits(),
+                    reference.to_bits(),
+                    "dot len={len} shards={shards} threads={t}"
+                );
+            }
+            // degenerate splits (≤ 1 element, or one shard) are the serial
+            // kernel, bit for bit
+            if len <= 1 || shards == 1 {
+                assert_eq!(reference.to_bits(), serial_dot.to_bits(), "len={len}");
+            }
+
+            let mut serial_axpy = b.clone();
+            blas::axpy(0.5, &a, &mut serial_axpy);
+            let mut got = b.clone();
+            shard::with_threads(4, || shard::axpy_planned(plan, 0.5, &a, &mut got));
+            assert_eq!(got, serial_axpy, "axpy len={len} shards={shards}");
+        }
+    }
+}
+
+/// The tentpole end-to-end guarantee: a full SSNAL solve big enough for its
+/// `Aᵀy` sweeps to fan out produces bitwise-identical solutions at every
+/// within-solve thread budget.
+#[test]
+fn ssnal_solve_is_bitwise_invariant_to_shard_threads() {
+    let prob = generate_synthetic(&SyntheticSpec {
+        m: 200,
+        n: 20_000,
+        n0: 12,
+        x_star: 5.0,
+        snr: 5.0,
+        seed: 77,
+    });
+    let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, 0.8);
+    let (l1, l2) = EnetProblem::lambdas_from_alpha(0.8, 0.4, lmax);
+    let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+    let opts = SsnalOptions::default();
+
+    // the sweep plan must actually multi-shard at this shape, or the test
+    // would pass vacuously
+    assert!(Plan::for_work(20_000, 2 * 200).shards > 1);
+
+    let reference = shard::with_threads(1, || ssnal_en::solver::ssnal::solve(&p, &opts));
+    assert!(reference.converged);
+    for t in [2usize, 4, 8] {
+        let res = shard::with_threads(t, || ssnal_en::solver::ssnal::solve(&p, &opts));
+        assert_eq!(res.x, reference.x, "solution drifted at shard threads={t}");
+        assert_eq!(res.y, reference.y, "dual drifted at shard threads={t}");
+        assert_eq!(res.iterations, reference.iterations);
+        assert_eq!(res.inner_iterations, reference.inner_iterations);
+    }
+}

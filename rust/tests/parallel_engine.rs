@@ -246,3 +246,60 @@ fn truncation_is_coordinated_across_chains() {
         assert!(s < 10, "only the final point may hit the cap: {sizes:?}");
     }
 }
+
+/// ISSUE 2 satellite: a deliberately imbalanced λ-grid — the low-c tail
+/// chains carry several times the work of the head chains, so a static
+/// chain→worker assignment would leave one worker with >2× the load — must
+/// produce output identical to the static split at every worker count. The
+/// work-stealing deques only reassign *which worker* runs a chain, never the
+/// chain's numbers.
+#[test]
+fn work_stealing_on_imbalanced_grid_matches_static_split() {
+    let prob = fixed_problem(99);
+    let mut base = base_opts(24);
+    base.c_grid = c_lambda_grid(0.9, 0.05, 24);
+    let run = |threads: usize| {
+        solve_path_parallel(
+            &prob.a,
+            &prob.b,
+            &ParallelPathOptions {
+                base: base.clone(),
+                num_threads: threads,
+                chunking: Chunking::Chains(8),
+                screening: false,
+            },
+        )
+    };
+    let reference = run(1);
+    assert_eq!(reference.path.runs, 24, "no truncation expected");
+
+    // The grid really is imbalanced: per-chain cost proxy (active-set sizes
+    // driving the O(r²m) Newton systems, plus SsN steps) spreads ≥ 2×.
+    let costs: Vec<usize> = reference
+        .chains
+        .iter()
+        .map(|report| {
+            let seg = report.chain;
+            reference.path.points[seg.start..seg.end]
+                .iter()
+                .map(|p| p.result.active_set.len() + p.result.inner_iterations)
+                .sum()
+        })
+        .collect();
+    let mn = *costs.iter().min().unwrap();
+    let mx = *costs.iter().max().unwrap();
+    assert!(
+        mx >= 2 * (mn + 1),
+        "grid not imbalanced enough for the test to bite: {costs:?}"
+    );
+
+    for threads in [2usize, 3, 8] {
+        let got = run(threads);
+        assert_eq!(got.path.runs, reference.path.runs, "threads={threads}");
+        for (p, q) in got.path.points.iter().zip(reference.path.points.iter()) {
+            assert_eq!(p.result.x, q.result.x, "threads={threads} c={}", p.c_lambda);
+            assert_eq!(p.result.active_set, q.result.active_set);
+            assert_eq!(p.result.objective.to_bits(), q.result.objective.to_bits());
+        }
+    }
+}
