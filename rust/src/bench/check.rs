@@ -1,0 +1,240 @@
+//! Bench-regression comparison: diff a freshly produced `BENCH_*.json` table
+//! against its committed baseline under `rust/benches/baselines/`.
+//!
+//! This is the logic behind `ssnal-en bench-check`, which CI's
+//! `bench-regression` job runs for every bench artifact (and which is
+//! equally runnable locally). The policy:
+//!
+//! * **hard failure** — structural drift: a baseline field missing from the
+//!   current table, a field changing JSON type, a measured row (matched by
+//!   its `threads` value) disappearing, a renamed `bench` identifier — or
+//!   any `bitwise_equal: false` anywhere in the current table, which means
+//!   the sharding determinism contract broke;
+//! * **warning** (non-fatal; CI surfaces it as an annotation) — any
+//!   `*seconds*` field regressing more than [`WALL_CLOCK_SLACK`] over its
+//!   baseline by at least [`ABS_SLACK_SECONDS`]. Shared CI boxes are far too
+//!   noisy for wall-clock to gate merges, but the trend should be visible.
+//!
+//! Extra fields or extra rows in the current table never fail: tables are
+//! allowed to grow, only to shrink or diverge.
+
+use crate::util::json::Json;
+
+/// Multiplicative wall-clock slack before a timing regression is flagged.
+pub const WALL_CLOCK_SLACK: f64 = 1.25;
+
+/// Absolute floor (seconds) below which timing jitter is never flagged.
+pub const ABS_SLACK_SECONDS: f64 = 1e-4;
+
+/// Outcome of one baseline comparison.
+#[derive(Debug, Default)]
+pub struct CheckReport {
+    /// Structural or determinism violations — the gate must fail.
+    pub failures: Vec<String>,
+    /// Wall-clock regressions — surfaced, never fatal.
+    pub warnings: Vec<String>,
+}
+
+impl CheckReport {
+    /// True when no hard failure was recorded.
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Compare a current bench table against its committed baseline.
+pub fn check_bench(current: &Json, baseline: &Json) -> CheckReport {
+    let mut rep = CheckReport::default();
+    match (baseline.get("bench"), current.get("bench")) {
+        (Some(b), Some(c)) if b == c => {}
+        (Some(b), Some(c)) => rep.failures.push(format!(
+            "bench identifier changed: baseline {:?} vs current {:?}",
+            b.as_str(),
+            c.as_str()
+        )),
+        _ => rep.failures.push("missing top-level \"bench\" field".to_string()),
+    }
+    walk("$", "", baseline, current, &mut rep);
+    scan_determinism("$", current, &mut rep);
+    rep
+}
+
+/// Recursive structural diff: everything the baseline has, the current table
+/// must also have, with matching types; timing leaves get the slack check.
+fn walk(path: &str, key: &str, base: &Json, cur: &Json, rep: &mut CheckReport) {
+    match (base, cur) {
+        (Json::Obj(bm), Json::Obj(_)) => {
+            for (k, bv) in bm {
+                match cur.get(k) {
+                    None => rep.failures.push(format!("{path}.{k}: missing field")),
+                    Some(cv) => walk(&format!("{path}.{k}"), k, bv, cv, rep),
+                }
+            }
+        }
+        (Json::Arr(ba), Json::Arr(ca)) => {
+            for (i, bv) in ba.iter().enumerate() {
+                match match_row(bv, ca, i) {
+                    None => rep.failures.push(format!("{path}[{i}]: missing row")),
+                    Some(cv) => walk(&format!("{path}[{i}]"), key, bv, cv, rep),
+                }
+            }
+        }
+        (Json::Num(b), Json::Num(c)) => {
+            if key.contains("seconds")
+                && *c > *b * WALL_CLOCK_SLACK
+                && *c - *b > ABS_SLACK_SECONDS
+            {
+                rep.warnings.push(format!(
+                    "{path}: {c:.3e}s vs baseline {b:.3e}s (>{:.0}% wall-clock regression)",
+                    (WALL_CLOCK_SLACK - 1.0) * 100.0
+                ));
+            }
+        }
+        (Json::Str(_), Json::Str(_))
+        | (Json::Bool(_), Json::Bool(_))
+        | (Json::Null, Json::Null) => {}
+        _ => rep.failures.push(format!("{path}: field changed JSON type")),
+    }
+}
+
+/// Find the current-table row matching a baseline row: by `threads` value
+/// when both are objects carrying one (rows may reorder), else by index.
+fn match_row<'a>(base_row: &Json, cur_rows: &'a [Json], index: usize) -> Option<&'a Json> {
+    if let Some(bt) = base_row.get("threads") {
+        if let Some(found) = cur_rows.iter().find(|c| c.get("threads") == Some(bt)) {
+            return Some(found);
+        }
+        return None;
+    }
+    cur_rows.get(index)
+}
+
+/// Hard-fail on any `bitwise_equal: false` anywhere in the current table —
+/// the determinism contract is load-bearing regardless of baseline shape.
+fn scan_determinism(path: &str, cur: &Json, rep: &mut CheckReport) {
+    match cur {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                if k == "bitwise_equal" && *v == Json::Bool(false) {
+                    rep.failures.push(format!("{path}.{k}: determinism contract violated"));
+                }
+                scan_determinism(&format!("{path}.{k}"), v, rep);
+            }
+        }
+        Json::Arr(a) => {
+            for (i, v) in a.iter().enumerate() {
+                scan_determinism(&format!("{path}[{i}]"), v, rep);
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(secs: f64, bitwise: bool) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("pool_dispatch".into())),
+            ("calls", Json::Num(100.0)),
+            (
+                "rows",
+                Json::Arr(vec![
+                    Json::obj(vec![
+                        ("threads", Json::Num(2.0)),
+                        ("pool_seconds_per_call", Json::Num(secs)),
+                        ("bitwise_equal", Json::Bool(bitwise)),
+                    ]),
+                    Json::obj(vec![
+                        ("threads", Json::Num(4.0)),
+                        ("pool_seconds_per_call", Json::Num(secs * 1.5)),
+                        ("bitwise_equal", Json::Bool(true)),
+                    ]),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn identical_tables_pass_clean() {
+        let t = table(0.01, true);
+        let rep = check_bench(&t, &t);
+        assert!(rep.ok(), "{:?}", rep.failures);
+        assert!(rep.warnings.is_empty(), "{:?}", rep.warnings);
+    }
+
+    #[test]
+    fn missing_field_is_a_hard_failure() {
+        let base = table(0.01, true);
+        let mut cur = table(0.01, true);
+        if let Json::Obj(m) = &mut cur {
+            m.remove("calls");
+        }
+        let rep = check_bench(&cur, &base);
+        assert!(!rep.ok());
+        assert!(rep.failures.iter().any(|f| f.contains("calls")), "{:?}", rep.failures);
+    }
+
+    #[test]
+    fn bitwise_false_is_a_hard_failure_even_with_matching_baseline() {
+        let base = table(0.01, false);
+        let cur = table(0.01, false);
+        let rep = check_bench(&cur, &base);
+        assert!(!rep.ok());
+        assert!(rep.failures.iter().any(|f| f.contains("determinism")), "{:?}", rep.failures);
+    }
+
+    #[test]
+    fn slow_timing_warns_but_does_not_fail() {
+        let base = table(0.01, true);
+        let cur = table(0.02, true); // 2x the baseline, well past 25%
+        let rep = check_bench(&cur, &base);
+        assert!(rep.ok(), "{:?}", rep.failures);
+        assert!(!rep.warnings.is_empty());
+        // tiny absolute times never warn, whatever the ratio
+        let rep = check_bench(&table(4e-5, true), &table(1e-5, true));
+        assert!(rep.warnings.is_empty(), "{:?}", rep.warnings);
+    }
+
+    fn rows_mut(t: &mut Json) -> &mut Vec<Json> {
+        match t {
+            Json::Obj(m) => match m.get_mut("rows") {
+                Some(Json::Arr(rows)) => rows,
+                _ => panic!("table has no rows array"),
+            },
+            _ => panic!("table is not an object"),
+        }
+    }
+
+    #[test]
+    fn rows_match_by_threads_not_position() {
+        let base = table(0.01, true);
+        let mut cur = table(0.01, true);
+        rows_mut(&mut cur).reverse();
+        let rep = check_bench(&cur, &base);
+        assert!(rep.ok(), "{:?}", rep.failures);
+        // a dropped thread budget is structural drift
+        rows_mut(&mut cur).pop();
+        let rep = check_bench(&cur, &base);
+        assert!(!rep.ok());
+    }
+
+    #[test]
+    fn type_and_bench_name_changes_fail() {
+        let base = table(0.01, true);
+        let mut cur = table(0.01, true);
+        if let Json::Obj(m) = &mut cur {
+            m.insert("calls".into(), Json::Str("100".into()));
+        }
+        let rep = check_bench(&cur, &base);
+        assert!(rep.failures.iter().any(|f| f.contains("type")), "{:?}", rep.failures);
+
+        let mut renamed = table(0.01, true);
+        if let Json::Obj(m) = &mut renamed {
+            m.insert("bench".into(), Json::Str("other".into()));
+        }
+        let rep = check_bench(&renamed, &base);
+        assert!(rep.failures.iter().any(|f| f.contains("identifier")), "{:?}", rep.failures);
+    }
+}

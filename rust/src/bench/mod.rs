@@ -2,7 +2,9 @@
 //! table/figure (see `tables`). The CLI (`ssnal-en bench-*`) runs full-size
 //! versions; `cargo bench` (rust/benches/bench_main.rs) runs scaled-down ones.
 
+pub mod check;
 pub mod harness;
 pub mod tables;
 
+pub use check::{check_bench, CheckReport};
 pub use harness::{measure, measure_once, MeasureConfig};

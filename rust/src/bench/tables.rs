@@ -1005,9 +1005,134 @@ pub fn shard_linalg_json(
     .to_string()
 }
 
+// ---------------------------------------------------------------------------
+// Persistent-pool dispatch overhead — warm pool vs scoped spawn-per-call
+// ---------------------------------------------------------------------------
+
+/// One measured thread budget of the dispatch-overhead comparison.
+#[derive(Clone, Debug)]
+pub struct PoolDispatchRow {
+    /// Thread budget handed to both execution strategies (≥ 2; budget 1
+    /// dispatches inline under either strategy).
+    pub threads: usize,
+    /// Jobs per `run_tasks` call (one per participant slot).
+    pub jobs: usize,
+    /// Mean seconds per call dispatched through the persistent pool.
+    pub pool_seconds_per_call: f64,
+    /// Mean seconds per call with scoped spawn-per-call workers.
+    pub scoped_seconds_per_call: f64,
+    /// `scoped / pool` (> 1 means the pool dispatches cheaper).
+    pub dispatch_speedup: f64,
+    /// Whether a sharded kernel routed through the warm pool reproduced the
+    /// 1-thread bits, on a first call and again on a repeat (warm-reuse) call.
+    pub bitwise_equal: bool,
+}
+
+/// Measure per-call dispatch overhead of the persistent pool against the
+/// scoped spawn-per-call baseline (`parallel::pool::run_tasks_scoped`): each
+/// row times `calls` batches of `threads` trivial jobs under both strategies,
+/// then verifies the warm pool's determinism on a sharded dot product.
+pub fn pool_dispatch_rows(calls: usize, threads_list: &[usize]) -> (Table, Vec<PoolDispatchRow>) {
+    use crate::parallel::{pool, shard};
+
+    let calls = calls.max(1);
+    // Deterministic operands for the bitwise leg: a dot big enough to fan
+    // out under its forced plan.
+    let va: Vec<f64> = (0..4001).map(|i| ((i % 89) as f64) * 0.021 - 0.9).collect();
+    let vb: Vec<f64> = (0..4001).map(|i| ((i % 71) as f64) * 0.017 - 0.6).collect();
+    let plan = shard::Plan::with_shards(8);
+    let reference = shard::with_threads(1, || shard::dot_planned(plan, &va, &vb));
+
+    let title = format!("Persistent-pool dispatch: {calls} calls/row of `threads` trivial jobs");
+    let mut t = Table::new(&[
+        "threads",
+        "jobs/call",
+        "pool(s/call)",
+        "scoped(s/call)",
+        "speedup",
+        "bitwise",
+    ])
+    .with_title(&title);
+    let cfg = MeasureConfig { warmup: 1, reps: 3 };
+    let mut rows = Vec::with_capacity(threads_list.len());
+    for &threads in threads_list {
+        let threads = threads.max(2);
+        let mk_jobs = || (0..threads).map(|k| move || (k as f64).sqrt()).collect::<Vec<_>>();
+        let (st_pool, _) = measure(cfg, || {
+            for _ in 0..calls {
+                std::hint::black_box(pool::run_tasks(threads, mk_jobs()));
+            }
+        });
+        let (st_scoped, _) = measure(cfg, || {
+            for _ in 0..calls {
+                std::hint::black_box(pool::run_tasks_scoped(threads, mk_jobs()));
+            }
+        });
+        let first = shard::with_threads(threads, || shard::dot_planned(plan, &va, &vb));
+        let warm = shard::with_threads(threads, || shard::dot_planned(plan, &va, &vb));
+        let bitwise_equal =
+            first.to_bits() == reference.to_bits() && warm.to_bits() == reference.to_bits();
+        let row = PoolDispatchRow {
+            threads,
+            jobs: threads,
+            pool_seconds_per_call: st_pool.mean / calls as f64,
+            scoped_seconds_per_call: st_scoped.mean / calls as f64,
+            dispatch_speedup: st_scoped.mean / st_pool.mean.max(1e-12),
+            bitwise_equal,
+        };
+        t.row(vec![
+            format!("{}", row.threads),
+            format!("{}", row.jobs),
+            format!("{:.2e}", row.pool_seconds_per_call),
+            format!("{:.2e}", row.scoped_seconds_per_call),
+            format!("{:.2}x", row.dispatch_speedup),
+            format!("{}", row.bitwise_equal),
+        ]);
+        rows.push(row);
+    }
+    (t, rows)
+}
+
+/// Render the pool-dispatch bench as the JSON payload CI uploads
+/// (`BENCH_pool_dispatch.json`).
+pub fn pool_dispatch_json(rows: &[PoolDispatchRow], calls: usize) -> String {
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("threads", Json::Num(r.threads as f64)),
+                ("jobs", Json::Num(r.jobs as f64)),
+                ("pool_seconds_per_call", Json::Num(r.pool_seconds_per_call)),
+                ("scoped_seconds_per_call", Json::Num(r.scoped_seconds_per_call)),
+                ("dispatch_speedup", Json::Num(r.dispatch_speedup)),
+                ("bitwise_equal", Json::Bool(r.bitwise_equal)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("pool_dispatch".to_string())),
+        ("calls", Json::Num(calls as f64)),
+        ("rows", Json::Arr(row_objs)),
+    ])
+    .to_string()
+}
+
 #[cfg(test)]
 mod shard_bench_tests {
     use super::*;
+
+    #[test]
+    fn pool_dispatch_rows_tiny() {
+        let (t, rows) = pool_dispatch_rows(3, &[2]);
+        assert_eq!(t.len(), 1);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert!(r.bitwise_equal, "{rows:?}");
+        assert!(r.pool_seconds_per_call > 0.0 && r.scoped_seconds_per_call > 0.0);
+        let js = pool_dispatch_json(&rows, 3);
+        assert!(js.contains("pool_dispatch"), "{js}");
+        assert!(js.contains("scoped_seconds_per_call"), "{js}");
+    }
 
     #[test]
     fn shard_bench_rows_tiny() {

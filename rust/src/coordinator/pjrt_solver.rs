@@ -184,6 +184,7 @@ pub fn solve_pjrt(
         x,
         y,
         active_set,
+        screen_survivors: None,
         objective,
         iterations: outer,
         inner_iterations: total_inner,

@@ -11,15 +11,18 @@
 //!   Gap-Safe screening, celer-style working sets),
 //! * [`prox`] — the Elastic Net proximal/conjugate toolbox (paper §2),
 //! * [`path`] / [`tuning`] — warm-started λ-paths and CV/GCV/e-BIC tuning (§3.3),
-//! * [`parallel`] — the two-layer execution engine. Layer 1 parallelizes
-//!   *across* the λ-grid: contiguous warm-start chains distributed over a
-//!   work-stealing `std::thread` pool, with per-chain Gap-Safe screening and
-//!   cross-chain truncation coordination. Layer 2 ([`parallel::shard`])
-//!   parallelizes *within* one solve: the `Aᵀy`/`A_J u`/Gram/CG-mat-vec
-//!   kernels shard their column dimension over the same pool with
-//!   fixed-order tree reductions. Both layers are bitwise-deterministic:
-//!   for a fixed chain split and problem shape the output is identical at
-//!   every thread count (`SSNAL_THREADS` governs the within-solve budget),
+//! * [`parallel`] — the two-layer execution engine over one **persistent
+//!   worker pool** (long-lived parked `std::thread` workers, woken per
+//!   kernel call; see [`parallel::pool`]). Layer 1 parallelizes *across*
+//!   the λ-grid: contiguous warm-start chains over work-stealing deques,
+//!   with per-chain Gap-Safe screening and cross-chain truncation
+//!   coordination. Layer 2 ([`parallel::shard`]) parallelizes *within* one
+//!   solve: the `Aᵀy`/`A_J u`/Gram/CG-mat-vec/direct-Newton-triangle
+//!   kernels and the Gap-Safe scoring sweeps shard their column dimension
+//!   over the same pool with fixed-order tree reductions. Both layers are
+//!   bitwise-deterministic: for a fixed chain split and problem shape the
+//!   output is identical at every thread count and pool warmth
+//!   (`SSNAL_THREADS` governs the within-solve budget),
 //! * [`data`] — synthetic, LIBSVM/polynomial-expansion and SNP/GWAS pipelines (§4),
 //! * [`runtime`] — the artifact manifest/buffer contract for the AOT-compiled
 //!   JAX/Pallas graphs (execution needs an XLA/PJRT binding the offline
@@ -35,8 +38,12 @@
 //! `cargo test -q` (run twice, under `SSNAL_THREADS=1` and `=4`, so the
 //! sharding determinism contract is exercised on every push), `cargo fmt
 //! --check` and `cargo clippy -- -D warnings`, plus a bench-smoke job that
-//! runs the parallel-path and shard-linalg benchmarks on tiny synthetic
-//! problems and uploads the resulting `BENCH_*.json` tables.
+//! runs the parallel-path, shard-linalg and pool-dispatch benchmarks on tiny
+//! synthetic problems and uploads the resulting `BENCH_*.json` tables, and a
+//! bench-regression job that diffs them against the committed baselines in
+//! `rust/benches/baselines/` via `ssnal-en bench-check` ([`bench::check`]:
+//! structural drift and determinism violations hard-fail; wall-clock
+//! regressions >25% annotate without failing).
 
 // Numeric-kernel idioms this codebase uses deliberately (index loops that
 // mirror the paper's math, solver entry points with many tuning knobs).

@@ -54,6 +54,7 @@ fn main() {
         "bench-d4" => cmd_d4(&args),
         "bench-ablation" => cmd_ablation(&args),
         "bench-parallel" => cmd_bench_parallel(&args),
+        "bench-check" => cmd_bench_check(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
         "help" | "--help" => {
             print_help();
@@ -93,6 +94,9 @@ fn print_help() {
          bench-parallel   --n 2e4 --m 200 --grid 40 --threads 1,2,4 [--no-screening] [--out BENCH_parallel_path.json]\n\
          \x20                --shard-n 1e5 --shard-m 500 --shard-threads 1,2,4 [--no-shard-bench]\n\
          \x20                [--shard-out BENCH_shard_linalg.json]\n\
+         \x20                --pool-calls 200 --pool-threads 2,4 [--no-pool-bench]\n\
+         \x20                [--pool-out BENCH_pool_dispatch.json]\n\
+         bench-check      --current BENCH_x.json --baseline benches/baselines/BENCH_x.json\n\
          artifacts-check  [--artifacts-dir artifacts]\n"
     );
 }
@@ -411,34 +415,106 @@ fn cmd_bench_parallel(args: &Args) -> Result<()> {
     // budget, plus the SIMD-width audit backing blas::UNROLL. The default
     // shard problem (500×1e5) is deliberately big; --no-shard-bench skips it
     // for path-only runs.
-    if args.get_flag("no-shard-bench") {
-        return Ok(());
-    }
-    let shard_threads = args.get_usize_list("shard-threads", &[1, 2, 4]).map_err(Error::msg)?;
-    let shard_n = args.get_usize("shard-n", 100_000).map_err(Error::msg)?;
-    let shard_m = args.get_usize("shard-m", 500).map_err(Error::msg)?;
-    let (st, srows, audit) = tables::shard_linalg_rows(shard_n, shard_m, &shard_threads, tol, seed);
-    println!();
-    st.print();
-    println!(
-        "width audit (len {}): dot4 {:.3e}s vs dot8 {:.3e}s, axpy4 {:.3e}s vs axpy8 {:.3e}s",
-        audit.len, audit.dot4_seconds, audit.dot8_seconds, audit.axpy4_seconds, audit.axpy8_seconds
-    );
-    if let Some(path) = args.get("shard-out") {
-        let json = tables::shard_linalg_json(&srows, &audit, shard_n, shard_m);
-        if let Some(parent) = PathBuf::from(path).parent() {
-            std::fs::create_dir_all(parent)?;
+    let mut determinism_ok = true;
+    if !args.get_flag("no-shard-bench") {
+        let shard_threads = args.get_usize_list("shard-threads", &[1, 2, 4]).map_err(Error::msg)?;
+        let shard_n = args.get_usize("shard-n", 100_000).map_err(Error::msg)?;
+        let shard_m = args.get_usize("shard-m", 500).map_err(Error::msg)?;
+        let (st, srows, audit) =
+            tables::shard_linalg_rows(shard_n, shard_m, &shard_threads, tol, seed);
+        println!();
+        st.print();
+        println!(
+            "width audit (len {}): dot4 {:.3e}s vs dot8 {:.3e}s, axpy4 {:.3e}s vs axpy8 {:.3e}s",
+            audit.len,
+            audit.dot4_seconds,
+            audit.dot8_seconds,
+            audit.axpy4_seconds,
+            audit.axpy8_seconds
+        );
+        if let Some(path) = args.get("shard-out") {
+            let json = tables::shard_linalg_json(&srows, &audit, shard_n, shard_m);
+            if let Some(parent) = PathBuf::from(path).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, json)?;
+            println!("wrote {path}");
         }
-        std::fs::write(path, json)?;
-        println!("wrote {path}");
+        determinism_ok &= srows.iter().all(|r| r.bitwise_equal);
     }
+
+    // Persistent-pool dispatch overhead vs the scoped spawn-per-call
+    // baseline — the tentpole claim: parked-worker wakeups must dispatch
+    // cheaper than thread spawns at every measured budget.
+    if !args.get_flag("no-pool-bench") {
+        let pool_calls = args.get_usize("pool-calls", 200).map_err(Error::msg)?.max(1);
+        let pool_threads = args.get_usize_list("pool-threads", &[2, 4]).map_err(Error::msg)?;
+        let (pt, prows) = tables::pool_dispatch_rows(pool_calls, &pool_threads);
+        println!();
+        pt.print();
+        if let Some(best) = prows.iter().map(|r| r.dispatch_speedup).reduce(f64::max) {
+            println!("\nbest pool-vs-scoped dispatch speedup: {best:.2}x");
+        }
+        if let Some(path) = args.get("pool-out") {
+            let json = tables::pool_dispatch_json(&prows, pool_calls);
+            if let Some(parent) = PathBuf::from(path).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, json)?;
+            println!("wrote {path}");
+        }
+        determinism_ok &= prows.iter().all(|r| r.bitwise_equal);
+        // The tentpole claim is a gate, not a table: parked-worker dispatch
+        // must beat spawn-per-call at every measured budget (the expected
+        // margin is several-fold, so this does not flake on noisy boxes).
+        if let Some(slow) = prows.iter().find(|r| r.dispatch_speedup <= 1.0) {
+            return Err(Error::msg(format!(
+                "persistent pool dispatched no cheaper than scoped spawn at {} threads \
+                 ({:.2e}s/call vs {:.2e}s/call)",
+                slow.threads, slow.pool_seconds_per_call, slow.scoped_seconds_per_call
+            )));
+        }
+    }
+
     // The determinism contract is load-bearing: a bench run that observes a
     // bitwise divergence must fail loudly (CI runs this on every push).
-    if srows.iter().any(|r| !r.bitwise_equal) {
+    if !determinism_ok {
         return Err(Error::msg(
-            "within-solve sharding produced thread-dependent bits (see shard table)",
+            "sharded kernels produced thread-dependent bits (see bench tables)",
         ));
     }
+    Ok(())
+}
+
+/// Diff a fresh `BENCH_*.json` against its committed baseline (the CI
+/// `bench-regression` gate; see `rust/src/bench/check.rs` for the policy).
+/// Warnings print as GitHub annotations and never fail; structural drift or
+/// a determinism violation exits non-zero.
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    let current = args
+        .get("current")
+        .ok_or_else(|| Error::msg("bench-check requires --current <BENCH_*.json>"))?;
+    let baseline = args
+        .get("baseline")
+        .ok_or_else(|| Error::msg("bench-check requires --baseline <BENCH_*.json>"))?;
+    let cur = ssnal_en::util::json::Json::parse(&std::fs::read_to_string(current)?)
+        .map_err(|e| Error::msg(format!("{current}: {e}")))?;
+    let base = ssnal_en::util::json::Json::parse(&std::fs::read_to_string(baseline)?)
+        .map_err(|e| Error::msg(format!("{baseline}: {e}")))?;
+    let rep = ssnal_en::bench::check_bench(&cur, &base);
+    for w in &rep.warnings {
+        println!("::warning title=bench-regression::{w}");
+    }
+    for f in &rep.failures {
+        println!("::error title=bench-regression::{f}");
+    }
+    if !rep.ok() {
+        return Err(Error::msg(format!(
+            "{} hard failure(s) comparing {current} against {baseline}",
+            rep.failures.len()
+        )));
+    }
+    println!("bench-check ok: {current} vs {baseline} ({} warning(s))", rep.warnings.len());
     Ok(())
 }
 

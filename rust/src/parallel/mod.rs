@@ -16,16 +16,27 @@
 //!
 //! Execution plumbing shared by both layers:
 //!
-//! * [`pool`] — scoped workers drawing indexed jobs from work-stealing
-//!   deques ([`steal`]), with order-preserving result collection,
-//! * [`run_tasks`] — the one scheduling primitive everything routes through.
+//! * [`pool`] — a **persistent worker pool**: `available_threads() − 1`
+//!   long-lived `std::thread` workers spawned once per process on first
+//!   dispatch, parked on a condvar while idle and woken per kernel call.
+//!   Each call publishes a batch of indexed jobs drawn from work-stealing
+//!   deques ([`steal`]) with order-preserving result collection; the caller
+//!   always participates, so a busy pool degrades to the serial loop rather
+//!   than blocking. Dispatch costs a wake, not a spawn — which is what makes
+//!   sharding profitable below O(mn) kernel granularity (`bench-parallel
+//!   --pool-*` measures the per-call overhead against the retained
+//!   scoped-spawn baseline). See [`pool`]'s docs for lifecycle, parking,
+//!   the batch protocol and the `SSNAL_THREADS` budget interaction.
+//! * [`run_tasks`] — the one scheduling primitive everything routes through:
+//!   λ-chains, within-solve shards, and the CV/tuning criteria fan-out.
 //!
 //! **Determinism contract (both layers).** Scheduling never touches floats.
 //! Layer 1: every per-point float depends only on chain-local state and
 //! results are assembled by grid index, so for a **fixed chunking**
 //! ([`Chunking::Chains`] / [`Chunking::PointsPerChain`]) the output is
 //! bitwise-identical across thread counts — including when the stealing pool
-//! migrates a chain to an idle worker — and a one-chain run is
+//! migrates a chain to an idle worker, and however warm the persistent pool
+//! is — and a one-chain run is
 //! bitwise-identical to `path::solve_path`. [`Chunking::Auto`] instead ties
 //! the chain count to the resolved thread count for maximum parallelism —
 //! different thread requests then take different warm-start chains and agree
@@ -266,6 +277,7 @@ fn solve_point_screened(
             x: vec![0.0; n],
             y: b.iter().map(|v| -v).collect(),
             active_set: Vec::new(),
+            screen_survivors: Some(0),
             objective: 0.5 * blas::nrm2_sq(b),
             iterations: 0,
             inner_iterations: 0,
@@ -297,7 +309,8 @@ fn solve_point_screened(
     let active_set: Vec<usize> = sub.result.active_set.iter().map(|&k| survivors[k]).collect();
     warm.x = Some(x_full.clone());
     warm.sigma = warm_sub.sigma;
-    let result = SolveResult { x: x_full, active_set, ..sub.result };
+    let result =
+        SolveResult { x: x_full, active_set, screen_survivors: Some(kept), ..sub.result };
     (PathPoint { c_lambda: c, lam1, lam2, result }, kept)
 }
 

@@ -1,16 +1,54 @@
-//! Dependency-free work-scheduling pool: scoped `std::thread` workers drawing
-//! indexed jobs from per-worker work-stealing deques ([`StealQueues`]) and
-//! pushing results back on a channel.
+//! Persistent worker pool: the process-wide scheduling substrate both
+//! parallelism layers (λ-chains and within-solve shards) dispatch through.
 //!
-//! Results are collected by job index, so the output order — and therefore
-//! every downstream float — is independent of worker scheduling: a job that
-//! ran because it was *stolen* produces exactly the bits it would have
-//! produced under the static split. A panicking job propagates out of
-//! [`run_tasks`] when the thread scope joins, exactly like the sequential
-//! loop it replaces.
+//! # Lifecycle
+//!
+//! The pool is spawned lazily on the first multi-threaded [`run_tasks`] call:
+//! `available_threads() − 1` long-lived `std::thread` workers (the calling
+//! thread is always the remaining participant). Workers **park** on a condvar
+//! while no batch is in flight and are woken per kernel call, so dispatch
+//! costs a mutex hand-off and a wake — not a thread spawn — and sharding
+//! stays profitable well below O(mn) kernel granularity. The pool lives for
+//! the rest of the process; there is no shutdown protocol (workers hold no
+//! resources beyond a parked thread, and the OS reclaims them at exit).
+//!
+//! # Batch protocol
+//!
+//! Each [`run_tasks`] call publishes a *batch*: indexed jobs pre-split into
+//! per-slot work-stealing deques ([`StealQueues`]), one result slot per job,
+//! and a participant cap equal to the call's resolved thread budget. The
+//! caller is always participant 0 and drains jobs itself — a fully busy pool
+//! degrades a call to the serial loop, it never blocks it — while parked
+//! workers join as participants 1..cap. Batches from concurrent or nested
+//! calls (a chain worker sharding its own kernels) coexist in the publish
+//! list; workers serve whichever batch has a free slot. The caller returns
+//! only after unlisting its batch *and* observing that every joined
+//! participant has left it, which is what makes handing workers raw pointers
+//! to the caller's stack sound.
+//!
+//! # Thread budgets
+//!
+//! `num_threads` is resolved per call ([`resolve_threads`]; `0` = all cores)
+//! and caps how many participants may join that batch — the chain engine
+//! hands each chain worker `threads / chains` spare cores for its
+//! within-solve shards (`SSNAL_THREADS`, see [`crate::parallel::shard`]), and
+//! because chain participants occupy pool workers, exactly the spare workers
+//! remain parked for the nested shard batches: the two layers compose without
+//! oversubscribing.
+//!
+//! # Determinism
+//!
+//! Results are filed by job index, so the output order — and therefore every
+//! downstream float — is independent of which participant ran a job, whether
+//! it was stolen, and how warm the pool is: a batch on a warm pool produces
+//! exactly the bits of a fresh-pool or scoped-spawn run. A panicking job
+//! propagates out of [`run_tasks`] on the calling thread, exactly like the
+//! sequential loop it replaces.
 
 use crate::parallel::steal::StealQueues;
-use std::sync::mpsc;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Condvar, Mutex, Once, OnceLock};
 
 /// Threads the host exposes (≥ 1).
 pub fn available_threads() -> usize {
@@ -26,8 +64,142 @@ pub fn resolve_threads(requested: usize) -> usize {
     }
 }
 
-/// Execute `jobs` on up to `num_threads` workers (`0` = all available cores),
-/// returning the outputs in job order.
+/// One job's result cell. Each index is produced by exactly one participant
+/// (a [`StealQueues`] pop yields it exactly once), so the cell has at most
+/// one writer, and the publisher only reads it after the batch retires.
+struct ResultSlot<T>(UnsafeCell<Option<T>>);
+
+/// One in-flight `run_tasks` call, allocated on the publisher's stack and
+/// shared with workers through a type-erased [`BatchHandle`].
+struct Batch<T, F> {
+    /// Indexed jobs, pre-split into one deque per participant slot.
+    queues: StealQueues<F>,
+    /// One result cell per job, filed by job index.
+    results: Vec<ResultSlot<T>>,
+    /// Participants currently inside [`run_batch`] (joins are registered
+    /// under the pool lock; the publisher waits for this to reach zero).
+    active: AtomicUsize,
+    /// First panic payload caught from a job, re-raised by the publisher.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// Type-erased view of a [`Batch`] stored in the publish list.
+///
+/// Safety invariant (upheld by [`run_tasks`]): the pointed-to batch outlives
+/// its listing — the publisher removes the handle and then blocks until
+/// `active == 0` before its stack frame (and the batch) goes away.
+#[derive(Clone, Copy)]
+struct BatchHandle {
+    batch: *const (),
+    run: unsafe fn(*const (), usize),
+    active: *const AtomicUsize,
+    /// Total participant slots (the publisher holds slot 0).
+    cap: usize,
+    /// Next slot to hand to a joining worker (guarded by the pool lock).
+    next_slot: usize,
+    id: u64,
+}
+
+// Safety: the raw pointers reference a Batch that the publisher keeps alive
+// until every participant has left it (see the retire sequence in
+// `run_tasks`); the Batch's shared state is the Sync StealQueues, the atomic
+// counter, the panic mutex, and result cells with disjoint single writers.
+unsafe impl Send for BatchHandle {}
+
+struct PoolState {
+    batches: Vec<BatchHandle>,
+    next_id: u64,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Parks idle workers; notified when a batch is published.
+    work_cv: Condvar,
+    /// Parks publishers waiting for their batch's participants to drain.
+    done_cv: Condvar,
+}
+
+fn shared() -> &'static Shared {
+    static SHARED: OnceLock<Shared> = OnceLock::new();
+    SHARED.get_or_init(|| Shared {
+        state: Mutex::new(PoolState { batches: Vec::new(), next_id: 0 }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+    })
+}
+
+/// Spawn the persistent workers exactly once, on first parallel dispatch.
+fn ensure_workers() {
+    static SPAWN: Once = Once::new();
+    SPAWN.call_once(|| {
+        for w in 0..available_threads().saturating_sub(1) {
+            let _ = std::thread::Builder::new()
+                .name(format!("ssnal-pool-{w}"))
+                .spawn(worker_loop);
+        }
+    });
+}
+
+/// The body of one persistent worker: park until a batch has a free slot,
+/// join it, drain jobs, report back, park again.
+fn worker_loop() {
+    let sh = shared();
+    let mut st = sh.state.lock().expect("pool state lock");
+    loop {
+        if let Some(entry) = st.batches.iter_mut().find(|b| b.next_slot < b.cap) {
+            let slot = entry.next_slot;
+            entry.next_slot += 1;
+            let handle = *entry;
+            // Register under the lock: the publisher's retire sequence
+            // (unlist, then wait for active == 0) can then never miss us.
+            unsafe { (*handle.active).fetch_add(1, Ordering::Relaxed) };
+            drop(st);
+            unsafe { (handle.run)(handle.batch, slot) };
+            let last = unsafe { (*handle.active).fetch_sub(1, Ordering::AcqRel) } == 1;
+            st = sh.state.lock().expect("pool state lock");
+            if last {
+                // Notify under the lock so a publisher between its counter
+                // check and its condvar wait cannot miss the wake.
+                sh.done_cv.notify_all();
+            }
+        } else {
+            st = sh.work_cv.wait(st).expect("pool state lock");
+        }
+    }
+}
+
+/// Drain jobs from `slot`'s deque (stealing once it is empty) and file each
+/// result at its job index. Job panics are caught and parked in the batch;
+/// the publisher re-raises the first one after the batch retires.
+///
+/// Safety: `batch` must point to a live `Batch<T, F>` whose publisher does
+/// not return before every participant has left this function, and `slot`
+/// must be below the batch's deque count.
+unsafe fn run_batch<T, F>(batch: *const (), slot: usize)
+where
+    F: FnOnce() -> T + Send,
+    T: Send,
+{
+    let batch = &*(batch as *const Batch<T, F>);
+    while let Some((index, job)) = batch.queues.pop(slot) {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)) {
+            // Safety: StealQueues yields each index exactly once, so this
+            // cell has no other writer.
+            Ok(value) => *batch.results[index].0.get() = Some(value),
+            Err(payload) => {
+                let mut first = batch.panic.lock().expect("pool panic slot");
+                if first.is_none() {
+                    *first = Some(payload);
+                }
+            }
+        }
+    }
+}
+
+/// Execute `jobs` on up to `num_threads` participants (`0` = all available
+/// cores), returning the outputs in job order. Dispatches through the
+/// persistent pool; the caller always participates, so progress never
+/// depends on a worker being free.
 pub fn run_tasks<T, F>(num_threads: usize, jobs: Vec<F>) -> Vec<T>
 where
     F: FnOnce() -> T + Send,
@@ -39,7 +211,85 @@ where
     }
     let workers = resolve_threads(num_threads).min(n);
     if workers <= 1 {
-        // Single-threaded fallback: no deques, no locks, same output.
+        // Single-threaded fallback: no pool traffic, no locks, same output.
+        return jobs.into_iter().map(|job| job()).collect();
+    }
+    ensure_workers();
+
+    let batch = Batch {
+        queues: StealQueues::new(jobs, workers),
+        results: (0..n).map(|_| ResultSlot(UnsafeCell::new(None))).collect(),
+        active: AtomicUsize::new(0),
+        panic: Mutex::new(None),
+    };
+    let erased = &batch as *const Batch<T, F> as *const ();
+    let sh = shared();
+    let id = {
+        let mut st = sh.state.lock().expect("pool state lock");
+        let id = st.next_id;
+        st.next_id += 1;
+        st.batches.push(BatchHandle {
+            batch: erased,
+            run: run_batch::<T, F>,
+            active: &batch.active,
+            cap: workers,
+            next_slot: 1,
+            id,
+        });
+        id
+    };
+    // Wake one parked worker per free slot — notify_all would stampede every
+    // parked worker (and its mutex reacquisition) on each kernel call, the
+    // exact overhead the persistent pool exists to avoid. Busy workers need
+    // no notification: they re-scan the batch list before re-parking.
+    for _ in 1..workers {
+        sh.work_cv.notify_one();
+    }
+
+    // The publisher is participant 0: it drains its own deque and then
+    // steals, so with every pool worker busy elsewhere the call degrades to
+    // the serial loop instead of waiting.
+    unsafe { run_batch::<T, F>(erased, 0) };
+
+    // Retire: unlist the batch so no new worker joins, then wait until every
+    // joined participant has left the (stack-allocated) batch. The Acquire
+    // load pairs with the workers' AcqRel decrements, making their result
+    // writes visible below.
+    {
+        let mut st = sh.state.lock().expect("pool state lock");
+        st.batches.retain(|b| b.id != id);
+        while batch.active.load(Ordering::Acquire) != 0 {
+            st = sh.done_cv.wait(st).expect("pool state lock");
+        }
+    }
+
+    if let Some(payload) = batch.panic.into_inner().expect("pool panic slot") {
+        // Preserve the scoped-spawn contract: a panicking job propagates out
+        // of run_tasks on the calling thread.
+        std::panic::resume_unwind(payload);
+    }
+    let results = batch.results;
+    results
+        .into_iter()
+        .map(|slot| slot.0.into_inner().expect("every job reports exactly one result"))
+        .collect()
+}
+
+/// The pre-pool execution model: spawn scoped workers per call and collect
+/// results over a channel. Semantically identical to [`run_tasks`] (same
+/// deques, same index-ordered output, same bits); kept as the measured
+/// baseline for the `bench-parallel --pool-*` dispatch-overhead comparison.
+pub fn run_tasks_scoped<T, F>(num_threads: usize, jobs: Vec<F>) -> Vec<T>
+where
+    F: FnOnce() -> T + Send,
+    T: Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = resolve_threads(num_threads).min(n);
+    if workers <= 1 {
         return jobs.into_iter().map(|job| job()).collect();
     }
 
@@ -112,7 +362,7 @@ mod tests {
 
     #[test]
     fn imbalanced_jobs_finish_and_keep_order() {
-        // One deliberately heavy job in worker 0's block: the stealing pool
+        // One deliberately heavy job in slot 0's block: the stealing pool
         // must still return every result at its own index.
         let jobs: Vec<_> = (0..16)
             .map(|i| {
@@ -137,5 +387,54 @@ mod tests {
         assert!(available_threads() >= 1);
         assert_eq!(resolve_threads(3), 3);
         assert_eq!(resolve_threads(0), available_threads());
+    }
+
+    #[test]
+    fn warm_pool_repeats_identically() {
+        // Repeated batches on the warm pool are bitwise-identical to each
+        // other and to the scoped-spawn baseline.
+        let mk = || (0..32).map(|i| move || ((i * 37) as f64).sqrt().sin()).collect::<Vec<_>>();
+        let first = run_tasks(4, mk());
+        for _ in 0..10 {
+            assert_eq!(run_tasks(4, mk()), first);
+        }
+        assert_eq!(run_tasks_scoped(4, mk()), first);
+    }
+
+    #[test]
+    fn nested_batches_complete() {
+        // A pool-worker participant publishing its own inner batch (the
+        // chain-engine → shard nesting) must not deadlock the pool.
+        let jobs: Vec<_> = (0..4)
+            .map(|outer: usize| {
+                move || {
+                    let inner: Vec<_> = (0..8).map(|i| move || outer * 100 + i).collect();
+                    run_tasks(2, inner)
+                }
+            })
+            .collect();
+        let out = run_tasks(4, jobs);
+        for (outer, inner) in out.iter().enumerate() {
+            assert_eq!(inner, &(0..8).map(|i| outer * 100 + i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn job_panics_propagate_to_the_publisher() {
+        let jobs: Vec<_> = (0..8)
+            .map(|i: usize| {
+                move || {
+                    if i == 3 {
+                        panic!("pool job panic");
+                    }
+                    i
+                }
+            })
+            .collect();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_tasks(4, jobs)));
+        assert!(result.is_err(), "panic must propagate out of run_tasks");
+        // The pool survives a panicking batch.
+        let jobs: Vec<_> = (0..8).map(|i: usize| move || i + 1).collect();
+        assert_eq!(run_tasks(4, jobs), (1..=8).collect::<Vec<_>>());
     }
 }

@@ -4,12 +4,15 @@
 //! this module parallelizes *inside* one solve, where the paper's cost
 //! anatomy puts the remaining O(mn) and O(mr) sweeps: the `Aᵀy` dual sweep,
 //! the active-set `A_J u` accumulation, the `A_JᵀA_J` Gram build behind the
-//! Woodbury strategy, and the matrix-free CG mat-vec. Each kernel splits its
-//! column dimension into **shards** and fans the shards out through the
-//! pool's scheduling primitive ([`crate::parallel::run_tasks`], work-stealing
-//! deques). Workers are scoped threads spawned per kernel call — cheap
-//! relative to the O(mn) sweeps that shard today; a persistent pool is the
-//! named next lever in ROADMAP.md for finer-grained kernels.
+//! Woodbury strategy, the matrix-free CG mat-vec, the direct-Newton rank-1
+//! triangle build, and the Gap-Safe `dual_point`/survivor scoring sweeps.
+//! Each kernel splits its column dimension into **shards** and fans the
+//! shards out through the pool's scheduling primitive
+//! ([`crate::parallel::run_tasks`], work-stealing deques). The pool is
+//! **persistent** — parked `std::thread` workers woken per kernel call (see
+//! [`crate::parallel::pool`]'s module docs for lifecycle and parking) — so
+//! dispatch costs a condvar wake, not a thread spawn, and sharding pays off
+//! below O(mn) kernel granularity.
 //!
 //! # Determinism contract
 //!
@@ -439,6 +442,22 @@ pub fn gram_of_cols(a: &Mat, idx: &[usize], ridge: f64) -> Mat {
     g
 }
 
+/// Run one closure per plan-derived contiguous range of `0..units`, fanned
+/// over the pool, returning the per-range outputs **in range order** — the
+/// general sharded map behind the feature-wise screening sweeps
+/// (`dual_point` scoring, Gap-Safe survivor scans). The range split is a pure
+/// function of `(units, flops_per_unit)`, so for closures whose output is a
+/// pure function of their range the result is identical at every thread
+/// budget.
+pub fn map_ranges<T, F>(units: usize, flops_per_unit: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    let ranges = Plan::for_work(units, flops_per_unit.max(1)).split(units);
+    run_ranges(&ranges, f)
+}
+
 /// Map a closure over every column, sharded (feature-wise precomputes such as
 /// screening column norms). Per-element: output identical to the serial map.
 pub fn map_cols<T, F>(a: &Mat, flops_per_col: usize, f: F) -> Vec<T>
@@ -446,11 +465,84 @@ where
     T: Send,
     F: Fn(&[f64]) -> T + Sync,
 {
-    let n = a.cols();
-    let plan = Plan::for_work(n, flops_per_col.max(1));
-    let ranges = plan.split(n);
-    let outs = run_ranges(&ranges, |r| r.map(|j| f(a.col(j))).collect::<Vec<T>>());
+    let outs = map_ranges(a.cols(), flops_per_col, |r| {
+        r.map(|j| f(a.col(j))).collect::<Vec<T>>()
+    });
     outs.into_iter().flatten().collect()
+}
+
+/// Sharded rank-1 lower-triangle accumulation for the direct Newton build:
+/// `v[c.., c] += κ · Σ_{j∈active} a_j[c] · a_j[c..]` for every column `c` of
+/// the m×m matrix `v` — the `solve_direct` O(m²r) sweep. Shards own strided
+/// column sets (shard k takes c = k, k+S, …) so the shrinking triangle rows
+/// balance, mirroring [`gram_of_cols`]. Every entry folds over `j` in
+/// active-set order with the serial loop's exact `s != 0` skip, so the build
+/// is bitwise-invariant to the thread budget; multi-shard plans accumulate
+/// zero-based partials and add each column once, which matches the serial
+/// in-place loop bit for bit whenever `v`'s triangle starts at zero (as in
+/// `solve_direct`).
+pub fn rank1_lower_accum(a: &Mat, active: &[usize], kappa: f64, v: &mut Mat) {
+    let m = a.rows();
+    assert_eq!(v.rows(), m);
+    assert_eq!(v.cols(), m);
+    let plan = Plan::for_work(m * (m + 1) / 2, 2 * active.len().max(1));
+    if threads() <= 1 || plan.shards <= 1 {
+        // The exact pre-shard serial loop: j-outer rank-1 updates.
+        for &j in active {
+            let col = a.col(j);
+            for c in 0..m {
+                let s = kappa * col[c];
+                if s != 0.0 {
+                    let vc = v.col_mut(c);
+                    for row in c..m {
+                        vc[row] += s * col[row];
+                    }
+                }
+            }
+        }
+        return;
+    }
+    // The multi-shard path tree-folds zero-based partials and adds each
+    // column once; that matches the serial in-place fold bit for bit only
+    // from a zeroed triangle. Enforce the precondition in release too — the
+    // O(m²) scan is a 1/r fraction of the O(m²r) build it guards, and a
+    // silent violation would make output bits depend on the thread budget.
+    assert!(
+        (0..m).all(|c| (c..m).all(|r| v.get(r, c) == 0.0)),
+        "multi-shard rank1_lower_accum requires a zeroed lower triangle"
+    );
+    let shards = plan.shards.min(m);
+    let jobs: Vec<_> = (0..shards)
+        .map(|k| {
+            move || {
+                let mut cols = Vec::new();
+                let mut c = k;
+                while c < m {
+                    let mut vals = vec![0.0; m - c];
+                    for &j in active {
+                        let col = a.col(j);
+                        let s = kappa * col[c];
+                        if s != 0.0 {
+                            for (off, dst) in vals.iter_mut().enumerate() {
+                                *dst += s * col[c + off];
+                            }
+                        }
+                    }
+                    cols.push((c, vals));
+                    c += shards;
+                }
+                cols
+            }
+        })
+        .collect();
+    for cols in pool::run_tasks(threads(), jobs) {
+        for (c, vals) in cols {
+            let vc = v.col_mut(c);
+            for (off, val) in vals.into_iter().enumerate() {
+                vc[c + off] += val;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -567,5 +659,44 @@ mod tests {
         let sums = map_cols(&a, 4, |col| col.iter().sum::<f64>());
         let expect: Vec<f64> = (0..9).map(|j| a.col(j).iter().sum::<f64>()).collect();
         assert_eq!(sums, expect);
+    }
+
+    #[test]
+    fn map_ranges_tiles_in_order() {
+        // Per-range outputs come back in range order and tile 0..units.
+        let outs = map_ranges(257, 1 << 20, |r| r.collect::<Vec<usize>>());
+        let flat: Vec<usize> = outs.into_iter().flatten().collect();
+        assert_eq!(flat, (0..257).collect::<Vec<usize>>());
+        // degenerate: zero units still yields one (empty) range
+        let outs = map_ranges(0, 8, |r| r.len());
+        assert_eq!(outs, vec![0]);
+    }
+
+    #[test]
+    fn rank1_lower_accum_matches_explicit_sum() {
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let m = 17;
+        let a = Mat::from_fn(m, 40, |_, _| rng.next_gaussian());
+        let active: Vec<usize> = (0..40).step_by(2).collect();
+        let kappa = 0.6;
+        // reference: the explicit j-outer rank-1 loop on the lower triangle
+        let mut v_ref = Mat::zeros(m, m);
+        for &j in &active {
+            let col = a.col(j);
+            for c in 0..m {
+                let s = kappa * col[c];
+                if s != 0.0 {
+                    for row in c..m {
+                        let cur = v_ref.get(row, c);
+                        v_ref.set(row, c, cur + s * col[row]);
+                    }
+                }
+            }
+        }
+        for t in [1usize, 4] {
+            let mut v = Mat::zeros(m, m);
+            with_threads(t, || rank1_lower_accum(&a, &active, kappa, &mut v));
+            assert_eq!(v.as_slice(), v_ref.as_slice(), "threads={t}");
+        }
     }
 }

@@ -3,8 +3,10 @@
 //! The pool used to drain one `Mutex<mpsc::Receiver>`: correct, but every pop
 //! contends on a single lock, and the FIFO order means a worker that lands on
 //! a long job ties up the jobs queued behind it until someone else happens to
-//! reach the channel. [`StealQueues`] gives each worker its own deque, seeded
-//! with the contiguous block of jobs a static split would have assigned to it.
+//! reach the channel. [`StealQueues`] gives each participant slot of a batch
+//! (the publisher plus the persistent-pool workers that join it) its own
+//! deque, seeded with the contiguous block of jobs a static split would have
+//! assigned to it.
 //! A worker pops from the *front* of its own deque (preserving the
 //! cache-friendly static order) and, once empty, steals from the *back* of a
 //! victim's deque — the job farthest from the victim's current position, so

@@ -107,6 +107,7 @@ pub fn solve_admm(p: &EnetProblem, opts: &BaselineOptions, admm: &AdmmOptions) -
         x: w,
         y,
         active_set,
+        screen_survivors: None,
         objective,
         iterations: iters,
         inner_iterations: 0,

@@ -200,6 +200,7 @@ fn finish(
         x: st.x,
         y,
         active_set,
+        screen_survivors: None,
         objective,
         iterations: sweeps,
         inner_iterations: 0,

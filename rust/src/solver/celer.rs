@@ -180,6 +180,8 @@ pub fn solve_celer(p: &EnetProblem, opts: &BaselineOptions) -> SolveResult {
         x,
         y,
         active_set,
+        // working sets are heuristic, not a safe screen — report none
+        screen_survivors: None,
         objective,
         iterations: rounds,
         inner_iterations: inner,

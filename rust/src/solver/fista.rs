@@ -105,6 +105,7 @@ pub fn solve_fista(p: &EnetProblem, opts: &BaselineOptions, accelerated: bool) -
         x,
         y,
         active_set,
+        screen_survivors: None,
         objective,
         iterations: iters,
         inner_iterations: 0,

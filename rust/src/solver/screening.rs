@@ -13,6 +13,7 @@
 //! (its coefficient is zero at the optimum).
 
 use crate::linalg::blas;
+use crate::parallel::shard;
 use crate::solver::objective::{primal_objective, support_of};
 use crate::solver::types::{Algorithm, BaselineOptions, EnetProblem, SolveResult};
 
@@ -61,11 +62,21 @@ impl<'a> AugmentedView<'a> {
     /// way: D(θ) = ½‖b̃‖² − ½‖θ − b̃‖²). Returns `(dual_value, θ_top, θ_bottom)`.
     pub fn dual_point(&self, x: &[f64]) -> (f64, Vec<f64>, Vec<f64>) {
         let (mut top, mut bottom) = self.residual(x);
-        // ‖Ãᵀr̃‖∞
-        let mut zmax = 0.0f64;
-        for j in 0..self.p.n() {
-            zmax = zmax.max(self.col_dot(j, &top, &bottom).abs());
-        }
+        // ‖Ãᵀr̃‖∞ — the O(mn) scoring sweep, sharded over feature ranges.
+        // Every |Ã_jᵀr̃| is non-negative, so the max of the per-range maxima
+        // is bitwise-equal to the serial ascending-j fold at every budget.
+        let zmax = {
+            let (top_r, bottom_r) = (&top, &bottom);
+            shard::map_ranges(self.p.n(), 2 * self.p.m(), |range| {
+                let mut zmax = 0.0f64;
+                for j in range {
+                    zmax = zmax.max(self.col_dot(j, top_r, bottom_r).abs());
+                }
+                zmax
+            })
+            .into_iter()
+            .fold(0.0f64, f64::max)
+        };
         let s = if zmax > self.p.lam1 && zmax > 0.0 { self.p.lam1 / zmax } else { 1.0 };
         for v in top.iter_mut() {
             *v *= s;
@@ -85,20 +96,27 @@ impl<'a> AugmentedView<'a> {
     }
 
     /// Gap-Safe screen: returns the surviving feature indices given iterate `x`.
-    /// Every discarded feature provably has `x*_j = 0`.
+    /// Every discarded feature provably has `x*_j = 0`. The O(mn) survivor
+    /// scoring is sharded over feature ranges; concatenating the per-range
+    /// keeps in range order reproduces the serial ascending-j scan exactly.
     pub fn gap_safe_survivors(&self, x: &[f64]) -> Vec<usize> {
         let (dual, theta_top, theta_bottom) = self.dual_point(x);
         let gap = (self.primal(x) - dual).max(0.0);
         let radius = (2.0 * gap).sqrt();
-        let mut keep = Vec::new();
-        for j in 0..self.p.n() {
-            let score = self.col_dot(j, &theta_top, &theta_bottom).abs()
-                + radius * self.col_norms[j];
-            if score >= self.p.lam1 - 1e-12 {
-                keep.push(j);
+        let (top, bottom) = (&theta_top, &theta_bottom);
+        shard::map_ranges(self.p.n(), 2 * self.p.m(), |range| {
+            let mut keep = Vec::new();
+            for j in range {
+                let score = self.col_dot(j, top, bottom).abs() + radius * self.col_norms[j];
+                if score >= self.p.lam1 - 1e-12 {
+                    keep.push(j);
+                }
             }
-        }
-        keep
+            keep
+        })
+        .into_iter()
+        .flatten()
+        .collect()
     }
 }
 
@@ -152,7 +170,9 @@ pub fn solve_gap_safe(p: &EnetProblem, opts: &BaselineOptions) -> SolveResult {
     let mut x = vec![0.0; n];
     let ax = p.a.mul_vec(&x);
     let mut res: Vec<f64> = (0..p.m()).map(|i| p.b[i] - ax[i]).collect();
-    let col_sq: Vec<f64> = (0..n).map(|j| blas::nrm2_sq(p.a.col(j))).collect();
+    // O(mn) column-norm precompute, sharded (per-column values are identical
+    // to the serial sweep at every thread budget).
+    let col_sq: Vec<f64> = shard::map_cols(p.a, 2 * p.m(), blas::nrm2_sq);
 
     let mut rounds = 0usize;
     let mut inner = 0usize;
@@ -174,7 +194,6 @@ pub fn solve_gap_safe(p: &EnetProblem, opts: &BaselineOptions) -> SolveResult {
         }
     }
 
-    let _ = survivors; // final survivor count is visible via active_set
     let active_set = support_of(&x, 0.0);
     let objective = primal_objective(p, &x);
     let y: Vec<f64> = res.iter().map(|r| -r).collect();
@@ -182,6 +201,7 @@ pub fn solve_gap_safe(p: &EnetProblem, opts: &BaselineOptions) -> SolveResult {
         x,
         y,
         active_set,
+        screen_survivors: Some(survivors.len()),
         objective,
         iterations: rounds,
         inner_iterations: inner,
@@ -259,6 +279,10 @@ mod tests {
         );
         assert!(gs.converged);
         assert!(blas::dist2(&gs.x, &cd.x) < 1e-4);
+        // the final survivor count is surfaced on the result itself
+        let surv = gs.screen_survivors.expect("gap-safe reports survivors");
+        assert!(surv <= p.n(), "survivors {surv} > n {}", p.n());
+        assert!(surv > 0, "converged solve screened everything out");
     }
 
     #[test]

@@ -12,12 +12,14 @@
 //! Columns of `A_J` are addressed in place (column-major `Mat` makes them
 //! contiguous), so no gather/copy is performed.
 //!
-//! The Woodbury Gram build, its `A_Jᵀrhs`/`A_J w` sweeps, and the CG mat-vec
-//! route through [`crate::parallel::shard`]: on large active sets they fan
-//! out over the worker pool. Per the shard module's determinism contract the
-//! results are bitwise-invariant to the thread count (the Gram and `A_Jᵀrhs`
-//! sweeps are also bitwise-equal to the serial loops; the `A_J w`
-//! accumulation matches serial exactly only while its plan is single-shard).
+//! The Woodbury Gram build, its `A_Jᵀrhs`/`A_J w` sweeps, the CG mat-vec,
+//! and the direct strategy's m×m rank-1 triangle build route through
+//! [`crate::parallel::shard`]: on large problems they fan out over the
+//! persistent worker pool. Per the shard module's determinism contract the
+//! results are bitwise-invariant to the thread count (the Gram, `A_Jᵀrhs`
+//! and rank-1 triangle sweeps are also bitwise-equal to the serial loops;
+//! the `A_J w` accumulation matches serial exactly only while its plan is
+//! single-shard).
 
 use crate::linalg::{solve_cg, Cholesky, Mat};
 use crate::parallel::shard;
@@ -97,23 +99,13 @@ pub fn solve_newton_system(
     resolved
 }
 
-/// Direct: build `M = I + κ Σ_{j∈J} a_j a_jᵀ` and Cholesky-solve.
+/// Direct: build `M = I + κ Σ_{j∈J} a_j a_jᵀ` and Cholesky-solve. The m×m
+/// rank-1 lower-triangle build (the strategy's O(m²r) sweep; factor reads
+/// lower) is sharded over the worker pool.
 fn solve_direct(a: &Mat, active: &[usize], kappa: f64, rhs: &[f64], d: &mut [f64]) {
     let m = a.rows();
     let mut v = Mat::zeros(m, m);
-    for &j in active {
-        let col = a.col(j);
-        // rank-1 update, lower triangle only (factor reads lower)
-        for c in 0..m {
-            let s = kappa * col[c];
-            if s != 0.0 {
-                let vc = v.col_mut(c);
-                for rrow in c..m {
-                    vc[rrow] += s * col[rrow];
-                }
-            }
-        }
-    }
+    shard::rank1_lower_accum(a, active, kappa, &mut v);
     for i in 0..m {
         v.set(i, i, v.get(i, i) + 1.0);
     }

@@ -245,6 +245,7 @@ pub fn solve_warm(
             x,
             y,
             active_set,
+            screen_survivors: None,
             objective,
             iterations: outer,
             inner_iterations: total_inner,

@@ -95,6 +95,11 @@ pub struct SolveResult {
     pub y: Vec<f64>,
     /// Indices of the active (nonzero) coefficients.
     pub active_set: Vec<usize>,
+    /// Features surviving the solver's final safe screen (`None` for
+    /// algorithms that do not screen). The Gap-Safe solver reports the size
+    /// of its last survivor set — an upper bound on, and near convergence
+    /// close to, the active-set size.
+    pub screen_survivors: Option<usize>,
     /// Primal objective value at `x`.
     pub objective: f64,
     /// Outer iterations (AL iterations for SsNAL; sweeps/epochs for others).

@@ -114,7 +114,8 @@ impl Default for TuningOptions {
 
 /// Run the full tuning sweep: solve the path, evaluate GCV/e-BIC (and
 /// optionally k-fold CV) at every explored point, fanning the per-point
-/// criteria out over all available cores.
+/// criteria out over the shared persistent worker pool
+/// ([`crate::parallel::run_tasks`]) on all available cores.
 pub fn tune(a: &Mat, b: &[f64], opts: &TuningOptions) -> TuningResult {
     tune_with_threads(a, b, opts, 0)
 }

@@ -6,13 +6,17 @@
 //! fixed plan, element-wise kernels (`Aᵀy`, Gram) are additionally
 //! bitwise-equal to the serial `Mat`/`blas` loops at any shard count, and
 //! reduction kernels (`dot`, `A_J x`) are bitwise-equal to serial at
-//! single-shard plans.
+//! single-shard plans. ISSUE 3 extends the contract to the Gap-Safe
+//! `dual_point`/survivor scoring sweeps, the direct-Newton rank-1 triangle
+//! build, and kernel reuse on the warm persistent pool.
 
 use ssnal_en::data::{generate_synthetic, SyntheticSpec};
 use ssnal_en::linalg::{blas, Mat};
 use ssnal_en::parallel::shard::{self, Plan};
 use ssnal_en::rng::Xoshiro256pp;
-use ssnal_en::solver::types::{EnetProblem, SsnalOptions};
+use ssnal_en::solver::screening::AugmentedView;
+use ssnal_en::solver::ssn_system::solve_newton_system;
+use ssnal_en::solver::types::{EnetProblem, NewtonStrategy, SsnalOptions};
 use ssnal_en::util::quickcheck::{log_uniform_usize, run_prop, PropConfig};
 
 const THREADS: [usize; 4] = [1, 2, 4, 8];
@@ -255,6 +259,83 @@ fn edge_lengths_cover_tails_and_empty() {
             shard::with_threads(4, || shard::axpy_planned(plan, 0.5, &a, &mut got));
             assert_eq!(got, serial_axpy, "axpy len={len} shards={shards}");
         }
+    }
+}
+
+/// The Gap-Safe scoring sweeps (`dual_point`'s ‖Ãᵀr̃‖∞ scan and the survivor
+/// scan) now shard over the pool: at a shape big enough to fan out, every
+/// output — dual value, scaled dual point, survivor index set — must be
+/// bitwise-identical at 1/2/4/8 threads (ISSUE 3 criterion).
+#[test]
+fn dual_point_and_survivors_are_bitwise_thread_invariant() {
+    let prob = generate_synthetic(&SyntheticSpec {
+        m: 100,
+        n: 30_000,
+        n0: 10,
+        x_star: 5.0,
+        snr: 8.0,
+        seed: 21,
+    });
+    let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, 0.9);
+    let (l1, l2) = EnetProblem::lambdas_from_alpha(0.9, 0.4, lmax);
+    let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+    // the scoring sweeps must actually multi-shard at this shape, or the
+    // test would pass vacuously
+    assert!(Plan::for_work(30_000, 2 * 100).shards > 1);
+    // screen at a crude iterate so the survivor set is non-trivial
+    let x: Vec<f64> = prob.x_true.iter().map(|v| v * 0.5).collect();
+
+    let aug = AugmentedView::new(&p);
+    let ((dual_ref, top_ref, bottom_ref), surv_ref) =
+        shard::with_threads(1, || (aug.dual_point(&x), aug.gap_safe_survivors(&x)));
+    assert!(!surv_ref.is_empty(), "safe rule must keep the signal features");
+    for t in [2usize, 4, 8] {
+        let ((dual, top, bottom), surv) =
+            shard::with_threads(t, || (aug.dual_point(&x), aug.gap_safe_survivors(&x)));
+        assert_eq!(dual.to_bits(), dual_ref.to_bits(), "dual value drifted at threads={t}");
+        assert_eq!(top, top_ref, "θ_top drifted at threads={t}");
+        assert_eq!(bottom, bottom_ref, "θ_bottom drifted at threads={t}");
+        assert_eq!(surv, surv_ref, "survivor set drifted at threads={t}");
+    }
+}
+
+/// The direct Newton strategy's m×m rank-1 triangle build now shards over
+/// the pool: at a shape where its plan multi-shards, the solved direction is
+/// bitwise-identical at every thread budget.
+#[test]
+fn direct_newton_build_is_bitwise_thread_invariant() {
+    let mut rng = Xoshiro256pp::seed_from_u64(99);
+    let (m, n, r) = (200, 600, 150);
+    let a = Mat::from_fn(m, n, |_, _| rng.next_gaussian());
+    let active = rng.sample_indices(n, r);
+    let rhs: Vec<f64> = (0..m).map(|_| rng.next_gaussian()).collect();
+    assert!(Plan::for_work(m * (m + 1) / 2, 2 * r).shards > 1, "build must fan out");
+
+    let solve = || {
+        let mut d = vec![0.0; m];
+        solve_newton_system(&a, &active, 0.7, &rhs, &mut d, NewtonStrategy::Direct, 1e-10, 100);
+        d
+    };
+    let reference = shard::with_threads(1, solve);
+    for t in [2usize, 4, 8] {
+        let got = shard::with_threads(t, solve);
+        assert_eq!(got, reference, "direct Newton solve drifted at threads={t}");
+    }
+}
+
+/// Pool-reuse guarantee: repeated kernel calls on a warm persistent pool
+/// keep producing the bits of the 1-thread (fresh) run — dispatch reuse must
+/// never leak state between batches.
+#[test]
+fn warm_pool_kernel_calls_repeat_identically() {
+    let mut rng = Xoshiro256pp::seed_from_u64(55);
+    let a: Vec<f64> = (0..6000).map(|_| rng.next_gaussian()).collect();
+    let b: Vec<f64> = (0..6000).map(|_| rng.next_gaussian()).collect();
+    let plan = Plan::with_shards(8);
+    let reference = shard::with_threads(1, || shard::dot_planned(plan, &a, &b));
+    for call in 0..20 {
+        let got = shard::with_threads(4, || shard::dot_planned(plan, &a, &b));
+        assert_eq!(got.to_bits(), reference.to_bits(), "warm-pool call {call} drifted");
     }
 }
 
