@@ -1117,6 +1117,161 @@ pub fn pool_dispatch_json(rows: &[PoolDispatchRow], calls: usize) -> String {
     .to_string()
 }
 
+// ---------------------------------------------------------------------------
+// Newton workspace — cold vs warm buffers, cached vs cold factorization
+// ---------------------------------------------------------------------------
+
+/// One measured `(m, n, r, strategy)` cell of the Newton-workspace bench.
+#[derive(Clone, Debug)]
+pub struct NewtonBenchRow {
+    /// Rows of the design (the Newton system is m×m).
+    pub m: usize,
+    /// Columns of the design.
+    pub n: usize,
+    /// Active-set size.
+    pub r: usize,
+    /// `"direct"`, `"woodbury"` or `"cg"`.
+    pub strategy: &'static str,
+    /// Seconds per solve with a fresh workspace every call (build + factor
+    /// from scratch — the pre-workspace behavior).
+    pub cold_seconds: f64,
+    /// Seconds per solve on one warmed workspace (same active set and κ:
+    /// the factorization-cache hit path).
+    pub warm_seconds: f64,
+    /// `cold / warm` (> 1 means the warm path is cheaper).
+    pub warm_speedup: f64,
+    /// Steady-state heap allocations per warm solve, measured at a 1-thread
+    /// shard budget (0 when the counting allocator is installed and the
+    /// zero-allocation contract holds; trivially 0 when it is not installed,
+    /// e.g. in `cargo test` of the library).
+    pub allocs_per_iter: f64,
+    /// Whether the warm solve reproduced the cold solve bit for bit.
+    pub bitwise_equal: bool,
+}
+
+/// Measure cold-vs-warm Newton solves per strategy at each `(m, n, r)` size:
+/// the warm rows exercise the workspace's factorization cache (same `J` and
+/// κ each call), the cold rows rebuild everything, and an allocation-counter
+/// pass pins the warm path's steady-state allocations at a 1-thread budget.
+pub fn newton_workspace_rows(
+    sizes: &[(usize, usize, usize)],
+    reps: usize,
+) -> (Table, Vec<NewtonBenchRow>) {
+    use crate::linalg::NewtonWorkspace;
+    use crate::parallel::shard;
+    use crate::rng::Xoshiro256pp;
+    use crate::solver::ssn_system::solve_newton_system_ws;
+    use crate::solver::types::NewtonStrategy;
+
+    let mut t = Table::new(&[
+        "m", "n", "r", "strategy", "cold(s)", "warm(s)", "speedup", "allocs/iter", "bitwise",
+    ])
+    .with_title("Newton workspace: cold vs warm (cached J, κ) per strategy");
+    let cfg = MeasureConfig { warmup: 1, reps: reps.max(1) };
+    let kappa = 0.7;
+    let alloc_iters = 16u64;
+
+    let mut rows = Vec::new();
+    for &(m, n, r) in sizes {
+        let mut rng = Xoshiro256pp::seed_from_u64(2020 + (m + n + r) as u64);
+        let a = Mat::from_fn(m, n, |_, _| rng.next_gaussian());
+        let active: Vec<usize> = (0..r.min(n)).map(|k| k * n / r.min(n).max(1)).collect();
+        let rhs: Vec<f64> = (0..m).map(|_| rng.next_gaussian()).collect();
+        for (strategy, name) in [
+            (NewtonStrategy::Direct, "direct"),
+            (NewtonStrategy::Woodbury, "woodbury"),
+            (NewtonStrategy::ConjugateGradient, "cg"),
+        ] {
+            let solve = |ws: &mut NewtonWorkspace, d: &mut [f64]| {
+                solve_newton_system_ws(&a, &active, kappa, &rhs, d, strategy, 1e-10, 500, ws);
+            };
+            // Each timed sample batches several solves so µs-scale cache-hit
+            // calls are not jitter-dominated.
+            let batch = 4;
+            // cold: fresh workspace per call (build + factor every time)
+            let mut d_cold = vec![0.0; m];
+            let (st_cold, _) = measure(cfg, || {
+                for _ in 0..batch {
+                    let mut ws = NewtonWorkspace::new();
+                    solve(&mut ws, &mut d_cold);
+                }
+            });
+            // warm: one workspace, warmed once, then cache-hit solves
+            let mut ws = NewtonWorkspace::new();
+            let mut d_warm = vec![0.0; m];
+            solve(&mut ws, &mut d_warm);
+            let (st_warm, _) = measure(cfg, || {
+                for _ in 0..batch {
+                    solve(&mut ws, &mut d_warm);
+                }
+            });
+            let bitwise_equal = d_warm == d_cold;
+            // steady-state allocations per warm solve at a 1-thread budget
+            let allocs_per_iter = shard::with_threads(1, || {
+                let mut ws1 = NewtonWorkspace::new();
+                solve(&mut ws1, &mut d_warm); // warm-up: grow every buffer
+                solve(&mut ws1, &mut d_warm);
+                let before = crate::util::alloc_count::allocations();
+                for _ in 0..alloc_iters {
+                    solve(&mut ws1, &mut d_warm);
+                }
+                (crate::util::alloc_count::allocations() - before) as f64 / alloc_iters as f64
+            });
+            let row = NewtonBenchRow {
+                m,
+                n,
+                r: active.len(),
+                strategy: name,
+                cold_seconds: st_cold.mean / batch as f64,
+                warm_seconds: st_warm.mean / batch as f64,
+                warm_speedup: st_cold.mean / st_warm.mean.max(1e-12),
+                allocs_per_iter,
+                bitwise_equal,
+            };
+            t.row(vec![
+                format!("{m}"),
+                format!("{n}"),
+                format!("{}", row.r),
+                name.to_string(),
+                fmt_secs(row.cold_seconds),
+                fmt_secs(row.warm_seconds),
+                format!("{:.2}x", row.warm_speedup),
+                format!("{:.2}", row.allocs_per_iter),
+                format!("{}", row.bitwise_equal),
+            ]);
+            rows.push(row);
+        }
+    }
+    (t, rows)
+}
+
+/// Render the Newton-workspace bench as the JSON payload CI uploads
+/// (`BENCH_newton_workspace.json`).
+pub fn newton_workspace_json(rows: &[NewtonBenchRow], reps: usize) -> String {
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("m", Json::Num(r.m as f64)),
+                ("n", Json::Num(r.n as f64)),
+                ("r", Json::Num(r.r as f64)),
+                ("strategy", Json::Str(r.strategy.to_string())),
+                ("cold_seconds", Json::Num(r.cold_seconds)),
+                ("warm_seconds", Json::Num(r.warm_seconds)),
+                ("warm_speedup", Json::Num(r.warm_speedup)),
+                ("allocs_per_iter", Json::Num(r.allocs_per_iter)),
+                ("bitwise_equal", Json::Bool(r.bitwise_equal)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("newton_workspace".to_string())),
+        ("reps", Json::Num(reps as f64)),
+        ("rows", Json::Arr(row_objs)),
+    ])
+    .to_string()
+}
+
 #[cfg(test)]
 mod shard_bench_tests {
     use super::*;
@@ -1132,6 +1287,32 @@ mod shard_bench_tests {
         let js = pool_dispatch_json(&rows, 3);
         assert!(js.contains("pool_dispatch"), "{js}");
         assert!(js.contains("scoped_seconds_per_call"), "{js}");
+    }
+
+    #[test]
+    fn newton_workspace_rows_tiny() {
+        let (t, rows) = newton_workspace_rows(&[(40, 200, 12)], 2);
+        assert_eq!(t.len(), 3, "one row per strategy");
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.bitwise_equal, "warm diverged from cold: {rows:?}");
+            assert!(r.cold_seconds > 0.0 && r.warm_seconds > 0.0);
+            // without the counting allocator installed (library tests) the
+            // counter never moves; with it, the zero-allocation contract
+            // pins this to 0 — either way it must be 0 here
+            assert_eq!(r.allocs_per_iter, 0.0, "{rows:?}");
+        }
+        // The factor-cache strategies skip the whole build+factor when warm;
+        // the strict `speedup > 1` gate runs in the release bench
+        // (`cmd_bench_parallel`), where the margin is several-fold — here
+        // (debug, tiny sizes) only guard against gross inversions so an OS
+        // scheduling spike cannot flake the unit suite.
+        for r in rows.iter().filter(|r| r.strategy != "cg") {
+            assert!(r.warm_speedup > 0.5, "warm grossly slower than cold: {rows:?}");
+        }
+        let js = newton_workspace_json(&rows, 2);
+        assert!(js.contains("newton_workspace"), "{js}");
+        assert!(js.contains("allocs_per_iter"), "{js}");
     }
 
     #[test]

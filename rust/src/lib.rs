@@ -31,6 +31,11 @@
 //!   backend selection together,
 //! * [`linalg`] / [`rng`] / [`util`] / [`bench`] — the from-scratch substrates
 //!   (the offline build has no BLAS, rand, clap, serde, anyhow or criterion).
+//!   [`linalg::workspace`] holds the solver-wide buffer arena and the
+//!   active-set-aware Gram/Cholesky cache behind the zero-allocation Newton
+//!   hot path: steady-state SsN iterations reuse every buffer and factor
+//!   (bitwise-identically to cold rebuilds; a counting-allocator test pins
+//!   the hot path to zero heap allocations).
 //!
 //! ## Continuous integration
 //!
@@ -38,9 +43,11 @@
 //! `cargo test -q` (run twice, under `SSNAL_THREADS=1` and `=4`, so the
 //! sharding determinism contract is exercised on every push), `cargo fmt
 //! --check` and `cargo clippy -- -D warnings`, plus a bench-smoke job that
-//! runs the parallel-path, shard-linalg and pool-dispatch benchmarks on tiny
-//! synthetic problems and uploads the resulting `BENCH_*.json` tables, and a
-//! bench-regression job that diffs them against the committed baselines in
+//! runs the parallel-path, shard-linalg, pool-dispatch and Newton-workspace
+//! benchmarks on tiny synthetic problems and uploads the resulting four
+//! `BENCH_*.json` tables (the Newton section also gates warm-vs-cold
+//! workspace cost and steady-state allocations), and a bench-regression job
+//! that diffs them against the committed baselines in
 //! `rust/benches/baselines/` via `ssnal-en bench-check` ([`bench::check`]:
 //! structural drift and determinism violations hard-fail; wall-clock
 //! regressions >25% annotate without failing).

@@ -22,48 +22,71 @@ pub struct CgResult {
 /// * `matvec(v, out)` must write `M v` into `out`.
 /// * `x` holds the initial guess on entry and the solution on exit.
 /// * Stops when `‖r‖ ≤ tol·max(1, ‖b‖)`.
+///
+/// Allocates the three working vectors per call; hot paths hold them in a
+/// [`crate::linalg::workspace::NewtonWorkspace`] and call [`solve_cg_with`].
 pub fn solve_cg(
-    mut matvec: impl FnMut(&[f64], &mut [f64]),
+    matvec: impl FnMut(&[f64], &mut [f64]),
     b: &[f64],
     x: &mut [f64],
     tol: f64,
     max_iters: usize,
 ) -> CgResult {
+    let (mut r, mut p, mut ap) = (Vec::new(), Vec::new(), Vec::new());
+    solve_cg_with(matvec, b, x, tol, max_iters, &mut r, &mut p, &mut ap)
+}
+
+/// [`solve_cg`] with caller-provided working vectors `r`/`p`/`ap` (resized to
+/// `b.len()` and fully overwritten — no bits of their previous contents
+/// survive into the iteration). With capacities already grown, a call
+/// performs zero heap allocations; the result is bitwise-identical to
+/// [`solve_cg`] either way.
+pub fn solve_cg_with(
+    mut matvec: impl FnMut(&[f64], &mut [f64]),
+    b: &[f64],
+    x: &mut [f64],
+    tol: f64,
+    max_iters: usize,
+    r: &mut Vec<f64>,
+    p: &mut Vec<f64>,
+    ap: &mut Vec<f64>,
+) -> CgResult {
     let n = b.len();
     assert_eq!(x.len(), n);
-    let mut r = vec![0.0; n];
-    let mut ap = vec![0.0; n];
+    r.resize(n, 0.0);
+    p.resize(n, 0.0);
+    ap.resize(n, 0.0);
 
     // r = b - M x
-    matvec(x, &mut ap);
+    matvec(x, ap);
     for i in 0..n {
         r[i] = b[i] - ap[i];
     }
     let bnorm = blas::nrm2(b).max(1.0);
     let stop = tol * bnorm;
 
-    let mut rsold = blas::nrm2_sq(&r);
+    let mut rsold = blas::nrm2_sq(r);
     if rsold.sqrt() <= stop {
         return CgResult { iters: 0, residual: rsold.sqrt(), converged: true };
     }
-    let mut p = r.clone();
+    p.copy_from_slice(r);
 
     for it in 1..=max_iters {
-        matvec(&p, &mut ap);
-        let pap = blas::dot(&p, &ap);
+        matvec(p, ap);
+        let pap = blas::dot(p, ap);
         if pap <= 0.0 || !pap.is_finite() {
             // operator not SPD (numerically) — bail with what we have
             return CgResult { iters: it - 1, residual: rsold.sqrt(), converged: false };
         }
         let alpha = rsold / pap;
-        blas::axpy(alpha, &p, x);
-        blas::axpy(-alpha, &ap, &mut r);
-        let rsnew = blas::nrm2_sq(&r);
+        blas::axpy(alpha, p, x);
+        blas::axpy(-alpha, ap, r);
+        let rsnew = blas::nrm2_sq(r);
         if rsnew.sqrt() <= stop {
             return CgResult { iters: it, residual: rsnew.sqrt(), converged: true };
         }
         let beta = rsnew / rsold;
-        blas::xpby(&r, beta, &mut p);
+        blas::xpby(r, beta, p);
         rsold = rsnew;
     }
     CgResult { iters: max_iters, residual: rsold.sqrt(), converged: false }

@@ -35,18 +35,82 @@ impl Cholesky {
     /// Factor a symmetric positive-definite matrix (only the lower triangle of
     /// `m` is read). Right-looking, column-oriented to match `Mat`'s layout.
     pub fn factor(m: &Mat) -> Result<Self, NotPositiveDefinite> {
-        assert_eq!(m.rows(), m.cols(), "cholesky requires square input");
-        let n = m.rows();
-        let mut l = m.clone();
-        // zero the strict upper triangle so `l` is a clean factor
-        for j in 0..n {
+        let mut ch = Cholesky::empty();
+        ch.refactor(m, 0.0, 0)?;
+        Ok(ch)
+    }
+
+    /// A 0×0 placeholder for workspaces that [`Cholesky::refactor`] later
+    /// fills in place (a solve on an empty factor is a no-op).
+    pub fn empty() -> Self {
+        Self { l: Mat::zeros(0, 0) }
+    }
+
+    /// (Re)factor `src + ridge·I` into this factor **in place**, reusing the
+    /// factor of the leading `start×start` block — the workspace-facing
+    /// entry point behind the active-set-aware factorization cache
+    /// ([`crate::linalg::workspace`]).
+    ///
+    /// Only `src`'s lower triangle is read; `ridge` is added to each diagonal
+    /// entry as it is consumed (bitwise-identical to factoring a matrix that
+    /// already carries the ridge, since both perform the same single add).
+    ///
+    /// Caller contract for `start > 0`: the current factor must be a valid
+    /// Cholesky factor of a matrix whose **leading `start×start` block**
+    /// equals that of `src + ridge·I`. Everything outside that block may have
+    /// changed: rows `start..` of the leading columns are re-derived by
+    /// forward substitution against the (unchanged) leading factor, and
+    /// pivots `start..` are then rebuilt — each refreshed entry is computed
+    /// by exactly the expression the full factorization uses, on equal
+    /// inputs, so a partial refactor reproduces the bits of a full cold
+    /// factorization exactly. Any dimension change forces a full rebuild
+    /// (`start` is ignored) and reallocates the factor buffer; matching
+    /// dimensions reuse it.
+    ///
+    /// On error the factor is left invalid (columns `< pivot` refreshed,
+    /// the rest stale); callers must not solve with it until a later
+    /// `refactor` succeeds.
+    pub fn refactor(
+        &mut self,
+        src: &Mat,
+        ridge: f64,
+        start: usize,
+    ) -> Result<(), NotPositiveDefinite> {
+        assert_eq!(src.rows(), src.cols(), "cholesky requires square input");
+        let n = src.rows();
+        let mut start = start.min(n);
+        if self.l.rows() != n || self.l.cols() != n {
+            self.l = Mat::zeros(n, n);
+            start = 0;
+        }
+        let l = &mut self.l;
+        // Refresh rows `start..` of the kept leading columns by forward
+        // substitution: L[i,j] = (src[i,j] − Σ_{k<j} L[i,k]·L[j,k]) / L[j,j],
+        // j ascending so L[i,k] (k < j) is already refreshed. This is the
+        // exact expression (and inner-loop order) the full factorization
+        // uses for these entries.
+        for j in 0..start {
+            let inv = 1.0 / l.get(j, j);
+            for i in start..n {
+                let mut s = src.get(i, j);
+                for k in 0..j {
+                    s -= l.get(i, k) * l.get(j, k);
+                }
+                l.set(i, j, s * inv);
+            }
+        }
+        // refresh the rebuilt columns: lower triangle from src, upper zeroed
+        for j in start..n {
             for i in 0..j {
                 l.set(i, j, 0.0);
             }
+            for i in j..n {
+                l.set(i, j, src.get(i, j));
+            }
         }
-        for j in 0..n {
-            // d = M[j,j] - Σ_{k<j} L[j,k]²
-            let mut d = l.get(j, j);
+        for j in start..n {
+            // d = (src[j,j] + ridge) - Σ_{k<j} L[j,k]²
+            let mut d = l.get(j, j) + ridge;
             for k in 0..j {
                 let ljk = l.get(j, k);
                 d -= ljk * ljk;
@@ -65,7 +129,7 @@ impl Cholesky {
                 l.set(i, j, s * inv);
             }
         }
-        Ok(Self { l })
+        Ok(())
     }
 
     /// Dimension of the factored matrix.
@@ -167,6 +231,51 @@ mod tests {
         let m = Mat::from_row_major(2, 2, &[1.0, 1.0, 1.0, 1.0]); // rank 1
         let e = Cholesky::factor(&m).unwrap_err();
         assert_eq!(e.pivot, 1);
+    }
+
+    #[test]
+    fn partial_refactor_matches_full_bitwise() {
+        // Change everything *outside* the leading p×p block — trailing block
+        // AND the rows p.. of the leading columns, exactly what an
+        // active-set tail change does to a Gram matrix. Refactoring from
+        // pivot p must reproduce a full cold factorization bit for bit.
+        let n = 12;
+        let mut m1 = spd_random(n, 9);
+        let full1 = Cholesky::factor(&m1).unwrap();
+        let mut ch = Cholesky::factor(&m1).unwrap();
+        assert_eq!(ch.l().as_slice(), full1.l().as_slice());
+
+        let p = 7;
+        for i in p..n {
+            for j in 0..=i {
+                let bump = 0.3 + ((i + j) as f64) * 0.01;
+                m1.set(i, j, m1.get(i, j) + bump);
+                if i != j {
+                    m1.set(j, i, m1.get(j, i) + bump);
+                }
+            }
+            m1.set(i, i, m1.get(i, i) + 10.0); // keep it SPD (Gershgorin slack)
+        }
+        ch.refactor(&m1, 0.0, p).unwrap();
+        let full2 = Cholesky::factor(&m1).unwrap();
+        assert_eq!(ch.l().as_slice(), full2.l().as_slice());
+
+        // ridge is applied as the factor consumes the diagonal: factoring
+        // (M, ridge) equals factoring M+ridge·I computed entrywise
+        let mut with_ridge = Cholesky::empty();
+        with_ridge.refactor(&m1, 2.5, 0).unwrap();
+        let mut m_ridged = m1.clone();
+        for i in 0..n {
+            m_ridged.set(i, i, m_ridged.get(i, i) + 2.5);
+        }
+        let cold = Cholesky::factor(&m_ridged).unwrap();
+        assert_eq!(with_ridge.l().as_slice(), cold.l().as_slice());
+
+        // dimension change forces a clean full rebuild
+        let m_small = spd_random(5, 4);
+        ch.refactor(&m_small, 0.0, 3).unwrap();
+        let full_small = Cholesky::factor(&m_small).unwrap();
+        assert_eq!(ch.l().as_slice(), full_small.l().as_slice());
     }
 
     #[test]

@@ -4,15 +4,19 @@
 //! Everything SsNAL-EN and its baselines need: a column-major [`matrix::Mat`],
 //! level-1 kernels tuned for the solver's streaming access patterns
 //! ([`blas`]), [`chol::Cholesky`] for the direct/Woodbury Newton strategies,
-//! matrix-free [`cg`] for the large-active-set regime, and small
-//! least-squares/dof solves for tuning ([`lstsq`]).
+//! matrix-free [`cg`] for the large-active-set regime, small
+//! least-squares/dof solves for tuning ([`lstsq`]), and the solver-wide
+//! buffer arena + active-set-aware factorization cache behind the
+//! zero-allocation Newton hot path ([`workspace`]).
 
 pub mod blas;
 pub mod cg;
 pub mod chol;
 pub mod lstsq;
 pub mod matrix;
+pub mod workspace;
 
-pub use cg::{solve_cg, CgResult};
+pub use cg::{solve_cg, solve_cg_with, CgResult};
 pub use chol::{Cholesky, NotPositiveDefinite};
 pub use matrix::Mat;
+pub use workspace::{NewtonWorkspace, ShardScratch, WorkspaceStats};

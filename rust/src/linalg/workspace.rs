@@ -1,0 +1,671 @@
+//! Solver-wide workspace arena: reused buffers and the active-set-aware
+//! factorization cache behind the zero-allocation Newton hot path.
+//!
+//! Two pieces live here:
+//!
+//! * [`NewtonWorkspace`] — owned by one solve driver (`ssnal::solve_warm_ws`
+//!   allocates one per solve; the λ-path's [`crate::path::WarmState`] carries
+//!   one per warm-start chain so it also persists *across* warm-started
+//!   λ-steps). It holds every buffer the Newton-system strategies need — the
+//!   direct strategy's m×m build matrix, the Woodbury Gram and its `w`
+//!   vector, CG's `r`/`p`/`ap`/`coeffs` — plus the factorization cache below.
+//! * [`ShardScratch`] — a per-thread keyed arena of `f64` buffers
+//!   (thread-local, so every long-lived thread — the caller, chain workers,
+//!   and the persistent pool workers of [`crate::parallel::pool`] — reuses
+//!   its own). [`crate::parallel::shard`]'s reduction kernels draw their
+//!   per-shard partial buffers from the *calling* thread's arena instead of
+//!   allocating `vec![0.0; m]` per shard per call.
+//!
+//! # Buffer lifecycle and the zero-or-overwrite rule
+//!
+//! Every reused buffer is either **fully overwritten** before it is read
+//! (CG's `r`/`ap`, the Woodbury `w`, recomputed Gram entries) or **explicitly
+//! zeroed** when the consumer folds into it (the direct strategy's m×m build
+//! matrix is `fill(0.0)`-ed before `rank1_lower_accum`, and
+//! [`ShardScratch::take_zeroed`] hands out zero-filled partials). No bit of a
+//! previous iteration's contents can therefore leak into a later one, which
+//! is what makes the warm paths bitwise-identical to cold ones. The
+//! zeroed-lower-triangle precondition of
+//! [`crate::parallel::shard::rank1_lower_accum`] is discharged here (the
+//! workspace zeroes the build buffer) rather than by an O(m²) runtime scan in
+//! the kernel.
+//!
+//! # Factorization cache and invalidation
+//!
+//! Per Newton step the dominant cost is building and factoring either
+//! `V = I + κ A_J A_Jᵀ` (direct, O(m²r + m³)) or `κ⁻¹I + A_JᵀA_J` (Woodbury,
+//! O(r²m + r³)). Consecutive SsN iterations — and consecutive warm-started
+//! λ-steps — usually keep the active set `J` (and, within one outer AL
+//! iteration, κ) unchanged, so the cache keys on `(J, κ)`:
+//!
+//! * **J and κ unchanged** — reuse the Cholesky outright (both strategies).
+//! * **J unchanged, κ changed** (a new outer iteration bumped σ) — the
+//!   Woodbury cache reuses the *raw* Gram `A_JᵀA_J` (stored without the
+//!   κ-dependent ridge: zero new column dots) and refactors with the new
+//!   ridge.
+//! * **J changed by a few tail columns** (relative to the cached set) — the
+//!   Woodbury Gram updates incrementally: the leading common-prefix block is
+//!   kept bit-for-bit, only rows/columns from the first changed pivot are
+//!   recomputed, and the Cholesky refactors from that pivot
+//!   ([`Cholesky::refactor`] re-forward-substitutes the changed rows through
+//!   the kept leading columns, then rebuilds the trailing pivots — every
+//!   refreshed entry uses the full factorization's exact expression on equal
+//!   inputs, so the partial refactor reproduces a cold factorization
+//!   exactly).
+//! * **J changed wholesale** (or the prefix is short) — full sharded rebuild
+//!   into the same buffers.
+//!
+//! The direct strategy's `V` has no exploitable prefix structure (every
+//! `a_j a_jᵀ` is dense in the m×m matrix), so its cache is hit-or-rebuild.
+//!
+//! Every cached quantity was produced by exactly the computation the cold
+//! path runs (same kernels, same operand order), so **cache hits return the
+//! cold path's bits** — the warm solve is bitwise-identical to a cold solve
+//! at every `SSNAL_THREADS` budget (pinned by `tests/linalg_parallel.rs`).
+//!
+//! A workspace is bound to one design matrix: caches key on the column
+//! *indices* of `A`, not its values. [`NewtonWorkspace`] records a
+//! `(data pointer, shape, sampled-entry bits)` fingerprint and self-resets
+//! when handed a different `A` — the sampled bits defend against ABA
+//! allocation reuse (a same-shape design rebuilt into the just-freed block).
+//! This is probabilistic hardening for driver bugs, not a versioning scheme:
+//! reuse a workspace across designs only via the solve drivers (which keep
+//! one per chain), and call [`NewtonWorkspace::reset`] when retargeting one
+//! by hand.
+
+use crate::linalg::chol::{Cholesky, NotPositiveDefinite};
+use crate::linalg::{blas, Mat};
+use crate::parallel::shard;
+use std::cell::RefCell;
+
+/// Absolute tail-length up to which a Woodbury Gram update is always
+/// incremental; beyond it, incremental is chosen only while its serial tail
+/// recompute undercuts the sharded full rebuild's per-thread dot share (see
+/// `woodbury_factor`).
+const INCREMENTAL_MAX_COLS: usize = 8;
+
+/// Cache/reuse counters (diagnostics for tests and `bench-parallel
+/// --newton-*`; never consulted by the numerics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// Woodbury solves that reused Gram *and* Cholesky outright.
+    pub factor_hits: usize,
+    /// Woodbury solves that reused the raw Gram but refactored (κ changed).
+    pub gram_hits: usize,
+    /// Woodbury Gram updates that recomputed only tail rows/columns.
+    pub gram_incremental: usize,
+    /// Woodbury Grams rebuilt from scratch (sharded).
+    pub gram_rebuilds: usize,
+    /// Cholesky refactors restarted at a pivot > 0.
+    pub partial_refactors: usize,
+    /// Direct solves that reused the cached m×m factor.
+    pub direct_hits: usize,
+    /// Direct solves that rebuilt V and refactored.
+    pub direct_rebuilds: usize,
+    /// Newton solves that fell back to CG after a factorization failure.
+    pub cg_fallbacks: usize,
+}
+
+/// Per-solve buffer arena + factorization cache (see the module docs).
+#[derive(Clone, Debug)]
+pub struct NewtonWorkspace {
+    // design fingerprint (pointer + shape + sampled-content bits of the
+    // bound A; see `rebind`)
+    a_ptr: usize,
+    a_rows: usize,
+    a_cols: usize,
+    a_sample: u64,
+    // Woodbury: raw Gram A_JᵀA_J (no ridge) + factor of (Gram + κ⁻¹I)
+    gram_active: Vec<usize>,
+    gram: Mat,
+    gram_valid: bool,
+    gram_kappa: f64,
+    gram_chol: Cholesky,
+    factor_valid: bool,
+    pub(crate) w: Vec<f64>,
+    // Direct: m×m build buffer + factor of I + κ A_J A_Jᵀ
+    direct_active: Vec<usize>,
+    direct_kappa: f64,
+    direct_v: Mat,
+    direct_chol: Cholesky,
+    direct_valid: bool,
+    // CG working vectors
+    pub(crate) cg_r: Vec<f64>,
+    pub(crate) cg_p: Vec<f64>,
+    pub(crate) cg_ap: Vec<f64>,
+    pub(crate) coeffs: Vec<f64>,
+    /// Cache/reuse counters.
+    pub stats: WorkspaceStats,
+}
+
+impl Default for NewtonWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NewtonWorkspace {
+    /// An empty workspace; buffers grow on first use and are then reused.
+    pub fn new() -> Self {
+        Self {
+            a_ptr: 0,
+            a_rows: 0,
+            a_cols: 0,
+            a_sample: 0,
+            gram_active: Vec::new(),
+            gram: Mat::zeros(0, 0),
+            gram_valid: false,
+            gram_kappa: 0.0,
+            gram_chol: Cholesky::empty(),
+            factor_valid: false,
+            w: Vec::new(),
+            direct_active: Vec::new(),
+            direct_kappa: 0.0,
+            direct_v: Mat::zeros(0, 0),
+            direct_chol: Cholesky::empty(),
+            direct_valid: false,
+            cg_r: Vec::new(),
+            cg_p: Vec::new(),
+            cg_ap: Vec::new(),
+            coeffs: Vec::new(),
+            stats: WorkspaceStats::default(),
+        }
+    }
+
+    /// Invalidate every cached factorization (buffer capacity is kept).
+    pub fn reset(&mut self) {
+        self.gram_valid = false;
+        self.factor_valid = false;
+        self.direct_valid = false;
+    }
+
+    /// Self-reset when handed a different design than the cached one. The
+    /// fingerprint is (data pointer, shape, sampled-entry bits): pointer +
+    /// shape alone would be defeated by ABA reuse — a same-shape matrix
+    /// rebuilt into the just-freed allocation — so a handful of entry bit
+    /// patterns are folded in, which distinguishes any realistically rebuilt
+    /// design. This remains probabilistic hardening, not a versioning
+    /// scheme: a workspace is still *contractually* bound to one design
+    /// (call [`NewtonWorkspace::reset`] when retargeting it by hand).
+    fn rebind(&mut self, a: &Mat) {
+        let ptr = a.as_slice().as_ptr() as usize;
+        let sample = Self::sample_bits(a);
+        if ptr != self.a_ptr
+            || a.rows() != self.a_rows
+            || a.cols() != self.a_cols
+            || sample != self.a_sample
+        {
+            self.reset();
+            self.a_ptr = ptr;
+            self.a_rows = a.rows();
+            self.a_cols = a.cols();
+            self.a_sample = sample;
+        }
+    }
+
+    /// Fold the bit patterns of 8 evenly spaced entries (FNV-style mix).
+    fn sample_bits(a: &Mat) -> u64 {
+        let data = a.as_slice();
+        if data.is_empty() {
+            return 0;
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for k in 0..8usize {
+            let idx = k * (data.len() - 1) / 7;
+            h ^= data[idx].to_bits();
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h
+    }
+
+    /// Ensure the cached Cholesky of `κ⁻¹I_r + A_JᵀA_J` is current for
+    /// `(active, kappa)`, reusing/incrementing the raw Gram per the module
+    /// docs. On error the factor is invalid (the raw Gram stays usable) and
+    /// the caller should fall back to CG.
+    pub fn woodbury_factor(
+        &mut self,
+        a: &Mat,
+        active: &[usize],
+        kappa: f64,
+    ) -> Result<(), NotPositiveDefinite> {
+        self.rebind(a);
+        let r = active.len();
+        let ridge = 1.0 / kappa;
+        let same_set = self.gram_valid && self.gram_active.as_slice() == active;
+        let same_kappa = self.gram_kappa.to_bits() == kappa.to_bits();
+        if same_set && self.factor_valid && same_kappa {
+            self.stats.factor_hits += 1;
+            return Ok(());
+        }
+
+        // Bring the raw Gram up to date; `fresh_from` is the first row/column
+        // that was recomputed this call (r = nothing recomputed).
+        let fresh_from = if same_set {
+            self.stats.gram_hits += 1;
+            r
+        } else {
+            let p = if self.gram_valid { common_prefix(&self.gram_active, active) } else { 0 };
+            // Incremental (serial tail recompute) vs full sharded rebuild:
+            // always incremental for tiny absolute tails, else only while
+            // the serial tail dots undercut the rebuild's *per-thread* share
+            // — the tail runs on the calling thread alone, the rebuild fans
+            // out. Either path computes every entry as the same column-pair
+            // dot, so this wall-clock policy can consult the ambient thread
+            // budget without affecting output bits.
+            let tail_dots = (r * (r + 1) - p * (p + 1)) / 2;
+            let rebuild_dots_per_thread = r * (r + 1) / 2 / shard::threads().max(1);
+            let incremental =
+                p > 0 && (r - p <= INCREMENTAL_MAX_COLS || tail_dots <= rebuild_dots_per_thread);
+            if incremental {
+                self.gram_update_tail(a, active, p);
+                self.stats.gram_incremental += 1;
+                p
+            } else {
+                shard::gram_of_cols_into(a, active, 0.0, &mut self.gram);
+                self.stats.gram_rebuilds += 1;
+                0
+            }
+        };
+        if !same_set {
+            self.gram_active.clear();
+            self.gram_active.extend_from_slice(active);
+        }
+        self.gram_valid = true;
+
+        // Refactor from the first changed pivot — 0 unless the previous
+        // factor used the same ridge (κ) at the same dimension, in which case
+        // its leading `fresh_from` columns are exactly what a cold
+        // factorization of the updated Gram would produce.
+        let start = if self.factor_valid && same_kappa && self.gram_chol.dim() == r {
+            fresh_from
+        } else {
+            0
+        };
+        if start > 0 && start < r {
+            self.stats.partial_refactors += 1;
+        }
+        self.factor_valid = false;
+        self.gram_chol.refactor(&self.gram, ridge, start)?;
+        self.gram_kappa = kappa;
+        self.factor_valid = true;
+        Ok(())
+    }
+
+    /// Recompute Gram rows/columns `p..` against the new active set, keeping
+    /// the leading `p×p` block bit-for-bit (its column indices are unchanged).
+    fn gram_update_tail(&mut self, a: &Mat, active: &[usize], p: usize) {
+        let r = active.len();
+        if self.gram.rows() != r || self.gram.cols() != r {
+            let mut next = Mat::zeros(r, r);
+            let keep = p.min(self.gram.rows());
+            for j in 0..keep {
+                for i in 0..keep {
+                    next.set(i, j, self.gram.get(i, j));
+                }
+            }
+            self.gram = next;
+        }
+        // Same entry computation (and operand order) as the cold build:
+        // entry (i, j), i ≤ j, is ⟨A[:, J[i]], A[:, J[j]]⟩.
+        for j in p..r {
+            let cj = a.col(active[j]);
+            for i in 0..=j {
+                let v = blas::dot(a.col(active[i]), cj);
+                self.gram.set(i, j, v);
+                self.gram.set(j, i, v);
+            }
+        }
+    }
+
+    /// Split borrow for the Woodbury solve: the (current) factor plus the
+    /// reusable `w = A_Jᵀrhs` buffer.
+    pub(crate) fn woodbury_parts(&mut self) -> (&Cholesky, &mut Vec<f64>) {
+        debug_assert!(self.factor_valid, "woodbury_parts before a successful woodbury_factor");
+        (&self.gram_chol, &mut self.w)
+    }
+
+    /// Ensure the cached Cholesky of `V = I + κ A_J A_Jᵀ` is current for
+    /// `(active, kappa)` — hit-or-rebuild (no incremental form exists: each
+    /// `a_j a_jᵀ` is dense in V). The m×m build buffer is zeroed and refilled
+    /// on a miss; on error the factor is invalid and the caller should fall
+    /// back to CG.
+    pub fn direct_factor(
+        &mut self,
+        a: &Mat,
+        active: &[usize],
+        kappa: f64,
+    ) -> Result<&Cholesky, NotPositiveDefinite> {
+        self.rebind(a);
+        let m = a.rows();
+        if self.direct_valid
+            && self.direct_kappa.to_bits() == kappa.to_bits()
+            && self.direct_chol.dim() == m
+            && self.direct_active.as_slice() == active
+        {
+            self.stats.direct_hits += 1;
+            return Ok(&self.direct_chol);
+        }
+        self.direct_valid = false;
+        if self.direct_v.rows() != m || self.direct_v.cols() != m {
+            self.direct_v = Mat::zeros(m, m);
+        } else {
+            // zero-or-overwrite: rank1_lower_accum folds into the buffer, so
+            // the workspace discharges its zeroed-triangle precondition here.
+            self.direct_v.as_mut_slice().fill(0.0);
+        }
+        shard::rank1_lower_accum(a, active, kappa, &mut self.direct_v);
+        for i in 0..m {
+            self.direct_v.set(i, i, self.direct_v.get(i, i) + 1.0);
+        }
+        self.direct_chol.refactor(&self.direct_v, 0.0, 0)?;
+        self.direct_active.clear();
+        self.direct_active.extend_from_slice(active);
+        self.direct_kappa = kappa;
+        self.direct_valid = true;
+        self.stats.direct_rebuilds += 1;
+        Ok(&self.direct_chol)
+    }
+
+    /// Split borrow for the CG strategy: `(coeffs, r, p, ap)`.
+    pub(crate) fn cg_parts(
+        &mut self,
+    ) -> (&mut Vec<f64>, &mut Vec<f64>, &mut Vec<f64>, &mut Vec<f64>) {
+        (&mut self.coeffs, &mut self.cg_r, &mut self.cg_p, &mut self.cg_ap)
+    }
+}
+
+/// Longest common prefix of two index lists.
+fn common_prefix(a: &[usize], b: &[usize]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+// ---------------------------------------------------------------------------
+// Per-thread shard scratch
+// ---------------------------------------------------------------------------
+
+/// A small keyed arena of `f64` buffers, one per thread (see [`scratch_take_zeroed`]).
+///
+/// `take_zeroed` hands out the best-fitting retained buffer (smallest
+/// sufficient capacity; the largest one when none suffices, so it grows once
+/// and is then keyed for that size class), zero-filled to the requested
+/// length; `give` returns a buffer to the arena. At most
+/// [`ShardScratch::MAX_BUFFERS`] buffers are retained — enough for the
+/// solver's nesting depth (a reduction kernel holds one flat partial buffer
+/// at a time; nested chain→shard calls run on different threads and
+/// therefore different arenas), while bounding per-thread residency.
+#[derive(Debug, Default)]
+pub struct ShardScratch {
+    buffers: Vec<Vec<f64>>,
+}
+
+impl ShardScratch {
+    /// Retention cap per thread.
+    pub const MAX_BUFFERS: usize = 8;
+
+    /// Fresh, empty arena.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a zero-filled buffer of exactly `len` (reusing capacity when a
+    /// retained buffer fits; the zero-fill is the arena's half of the
+    /// zero-or-overwrite rule).
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f64> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.buffers.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(j) => {
+                    let (bc, jc) = (b.capacity(), self.buffers[j].capacity());
+                    if jc >= len {
+                        bc >= len && bc < jc
+                    } else {
+                        bc > jc
+                    }
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let mut buf = match best {
+            Some(i) => self.buffers.swap_remove(i),
+            None => Vec::new(),
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the arena (dropped once the retention cap is hit).
+    pub fn give(&mut self, buf: Vec<f64>) {
+        if self.buffers.len() < Self::MAX_BUFFERS {
+            self.buffers.push(buf);
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<ShardScratch> = RefCell::new(ShardScratch::new());
+}
+
+/// Take a zero-filled buffer from the calling thread's [`ShardScratch`].
+pub fn scratch_take_zeroed(len: usize) -> Vec<f64> {
+    SCRATCH.with(|s| s.borrow_mut().take_zeroed(len))
+}
+
+/// Return a buffer to the calling thread's [`ShardScratch`].
+pub fn scratch_give(buf: Vec<f64>) {
+    SCRATCH.with(|s| s.borrow_mut().give(buf));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn random_case(m: usize, n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Mat::from_fn(m, n, |_, _| rng.next_gaussian())
+    }
+
+    fn cold_woodbury_factor(a: &Mat, active: &[usize], kappa: f64) -> Cholesky {
+        let g = a.gram_of_cols(active, 1.0 / kappa);
+        Cholesky::factor(&g).unwrap()
+    }
+
+    #[test]
+    fn factor_hit_skips_all_work_and_matches_cold() {
+        let a = random_case(30, 80, 1);
+        let active: Vec<usize> = (0..20).map(|k| 4 * k).collect();
+        let mut ws = NewtonWorkspace::new();
+        ws.woodbury_factor(&a, &active, 0.7).unwrap();
+        let rebuilds = ws.stats.gram_rebuilds;
+        ws.woodbury_factor(&a, &active, 0.7).unwrap();
+        assert_eq!(ws.stats.factor_hits, 1);
+        assert_eq!(ws.stats.gram_rebuilds, rebuilds, "hit must not rebuild");
+        let cold = cold_woodbury_factor(&a, &active, 0.7);
+        let (warm, _) = ws.woodbury_parts();
+        assert_eq!(warm.l().as_slice(), cold.l().as_slice());
+    }
+
+    #[test]
+    fn kappa_change_reuses_gram_and_matches_cold() {
+        let a = random_case(25, 60, 2);
+        let active: Vec<usize> = (0..15).collect();
+        let mut ws = NewtonWorkspace::new();
+        ws.woodbury_factor(&a, &active, 0.5).unwrap();
+        ws.woodbury_factor(&a, &active, 2.0).unwrap();
+        assert_eq!(ws.stats.gram_hits, 1, "κ change must reuse the raw Gram");
+        assert_eq!(ws.stats.gram_rebuilds, 1, "only the first build pays the dots");
+        let cold = cold_woodbury_factor(&a, &active, 2.0);
+        let (warm, _) = ws.woodbury_parts();
+        assert_eq!(warm.l().as_slice(), cold.l().as_slice());
+    }
+
+    #[test]
+    fn tail_change_is_incremental_and_bitwise_cold() {
+        let a = random_case(40, 120, 3);
+        let base: Vec<usize> = (0..30).map(|k| 2 * k).collect();
+        let mut ws = NewtonWorkspace::new();
+        ws.woodbury_factor(&a, &base, 0.9).unwrap();
+
+        // same-size tail swap: incremental Gram update + partial refactor
+        // from the first changed pivot (the Gram dimension is unchanged)
+        let mut swapped = base.clone();
+        swapped[28] = 95;
+        swapped[29] = 97;
+        ws.woodbury_factor(&a, &swapped, 0.9).unwrap();
+        assert_eq!(ws.stats.gram_incremental, 1, "{:?}", ws.stats);
+        assert_eq!(ws.stats.partial_refactors, 1, "{:?}", ws.stats);
+        let cold = cold_woodbury_factor(&a, &swapped, 0.9);
+        assert_eq!(ws.gram_chol.l().as_slice(), cold.l().as_slice());
+
+        // grow by 2 tail columns, then shrink by 3 — incremental Gram
+        // updates; the dimension change forces a full (but dot-free on the
+        // kept block) refactor
+        let mut grown = swapped.clone();
+        grown.push(101);
+        grown.push(103);
+        ws.woodbury_factor(&a, &grown, 0.9).unwrap();
+        assert_eq!(ws.stats.gram_incremental, 2, "{:?}", ws.stats);
+        let cold = cold_woodbury_factor(&a, &grown, 0.9);
+        assert_eq!(ws.gram_chol.l().as_slice(), cold.l().as_slice());
+
+        let shrunk: Vec<usize> = grown[..grown.len() - 3].to_vec();
+        ws.woodbury_factor(&a, &shrunk, 0.9).unwrap();
+        assert_eq!(ws.stats.gram_incremental, 3, "{:?}", ws.stats);
+        let cold = cold_woodbury_factor(&a, &shrunk, 0.9);
+        assert_eq!(ws.gram_chol.l().as_slice(), cold.l().as_slice());
+    }
+
+    #[test]
+    fn wholesale_change_rebuilds_and_matches_cold() {
+        let a = random_case(30, 100, 4);
+        let first: Vec<usize> = (0..20).collect();
+        let second: Vec<usize> = (40..60).collect(); // empty common prefix
+        let mut ws = NewtonWorkspace::new();
+        ws.woodbury_factor(&a, &first, 0.6).unwrap();
+        ws.woodbury_factor(&a, &second, 0.6).unwrap();
+        assert_eq!(ws.stats.gram_rebuilds, 2);
+        assert_eq!(ws.stats.gram_incremental, 0);
+        let cold = cold_woodbury_factor(&a, &second, 0.6);
+        assert_eq!(ws.gram_chol.l().as_slice(), cold.l().as_slice());
+    }
+
+    #[test]
+    fn direct_cache_hits_and_matches_cold() {
+        let a = random_case(20, 50, 5);
+        let active: Vec<usize> = (0..35).collect(); // r > m
+        let mut ws = NewtonWorkspace::new();
+        ws.direct_factor(&a, &active, 1.3).unwrap();
+        ws.direct_factor(&a, &active, 1.3).unwrap();
+        assert_eq!(ws.stats.direct_hits, 1);
+        assert_eq!(ws.stats.direct_rebuilds, 1);
+
+        let m = a.rows();
+        let mut v = Mat::zeros(m, m);
+        shard::rank1_lower_accum(&a, &active, 1.3, &mut v);
+        for i in 0..m {
+            v.set(i, i, v.get(i, i) + 1.0);
+        }
+        let cold = Cholesky::factor(&v).unwrap();
+        // compare the lower triangles (the cold clone zeroes the upper too)
+        for j in 0..m {
+            for i in j..m {
+                assert_eq!(
+                    ws.direct_chol.l().get(i, j).to_bits(),
+                    cold.l().get(i, j).to_bits(),
+                    "L[{i},{j}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rebind_resets_on_in_place_mutation_same_allocation() {
+        // ABA case: the design mutates inside the SAME allocation (pointer
+        // and shape unchanged) — the sampled-content fingerprint must still
+        // invalidate the cache instead of serving the stale factor.
+        let mut a = random_case(12, 30, 60);
+        let active: Vec<usize> = (0..8).collect();
+        let mut ws = NewtonWorkspace::new();
+        ws.woodbury_factor(&a, &active, 0.8).unwrap();
+        a.set(0, 0, a.get(0, 0) + 1.0);
+        ws.woodbury_factor(&a, &active, 0.8).unwrap();
+        assert_eq!(ws.stats.factor_hits, 0, "stale factor served after mutation");
+        assert_eq!(ws.stats.gram_rebuilds, 2, "{:?}", ws.stats);
+        let cold = cold_woodbury_factor(&a, &active, 0.8);
+        assert_eq!(ws.gram_chol.l().as_slice(), cold.l().as_slice());
+    }
+
+    #[test]
+    fn rebind_resets_on_new_design() {
+        let a = random_case(15, 40, 6);
+        let b = random_case(15, 40, 7);
+        let active: Vec<usize> = (0..10).collect();
+        let mut ws = NewtonWorkspace::new();
+        ws.woodbury_factor(&a, &active, 0.8).unwrap();
+        ws.woodbury_factor(&b, &active, 0.8).unwrap();
+        assert_eq!(ws.stats.factor_hits, 0, "different design must not hit");
+        assert_eq!(ws.stats.gram_rebuilds, 2);
+        let cold = cold_woodbury_factor(&b, &active, 0.8);
+        assert_eq!(ws.gram_chol.l().as_slice(), cold.l().as_slice());
+    }
+
+    #[test]
+    fn failed_factor_invalidates_and_recovers() {
+        // κ⁻¹I + Gram is SPD for κ > 0, so force failure via a non-finite κ
+        // ridge: κ = -1 gives ridge -1, which can break positive-definiteness.
+        let a = random_case(10, 30, 8);
+        // duplicate columns → singular Gram; with a negative ridge the factor
+        // must fail
+        let active = vec![3usize, 3, 3, 3];
+        let mut ws = NewtonWorkspace::new();
+        assert!(ws.woodbury_factor(&a, &active, -0.5).is_err());
+        assert!(!ws.factor_valid);
+        // a sane κ on a sane set recovers
+        let good: Vec<usize> = (0..5).collect();
+        ws.woodbury_factor(&a, &good, 0.5).unwrap();
+        assert!(ws.factor_valid);
+    }
+
+    #[test]
+    fn scratch_reuses_capacity() {
+        let mut s = ShardScratch::new();
+        let mut b = s.take_zeroed(100);
+        assert!(b.iter().all(|&v| v == 0.0));
+        b[0] = 7.0;
+        let ptr = b.as_ptr() as usize;
+        let cap = b.capacity();
+        s.give(b);
+        let b2 = s.take_zeroed(80);
+        assert_eq!(b2.as_ptr() as usize, ptr, "must reuse the retained buffer");
+        assert_eq!(b2.capacity(), cap);
+        assert_eq!(b2.len(), 80);
+        assert!(b2.iter().all(|&v| v == 0.0), "take_zeroed must re-zero");
+    }
+
+    #[test]
+    fn scratch_best_fit_prefers_smallest_sufficient() {
+        let mut s = ShardScratch::new();
+        let small = s.take_zeroed(10);
+        let big = s.take_zeroed(1000);
+        let (psmall, pbig) = (small.as_ptr() as usize, big.as_ptr() as usize);
+        s.give(big);
+        s.give(small);
+        let got = s.take_zeroed(8);
+        assert_eq!(got.as_ptr() as usize, psmall, "small request takes the small buffer");
+        let got_big = s.take_zeroed(900);
+        assert_eq!(got_big.as_ptr() as usize, pbig);
+    }
+
+    #[test]
+    fn scratch_retention_is_capped() {
+        let mut s = ShardScratch::new();
+        for _ in 0..(ShardScratch::MAX_BUFFERS + 5) {
+            s.give(vec![0.0; 4]);
+        }
+        assert_eq!(s.buffers.len(), ShardScratch::MAX_BUFFERS);
+    }
+}

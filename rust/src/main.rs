@@ -31,6 +31,14 @@ use ssnal_en::util::table::Table;
 use ssnal_en::util::Args;
 use std::path::PathBuf;
 
+/// Counting system allocator: the instrument behind `bench-parallel
+/// --newton-*`'s allocs/iter column (and the zero-allocation Newton-hot-path
+/// gate). One relaxed atomic add per allocation — negligible against the
+/// allocation itself.
+#[global_allocator]
+static ALLOC: ssnal_en::util::alloc_count::CountingAllocator =
+    ssnal_en::util::alloc_count::CountingAllocator;
+
 fn main() {
     let args = match Args::from_env() {
         Ok(a) => a,
@@ -96,6 +104,8 @@ fn print_help() {
          \x20                [--shard-out BENCH_shard_linalg.json]\n\
          \x20                --pool-calls 200 --pool-threads 2,4 [--no-pool-bench]\n\
          \x20                [--pool-out BENCH_pool_dispatch.json]\n\
+         \x20                --newton-sizes 160:1200:40,320:2000:120 --newton-reps 3\n\
+         \x20                [--no-newton-bench] [--newton-out BENCH_newton_workspace.json]\n\
          bench-check      --current BENCH_x.json --baseline benches/baselines/BENCH_x.json\n\
          artifacts-check  [--artifacts-dir artifacts]\n"
     );
@@ -476,6 +486,45 @@ fn cmd_bench_parallel(args: &Args) -> Result<()> {
         }
     }
 
+    // Newton workspace: cold vs warm buffers, cached vs cold factorization,
+    // steady-state allocations per warm iteration.
+    if !args.get_flag("no-newton-bench") {
+        let sizes_str = args.get_str("newton-sizes", "160:1200:40,320:2000:120");
+        let sizes = parse_newton_sizes(&sizes_str)?;
+        let newton_reps = args.get_usize("newton-reps", 3).map_err(Error::msg)?;
+        let (nt, nrows) = tables::newton_workspace_rows(&sizes, newton_reps);
+        println!();
+        nt.print();
+        if let Some(path) = args.get("newton-out") {
+            let json = tables::newton_workspace_json(&nrows, newton_reps);
+            if let Some(parent) = PathBuf::from(path).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, json)?;
+            println!("wrote {path}");
+        }
+        determinism_ok &= nrows.iter().all(|r| r.bitwise_equal);
+        // Workspace gates: warm factor-cache solves must be strictly cheaper
+        // than cold at every measured size (cache hits skip the O(m²r+m³) /
+        // O(r²m+r³) build entirely, so the margin is several-fold and does
+        // not flake on noisy boxes; the buffer-reuse-only CG row is exempt),
+        // and — with this binary's counting allocator installed — the warm
+        // path must allocate nothing in steady state.
+        if let Some(slow) = nrows.iter().find(|r| r.strategy != "cg" && r.warm_speedup <= 1.0) {
+            return Err(Error::msg(format!(
+                "warm {} workspace no cheaper than cold at m={} r={} \
+                 ({:.2e}s vs {:.2e}s per solve)",
+                slow.strategy, slow.m, slow.r, slow.warm_seconds, slow.cold_seconds
+            )));
+        }
+        if let Some(leaky) = nrows.iter().find(|r| r.allocs_per_iter > 0.0) {
+            return Err(Error::msg(format!(
+                "steady-state {} Newton iterations allocate ({:.2} allocs/iter at m={} r={})",
+                leaky.strategy, leaky.allocs_per_iter, leaky.m, leaky.r
+            )));
+        }
+    }
+
     // The determinism contract is load-bearing: a bench run that observes a
     // bitwise divergence must fail loudly (CI runs this on every push).
     if !determinism_ok {
@@ -484,6 +533,27 @@ fn cmd_bench_parallel(args: &Args) -> Result<()> {
         ));
     }
     Ok(())
+}
+
+/// Parse `--newton-sizes` triples `m:n:r[,m:n:r...]`.
+fn parse_newton_sizes(s: &str) -> Result<Vec<(usize, usize, usize)>> {
+    let mut sizes = Vec::new();
+    for triple in s.split(',') {
+        let parts: Vec<&str> = triple.trim().split(':').collect();
+        if parts.len() != 3 {
+            return Err(Error::msg(format!("--newton-sizes expects m:n:r, got {triple:?}")));
+        }
+        let parse = |p: &str| {
+            p.trim()
+                .parse::<f64>()
+                .ok()
+                .filter(|v| *v >= 1.0)
+                .map(|v| v as usize)
+                .ok_or_else(|| Error::msg(format!("bad size component {p:?}")))
+        };
+        sizes.push((parse(parts[0])?, parse(parts[1])?, parse(parts[2])?));
+    }
+    Ok(sizes)
 }
 
 /// Diff a fresh `BENCH_*.json` against its committed baseline (the CI

@@ -295,9 +295,13 @@ fn solve_point_screened(
 
     let kept = survivors.len();
     let a_sub = a.gather_cols(&survivors);
+    // Fresh workspace: the reduced design `a_sub` is a new matrix, so the
+    // chain's cached factorizations (keyed on the full design's columns)
+    // cannot carry over.
     let mut warm_sub = WarmState {
         x: warm.x.as_ref().map(|x| survivors.iter().map(|&j| x[j]).collect()),
         sigma: warm.sigma,
+        newton_ws: Default::default(),
     };
     let sub = solve_point(&a_sub, b, lambda_max, c, base, &mut warm_sub);
 

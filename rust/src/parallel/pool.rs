@@ -10,7 +10,16 @@
 //! costs a mutex hand-off and a wake — not a thread spawn — and sharding
 //! stays profitable well below O(mn) kernel granularity. The pool lives for
 //! the rest of the process; there is no shutdown protocol (workers hold no
-//! resources beyond a parked thread, and the OS reclaims them at exit).
+//! resources beyond a parked thread and its scratch arena, and the OS
+//! reclaims them at exit).
+//!
+//! Because workers are long-lived, each one's thread-local
+//! [`crate::linalg::workspace::ShardScratch`] arena persists across batches:
+//! a worker that publishes *nested* shard kernels (a chain worker sharding
+//! its own sweeps) reuses its own partial buffers call after call instead of
+//! allocating per wake. The committed per-wake dispatch cost is exported as
+//! [`SEED_DISPATCH_SECONDS`] and seeds the shard-size floor in
+//! [`crate::parallel::shard`].
 //!
 //! # Batch protocol
 //!
@@ -49,6 +58,15 @@ use crate::parallel::steal::StealQueues;
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Condvar, Mutex, Once, OnceLock};
+
+/// Seeded per-wake dispatch cost (seconds per `run_tasks` call on a warm
+/// pool): the worst `pool_seconds_per_call` row of the committed
+/// `rust/benches/baselines/BENCH_pool_dispatch.json`. This is a *committed
+/// measurement*, not a runtime probe — [`crate::parallel::shard`] derives its
+/// default shard-size floor from it, and deriving from a live measurement
+/// would make shard plans (and reduction bits) vary run to run. Refresh it
+/// together with the baseline JSON when the dispatch path changes materially.
+pub const SEED_DISPATCH_SECONDS: f64 = 1.8e-5;
 
 /// Threads the host exposes (≥ 1).
 pub fn available_threads() -> usize {

@@ -19,8 +19,9 @@
 //! Every kernel's floating-point result is a pure function of its inputs and
 //! its [`Plan`] — never of the thread count or of scheduling:
 //!
-//! * the shard split is a pure function of the problem shape
-//!   ([`Plan::for_work`] derives it from element count × flops per element);
+//! * the shard split is a pure function of the problem shape and the shard
+//!   flop target ([`Plan::for_work`] derives it from element count × flops
+//!   per element against [`target_shard_flops`]);
 //! * element-wise kernels (`Aᵀy`, per-column dots, the Gram entries) compute
 //!   each output element exactly as the serial loop does, so they are bitwise
 //!   identical to the serial path *regardless* of sharding;
@@ -32,7 +33,21 @@
 //! Thread count only decides whether shards run on pool workers or in a loop
 //! on the calling thread; both schedules produce the same bits. For shapes
 //! that resolve to a single shard (every small problem), the kernels reduce
-//! to exactly the pre-shard serial code paths.
+//! to exactly the pre-shard serial code paths — and take them without
+//! touching the heap, which is what keeps the workspace-backed Newton hot
+//! path allocation-free (see [`crate::linalg::workspace`]).
+//!
+//! # Scratch reuse
+//!
+//! Multi-shard reduction kernels need one zero-based partial buffer per
+//! shard. Those buffers are drawn as a single flat slab from the **calling
+//! thread's** [`crate::linalg::workspace::ShardScratch`] arena (thread-local,
+//! so chain workers and nested shard calls on pool workers each reuse their
+//! own) and returned after the fixed-order reduction — steady-state kernel
+//! calls stop allocating the `vec![0.0; m]`-per-shard partials entirely.
+//! Shard jobs write into disjoint pre-split slices of the slab, so the
+//! partials' values (and the reduction order) are exactly those of the
+//! old allocate-per-shard scheme, bit for bit.
 //!
 //! # Thread configuration
 //!
@@ -41,15 +56,50 @@
 //! variable, else 1; see [`set_threads`]) plus a thread-local override
 //! ([`with_threads`]) that the chain engine uses to hand each worker its
 //! share of spare cores — chains × within-solve shards never oversubscribe.
+//! `SSNAL_THREADS` **never** changes output bits (see the contract above).
+//!
+//! # Shard flop target
+//!
+//! How much work one shard must amortize is itself configurable:
+//! [`target_shard_flops`] resolves, in order, a thread-local override
+//! ([`with_target_shard_flops`], scoped experiments/tests only — it affects
+//! plans computed on the calling thread alone), a process-global value
+//! ([`set_target_shard_flops`] / the `SSNAL_SHARD_FLOPS` environment
+//! variable, read once), and finally a default *derived from the measured
+//! per-wake dispatch cost* of the persistent pool: the committed
+//! `BENCH_pool_dispatch.json` baseline seeds
+//! [`pool::SEED_DISPATCH_SECONDS`], a shard is required to amortize
+//! [`DISPATCH_AMORTIZATION`] wakes at [`EFFECTIVE_FLOPS_PER_SEC`], and the
+//! result is rounded to the nearest power of two (which lands on
+//! [`TARGET_SHARD_FLOPS`] = 2²¹ for the current seeds). The derivation uses
+//! committed constants — never a runtime measurement — so the default plan
+//! is identical on every host and every run. Unlike `SSNAL_THREADS`,
+//! `SSNAL_SHARD_FLOPS` **changes the shard split and therefore the bits of
+//! the reduction kernels**: it is part of the problem-shape inputs the
+//! determinism contract is conditioned on, and must be identical across runs
+//! that are expected to agree bitwise.
 
+use crate::linalg::workspace::{scratch_give, scratch_take_zeroed};
 use crate::linalg::{blas, Mat};
 use crate::parallel::pool;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Flops a single shard should amortize; below this, splitting costs more in
-/// partial-buffer traffic than it buys in parallelism.
+/// The derived default of [`target_shard_flops`] for the committed dispatch
+/// seeds (kept as a named anchor: tests pin the derivation to it).
 pub const TARGET_SHARD_FLOPS: usize = 1 << 21;
+
+/// Wakes one shard must amortize against the seeded per-wake dispatch cost.
+pub const DISPATCH_AMORTIZATION: f64 = 64.0;
+
+/// Effective streaming flop rate (flops/s) assumed by the derivation — a
+/// deliberately conservative single-core estimate for the level-1 kernels.
+pub const EFFECTIVE_FLOPS_PER_SEC: f64 = 2.0e9;
+
+/// Clamp bounds for the shard flop target (env override included).
+pub const MIN_SHARD_FLOPS: usize = 1 << 16;
+/// See [`MIN_SHARD_FLOPS`].
+pub const MAX_SHARD_FLOPS: usize = 1 << 26;
 
 /// Cap on shards per kernel call (the reduction tree stays tiny).
 pub const MAX_SHARDS: usize = 64;
@@ -111,6 +161,78 @@ pub fn with_threads<T>(t: usize, f: impl FnOnce() -> T) -> T {
     f()
 }
 
+/// Process-global shard flop target (0 = not yet initialized).
+static GLOBAL_SHARD_FLOPS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread override (0 = inherit the global target).
+    static LOCAL_SHARD_FLOPS: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// The flop target derived from the committed per-wake dispatch seed (see the
+/// module docs' "Shard flop target" section): `seed_seconds × amortization ×
+/// flops/s`, rounded to the nearest power of two in log space and clamped.
+fn derived_shard_flops() -> usize {
+    let raw = pool::SEED_DISPATCH_SECONDS * DISPATCH_AMORTIZATION * EFFECTIVE_FLOPS_PER_SEC;
+    let exp = raw.max(1.0).log2().round() as u32;
+    (1usize << exp.min(usize::BITS - 2)).clamp(MIN_SHARD_FLOPS, MAX_SHARD_FLOPS)
+}
+
+fn global_shard_flops() -> usize {
+    let cur = GLOBAL_SHARD_FLOPS.load(Ordering::Relaxed);
+    if cur != 0 {
+        return cur;
+    }
+    let init = std::env::var("SSNAL_SHARD_FLOPS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&t| t > 0)
+        .map(|t| t.clamp(MIN_SHARD_FLOPS, MAX_SHARD_FLOPS))
+        .unwrap_or_else(derived_shard_flops);
+    // Racing initializers read the same fixed environment, so they agree.
+    GLOBAL_SHARD_FLOPS.store(init, Ordering::Relaxed);
+    init
+}
+
+/// Set the process-global shard flop target (clamped; overrides
+/// `SSNAL_SHARD_FLOPS`). Changing it mid-process changes subsequent plans —
+/// and therefore reduction-kernel bits — so do it before any solve.
+pub fn set_target_shard_flops(t: usize) {
+    GLOBAL_SHARD_FLOPS.store(t.clamp(MIN_SHARD_FLOPS, MAX_SHARD_FLOPS), Ordering::Relaxed);
+}
+
+/// The shard flop target in effect on this thread.
+pub fn target_shard_flops() -> usize {
+    let local = LOCAL_SHARD_FLOPS.with(|c| c.get());
+    if local != 0 {
+        local
+    } else {
+        global_shard_flops()
+    }
+}
+
+/// Run `f` with the shard flop target pinned to `t` **on this thread**
+/// (restored afterwards, panic-safe). Scoped experiments and tests only:
+/// plans computed on other threads (pool workers, chain workers) keep the
+/// global target, so production configuration must go through
+/// `SSNAL_SHARD_FLOPS` / [`set_target_shard_flops`] to keep every thread's
+/// plans — and bits — in agreement.
+pub fn with_target_shard_flops<T>(t: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_SHARD_FLOPS.with(|c| c.set(self.0));
+        }
+    }
+    let prev = LOCAL_SHARD_FLOPS.with(|c| {
+        let p = c.get();
+        c.set(t.clamp(MIN_SHARD_FLOPS, MAX_SHARD_FLOPS));
+        p
+    });
+    let _restore = Restore(prev);
+    f()
+}
+
 /// A shard split: how many shards a kernel call uses. Pure data, pure
 /// function of the problem shape — never of the thread count.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -131,14 +253,14 @@ impl Plan {
     }
 
     /// Derive the shard count from `units` work items costing roughly
-    /// `flops_per_unit` each: one shard per [`TARGET_SHARD_FLOPS`] block,
+    /// `flops_per_unit` each: one shard per [`target_shard_flops`] block,
     /// capped at [`MAX_SHARDS`] and at the unit count.
     pub fn for_work(units: usize, flops_per_unit: usize) -> Plan {
         if units == 0 {
             return Plan::single();
         }
         let total = units.saturating_mul(flops_per_unit.max(1));
-        Plan { shards: (total / TARGET_SHARD_FLOPS).clamp(1, MAX_SHARDS).min(units) }
+        Plan { shards: (total / target_shard_flops()).clamp(1, MAX_SHARDS).min(units) }
     }
 
     /// Balanced contiguous ranges tiling `0..units` (lengths differ by ≤ 1).
@@ -196,23 +318,46 @@ fn tree_reduce_scalars(mut parts: Vec<f64>) -> f64 {
     parts[0]
 }
 
-/// Tree sum of equal-length vector partials (same pairing as the scalar
-/// reduction), executed on the calling thread.
-fn tree_reduce_vecs(mut parts: Vec<Vec<f64>>) -> Vec<f64> {
-    debug_assert!(!parts.is_empty());
-    let mut width = parts.len();
+/// Tree sum of `parts` equal-`len` vector partials packed contiguously in
+/// `flat` (same pairing as the scalar reduction), executed on the calling
+/// thread; the total lands in `flat[..len]`. Operating on one flat slab (the
+/// scratch buffer the partials were written into) instead of a
+/// `Vec<Vec<f64>>` keeps the reduction allocation-free; the pairing — and
+/// therefore every output bit — is unchanged.
+fn tree_reduce_flat(flat: &mut [f64], parts: usize, len: usize) {
+    debug_assert!(parts > 0);
+    debug_assert!(flat.len() >= parts * len);
+    let mut width = parts;
     while width > 1 {
         let half = width.div_ceil(2);
         for i in 0..(width - half) {
-            let (lo, hi) = parts.split_at_mut(half);
-            let src = &hi[i];
-            for (d, s) in lo[i].iter_mut().zip(src.iter()) {
+            let (lo, hi) = flat.split_at_mut(half * len);
+            let dst = &mut lo[i * len..(i + 1) * len];
+            let src = &hi[i * len..(i + 1) * len];
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
                 *d += *s;
             }
         }
         width = half;
     }
-    parts.swap_remove(0)
+}
+
+/// Run `()`-returning jobs that write into caller-owned disjoint buffers: on
+/// the pool when the ambient budget allows, else inline on the calling
+/// thread. Both schedules execute every job exactly once over the same
+/// buffers, so they are indistinguishable to the caller.
+fn run_jobs<F>(jobs: Vec<F>)
+where
+    F: FnOnce() + Send,
+{
+    let t = threads();
+    if t <= 1 || jobs.len() <= 1 {
+        for job in jobs {
+            job();
+        }
+    } else {
+        pool::run_tasks(t, jobs);
+    }
 }
 
 /// Sharded dot product (tree-reduced shard partials).
@@ -223,10 +368,12 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 /// [`dot`] with an explicit plan.
 pub fn dot_planned(plan: Plan, a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let ranges = plan.split(a.len());
-    if ranges.len() == 1 {
+    // A single-shard plan is the serial kernel, bit for bit — taken without
+    // touching the heap (no range split is materialized).
+    if plan.shards <= 1 || a.len() <= 1 {
         return blas::dot(a, b);
     }
+    let ranges = plan.split(a.len());
     let parts = run_ranges(&ranges, |r| blas::dot(&a[r.clone()], &b[r]));
     tree_reduce_scalars(parts)
 }
@@ -240,12 +387,12 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
 /// [`axpy`] with an explicit plan.
 pub fn axpy_planned(plan: Plan, alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    let ranges = plan.split(x.len());
-    if threads() <= 1 || ranges.len() <= 1 {
+    if threads() <= 1 || plan.shards <= 1 || x.len() <= 1 {
         // Same per-element op as the sharded path: y[i] += alpha·x[i].
         blas::axpy(alpha, x, y);
         return;
     }
+    let ranges = plan.split(x.len());
     let mut jobs = Vec::with_capacity(ranges.len());
     let mut rest = &mut y[..];
     for r in &ranges {
@@ -268,11 +415,11 @@ pub fn t_mul_vec_into(a: &Mat, y: &[f64], out: &mut [f64]) {
 pub fn t_mul_vec_into_planned(plan: Plan, a: &Mat, y: &[f64], out: &mut [f64]) {
     assert_eq!(y.len(), a.rows());
     assert_eq!(out.len(), a.cols());
-    let ranges = plan.split(a.cols());
-    if threads() <= 1 || ranges.len() <= 1 {
+    if threads() <= 1 || plan.shards <= 1 || a.cols() <= 1 {
         a.t_mul_vec_into(y, out);
         return;
     }
+    let ranges = plan.split(a.cols());
     let mut jobs = Vec::with_capacity(ranges.len());
     let mut rest = &mut out[..];
     for r in &ranges {
@@ -304,24 +451,36 @@ pub fn mul_vec_support_into_planned(
     out: &mut [f64],
 ) {
     assert_eq!(out.len(), a.rows());
-    let ranges = plan.split(support.len());
-    if ranges.len() == 1 {
+    if plan.shards <= 1 || support.len() <= 1 {
         a.mul_vec_support_into(x, support, out);
         return;
     }
+    let ranges = plan.split(support.len());
     let m = a.rows();
-    let parts = run_ranges(&ranges, |r| {
-        let mut part = vec![0.0; m];
-        for &j in &support[r] {
-            let xj = x[j];
-            if xj != 0.0 {
-                blas::axpy(xj, a.col(j), &mut part);
-            }
+    // One zero-based partial per shard, packed in a flat scratch slab (see
+    // the module docs' "Scratch reuse" section).
+    let mut flat = scratch_take_zeroed(ranges.len() * m);
+    {
+        let mut jobs = Vec::with_capacity(ranges.len());
+        let mut rest = &mut flat[..];
+        for r in &ranges {
+            let (part, tail) = std::mem::take(&mut rest).split_at_mut(m);
+            let ids = &support[r.start..r.end];
+            jobs.push(move || {
+                for &j in ids {
+                    let xj = x[j];
+                    if xj != 0.0 {
+                        blas::axpy(xj, a.col(j), &mut *part);
+                    }
+                }
+            });
+            rest = tail;
         }
-        part
-    });
-    let total = tree_reduce_vecs(parts);
-    out.copy_from_slice(&total);
+        run_jobs(jobs);
+    }
+    tree_reduce_flat(&mut flat, ranges.len(), m);
+    out.copy_from_slice(&flat[..m]);
+    scratch_give(flat);
 }
 
 /// Sharded `out += Σ_k coeffs[k]·A[:, idx[k]]` (Woodbury's `A_J w` and the CG
@@ -343,8 +502,7 @@ pub fn add_scaled_cols_planned(
 ) {
     assert_eq!(idx.len(), coeffs.len());
     assert_eq!(out.len(), a.rows());
-    let ranges = plan.split(idx.len());
-    if ranges.len() == 1 {
+    if plan.shards <= 1 || idx.len() <= 1 {
         for (k, &j) in idx.iter().enumerate() {
             if coeffs[k] != 0.0 {
                 blas::axpy(coeffs[k], a.col(j), out);
@@ -352,20 +510,31 @@ pub fn add_scaled_cols_planned(
         }
         return;
     }
+    let ranges = plan.split(idx.len());
     let m = a.rows();
-    let parts = run_ranges(&ranges, |r| {
-        let mut part = vec![0.0; m];
-        for k in r {
-            if coeffs[k] != 0.0 {
-                blas::axpy(coeffs[k], a.col(idx[k]), &mut part);
-            }
+    let mut flat = scratch_take_zeroed(ranges.len() * m);
+    {
+        let mut jobs = Vec::with_capacity(ranges.len());
+        let mut rest = &mut flat[..];
+        for r in &ranges {
+            let (part, tail) = std::mem::take(&mut rest).split_at_mut(m);
+            let r = r.clone();
+            jobs.push(move || {
+                for k in r {
+                    if coeffs[k] != 0.0 {
+                        blas::axpy(coeffs[k], a.col(idx[k]), &mut *part);
+                    }
+                }
+            });
+            rest = tail;
         }
-        part
-    });
-    let total = tree_reduce_vecs(parts);
-    for (o, t) in out.iter_mut().zip(total.iter()) {
+        run_jobs(jobs);
+    }
+    tree_reduce_flat(&mut flat, ranges.len(), m);
+    for (o, t) in out.iter_mut().zip(flat[..m].iter()) {
         *o += *t;
     }
+    scratch_give(flat);
 }
 
 /// Sharded `out[k] = scale·⟨A[:, idx[k]], v⟩` (Woodbury's `A_Jᵀ rhs` and the
@@ -375,13 +544,13 @@ pub fn col_dots(a: &Mat, idx: &[usize], v: &[f64], scale: f64, out: &mut [f64]) 
     assert_eq!(out.len(), idx.len());
     assert_eq!(v.len(), a.rows());
     let plan = Plan::for_work(idx.len(), 2 * a.rows());
-    let ranges = plan.split(idx.len());
-    if threads() <= 1 || ranges.len() <= 1 {
+    if threads() <= 1 || plan.shards <= 1 || idx.len() <= 1 {
         for (k, &j) in idx.iter().enumerate() {
             out[k] = scale * blas::dot(a.col(j), v);
         }
         return;
     }
+    let ranges = plan.split(idx.len());
     let mut jobs = Vec::with_capacity(ranges.len());
     let mut rest = &mut out[..];
     for r in &ranges {
@@ -403,43 +572,78 @@ pub fn col_dots(a: &Mat, idx: &[usize], v: &[f64], scale: f64, out: &mut [f64]) 
 /// serial [`Mat::gram_of_cols`] computes — the result is bitwise identical at
 /// every thread count.
 pub fn gram_of_cols(a: &Mat, idx: &[usize], ridge: f64) -> Mat {
+    let mut g = Mat::zeros(idx.len(), idx.len());
+    gram_of_cols_into(a, idx, ridge, &mut g);
+    g
+}
+
+/// [`gram_of_cols`] into a caller-owned (workspace) matrix, resized only when
+/// its dimension changes. The strided upper-triangle rows are computed into a
+/// flat slab from the calling thread's scratch arena and scattered
+/// sequentially, so repeated builds allocate nothing.
+pub fn gram_of_cols_into(a: &Mat, idx: &[usize], ridge: f64, g: &mut Mat) {
     let r = idx.len();
+    if g.rows() != r || g.cols() != r {
+        *g = Mat::zeros(r, r);
+    }
     // triangle rows cost (r − row)·2m flops; size the plan on the total
     let plan = Plan::for_work(r * (r + 1) / 2, 2 * a.rows());
     if threads() <= 1 || plan.shards <= 1 {
-        return a.gram_of_cols(idx, ridge);
-    }
-    let shards = plan.shards.min(r.max(1));
-    let jobs: Vec<_> = (0..shards)
-        .map(|k| {
-            move || {
-                let mut rows = Vec::new();
-                let mut row = k;
-                while row < r {
-                    let ca = a.col(idx[row]);
-                    let vals: Vec<f64> = (row..r).map(|b| blas::dot(ca, a.col(idx[b]))).collect();
-                    rows.push((row, vals));
-                    row += shards;
-                }
-                rows
-            }
-        })
-        .collect();
-    let outs = pool::run_tasks(threads(), jobs);
-    let mut g = Mat::zeros(r, r);
-    for rows in outs {
-        for (row, vals) in rows {
-            for (off, v) in vals.into_iter().enumerate() {
-                let b = row + off;
+        // the exact serial build, written into the reused buffer
+        for row in 0..r {
+            let ca = a.col(idx[row]);
+            for b in row..r {
+                let v = blas::dot(ca, a.col(idx[b]));
                 g.set(row, b, v);
                 g.set(b, row, v);
             }
+            let d = g.get(row, row) + ridge;
+            g.set(row, row, d);
         }
+        return;
+    }
+    let shards = plan.shards.min(r.max(1));
+    // Flat slab holding the packed upper-triangle rows (row `row` occupies
+    // `r - row` slots); shard k owns the strided rows k, k+S, ….
+    let mut flat = scratch_take_zeroed(r * (r + 1) / 2);
+    {
+        let mut buckets: Vec<Vec<(usize, &mut [f64])>> =
+            (0..shards).map(|_| Vec::new()).collect();
+        let mut rest = &mut flat[..];
+        for row in 0..r {
+            let (vals, tail) = std::mem::take(&mut rest).split_at_mut(r - row);
+            buckets[row % shards].push((row, vals));
+            rest = tail;
+        }
+        let jobs: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| {
+                move || {
+                    for (row, vals) in bucket {
+                        let ca = a.col(idx[row]);
+                        for (off, dst) in vals.iter_mut().enumerate() {
+                            *dst = blas::dot(ca, a.col(idx[row + off]));
+                        }
+                    }
+                }
+            })
+            .collect();
+        run_jobs(jobs);
+    }
+    let mut pos = 0;
+    for row in 0..r {
+        for off in 0..(r - row) {
+            let v = flat[pos + off];
+            let b = row + off;
+            g.set(row, b, v);
+            g.set(b, row, v);
+        }
+        pos += r - row;
     }
     for i in 0..r {
         g.set(i, i, g.get(i, i) + ridge);
     }
-    g
+    scratch_give(flat);
 }
 
 /// Run one closure per plan-derived contiguous range of `0..units`, fanned
@@ -502,47 +706,58 @@ pub fn rank1_lower_accum(a: &Mat, active: &[usize], kappa: f64, v: &mut Mat) {
         }
         return;
     }
-    // The multi-shard path tree-folds zero-based partials and adds each
-    // column once; that matches the serial in-place fold bit for bit only
-    // from a zeroed triangle. Enforce the precondition in release too — the
-    // O(m²) scan is a 1/r fraction of the O(m²r) build it guards, and a
-    // silent violation would make output bits depend on the thread budget.
-    assert!(
+    // The multi-shard path folds zero-based partials and adds each column
+    // once; that matches the serial in-place fold bit for bit only from a
+    // zeroed triangle. The precondition is discharged by the owning
+    // workspace ([`crate::linalg::workspace::NewtonWorkspace`] zeroes its
+    // build buffer before lending it out — the zero-or-overwrite rule), so
+    // the former O(m²) release-mode scan is now a debug assertion.
+    debug_assert!(
         (0..m).all(|c| (c..m).all(|r| v.get(r, c) == 0.0)),
         "multi-shard rank1_lower_accum requires a zeroed lower triangle"
     );
     let shards = plan.shards.min(m);
-    let jobs: Vec<_> = (0..shards)
-        .map(|k| {
-            move || {
-                let mut cols = Vec::new();
-                let mut c = k;
-                while c < m {
-                    let mut vals = vec![0.0; m - c];
-                    for &j in active {
-                        let col = a.col(j);
-                        let s = kappa * col[c];
-                        if s != 0.0 {
-                            for (off, dst) in vals.iter_mut().enumerate() {
-                                *dst += s * col[c + off];
+    // Flat slab of packed column tails (column c occupies m − c slots),
+    // strided over shards like the Gram build.
+    let mut flat = scratch_take_zeroed(m * (m + 1) / 2);
+    {
+        let mut buckets: Vec<Vec<(usize, &mut [f64])>> =
+            (0..shards).map(|_| Vec::new()).collect();
+        let mut rest = &mut flat[..];
+        for c in 0..m {
+            let (vals, tail) = std::mem::take(&mut rest).split_at_mut(m - c);
+            buckets[c % shards].push((c, vals));
+            rest = tail;
+        }
+        let jobs: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| {
+                move || {
+                    for (c, vals) in bucket {
+                        for &j in active {
+                            let col = a.col(j);
+                            let s = kappa * col[c];
+                            if s != 0.0 {
+                                for (off, dst) in vals.iter_mut().enumerate() {
+                                    *dst += s * col[c + off];
+                                }
                             }
                         }
                     }
-                    cols.push((c, vals));
-                    c += shards;
                 }
-                cols
-            }
-        })
-        .collect();
-    for cols in pool::run_tasks(threads(), jobs) {
-        for (c, vals) in cols {
-            let vc = v.col_mut(c);
-            for (off, val) in vals.into_iter().enumerate() {
-                vc[c + off] += val;
-            }
-        }
+            })
+            .collect();
+        run_jobs(jobs);
     }
+    let mut pos = 0;
+    for c in 0..m {
+        let vc = v.col_mut(c);
+        for (off, val) in flat[pos..pos + (m - c)].iter().enumerate() {
+            vc[c + off] += *val;
+        }
+        pos += m - c;
+    }
+    scratch_give(flat);
 }
 
 #[cfg(test)]
@@ -602,13 +817,45 @@ mod tests {
         p0 += p2;
         p0 += p1;
         assert_eq!(got, p0);
-        let vecs = vec![vec![1.0, 2.0], vec![0.5, -1.0], vec![0.25, 4.0]];
-        let got = tree_reduce_vecs(vecs.clone());
-        let expect = vec![
-            (vecs[0][0] + vecs[2][0]) + vecs[1][0],
-            (vecs[0][1] + vecs[2][1]) + vecs[1][1],
-        ];
-        assert_eq!(got, expect);
+        // flat vector partials: same pairing as the scalar tree
+        let mut flat = vec![1.0, 2.0, 0.5, -1.0, 0.25, 4.0]; // 3 parts × len 2
+        tree_reduce_flat(&mut flat, 3, 2);
+        let expect = [(1.0 + 0.25) + 0.5, (2.0 + 4.0) + (-1.0)];
+        assert_eq!(&flat[..2], &expect);
+    }
+
+    #[test]
+    fn shard_flop_target_derivation_and_override() {
+        // the derived default must land exactly on the documented anchor —
+        // a drifting derivation would silently change reduction bits
+        assert_eq!(derived_shard_flops(), TARGET_SHARD_FLOPS);
+        // scoped override: lowering the target multiplies the shard count
+        let base = Plan::for_work(1 << 18, 16);
+        let fine = with_target_shard_flops(MIN_SHARD_FLOPS, || Plan::for_work(1 << 18, 16));
+        assert!(
+            fine.shards >= base.shards,
+            "lower target must not shard less: {fine:?} vs {base:?}"
+        );
+        assert_eq!(fine.shards, MAX_SHARDS, "2^22 flops / 2^16 target caps at MAX_SHARDS");
+        // the override is scoped and restored
+        let restored = Plan::for_work(1 << 18, 16);
+        assert_eq!(restored, base);
+        // clamping
+        let clamped = with_target_shard_flops(1, target_shard_flops);
+        assert_eq!(clamped, MIN_SHARD_FLOPS);
+    }
+
+    #[test]
+    fn reduction_bits_depend_on_plan_not_target_resolution() {
+        // the same explicit plan gives the same bits whatever the ambient
+        // flop target resolves to — the target only picks the plan
+        let a: Vec<f64> = (0..1000).map(|i| (i as f64) * 0.01 - 3.0).collect();
+        let b: Vec<f64> = (0..1000).map(|i| 0.5 - (i as f64) * 0.003).collect();
+        let plan = Plan::with_shards(4);
+        let reference = dot_planned(plan, &a, &b);
+        let under_override =
+            with_target_shard_flops(MIN_SHARD_FLOPS, || dot_planned(plan, &a, &b));
+        assert_eq!(reference.to_bits(), under_override.to_bits());
     }
 
     #[test]

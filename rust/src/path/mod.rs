@@ -76,16 +76,25 @@ pub struct PathResult {
     pub truncated: bool,
 }
 
-/// Warm state carried along one warm-start chain: the previous solution and
-/// the carried AL penalty σ. Near the previous solution the AL multiplier is
-/// already accurate, so restarting at σ0 = 5e-3 would waste outer iterations
-/// re-growing σ (paper: warm-started points converge in ~1 iteration).
+/// Warm state carried along one warm-start chain: the previous solution, the
+/// carried AL penalty σ, and the Newton workspace. Near the previous
+/// solution the AL multiplier is already accurate, so restarting at
+/// σ0 = 5e-3 would waste outer iterations re-growing σ (paper: warm-started
+/// points converge in ~1 iteration).
 #[derive(Clone, Debug, Default)]
 pub struct WarmState {
     /// Previous primal solution (length n), if any.
     pub x: Option<Vec<f64>>,
     /// σ carried from the previous SsNAL solve.
     pub sigma: Option<f64>,
+    /// Newton buffers + active-set-aware factorization cache, reused across
+    /// the chain's warm-started λ-steps: nearby λ values keep (most of) the
+    /// active set, so consecutive solves reuse the Woodbury Gram — and often
+    /// the whole Cholesky — instead of rebuilding per point. Cached entries
+    /// key on column indices of the bound design (the workspace self-resets
+    /// on a different one), and cache hits are bitwise-identical to cold
+    /// rebuilds, so the path's bits are unchanged.
+    pub newton_ws: crate::linalg::NewtonWorkspace,
 }
 
 /// Validate a descending c_λ grid (shared by the sequential and parallel
@@ -116,7 +125,8 @@ pub fn solve_point(
             // σ carry capped to keep the subproblem well conditioned.
             let sigma0 = warm.sigma.unwrap_or(defaults.sigma0).min(1e4);
             let sopts = SsnalOptions { tol: opts.tol, sigma0, ..defaults };
-            let (res, trace) = ssnal::solve_warm(&p, &sopts, warm.x.as_deref());
+            let (res, trace) =
+                ssnal::solve_warm_ws(&p, &sopts, warm.x.as_deref(), &mut warm.newton_ws);
             warm.sigma = Some(trace.final_sigma);
             res
         }

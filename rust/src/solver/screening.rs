@@ -39,10 +39,24 @@ impl<'a> AugmentedView<'a> {
 
     /// Augmented residual `r̃ = b̃ − Ãx = [b − Ax; −√λ2·x]`, stored split.
     pub fn residual(&self, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
-        let ax = self.p.a.mul_vec(x);
-        let top: Vec<f64> = (0..self.p.m()).map(|i| self.p.b[i] - ax[i]).collect();
-        let bottom: Vec<f64> = x.iter().map(|&v| -self.sqrt_lam2 * v).collect();
+        let (mut top, mut bottom) = (Vec::new(), Vec::new());
+        self.residual_into(x, &mut top, &mut bottom);
         (top, bottom)
+    }
+
+    /// [`AugmentedView::residual`] into caller-reused buffers (resized and
+    /// fully overwritten — bitwise the same values).
+    pub fn residual_into(&self, x: &[f64], top: &mut Vec<f64>, bottom: &mut Vec<f64>) {
+        let m = self.p.m();
+        top.resize(m, 0.0);
+        self.p.a.mul_vec_into(x, top);
+        for (t, &b) in top.iter_mut().zip(self.p.b.iter()) {
+            *t = b - *t;
+        }
+        bottom.resize(x.len(), 0.0);
+        for (o, &v) in bottom.iter_mut().zip(x.iter()) {
+            *o = -self.sqrt_lam2 * v;
+        }
     }
 
     /// `Ã_jᵀ ṽ` for split vector `(v_top, v_bottom)`.
@@ -61,12 +75,22 @@ impl<'a> AugmentedView<'a> {
     /// `D(θ) = ½‖b̃‖² − ½‖b̃ − θ‖²` (with the λ1 scaling folded in the classic
     /// way: D(θ) = ½‖b̃‖² − ½‖θ − b̃‖²). Returns `(dual_value, θ_top, θ_bottom)`.
     pub fn dual_point(&self, x: &[f64]) -> (f64, Vec<f64>, Vec<f64>) {
-        let (mut top, mut bottom) = self.residual(x);
+        let (mut top, mut bottom) = (Vec::new(), Vec::new());
+        let dual = self.dual_point_into(x, &mut top, &mut bottom);
+        (dual, top, bottom)
+    }
+
+    /// [`AugmentedView::dual_point`] writing the scaled dual point into
+    /// caller-reused buffers (the sweep-output reuse behind
+    /// [`solve_gap_safe`]'s rounds); returns the dual value. Bitwise the
+    /// same results as the allocating wrapper.
+    pub fn dual_point_into(&self, x: &[f64], top: &mut Vec<f64>, bottom: &mut Vec<f64>) -> f64 {
+        self.residual_into(x, top, bottom);
         // ‖Ãᵀr̃‖∞ — the O(mn) scoring sweep, sharded over feature ranges.
         // Every |Ã_jᵀr̃| is non-negative, so the max of the per-range maxima
         // is bitwise-equal to the serial ascending-j fold at every budget.
         let zmax = {
-            let (top_r, bottom_r) = (&top, &bottom);
+            let (top_r, bottom_r) = (&*top, &*bottom);
             shard::map_ranges(self.p.n(), 2 * self.p.m(), |range| {
                 let mut zmax = 0.0f64;
                 for j in range {
@@ -91,8 +115,8 @@ impl<'a> AugmentedView<'a> {
             let d = self.p.b[i] - top[i];
             diff_sq += d * d;
         }
-        diff_sq += blas::nrm2_sq(&bottom);
-        (0.5 * b_sq - 0.5 * diff_sq, top, bottom)
+        diff_sq += blas::nrm2_sq(bottom);
+        0.5 * b_sq - 0.5 * diff_sq
     }
 
     /// Gap-Safe screen: returns the surviving feature indices given iterate `x`.
@@ -100,23 +124,48 @@ impl<'a> AugmentedView<'a> {
     /// scoring is sharded over feature ranges; concatenating the per-range
     /// keeps in range order reproduces the serial ascending-j scan exactly.
     pub fn gap_safe_survivors(&self, x: &[f64]) -> Vec<usize> {
-        let (dual, theta_top, theta_bottom) = self.dual_point(x);
+        let (mut top, mut bottom, mut out) = (Vec::new(), Vec::new(), Vec::new());
+        self.gap_safe_survivors_into(x, &mut top, &mut bottom, &mut out);
+        out
+    }
+
+    /// [`AugmentedView::gap_safe_survivors`] writing the scaled dual point
+    /// and the survivor set into caller-reused buffers. Single-shard plans
+    /// push straight into `out` (no per-range keep lists); multi-shard plans
+    /// concatenate per-range keeps in range order — both reproduce the
+    /// serial ascending-j scan exactly.
+    pub fn gap_safe_survivors_into(
+        &self,
+        x: &[f64],
+        theta_top: &mut Vec<f64>,
+        theta_bottom: &mut Vec<f64>,
+        out: &mut Vec<usize>,
+    ) {
+        let dual = self.dual_point_into(x, theta_top, theta_bottom);
         let gap = (self.primal(x) - dual).max(0.0);
         let radius = (2.0 * gap).sqrt();
-        let (top, bottom) = (&theta_top, &theta_bottom);
-        shard::map_ranges(self.p.n(), 2 * self.p.m(), |range| {
-            let mut keep = Vec::new();
+        let (top, bottom) = (&*theta_top, &*theta_bottom);
+        out.clear();
+        let keep_range = |range: std::ops::Range<usize>, keep: &mut Vec<usize>| {
             for j in range {
                 let score = self.col_dot(j, top, bottom).abs() + radius * self.col_norms[j];
                 if score >= self.p.lam1 - 1e-12 {
                     keep.push(j);
                 }
             }
+        };
+        let n = self.p.n();
+        if shard::Plan::for_work(n, 2 * self.p.m()).shards <= 1 {
+            keep_range(0..n, out);
+            return;
+        }
+        for keep in shard::map_ranges(n, 2 * self.p.m(), |range| {
+            let mut keep = Vec::new();
+            keep_range(range, &mut keep);
             keep
-        })
-        .into_iter()
-        .flatten()
-        .collect()
+        }) {
+            out.extend_from_slice(&keep);
+        }
     }
 }
 
@@ -180,13 +229,16 @@ pub fn solve_gap_safe(p: &EnetProblem, opts: &BaselineOptions) -> SolveResult {
     let mut last_gap = f64::INFINITY;
     let obj_scale = 1.0 + blas::nrm2_sq(p.b);
     let mut survivors: Vec<usize> = (0..n).collect();
+    // Sweep-output buffers reused across screening rounds (the `_into`
+    // variants resize + overwrite them fully each round).
+    let (mut theta_top, mut theta_bottom) = (Vec::new(), Vec::new());
 
     while rounds < 100 {
         rounds += 1;
-        survivors = aug.gap_safe_survivors(&x);
+        aug.gap_safe_survivors_into(&x, &mut theta_top, &mut theta_bottom, &mut survivors);
         // keep current nonzeros (they survive by definition, but be safe)
         inner += cd_on_set(p, &mut x, &mut res, &col_sq, &survivors, opts.tol, 1000);
-        let (dual, _, _) = aug.dual_point(&x);
+        let dual = aug.dual_point_into(&x, &mut theta_top, &mut theta_bottom);
         last_gap = aug.primal(&x) - dual;
         if last_gap <= opts.tol * obj_scale {
             converged = true;

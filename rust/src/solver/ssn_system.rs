@@ -21,7 +21,7 @@
 //! the `A_J w` accumulation matches serial exactly only while its plan is
 //! single-shard).
 
-use crate::linalg::{solve_cg, Cholesky, Mat};
+use crate::linalg::{solve_cg_with, Mat, NewtonWorkspace};
 use crate::parallel::shard;
 use crate::solver::types::NewtonStrategy;
 
@@ -32,9 +32,16 @@ pub enum ResolvedStrategy {
     Direct,
     Woodbury,
     Cg,
+    /// A direct/Woodbury factorization failed numerically and the solve fell
+    /// back to CG (recorded in [`NewtonWorkspace::stats`] and the solver
+    /// trace).
+    CgFallback,
 }
 
-/// Solve `(I + κ A_J A_Jᵀ) d = rhs`, writing `d` (length m).
+/// Solve `(I + κ A_J A_Jᵀ) d = rhs`, writing `d` (length m), with a fresh
+/// workspace (allocates its buffers per call — tests and one-shot callers
+/// only; the solver hot path holds a [`NewtonWorkspace`] and calls
+/// [`solve_newton_system_ws`]).
 ///
 /// Returns the resolved strategy (for diagnostics / EXPERIMENTS.md §Perf).
 pub fn solve_newton_system(
@@ -46,6 +53,29 @@ pub fn solve_newton_system(
     strategy: NewtonStrategy,
     cg_tol: f64,
     cg_max_iters: usize,
+) -> ResolvedStrategy {
+    let mut ws = NewtonWorkspace::new();
+    solve_newton_system_ws(a, active, kappa, rhs, d, strategy, cg_tol, cg_max_iters, &mut ws)
+}
+
+/// [`solve_newton_system`] against a caller-owned [`NewtonWorkspace`]: all
+/// strategy buffers are reused, and the direct/Woodbury factorizations go
+/// through the workspace's active-set-aware cache — bitwise-identical to the
+/// cold path (see [`crate::linalg::workspace`]'s module docs), with
+/// steady-state calls (unchanged active set and κ, single-shard plans)
+/// performing zero heap allocations. On a numerical factorization failure
+/// the solve falls back to CG instead of panicking and reports
+/// [`ResolvedStrategy::CgFallback`].
+pub fn solve_newton_system_ws(
+    a: &Mat,
+    active: &[usize],
+    kappa: f64,
+    rhs: &[f64],
+    d: &mut [f64],
+    strategy: NewtonStrategy,
+    cg_tol: f64,
+    cg_max_iters: usize,
+    ws: &mut NewtonWorkspace,
 ) -> ResolvedStrategy {
     let m = a.rows();
     let r = active.len();
@@ -91,46 +121,77 @@ pub fn solve_newton_system(
     };
 
     match resolved {
-        ResolvedStrategy::Identity => unreachable!(),
-        ResolvedStrategy::Direct => solve_direct(a, active, kappa, rhs, d),
-        ResolvedStrategy::Woodbury => solve_woodbury(a, active, kappa, rhs, d),
-        ResolvedStrategy::Cg => solve_cg_strategy(a, active, kappa, rhs, d, cg_tol, cg_max_iters),
+        ResolvedStrategy::Identity | ResolvedStrategy::CgFallback => unreachable!(),
+        ResolvedStrategy::Direct => {
+            if solve_direct(a, active, kappa, rhs, d, ws).is_err() {
+                ws.stats.cg_fallbacks += 1;
+                solve_cg_strategy(a, active, kappa, rhs, d, cg_tol, cg_max_iters, ws);
+                return ResolvedStrategy::CgFallback;
+            }
+        }
+        ResolvedStrategy::Woodbury => {
+            if solve_woodbury(a, active, kappa, rhs, d, ws).is_err() {
+                ws.stats.cg_fallbacks += 1;
+                solve_cg_strategy(a, active, kappa, rhs, d, cg_tol, cg_max_iters, ws);
+                return ResolvedStrategy::CgFallback;
+            }
+        }
+        ResolvedStrategy::Cg => {
+            solve_cg_strategy(a, active, kappa, rhs, d, cg_tol, cg_max_iters, ws)
+        }
     }
     resolved
 }
 
 /// Direct: build `M = I + κ Σ_{j∈J} a_j a_jᵀ` and Cholesky-solve. The m×m
 /// rank-1 lower-triangle build (the strategy's O(m²r) sweep; factor reads
-/// lower) is sharded over the worker pool.
-fn solve_direct(a: &Mat, active: &[usize], kappa: f64, rhs: &[f64], d: &mut [f64]) {
-    let m = a.rows();
-    let mut v = Mat::zeros(m, m);
-    shard::rank1_lower_accum(a, active, kappa, &mut v);
-    for i in 0..m {
-        v.set(i, i, v.get(i, i) + 1.0);
-    }
-    let ch = Cholesky::factor(&v).expect("I + κ A_J A_Jᵀ is SPD");
+/// lower) is sharded over the worker pool; the build buffer and factor live
+/// in the workspace and are reused outright when `(J, κ)` repeats. A
+/// factorization failure (numerically non-SPD) surfaces as `Err` for the CG
+/// fallback instead of panicking.
+fn solve_direct(
+    a: &Mat,
+    active: &[usize],
+    kappa: f64,
+    rhs: &[f64],
+    d: &mut [f64],
+    ws: &mut NewtonWorkspace,
+) -> Result<(), ()> {
+    let ch = ws.direct_factor(a, active, kappa).map_err(|_| ())?;
     d.copy_from_slice(rhs);
     ch.solve_in_place(d);
+    Ok(())
 }
 
 /// Woodbury (Eq. 19): `V⁻¹ rhs = rhs − A_J (κ⁻¹I_r + A_JᵀA_J)⁻¹ A_Jᵀ rhs`.
-fn solve_woodbury(a: &Mat, active: &[usize], kappa: f64, rhs: &[f64], d: &mut [f64]) {
-    let g = shard::gram_of_cols(a, active, 1.0 / kappa);
-    let ch = Cholesky::factor(&g).expect("κ⁻¹I + A_JᵀA_J is SPD");
+/// The Gram, its Cholesky and the `w` buffer live in the workspace (cache
+/// policy in [`crate::linalg::workspace`]); factorization failure surfaces
+/// as `Err` for the CG fallback.
+fn solve_woodbury(
+    a: &Mat,
+    active: &[usize],
+    kappa: f64,
+    rhs: &[f64],
+    d: &mut [f64],
+    ws: &mut NewtonWorkspace,
+) -> Result<(), ()> {
+    ws.woodbury_factor(a, active, kappa).map_err(|_| ())?;
+    let (ch, w) = ws.woodbury_parts();
     // w = A_Jᵀ rhs
-    let mut w = vec![0.0; active.len()];
-    shard::col_dots(a, active, rhs, 1.0, &mut w);
-    ch.solve_in_place(&mut w);
+    w.resize(active.len(), 0.0);
+    shard::col_dots(a, active, rhs, 1.0, w);
+    ch.solve_in_place(w);
     // d = rhs − A_J w
     d.copy_from_slice(rhs);
     for v in w.iter_mut() {
         *v = -*v;
     }
-    shard::add_scaled_cols(a, active, &w, d);
+    shard::add_scaled_cols(a, active, w, d);
+    Ok(())
 }
 
-/// Matrix-free CG on `v ↦ v + κ A_J (A_Jᵀ v)`.
+/// Matrix-free CG on `v ↦ v + κ A_J (A_Jᵀ v)`; all four working vectors come
+/// from the workspace.
 fn solve_cg_strategy(
     a: &Mat,
     active: &[usize],
@@ -139,19 +200,24 @@ fn solve_cg_strategy(
     d: &mut [f64],
     cg_tol: f64,
     cg_max_iters: usize,
+    ws: &mut NewtonWorkspace,
 ) {
     d.iter_mut().for_each(|v| *v = 0.0);
-    let mut coeffs = vec![0.0; active.len()];
-    solve_cg(
+    let (coeffs, cg_r, cg_p, cg_ap) = ws.cg_parts();
+    coeffs.resize(active.len(), 0.0);
+    solve_cg_with(
         |v, out| {
-            shard::col_dots(a, active, v, kappa, &mut coeffs);
+            shard::col_dots(a, active, v, kappa, coeffs);
             out.copy_from_slice(v);
-            shard::add_scaled_cols(a, active, &coeffs, out);
+            shard::add_scaled_cols(a, active, coeffs, out);
         },
         rhs,
         d,
         cg_tol,
         cg_max_iters,
+        cg_r,
+        cg_p,
+        cg_ap,
     );
 }
 
@@ -237,6 +303,75 @@ mod tests {
         );
         assert_eq!(res, ResolvedStrategy::Identity);
         assert_eq!(d, rhs);
+    }
+
+    #[test]
+    fn woodbury_factor_failure_falls_back_to_cg_and_still_solves() {
+        // κ < 0 with |κ|·λmax(A_JA_Jᵀ) < 1: V = I + κA_JA_Jᵀ stays SPD, but
+        // the Woodbury matrix κ⁻¹I + A_JᵀA_J is negative-definite, so its
+        // Cholesky must fail — the solve has to fall back to CG (and, V
+        // being SPD, still produce the right direction) instead of panicking.
+        let (a, active, rhs) = random_case(10, 30, 8, 99);
+        let kappa = -0.01;
+        let mut d = vec![0.0; 10];
+        let res = solve_newton_system(
+            &a,
+            &active,
+            kappa,
+            &rhs,
+            &mut d,
+            NewtonStrategy::Woodbury,
+            1e-12,
+            2000,
+        );
+        assert_eq!(res, ResolvedStrategy::CgFallback);
+        let back = apply_v(&a, &active, kappa, &d);
+        for i in 0..10 {
+            assert!((back[i] - rhs[i]).abs() < 1e-6, "fallback residual at {i}");
+        }
+    }
+
+    #[test]
+    fn direct_factor_failure_falls_back_without_panicking() {
+        // κ ≪ 0 makes V itself indefinite: the direct factor fails and CG
+        // cannot converge either — the contract is a clean CgFallback report
+        // (and a finite d), never a mid-path panic.
+        let (a, active, rhs) = random_case(10, 30, 8, 100);
+        let mut d = vec![0.0; 10];
+        let res = solve_newton_system(
+            &a,
+            &active,
+            -10.0,
+            &rhs,
+            &mut d,
+            NewtonStrategy::Direct,
+            1e-10,
+            50,
+        );
+        assert_eq!(res, ResolvedStrategy::CgFallback);
+        assert!(d.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_solves() {
+        // the same sequence of systems through one workspace must reproduce
+        // fresh-workspace results exactly (cache hits return cold bits)
+        let (a, active, rhs) = random_case(25, 80, 10, 101);
+        for strategy in [NewtonStrategy::Direct, NewtonStrategy::Woodbury] {
+            let mut ws = crate::linalg::NewtonWorkspace::new();
+            for kappa in [0.7, 0.7, 1.9] {
+                let mut d_warm = vec![0.0; 25];
+                solve_newton_system_ws(
+                    &a, &active, kappa, &rhs, &mut d_warm, strategy, 1e-12, 1000, &mut ws,
+                );
+                let mut d_cold = vec![0.0; 25];
+                solve_newton_system(
+                    &a, &active, kappa, &rhs, &mut d_cold, strategy, 1e-12, 1000,
+                );
+                assert_eq!(d_warm, d_cold, "{strategy:?} κ={kappa}");
+            }
+            assert!(ws.stats.factor_hits + ws.stats.direct_hits >= 1, "{:?}", ws.stats);
+        }
     }
 
     #[test]

@@ -14,11 +14,11 @@
 //! `x − σ(Aᵀy + z) = prox_{σp}(x − σAᵀy)`, so `res(kkt₃) = ‖x − u‖/(σ·(1+‖y‖+‖z‖))`
 //! costs O(n) instead of another O(mn) sweep.
 
-use crate::linalg::blas;
+use crate::linalg::{blas, NewtonWorkspace};
 use crate::parallel::shard;
 use crate::prox;
 use crate::solver::objective::{primal_objective, support_of};
-use crate::solver::ssn_system::solve_newton_system;
+use crate::solver::ssn_system::{solve_newton_system_ws, ResolvedStrategy};
 use crate::solver::types::{Algorithm, EnetProblem, SolveResult, SsnalOptions};
 
 /// Detailed per-solve diagnostics (used by tests and the §Perf log).
@@ -34,6 +34,10 @@ pub struct SsnalTrace {
     /// warm-started solve so nearby problems converge in ~1 outer iteration
     /// (paper §3.3).
     pub final_sigma: f64,
+    /// Newton solves that fell back to CG after a direct/Woodbury
+    /// factorization failed numerically (see
+    /// [`crate::solver::ssn_system::ResolvedStrategy::CgFallback`]).
+    pub cg_fallbacks: usize,
 }
 
 /// Solve with the default zero start.
@@ -47,6 +51,24 @@ pub fn solve_warm(
     p: &EnetProblem,
     opts: &SsnalOptions,
     x0: Option<&[f64]>,
+) -> (SolveResult, SsnalTrace) {
+    let mut ws = NewtonWorkspace::new();
+    solve_warm_ws(p, opts, x0, &mut ws)
+}
+
+/// [`solve_warm`] against a caller-owned [`NewtonWorkspace`]: every
+/// Newton-step buffer (the direct m×m build, the Woodbury Gram + `w`, CG's
+/// working vectors) and the active-set-aware factorization cache persist in
+/// `ws` — across the inner SsN iterations of this solve and, when the caller
+/// reuses `ws` (the λ-path's per-chain [`crate::path::WarmState`] does),
+/// across warm-started λ-steps. Results are bitwise-identical to a fresh
+/// workspace at every `SSNAL_THREADS` budget; steady-state Newton iterations
+/// (stable active set, single-shard plans) perform zero heap allocations.
+pub fn solve_warm_ws(
+    p: &EnetProblem,
+    opts: &SsnalOptions,
+    x0: Option<&[f64]>,
+    ws: &mut NewtonWorkspace,
 ) -> (SolveResult, SsnalTrace) {
     let m = p.m();
     let n = p.n();
@@ -74,6 +96,7 @@ pub fn solve_warm(
     let mut u = vec![0.0; n]; // prox_{σp}(t)
     let mut active: Vec<usize> = Vec::new();
     let mut grad = vec![0.0; m]; // ∇ψ(y)
+    let mut neg_grad = vec![0.0; m]; // −∇ψ(y), the Newton rhs
     let mut d = vec![0.0; m]; // Newton direction
     let mut au = vec![0.0; m]; // A u (sparse)
     let mut z = vec![0.0; n];
@@ -146,9 +169,11 @@ pub fn solve_warm(
             // forcing term ties the CG accuracy to the current gradient norm
             // (Eisenstat–Walker): early steps don't deserve 1e-8 solves.
             let kappa = sigma / (1.0 + sigma * p.lam2);
-            let neg_grad: Vec<f64> = grad.iter().map(|g| -g).collect();
+            for i in 0..m {
+                neg_grad[i] = -grad[i];
+            }
             let cg_tol = (0.1 * res1).clamp(opts.cg_tol, 1e-2);
-            solve_newton_system(
+            let resolved = solve_newton_system_ws(
                 p.a,
                 &active,
                 kappa,
@@ -157,7 +182,11 @@ pub fn solve_warm(
                 opts.strategy,
                 cg_tol,
                 opts.cg_max_iters,
+                ws,
             );
+            if resolved == ResolvedStrategy::CgFallback {
+                trace.cg_fallbacks += 1;
+            }
 
             // Armijo backtracking (Eq. 12) with incremental Aᵀ(y+s·d).
             shard::t_mul_vec_into(p.a, &d, &mut atd);

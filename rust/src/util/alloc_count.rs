@@ -1,0 +1,55 @@
+//! A counting wrapper around the system allocator.
+//!
+//! Installed as the `#[global_allocator]` of the `ssnal-en` binary and of the
+//! `alloc_newton` integration test; the library itself never installs it, so
+//! embedding crates keep their own allocator. When installed, every
+//! `alloc`/`realloc` bumps a relaxed atomic counter that
+//! [`allocations`] exposes — the instrument behind the zero-allocation
+//! Newton-hot-path pin (`tests/alloc_newton.rs`) and the `allocs/iter` column
+//! of `bench-parallel --newton-*`. When *not* installed the counter simply
+//! never moves, so callers must treat a zero delta as "no allocations
+//! observed", not proof of absence — the dedicated test binary and the CLI
+//! both install it, which is where the guarantee is enforced.
+//!
+//! The overhead is one relaxed fetch-add per allocation: irrelevant next to
+//! the allocation itself, so shipping it in the production binary is free
+//! and keeps the bench and the binary measuring the same thing.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Pass-through [`System`] allocator that counts `alloc`/`realloc` calls.
+pub struct CountingAllocator;
+
+// Safety: defers every operation to `System`; the counter has no effect on
+// allocation behavior.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total heap allocations (+ reallocations) observed process-wide since
+/// start, when [`CountingAllocator`] is installed; constant 0 otherwise.
+/// Diff two reads around a region to count its allocations — single-threaded
+/// regions only, since the counter is process-global.
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}

@@ -2,6 +2,7 @@
 //! criterion or proptest): a mini CLI argument parser, wall-clock timers, table
 //! and CSV/JSON emitters, and a tiny property-testing helper.
 
+pub mod alloc_count;
 pub mod cli;
 pub mod csv;
 pub mod error;

@@ -11,11 +11,11 @@
 //! build, and kernel reuse on the warm persistent pool.
 
 use ssnal_en::data::{generate_synthetic, SyntheticSpec};
-use ssnal_en::linalg::{blas, Mat};
+use ssnal_en::linalg::{blas, Mat, NewtonWorkspace};
 use ssnal_en::parallel::shard::{self, Plan};
 use ssnal_en::rng::Xoshiro256pp;
 use ssnal_en::solver::screening::AugmentedView;
-use ssnal_en::solver::ssn_system::solve_newton_system;
+use ssnal_en::solver::ssn_system::{solve_newton_system, solve_newton_system_ws};
 use ssnal_en::solver::types::{EnetProblem, NewtonStrategy, SsnalOptions};
 use ssnal_en::util::quickcheck::{log_uniform_usize, run_prop, PropConfig};
 
@@ -336,6 +336,135 @@ fn warm_pool_kernel_calls_repeat_identically() {
     for call in 0..20 {
         let got = shard::with_threads(4, || shard::dot_planned(plan, &a, &b));
         assert_eq!(got.to_bits(), reference.to_bits(), "warm-pool call {call} drifted");
+    }
+}
+
+/// Scratch-reuse guarantee for the partial-buffer reduction kernels
+/// (ISSUE 4): repeated multi-shard `A_J x` / `A_J w` / Gram / rank-1 calls
+/// draw their per-shard partials from the calling thread's warm
+/// `ShardScratch` arena — every repeat, at every thread budget on the warm
+/// pool, must reproduce the 1-thread bits (a stale, mis-zeroed or mis-sized
+/// scratch buffer would corrupt exactly these kernels).
+#[test]
+fn warm_scratch_reduction_kernels_repeat_identically() {
+    let mut rng = Xoshiro256pp::seed_from_u64(606);
+    let (m, n) = (40, 240);
+    let a = Mat::from_fn(m, n, |_, _| rng.next_gaussian());
+    let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+    let support: Vec<usize> = (0..n).step_by(2).collect();
+    let coeffs: Vec<f64> = support.iter().map(|&j| x[j] * 0.5).collect();
+    let plan = Plan::with_shards(8);
+    // Gram/rank-1 size their own plans; at this shape the default flop
+    // target would keep them single-shard (serial, scratch-free) and make
+    // their legs vacuous — pin the target low so they genuinely fan out.
+    let r = support.len();
+    shard::with_target_shard_flops(shard::MIN_SHARD_FLOPS, || {
+        assert!(Plan::for_work(r * (r + 1) / 2, 2 * m).shards > 1, "gram leg must fan out");
+        assert!(Plan::for_work(m * (m + 1) / 2, 2 * r).shards > 1, "rank-1 leg must fan out");
+    });
+    let run_kernels = || {
+        shard::with_target_shard_flops(shard::MIN_SHARD_FLOPS, || {
+            let mut au = vec![0.0; m];
+            shard::mul_vec_support_into_planned(plan, &a, &x, &support, &mut au);
+            let mut acc = x[..m].to_vec();
+            shard::add_scaled_cols_planned(plan, &a, &support, &coeffs, &mut acc);
+            let gram = shard::gram_of_cols(&a, &support, 0.4);
+            let mut v = Mat::zeros(m, m);
+            shard::rank1_lower_accum(&a, &support, 0.9, &mut v);
+            (au, acc, gram, v)
+        })
+    };
+
+    let reference = shard::with_threads(1, run_kernels);
+    for call in 0..10 {
+        for &t in &THREADS {
+            let got = shard::with_threads(t, run_kernels);
+            assert_eq!(got.0, reference.0, "A_J x drifted (call {call}, threads {t})");
+            assert_eq!(got.1, reference.1, "A_J w drifted (call {call}, threads {t})");
+            assert_eq!(
+                got.2.as_slice(),
+                reference.2.as_slice(),
+                "gram drifted (call {call}, threads {t})"
+            );
+            assert_eq!(
+                got.3.as_slice(),
+                reference.3.as_slice(),
+                "rank-1 triangle drifted (call {call}, threads {t})"
+            );
+        }
+    }
+}
+
+/// Warm Gram/Cholesky cache contract (ISSUE 4): along a λ-path-like sequence
+/// of Newton solves — stable active set, κ bump, tail swap, growth,
+/// shrink — a single warm workspace must produce, at every thread budget on
+/// the warm pool, exactly the bits of a cold (fresh-workspace) solve of each
+/// step. Shapes are chosen so the Gram/rank-1 builds genuinely multi-shard.
+#[test]
+fn warm_newton_cache_is_bitwise_cold_at_every_thread_budget() {
+    let mut rng = Xoshiro256pp::seed_from_u64(404_404);
+    let (m, n, r) = (200, 600, 150);
+    let a = Mat::from_fn(m, n, |_, _| rng.next_gaussian());
+    let rhs: Vec<f64> = (0..m).map(|_| rng.next_gaussian()).collect();
+    assert!(Plan::for_work(m * (m + 1) / 2, 2 * r).shards > 1, "rank-1 build must fan out");
+    assert!(Plan::for_work(r * (r + 1) / 2, 2 * m).shards > 1, "gram build must fan out");
+
+    // base covers multiples of 4 below n; replacements use odd indices that
+    // cannot collide with it
+    let base: Vec<usize> = (0..r).map(|k| 4 * k).collect();
+    let mut swapped = base.clone();
+    swapped[r - 2] = n - 3;
+    swapped[r - 1] = n - 1;
+    let mut grown = swapped.clone();
+    grown.push(n - 5);
+    let shrunk: Vec<usize> = grown[..r - 4].to_vec();
+    let steps: Vec<(Vec<usize>, f64)> = vec![
+        (base.clone(), 0.7),
+        (base.clone(), 0.7), // exact repeat → full factor hit
+        (base.clone(), 2.1), // κ bump → raw-Gram reuse
+        (swapped, 2.1),      // tail swap → incremental + partial refactor
+        (grown, 2.1),        // growth → incremental, dimension change
+        (shrunk, 0.9),       // shrink + κ change
+    ];
+
+    for strategy in [NewtonStrategy::Direct, NewtonStrategy::Woodbury] {
+        let run_warm = |steps: &[(Vec<usize>, f64)]| {
+            let mut ws = NewtonWorkspace::new();
+            let mut out = Vec::new();
+            for (active, kappa) in steps {
+                let mut d = vec![0.0; m];
+                solve_newton_system_ws(
+                    &a, active, *kappa, &rhs, &mut d, strategy, 1e-10, 500, &mut ws,
+                );
+                out.push(d);
+            }
+            (out, ws.stats)
+        };
+        let (reference, stats) = shard::with_threads(1, || run_warm(&steps));
+        // the cache must actually engage, or this test is vacuous
+        match strategy {
+            NewtonStrategy::Direct => assert!(stats.direct_hits >= 1, "{stats:?}"),
+            _ => {
+                assert!(stats.factor_hits >= 1, "{stats:?}");
+                assert!(stats.gram_hits >= 1, "{stats:?}");
+                assert!(stats.gram_incremental >= 2, "{stats:?}");
+                assert!(stats.partial_refactors >= 1, "{stats:?}");
+            }
+        }
+        // warm sequence is invariant to the thread budget (warm pool)
+        for t in [2usize, 4, 8] {
+            let (got, _) = shard::with_threads(t, || run_warm(&steps));
+            assert_eq!(got, reference, "{strategy:?} warm sequence drifted at threads={t}");
+        }
+        // every warm step equals a cold fresh-workspace solve, bit for bit
+        for (k, (active, kappa)) in steps.iter().enumerate() {
+            let cold = shard::with_threads(1, || {
+                let mut d = vec![0.0; m];
+                solve_newton_system(&a, active, *kappa, &rhs, &mut d, strategy, 1e-10, 500);
+                d
+            });
+            assert_eq!(cold, reference[k], "{strategy:?} step {k}: warm != cold");
+        }
     }
 }
 
