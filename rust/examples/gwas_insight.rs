@@ -15,10 +15,10 @@
 //!
 //! The run (sizes, timings, recovery numbers) is recorded in EXPERIMENTS.md.
 
+use ssnal_en::api::{Backend, Design, EnetModel};
 use ssnal_en::bench::tables::{insight_run, INSIGHT_CURVE_HEADER};
-use ssnal_en::coordinator::{Coordinator, CoordinatorConfig};
 use ssnal_en::data::snp::{generate as generate_snp, SnpSpec};
-use ssnal_en::solver::types::EnetProblem;
+use ssnal_en::solver::types::{EnetProblem, NewtonStrategy};
 use ssnal_en::util::csv::write_csv;
 use ssnal_en::util::table::Table;
 use ssnal_en::util::timer::time_it;
@@ -98,13 +98,20 @@ fn main() -> ssnal_en::util::error::Result<()> {
         let cohort = generate_snp(&spec);
         let lmax = EnetProblem::lambda_max(&cohort.a, &cohort.b, 0.9);
         let (l1, l2) = EnetProblem::lambdas_from_alpha(0.9, 0.5, lmax);
+        let design = Design::new(&cohort.a, &cohort.b)?;
 
-        let native = Coordinator::new(CoordinatorConfig::native(1e-8));
-        let (fit_native, t_native) = time_it(|| native.solve(&cohort.a, &cohort.b, l1, l2));
-        let fit_native = fit_native?;
+        let native = EnetModel::new().lambda(l1, l2).tol(1e-8);
+        let (fit_native, t_native) = time_it(|| native.fit(&design));
+        let fit_native = fit_native?.into_result();
 
-        let pjrt = Coordinator::new(CoordinatorConfig::pjrt(artifacts));
-        let (fit_pjrt, t_pjrt) = time_it(|| pjrt.solve(&cohort.a, &cohort.b, l1, l2));
+        // f32 artifacts: matrix-free CG strategy, looser tolerance.
+        let pjrt = EnetModel::new()
+            .lambda(l1, l2)
+            .backend(Backend::Pjrt)
+            .artifacts_dir(artifacts)
+            .tol(1e-4)
+            .newton(NewtonStrategy::ConjugateGradient);
+        let (fit_pjrt, t_pjrt) = time_it(|| pjrt.fit(&design).map(|f| f.into_result()));
         match fit_pjrt {
             Ok(fit_pjrt) => {
                 let dist = ssnal_en::linalg::blas::dist2(&fit_native.x, &fit_pjrt.x);

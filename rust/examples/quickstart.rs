@@ -1,14 +1,15 @@
-//! Quickstart: solve one ultra-high-dimensional Elastic Net with SsNAL-EN,
-//! inspect the result, and cross-check against coordinate descent.
+//! Quickstart: solve one ultra-high-dimensional Elastic Net through the
+//! estimator facade, inspect the fit, re-score a second response on the warm
+//! session, and cross-check against coordinate descent.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use ssnal_en::coordinator::{Coordinator, CoordinatorConfig};
+use ssnal_en::api::{Design, EnetModel};
 use ssnal_en::data::{generate_synthetic, SyntheticSpec};
-use ssnal_en::solver::types::{Algorithm, EnetProblem};
-use ssnal_en::solver::{kkt_residuals, solve_with};
+use ssnal_en::solver::kkt_residuals;
+use ssnal_en::solver::types::Algorithm;
 use ssnal_en::util::timer::time_it;
 
 fn main() -> ssnal_en::util::error::Result<()> {
@@ -18,39 +19,65 @@ fn main() -> ssnal_en::util::error::Result<()> {
     println!("generating A ∈ R^{{{}×{}}} ...", spec.m, spec.n);
     let prob = generate_synthetic(&spec);
 
-    // 2. the paper's λ parametrization: λ1 = α·c·λmax, λ2 = (1−α)·c·λmax.
-    let alpha = 0.75;
-    let lambda_max = EnetProblem::lambda_max(&prob.a, &prob.b, alpha);
-    let (lam1, lam2) = EnetProblem::lambdas_from_alpha(alpha, 0.3, lambda_max);
-    println!("λ_max = {lambda_max:.3}, λ1 = {lam1:.3}, λ2 = {lam2:.3}");
+    // 2. validate once; every facade call reuses the checked design.
+    let design = Design::new(&prob.a, &prob.b)?;
+    println!("λ_max = {:.3}", design.lambda_max(0.75)?);
 
-    // 3. solve with SsNAL-EN via the coordinator (native f64 backend).
-    let coord = Coordinator::new(CoordinatorConfig::native(1e-6));
-    let (fit, secs) = time_it(|| coord.solve(&prob.a, &prob.b, lam1, lam2));
-    let fit = fit?;
+    // 3. fit SsNAL-EN via the facade (native f64 backend, the paper's
+    //    λ1 = α·c·λmax parametrization).
+    let model = EnetModel::new().alpha_c(0.75, 0.3).tol(1e-6);
+    let (fit, secs) = time_it(|| model.fit(&design));
+    let mut fit = fit?;
+    let (lam1, lam2) = fit.lambdas();
+    println!("λ1 = {lam1:.3}, λ2 = {lam2:.3}");
+    let res = fit.result();
     println!(
         "\nSsNAL-EN: {secs:.3}s — {} outer / {} inner iterations, residual {:.2e}",
-        fit.iterations, fit.inner_iterations, fit.residual
+        res.iterations, res.inner_iterations, res.residual
     );
-    println!("active set: {} features, objective {:.5}", fit.active_set.len(), fit.objective);
+    println!("active set: {} features, objective {:.5}", fit.active_set().len(), res.objective);
 
     // 4. verify the KKT system (Eq. 8/20) at the solution.
-    let p = EnetProblem::new(&prob.a, &prob.b, lam1, lam2);
-    let z: Vec<f64> = prob.a.t_mul_vec(&fit.y).iter().map(|v| -v).collect();
-    let kkt = kkt_residuals(&p, &fit.x, &fit.y, &z);
+    let p = design.problem(lam1, lam2);
+    let z: Vec<f64> = prob.a.t_mul_vec(&res.y).iter().map(|v| -v).collect();
+    let kkt = kkt_residuals(&p, fit.coefficients(), &res.y, &z);
     println!("KKT residuals: res1={:.2e} res2={:.2e} res3={:.2e}", kkt.res1, kkt.res2, kkt.res3);
 
-    // 5. recovery of the true support.
-    let hits = prob.support.iter().filter(|j| fit.x[**j] != 0.0).count();
+    // 5. recovery of the true support, and in-sample predictions.
+    let hits = prob.support.iter().filter(|j| fit.coefficients()[**j] != 0.0).count();
     println!("true-support recovery: {hits}/{}", prob.support.len());
+    let preds = fit.predict(&prob.a)?;
+    let mse = preds
+        .iter()
+        .zip(prob.b.iter())
+        .map(|(p, b)| (p - b) * (p - b))
+        .sum::<f64>()
+        / preds.len() as f64;
+    println!("in-sample MSE: {mse:.4}");
 
-    // 6. cross-check against glmnet-style coordinate descent (same optimum).
-    let (cd, cd_secs) = time_it(|| solve_with(&p, Algorithm::CdCovariance, 1e-8));
-    let dist = ssnal_en::linalg::blas::dist2(&fit.x, &cd.x);
+    // 6. cross-check against glmnet-style coordinate descent (same optimum),
+    //    through the same facade — only the algorithm changes.
+    let cd_model = EnetModel::new().lambda(lam1, lam2).algorithm(Algorithm::CdCovariance).tol(1e-8);
+    let (cd, cd_secs) = time_it(|| cd_model.fit(&design));
+    let cd = cd?;
+    let dist = ssnal_en::linalg::blas::dist2(fit.coefficients(), cd.coefficients());
     println!(
         "\ncoordinate descent: {cd_secs:.3}s — ‖x_ssnal − x_cd‖ = {dist:.2e} \
          (speedup ×{:.1})",
         cd_secs / secs
+    );
+
+    // 7. warm session: re-score a scaled response on the same design — the
+    //    fit's Newton workspace and Gram/Cholesky cache are reused
+    //    (bitwise-identical to a cold fit, at workspace-cache cost).
+    let b2: Vec<f64> = prob.b.iter().map(|v| 0.9 * v).collect();
+    let sw = std::time::Instant::now();
+    let refit_res = fit.refit(&b2)?;
+    println!(
+        "\nwarm refit on a new response: {:.3}s — active={}, converged={}",
+        sw.elapsed().as_secs_f64(),
+        refit_res.active_set.len(),
+        refit_res.converged
     );
     Ok(())
 }

@@ -1,0 +1,200 @@
+//! Validated design/response pairs — the data half of the facade.
+//!
+//! A [`Design`] is the one object every facade operation consumes: it pins a
+//! `(A, b)` pair that has already passed shape and finiteness checks, so the
+//! solver layers below can keep their cheap `assert!` contracts while the
+//! public surface reports typed [`EnetError`]s. It can borrow caller-owned
+//! buffers (zero-copy, the common case) or own them (for designs built on
+//! the fly and handed across threads/sessions).
+
+use crate::api::EnetError;
+use crate::linalg::Mat;
+use crate::solver::types::EnetProblem;
+
+/// Owned-or-borrowed design matrix.
+#[derive(Clone, Debug)]
+enum DesignMat<'a> {
+    Borrowed(&'a Mat),
+    Owned(Mat),
+}
+
+/// Owned-or-borrowed response vector.
+#[derive(Clone, Debug)]
+enum ResponseVec<'a> {
+    Borrowed(&'a [f64]),
+    Owned(Vec<f64>),
+}
+
+/// A validated Elastic Net data set: design matrix `A` (m × n, column-major)
+/// plus response `b` (length m), shape- and finiteness-checked on
+/// construction.
+///
+/// Construct once, then fit any number of [`crate::api::EnetModel`]
+/// configurations against it — a fitted session ([`crate::api::Fit`]) keeps
+/// its Newton workspace bound to this design, so repeated solves reuse the
+/// Gram/Cholesky cache.
+///
+/// ```
+/// use ssnal_en::api::{Design, EnetError};
+/// use ssnal_en::linalg::Mat;
+///
+/// let a = Mat::from_row_major(2, 3, &[1.0, 0.0, 2.0, 0.0, 1.0, -2.0]);
+/// let b = [1.0, 1.0];
+/// let design = Design::new(&a, &b)?;
+/// assert_eq!((design.m(), design.n()), (2, 3));
+///
+/// // invalid input is a typed error, not a panic
+/// let short = [1.0];
+/// assert!(matches!(
+///     Design::new(&a, &short),
+///     Err(EnetError::ShapeMismatch { .. })
+/// ));
+/// # Ok::<(), EnetError>(())
+/// ```
+#[derive(Clone, Debug)]
+pub struct Design<'a> {
+    a: DesignMat<'a>,
+    b: ResponseVec<'a>,
+}
+
+impl<'a> Design<'a> {
+    /// Borrow a caller-owned `(A, b)` pair (zero-copy).
+    pub fn new(a: &'a Mat, b: &'a [f64]) -> Result<Self, EnetError> {
+        Self::build(DesignMat::Borrowed(a), ResponseVec::Borrowed(b))
+    }
+
+    /// Take ownership of `(A, b)` — for designs constructed on the fly.
+    pub fn from_owned(a: Mat, b: Vec<f64>) -> Result<Design<'static>, EnetError> {
+        Design::build(DesignMat::Owned(a), ResponseVec::Owned(b))
+    }
+
+    fn build(a: DesignMat<'a>, b: ResponseVec<'a>) -> Result<Design<'a>, EnetError> {
+        {
+            let a_ref = match &a {
+                DesignMat::Borrowed(m) => *m,
+                DesignMat::Owned(m) => m,
+            };
+            let b_ref: &[f64] = match &b {
+                ResponseVec::Borrowed(v) => v,
+                ResponseVec::Owned(v) => v,
+            };
+            let (rows, cols) = (a_ref.rows(), a_ref.cols());
+            if rows == 0 || cols == 0 {
+                return Err(EnetError::EmptyDesign { rows, cols });
+            }
+            if rows != b_ref.len() {
+                return Err(EnetError::ShapeMismatch { rows, response_len: b_ref.len() });
+            }
+            if let Some(index) = a_ref.as_slice().iter().position(|v| !v.is_finite()) {
+                return Err(EnetError::NonFinite { what: "design", index });
+            }
+            if let Some(index) = b_ref.iter().position(|v| !v.is_finite()) {
+                return Err(EnetError::NonFinite { what: "response", index });
+            }
+        }
+        Ok(Design { a, b })
+    }
+
+    /// The design matrix.
+    pub fn a(&self) -> &Mat {
+        match &self.a {
+            DesignMat::Borrowed(m) => m,
+            DesignMat::Owned(m) => m,
+        }
+    }
+
+    /// The response vector.
+    pub fn b(&self) -> &[f64] {
+        match &self.b {
+            ResponseVec::Borrowed(v) => v,
+            ResponseVec::Owned(v) => v,
+        }
+    }
+
+    /// Observations m.
+    pub fn m(&self) -> usize {
+        self.a().rows()
+    }
+
+    /// Features n.
+    pub fn n(&self) -> usize {
+        self.a().cols()
+    }
+
+    /// `λ^max = ‖Aᵀb‖∞ / α` — the smallest λ scale with an all-zero solution
+    /// under the paper's `(α, c_λ)` parametrization.
+    pub fn lambda_max(&self, alpha: f64) -> Result<f64, EnetError> {
+        crate::api::check_alpha(alpha)?;
+        Ok(EnetProblem::lambda_max(self.a(), self.b(), alpha))
+    }
+
+    /// A borrowed [`EnetProblem`] view at explicit penalties — the bridge to
+    /// the low-level solver entry points. Penalties are the caller's to
+    /// validate here; prefer [`crate::api::EnetModel::fit`] for checked
+    /// end-to-end solves.
+    pub fn problem(&self, lam1: f64, lam2: f64) -> EnetProblem<'_> {
+        EnetProblem::new(self.a(), self.b(), lam1, lam2)
+    }
+
+    /// Validate a replacement response against this design (shape +
+    /// finiteness) — used by [`crate::api::Fit::refit`].
+    pub(crate) fn check_response(&self, b: &[f64]) -> Result<(), EnetError> {
+        if b.len() != self.m() {
+            return Err(EnetError::ShapeMismatch { rows: self.m(), response_len: b.len() });
+        }
+        if let Some(index) = b.iter().position(|v| !v.is_finite()) {
+            return Err(EnetError::NonFinite { what: "response", index });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn borrowed_and_owned_agree() {
+        let a = Mat::from_row_major(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = vec![1.0, -1.0];
+        let borrowed = Design::new(&a, &b).unwrap();
+        let owned = Design::from_owned(a.clone(), b.clone()).unwrap();
+        assert_eq!(borrowed.a().as_slice(), owned.a().as_slice());
+        assert_eq!(borrowed.b(), owned.b());
+        assert_eq!(borrowed.m(), 2);
+        assert_eq!(borrowed.n(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_values() {
+        let a = Mat::zeros(3, 2);
+        assert!(matches!(
+            Design::new(&a, &[0.0; 4]),
+            Err(EnetError::ShapeMismatch { rows: 3, response_len: 4 })
+        ));
+        let empty = Mat::zeros(0, 2);
+        assert!(matches!(Design::new(&empty, &[]), Err(EnetError::EmptyDesign { .. })));
+        let mut bad = Mat::zeros(2, 2);
+        bad.set(1, 0, f64::NAN);
+        assert!(matches!(
+            Design::new(&bad, &[0.0; 2]),
+            Err(EnetError::NonFinite { what: "design", .. })
+        ));
+        let ok = Mat::zeros(2, 2);
+        assert!(matches!(
+            Design::new(&ok, &[0.0, f64::INFINITY]),
+            Err(EnetError::NonFinite { what: "response", index: 1 })
+        ));
+    }
+
+    #[test]
+    fn lambda_max_validates_alpha() {
+        let a = Mat::from_row_major(2, 3, &[1.0, 0.0, 2.0, 0.0, 1.0, -2.0]);
+        let b = [1.0, 1.0];
+        let d = Design::new(&a, &b).unwrap();
+        assert_eq!(d.lambda_max(1.0).unwrap(), 1.0);
+        assert_eq!(d.lambda_max(0.5).unwrap(), 2.0);
+        assert!(matches!(d.lambda_max(0.0), Err(EnetError::InvalidAlpha { .. })));
+        assert!(matches!(d.lambda_max(1.5), Err(EnetError::InvalidAlpha { .. })));
+    }
+}

@@ -1,0 +1,168 @@
+//! Typed errors for the estimator facade.
+//!
+//! Every invalid input that used to `assert!`-panic in the low-level entry
+//! points (shape mismatches, negative penalties, bad α, malformed grids)
+//! surfaces from the [`crate::api`] layer as an [`EnetError`] variant, so a
+//! serving process can reject one bad request instead of dying. The type
+//! implements [`std::error::Error`], which lets it flow into the crate-wide
+//! [`crate::util::error::Error`] chain via `?` where the old coordinator
+//! signatures are preserved.
+
+use std::fmt;
+
+/// Typed validation / execution error produced by the [`crate::api`] facade.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EnetError {
+    /// The design's row count and the response length disagree.
+    ShapeMismatch {
+        /// Rows of the design matrix `A`.
+        rows: usize,
+        /// Length of the response `b`.
+        response_len: usize,
+    },
+    /// The design has zero rows or zero columns.
+    EmptyDesign {
+        /// Rows of `A`.
+        rows: usize,
+        /// Columns of `A`.
+        cols: usize,
+    },
+    /// A NaN/∞ entry where finite data is required.
+    NonFinite {
+        /// Which input carried it (`"design"`, `"response"`, `"warm start"`).
+        what: &'static str,
+        /// Flat index of the first offending entry.
+        index: usize,
+    },
+    /// Penalty weights must be finite, nonnegative, and not both zero.
+    InvalidPenalty {
+        /// Resolved ℓ1 weight.
+        lam1: f64,
+        /// Resolved squared-ℓ2 weight.
+        lam2: f64,
+    },
+    /// The mixing parameter must satisfy α ∈ (0, 1].
+    InvalidAlpha {
+        /// The rejected value.
+        alpha: f64,
+    },
+    /// The `c_λ` scale in the (α, c_λ) parametrization must be positive and
+    /// finite.
+    InvalidCLambda {
+        /// The rejected value.
+        c: f64,
+    },
+    /// A malformed `c_λ` grid (empty, non-descending, non-positive, …).
+    InvalidGrid {
+        /// Human-readable description of the defect.
+        reason: String,
+    },
+    /// The solver tolerance must be positive and finite.
+    InvalidTolerance {
+        /// The rejected value.
+        tol: f64,
+    },
+    /// An explicit iteration cap must be at least 1.
+    InvalidIterations,
+    /// Cross-validation folds must be 0 (disabled) or in `2..=m`.
+    InvalidFolds {
+        /// Requested fold count.
+        folds: usize,
+        /// Observations available.
+        m: usize,
+    },
+    /// A prediction input with the wrong number of features.
+    PredictShape {
+        /// Feature count of the fitted design.
+        expected: usize,
+        /// Feature count of the prediction input.
+        got: usize,
+    },
+    /// A warm-start vector with the wrong length.
+    WarmStartShape {
+        /// Feature count of the design.
+        expected: usize,
+        /// Length of the supplied warm start.
+        got: usize,
+    },
+    /// The requested model/algorithm/backend combination is not supported.
+    Unsupported {
+        /// What was requested.
+        what: String,
+    },
+    /// Backend (PJRT artifact loading / graph execution) failure.
+    Backend(String),
+}
+
+impl fmt::Display for EnetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EnetError::ShapeMismatch { rows, response_len } => write!(
+                f,
+                "design has {rows} rows but the response has {response_len} entries"
+            ),
+            EnetError::EmptyDesign { rows, cols } => {
+                write!(f, "design must be non-empty, got {rows}×{cols}")
+            }
+            EnetError::NonFinite { what, index } => {
+                write!(f, "{what} contains a non-finite entry at flat index {index}")
+            }
+            EnetError::InvalidPenalty { lam1, lam2 } => write!(
+                f,
+                "penalties must be finite, nonnegative and not both zero, \
+                 got λ1={lam1} λ2={lam2}"
+            ),
+            EnetError::InvalidAlpha { alpha } => {
+                write!(f, "mixing parameter must satisfy 0 < α ≤ 1, got {alpha}")
+            }
+            EnetError::InvalidCLambda { c } => {
+                write!(f, "c_λ must be positive and finite, got {c}")
+            }
+            EnetError::InvalidGrid { reason } => write!(f, "invalid c_λ grid: {reason}"),
+            EnetError::InvalidTolerance { tol } => {
+                write!(f, "tolerance must be positive and finite, got {tol}")
+            }
+            EnetError::InvalidIterations => write!(f, "iteration cap must be at least 1"),
+            EnetError::InvalidFolds { folds, m } => write!(
+                f,
+                "cv folds must be 0 (disabled) or between 2 and m={m}, got {folds}"
+            ),
+            EnetError::PredictShape { expected, got } => write!(
+                f,
+                "prediction input has {got} features but the fit has {expected}"
+            ),
+            EnetError::WarmStartShape { expected, got } => write!(
+                f,
+                "warm start has length {got} but the design has {expected} features"
+            ),
+            EnetError::Unsupported { what } => write!(f, "unsupported request: {what}"),
+            EnetError::Backend(msg) => write!(f, "backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EnetError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_the_offending_values() {
+        let e = EnetError::ShapeMismatch { rows: 3, response_len: 4 };
+        assert!(format!("{e}").contains('3'));
+        assert!(format!("{e}").contains('4'));
+        let e = EnetError::InvalidAlpha { alpha: 1.5 };
+        assert!(format!("{e}").contains("1.5"));
+    }
+
+    #[test]
+    fn converts_into_the_crate_error_chain() {
+        fn inner() -> crate::util::error::Result<()> {
+            Err(EnetError::InvalidIterations)?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("iteration cap"));
+    }
+}

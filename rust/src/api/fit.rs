@@ -1,0 +1,260 @@
+//! Fitted sessions — the result half of the facade.
+//!
+//! [`Fit`] is more than a result record: it is a *warm session* bound to one
+//! [`Design`]. The Newton workspace that solved the fit (buffer arena +
+//! active-set-aware Gram/Cholesky cache, see [`crate::linalg::workspace`])
+//! stays alive inside it, so [`Fit::refit`] on a new response reuses every
+//! buffer and cached factorization instead of rebuilding them — the
+//! serve-many-responses scenario (GWAS permutation tests, online re-scoring)
+//! at workspace-cache cost, with results bitwise-identical to a cold fit.
+
+use crate::api::{Design, EnetError, EnetModel};
+use crate::linalg::{Mat, NewtonWorkspace, WorkspaceStats};
+use crate::runtime::PjrtEngine;
+use crate::parallel::{ChainReport, ParallelPathResult};
+use crate::path::{PathPoint, PathResult};
+use crate::solver::ssnal::SsnalTrace;
+use crate::solver::types::SolveResult;
+use crate::tuning::{CriteriaPoint, TuningResult};
+use crate::util::json::Json;
+
+/// A fitted Elastic Net model: coefficients, diagnostics, prediction, JSON
+/// export — plus the warm solver state for repeated solves on the same
+/// design.
+///
+/// ```
+/// use ssnal_en::api::{Design, EnetModel};
+/// use ssnal_en::linalg::Mat;
+///
+/// // identity design: the Elastic Net solution is analytic soft-thresholding
+/// let a = Mat::from_row_major(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+/// let b = [3.0, -1.0];
+/// let design = Design::new(&a, &b)?;
+/// let mut fit = EnetModel::new().lambda(0.5, 0.5).tol(1e-10).fit(&design)?;
+/// assert!((fit.coefficients()[0] - 5.0 / 3.0).abs() < 1e-8);
+///
+/// // predictions and a warm refit on a new response, same design
+/// let preds = fit.predict(&a)?;
+/// assert_eq!(preds.len(), 2);
+/// let again = fit.refit(&[1.0, 2.0])?;
+/// assert!(again.converged);
+/// # Ok::<(), ssnal_en::api::EnetError>(())
+/// ```
+pub struct Fit<'d> {
+    pub(crate) design: &'d Design<'d>,
+    pub(crate) model: EnetModel,
+    pub(crate) lam1: f64,
+    pub(crate) lam2: f64,
+    pub(crate) result: SolveResult,
+    pub(crate) trace: Option<SsnalTrace>,
+    pub(crate) ws: NewtonWorkspace,
+    /// Lazily-loaded PJRT engine, kept for the session so repeated solves on
+    /// the Pjrt backend do not re-read the artifacts from disk.
+    pub(crate) engine: Option<PjrtEngine>,
+}
+
+impl<'d> Fit<'d> {
+    /// The full coefficient vector x̂ (length n).
+    pub fn coefficients(&self) -> &[f64] {
+        &self.result.x
+    }
+
+    /// Indices of the nonzero coefficients.
+    pub fn active_set(&self) -> &[usize] {
+        &self.result.active_set
+    }
+
+    /// The resolved penalties `(λ1, λ2)` of the latest solve.
+    pub fn lambdas(&self) -> (f64, f64) {
+        (self.lam1, self.lam2)
+    }
+
+    /// The full solver result of the latest solve.
+    pub fn result(&self) -> &SolveResult {
+        &self.result
+    }
+
+    /// Per-iteration SsNAL diagnostics (`None` for baseline algorithms and
+    /// the PJRT backend).
+    pub fn trace(&self) -> Option<&SsnalTrace> {
+        self.trace.as_ref()
+    }
+
+    /// The design this session is bound to.
+    pub fn design(&self) -> &'d Design<'d> {
+        self.design
+    }
+
+    /// Workspace cache/reuse counters — how much of the Newton state the
+    /// session reused so far (diagnostics only).
+    pub fn workspace_stats(&self) -> &WorkspaceStats {
+        &self.ws.stats
+    }
+
+    /// Consume the session, keeping only the solver result.
+    pub fn into_result(self) -> SolveResult {
+        self.result
+    }
+
+    /// Predict responses for new observations: `ŷ = A_new · x̂` (sparse
+    /// mat-vec over the active set).
+    pub fn predict(&self, a_new: &Mat) -> Result<Vec<f64>, EnetError> {
+        if a_new.cols() != self.design.n() {
+            return Err(EnetError::PredictShape {
+                expected: self.design.n(),
+                got: a_new.cols(),
+            });
+        }
+        let mut out = vec![0.0; a_new.rows()];
+        a_new.mul_vec_support_into(&self.result.x, &self.result.active_set, &mut out);
+        Ok(out)
+    }
+
+    /// Re-solve on the *same design* with a new response, reusing the
+    /// session's warm Newton workspace (buffer arena + Gram/Cholesky cache —
+    /// for `(α, c_λ)` models the λ's are re-resolved against the new
+    /// response, exactly as a cold fit would).
+    ///
+    /// The solve itself starts cold (no iterate carry-over), so the result is
+    /// **bitwise-identical** to `model.fit(&Design::new(a, b)?)` at every
+    /// `SSNAL_THREADS` budget — only the memory behavior differs: buffers and
+    /// cached factors are reused instead of reallocated/rebuilt
+    /// (`tests/alloc_newton.rs` pins the allocation bound,
+    /// `tests/api_facade.rs` the bitwise equality).
+    pub fn refit(&mut self, b: &[f64]) -> Result<&SolveResult, EnetError> {
+        self.design.check_response(b)?;
+        let (lam1, lam2) = self.model.checked_lambdas(self.design.a(), b)?;
+        let (result, trace) = self.model.solve_once(
+            self.design.a(),
+            b,
+            lam1,
+            lam2,
+            None,
+            &mut self.engine,
+            &mut self.ws,
+        )?;
+        self.lam1 = lam1;
+        self.lam2 = lam2;
+        self.result = result;
+        self.trace = trace;
+        Ok(&self.result)
+    }
+
+    /// Structured export of the latest solve (sparse coefficients: the
+    /// `coefficients` array holds the values at `active_set`'s indices).
+    pub fn to_json(&self) -> Json {
+        let r = &self.result;
+        Json::obj(vec![
+            ("kind", Json::Str("ssnal_en.fit".to_string())),
+            ("algorithm", Json::Str(r.algorithm.name().to_string())),
+            ("m", Json::Num(self.design.m() as f64)),
+            ("n", Json::Num(self.design.n() as f64)),
+            ("lam1", Json::Num(self.lam1)),
+            ("lam2", Json::Num(self.lam2)),
+            ("converged", Json::Bool(r.converged)),
+            ("iterations", Json::Num(r.iterations as f64)),
+            ("inner_iterations", Json::Num(r.inner_iterations as f64)),
+            ("residual", Json::Num(r.residual)),
+            ("objective", Json::Num(r.objective)),
+            (
+                "active_set",
+                Json::Arr(r.active_set.iter().map(|&j| Json::Num(j as f64)).collect()),
+            ),
+            (
+                "coefficients",
+                Json::Arr(r.active_set.iter().map(|&j| Json::Num(r.x[j])).collect()),
+            ),
+        ])
+    }
+
+    /// [`Fit::to_json`] rendered as a compact JSON string.
+    pub fn export_json(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// A solved λ-path with the parallel engine's diagnostics.
+#[derive(Clone, Debug)]
+pub struct PathFit {
+    pub(crate) result: ParallelPathResult,
+}
+
+impl PathFit {
+    /// The assembled path (grid order).
+    pub fn path(&self) -> &PathResult {
+        &self.result.path
+    }
+
+    /// The solved points, in grid order.
+    pub fn points(&self) -> &[PathPoint] {
+        &self.result.path.points
+    }
+
+    /// Grid values actually explored.
+    pub fn runs(&self) -> usize {
+        self.result.path.runs
+    }
+
+    /// Whether the max-active cap truncated the path.
+    pub fn truncated(&self) -> bool {
+        self.result.path.truncated
+    }
+
+    /// `λ^max` used for the parametrization.
+    pub fn lambda_max(&self) -> f64 {
+        self.result.path.lambda_max
+    }
+
+    /// Per-chain engine diagnostics.
+    pub fn chains(&self) -> &[ChainReport] {
+        &self.result.chains
+    }
+
+    /// Worker threads the engine ran with.
+    pub fn threads(&self) -> usize {
+        self.result.threads
+    }
+
+    /// Consume into the raw engine result.
+    pub fn into_inner(self) -> ParallelPathResult {
+        self.result
+    }
+}
+
+/// A completed tuning sweep (GCV / e-BIC / optional CV per path point).
+#[derive(Clone, Debug)]
+pub struct TuneFit {
+    pub(crate) result: TuningResult,
+}
+
+impl TuneFit {
+    /// Criteria at every explored grid point.
+    pub fn points(&self) -> &[CriteriaPoint] {
+        &self.result.points
+    }
+
+    /// Index of the GCV optimum.
+    pub fn best_gcv(&self) -> usize {
+        self.result.best_gcv
+    }
+
+    /// Index of the e-BIC optimum.
+    pub fn best_ebic(&self) -> usize {
+        self.result.best_ebic
+    }
+
+    /// Index of the CV optimum (when CV ran).
+    pub fn best_cv(&self) -> Option<usize> {
+        self.result.best_cv
+    }
+
+    /// The underlying path (for coefficient extraction).
+    pub fn path(&self) -> &PathResult {
+        &self.result.path
+    }
+
+    /// Consume into the raw tuning result.
+    pub fn into_inner(self) -> TuningResult {
+        self.result
+    }
+}

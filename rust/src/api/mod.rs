@@ -1,0 +1,61 @@
+//! The estimator facade — the crate's canonical public surface.
+//!
+//! Three types cover every workload the lower layers implement:
+//!
+//! * [`Design`] — a validated `(A, b)` pair (owned or borrowed; shape and
+//!   finiteness checks return typed [`EnetError`]s instead of panicking),
+//! * [`EnetModel`] — a builder collapsing the historical option structs into
+//!   one coherent configuration (`.lambda(..)` / `.alpha_c(..)` /
+//!   `.grid(..)` / `.algorithm(..)` / `.newton(..)` / `.cv(..)` /
+//!   `.threads(..)` / `.backend(..)`),
+//! * [`Fit`] — a warm fitted session: coefficients, [`Fit::predict`],
+//!   active set, trace, JSON export, and [`Fit::refit`] for repeated solves
+//!   on the same design that reuse the Newton workspace and Gram/Cholesky
+//!   cache instead of rebuilding them per call.
+//!
+//! Algorithm dispatch goes through the [`crate::solver::Solver`] trait
+//! registry, so all eight algorithms are reachable uniformly
+//! ([`EnetModel::algorithm`]); λ-paths and tuning sweeps
+//! ([`EnetModel::fit_path`], [`EnetModel::tune`]) run on the parallel engine.
+//! The old `Coordinator` survives as a deprecated compatibility shim over
+//! this module.
+//!
+//! ```
+//! use ssnal_en::api::{Design, EnetModel};
+//! use ssnal_en::data::{generate_synthetic, SyntheticSpec};
+//!
+//! let prob = generate_synthetic(&SyntheticSpec {
+//!     m: 30, n: 90, n0: 4, x_star: 5.0, snr: 8.0, seed: 7,
+//! });
+//! let design = Design::new(&prob.a, &prob.b)?;
+//! let mut fit = EnetModel::new().alpha_c(0.8, 0.4).tol(1e-8).fit(&design)?;
+//! assert!(fit.result().converged);
+//!
+//! // warm session: re-solve the same design against a new response,
+//! // reusing the fit's Newton workspace (bitwise-identical to a cold fit)
+//! let b2: Vec<f64> = prob.b.iter().rev().copied().collect();
+//! let again = fit.refit(&b2)?;
+//! assert!(again.converged);
+//! # Ok::<(), ssnal_en::api::EnetError>(())
+//! ```
+
+pub mod design;
+pub mod error;
+pub mod fit;
+pub mod model;
+
+pub use design::Design;
+pub use error::EnetError;
+pub use fit::{Fit, PathFit, TuneFit};
+pub use model::{Backend, EnetModel};
+
+/// The one α-range rule (0 < α ≤ 1, finite), shared by
+/// [`Design::lambda_max`] and the builder's validation so the two surfaces
+/// can never disagree on which mixing parameters are valid.
+pub(crate) fn check_alpha(alpha: f64) -> Result<(), EnetError> {
+    if alpha.is_finite() && alpha > 0.0 && alpha <= 1.0 {
+        Ok(())
+    } else {
+        Err(EnetError::InvalidAlpha { alpha })
+    }
+}

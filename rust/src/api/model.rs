@@ -1,0 +1,611 @@
+//! The estimator builder — configuration half of the facade.
+//!
+//! [`EnetModel`] collapses the historical option structs (`SsnalOptions`,
+//! `BaselineOptions`, `PathOptions`, `ParallelPathOptions`, `TuningOptions`)
+//! into one builder with per-field validation: every invalid setting surfaces
+//! as a typed [`EnetError`] from the `fit*`/`tune` calls instead of an
+//! `assert!` panic deep inside a solver. One model value drives all three
+//! workloads — single solves ([`EnetModel::fit`]), warm-started λ-paths
+//! ([`EnetModel::fit_path`]) and tuning sweeps ([`EnetModel::tune`]).
+
+use crate::api::fit::{Fit, PathFit, TuneFit};
+use crate::api::{Design, EnetError};
+use crate::coordinator::pjrt_solver;
+use crate::linalg::{Mat, NewtonWorkspace};
+use crate::parallel::{shard, solve_path_parallel, Chunking, ParallelPathOptions, DEFAULT_CHAINS};
+use crate::path::{c_lambda_grid, PathOptions};
+use crate::runtime::PjrtEngine;
+use crate::solver::ssnal::{self, SsnalTrace};
+use crate::solver::types::{
+    Algorithm, EnetProblem, NewtonStrategy, SolveResult, SolverConfig, SsnalOptions,
+};
+use crate::tuning::{tune_with_threads, TuningOptions};
+use std::path::PathBuf;
+
+/// Which execution backend runs the solver's inner computations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust f64 kernels (default; fastest on this CPU testbed).
+    Native,
+    /// AOT-compiled JAX + Pallas graphs executed via PJRT (f32). Demonstrates
+    /// the full three-layer stack; requires `make artifacts` for the problem
+    /// shape.
+    Pjrt,
+}
+
+impl Backend {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(format!("unknown backend {other:?} (native|pjrt)")),
+        }
+    }
+}
+
+/// Single-point penalty specification.
+#[derive(Clone, Copy, Debug)]
+enum Penalty {
+    /// Explicit `(λ1, λ2)`.
+    Lambda(f64, f64),
+    /// The paper's parametrization `λ1 = α·c·λmax`, `λ2 = (1−α)·c·λmax`,
+    /// with α taken from the model's mixing parameter.
+    C(f64),
+}
+
+/// λ-grid specification for path/tuning workloads.
+#[derive(Clone, Debug)]
+enum GridSpec {
+    /// Log-spaced `c_λ` grid from `hi` down to `lo`.
+    Log { hi: f64, lo: f64, points: usize },
+    /// Caller-supplied descending `c_λ` values.
+    Explicit(Vec<f64>),
+}
+
+/// Builder-style Elastic Net estimator — the crate's canonical entry point.
+///
+/// Defaults follow the paper's §4.1 protocol (α = 0.8, tol = 1e-6, SsNAL-EN
+/// with the automatic Newton strategy, 100-point log grid from 1.0 to 0.1
+/// capped at 100 active features). Setters are chainable and infallible; all
+/// validation happens in [`EnetModel::fit`] / [`EnetModel::fit_path`] /
+/// [`EnetModel::tune`], which return typed [`EnetError`]s.
+///
+/// ```
+/// use ssnal_en::api::{Design, EnetModel};
+/// use ssnal_en::data::{generate_synthetic, SyntheticSpec};
+///
+/// let prob = generate_synthetic(&SyntheticSpec {
+///     m: 30, n: 90, n0: 4, x_star: 5.0, snr: 8.0, seed: 7,
+/// });
+/// let design = Design::new(&prob.a, &prob.b)?;
+/// let fit = EnetModel::new().alpha_c(0.8, 0.3).tol(1e-8).fit(&design)?;
+/// assert!(fit.result().converged);
+/// assert!(!fit.active_set().is_empty());
+/// # Ok::<(), ssnal_en::api::EnetError>(())
+/// ```
+#[derive(Clone, Debug)]
+pub struct EnetModel {
+    alpha: f64,
+    penalty: Penalty,
+    grid: GridSpec,
+    max_active: usize,
+    algorithm: Algorithm,
+    solver: SolverConfig,
+    cv_folds: usize,
+    cv_seed: u64,
+    threads: usize,
+    chunking: Chunking,
+    screening: bool,
+    backend: Backend,
+    artifacts_dir: PathBuf,
+}
+
+impl Default for EnetModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EnetModel {
+    /// The paper-default configuration (see the type-level docs).
+    pub fn new() -> Self {
+        Self {
+            alpha: 0.8,
+            penalty: Penalty::C(0.5),
+            grid: GridSpec::Log { hi: 1.0, lo: 0.1, points: 100 },
+            max_active: 100,
+            algorithm: Algorithm::SsnalEn,
+            solver: SolverConfig::default(),
+            cv_folds: 0,
+            cv_seed: 0,
+            threads: 0,
+            chunking: Chunking::Chains(DEFAULT_CHAINS),
+            screening: true,
+            backend: Backend::Native,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+        }
+    }
+
+    // ---- penalty ----------------------------------------------------------
+
+    /// Explicit penalties `(λ1, λ2)` for single fits.
+    pub fn lambda(mut self, lam1: f64, lam2: f64) -> Self {
+        self.penalty = Penalty::Lambda(lam1, lam2);
+        self
+    }
+
+    /// The paper's `(α, c_λ)` parametrization for single fits:
+    /// `λ1 = α·c·λmax`, `λ2 = (1−α)·c·λmax` with `λmax = ‖Aᵀb‖∞/α`.
+    /// Also sets the mixing α used by path/tuning grids.
+    pub fn alpha_c(mut self, alpha: f64, c: f64) -> Self {
+        self.alpha = alpha;
+        self.penalty = Penalty::C(c);
+        self
+    }
+
+    /// Mixing parameter α ∈ (0, 1] (1 = pure Lasso) without touching the
+    /// single-fit penalty.
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.alpha = alpha;
+        self
+    }
+
+    // ---- grid (path / tuning) --------------------------------------------
+
+    /// Log-spaced `c_λ` grid from `hi` down to `lo` with `points` values.
+    pub fn grid(mut self, hi: f64, lo: f64, points: usize) -> Self {
+        self.grid = GridSpec::Log { hi, lo, points };
+        self
+    }
+
+    /// Explicit descending `c_λ` grid (overrides [`EnetModel::grid`]).
+    pub fn c_grid(mut self, grid: Vec<f64>) -> Self {
+        self.grid = GridSpec::Explicit(grid);
+        self
+    }
+
+    /// Stop exploring the path once this many features are active
+    /// (`0` = no cap).
+    pub fn max_active(mut self, max_active: usize) -> Self {
+        self.max_active = max_active;
+        self
+    }
+
+    // ---- algorithm / solver knobs ----------------------------------------
+
+    /// Which algorithm solves each instance (default: the paper's SsNAL-EN).
+    pub fn algorithm(mut self, algorithm: Algorithm) -> Self {
+        self.algorithm = algorithm;
+        self
+    }
+
+    /// Newton-system strategy for SsNAL-EN (default: the paper's Auto cost
+    /// model).
+    pub fn newton(mut self, strategy: NewtonStrategy) -> Self {
+        self.solver.ssnal.strategy = strategy;
+        self
+    }
+
+    /// Full SsNAL option block (σ schedule, line search, CG caps). The
+    /// builder's own `tol`/`verbose`/`max_iters` still take precedence over
+    /// the matching fields here.
+    pub fn ssnal_options(mut self, opts: SsnalOptions) -> Self {
+        self.solver.ssnal = opts;
+        self
+    }
+
+    /// Stopping tolerance on the solver's own criterion (default 1e-6).
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.solver.tol = tol;
+        self
+    }
+
+    /// Cap outer iterations (AL iterations for SsNAL-EN, sweeps/epochs for
+    /// the baselines).
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.solver.max_iters = Some(max_iters);
+        self
+    }
+
+    /// Per-iteration diagnostics.
+    pub fn verbose(mut self, verbose: bool) -> Self {
+        self.solver.verbose = verbose;
+        self
+    }
+
+    // ---- tuning -----------------------------------------------------------
+
+    /// k-fold cross-validation during [`EnetModel::tune`] (`0` disables CV —
+    /// it is by far the costliest criterion).
+    pub fn cv(mut self, folds: usize) -> Self {
+        self.cv_folds = folds;
+        self
+    }
+
+    /// Seed for the CV fold assignment.
+    pub fn cv_seed(mut self, seed: u64) -> Self {
+        self.cv_seed = seed;
+        self
+    }
+
+    // ---- execution ---------------------------------------------------------
+
+    /// Worker threads (`0` = all available cores). Single fits use this as
+    /// the within-solve shard budget; paths and tuning sweeps use it for the
+    /// grid-level fan-out. Results are identical at every setting for a
+    /// fixed [`EnetModel::chunking`].
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// How path grids split into warm-start chains (default: a fixed
+    /// [`DEFAULT_CHAINS`]-way split, so results do not depend on the thread
+    /// count; [`Chunking::Auto`] ties chains to threads for maximum
+    /// parallelism at the cost of that invariance).
+    pub fn chunking(mut self, chunking: Chunking) -> Self {
+        self.chunking = chunking;
+        self
+    }
+
+    /// Gap-Safe screening of warm-started path points (default on).
+    pub fn screening(mut self, screening: bool) -> Self {
+        self.screening = screening;
+        self
+    }
+
+    /// Single-chain, single-thread, unscreened path execution — bitwise
+    /// identical to the sequential `path::solve_path` driver. The benches use
+    /// this as their baseline configuration.
+    pub fn sequential(self) -> Self {
+        self.threads(1).chunking(Chunking::Chains(1)).screening(false)
+    }
+
+    /// Execution backend (default native f64 kernels).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Artifacts directory for the PJRT backend.
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    // ---- workloads ---------------------------------------------------------
+
+    /// Fit one Elastic Net instance, returning a warm [`Fit`] session whose
+    /// Newton workspace (buffer arena + Gram/Cholesky cache) stays bound to
+    /// `design` — [`Fit::refit`] reuses it across responses.
+    pub fn fit<'d>(&self, design: &'d Design<'d>) -> Result<Fit<'d>, EnetError> {
+        self.fit_warm(design, None)
+    }
+
+    /// [`EnetModel::fit`] with an explicit warm-start point (SsNAL-EN only;
+    /// the PJRT demo backend ignores it).
+    pub fn fit_warm<'d>(
+        &self,
+        design: &'d Design<'d>,
+        x0: Option<&[f64]>,
+    ) -> Result<Fit<'d>, EnetError> {
+        self.validate_common(design)?;
+        if self.backend == Backend::Pjrt && self.algorithm != Algorithm::SsnalEn {
+            return Err(EnetError::Unsupported {
+                what: format!("{:?} on the PJRT backend", self.algorithm),
+            });
+        }
+        if let Some(x0) = x0 {
+            if x0.len() != design.n() {
+                return Err(EnetError::WarmStartShape { expected: design.n(), got: x0.len() });
+            }
+            if let Some(index) = x0.iter().position(|v| !v.is_finite()) {
+                return Err(EnetError::NonFinite { what: "warm start", index });
+            }
+        }
+        let (lam1, lam2) = self.checked_lambdas(design.a(), design.b())?;
+        let mut ws = NewtonWorkspace::new();
+        let mut engine = None;
+        let (result, trace) =
+            self.solve_once(design.a(), design.b(), lam1, lam2, x0, &mut engine, &mut ws)?;
+        Ok(Fit { design, model: self.clone(), lam1, lam2, result, trace, ws, engine })
+    }
+
+    /// Warm-started λ-path over the configured grid, executed on the parallel
+    /// engine (SsNAL-EN or the two CD variants).
+    ///
+    /// Per-point solves follow the path driver's contract: `tol` is the
+    /// honored stopping knob and each algorithm keeps its default iteration
+    /// cap. An explicit [`EnetModel::max_iters`] is therefore rejected (not
+    /// silently dropped); [`EnetModel::verbose`] applies to single fits only.
+    pub fn fit_path(&self, design: &Design<'_>) -> Result<PathFit, EnetError> {
+        self.validate_common(design)?;
+        self.check_path_algorithm()?;
+        let popts = ParallelPathOptions {
+            base: self.path_options()?,
+            num_threads: self.threads,
+            chunking: self.chunking.clone(),
+            screening: self.screening,
+        };
+        Ok(PathFit { result: solve_path_parallel(design.a(), design.b(), &popts) })
+    }
+
+    /// Tuning sweep (paper §3.3): λ-path plus GCV / e-BIC (and k-fold CV when
+    /// [`EnetModel::cv`] is set) at every explored point. Like
+    /// [`EnetModel::fit_path`], per-point solves use the path driver's
+    /// defaults: an explicit [`EnetModel::max_iters`] is rejected rather than
+    /// silently dropped.
+    pub fn tune(&self, design: &Design<'_>) -> Result<TuneFit, EnetError> {
+        self.validate_common(design)?;
+        self.check_path_algorithm()?;
+        let m = design.m();
+        if self.cv_folds != 0 && (self.cv_folds < 2 || self.cv_folds > m) {
+            return Err(EnetError::InvalidFolds { folds: self.cv_folds, m });
+        }
+        let topts = TuningOptions {
+            path: self.path_options()?,
+            cv_folds: self.cv_folds,
+            cv_seed: self.cv_seed,
+        };
+        Ok(TuneFit { result: tune_with_threads(design.a(), design.b(), &topts, self.threads) })
+    }
+
+    // ---- internals ---------------------------------------------------------
+
+    /// Field-level validation shared by every workload.
+    fn validate_common(&self, _design: &Design<'_>) -> Result<(), EnetError> {
+        crate::api::check_alpha(self.alpha)?;
+        if !(self.solver.tol.is_finite() && self.solver.tol > 0.0) {
+            return Err(EnetError::InvalidTolerance { tol: self.solver.tol });
+        }
+        if self.solver.max_iters == Some(0) {
+            return Err(EnetError::InvalidIterations);
+        }
+        Ok(())
+    }
+
+    /// Path/tuning drivers support warm-startable algorithms on the native
+    /// backend only, and cannot thread a custom iteration cap through the
+    /// per-point warm-start primitive — reject rather than silently drop it.
+    fn check_path_algorithm(&self) -> Result<(), EnetError> {
+        if self.backend == Backend::Pjrt {
+            return Err(EnetError::Unsupported {
+                what: "λ-path / tuning on the PJRT backend".to_string(),
+            });
+        }
+        if self.solver.max_iters.is_some() {
+            return Err(EnetError::Unsupported {
+                what: "max_iters on λ-path / tuning (per-point solves use the path \
+                       driver's default caps; cap single fits instead)"
+                    .to_string(),
+            });
+        }
+        match self.algorithm {
+            Algorithm::SsnalEn | Algorithm::CdNaive | Algorithm::CdCovariance => Ok(()),
+            other => Err(EnetError::Unsupported {
+                what: format!("λ-path driving with {other:?}"),
+            }),
+        }
+    }
+
+    /// Resolve and validate the single-fit penalties against `(A, b)`.
+    pub(crate) fn checked_lambdas(&self, a: &Mat, b: &[f64]) -> Result<(f64, f64), EnetError> {
+        let (lam1, lam2) = match self.penalty {
+            Penalty::Lambda(l1, l2) => (l1, l2),
+            Penalty::C(c) => {
+                if !(c.is_finite() && c > 0.0) {
+                    return Err(EnetError::InvalidCLambda { c });
+                }
+                let lmax = EnetProblem::lambda_max(a, b, self.alpha);
+                EnetProblem::lambdas_from_alpha(self.alpha, c, lmax)
+            }
+        };
+        let valid = lam1.is_finite()
+            && lam2.is_finite()
+            && lam1 >= 0.0
+            && lam2 >= 0.0
+            && (lam1 > 0.0 || lam2 > 0.0);
+        if !valid {
+            return Err(EnetError::InvalidPenalty { lam1, lam2 });
+        }
+        Ok((lam1, lam2))
+    }
+
+    /// One solve against caller-owned session state (the PJRT engine cache
+    /// and the Newton workspace) — the primitive behind both
+    /// [`EnetModel::fit_warm`] and [`Fit::refit`]. A fresh and a warm `ws`
+    /// produce bitwise-identical results (the workspace cache contract); the
+    /// engine loads once per session, not per solve.
+    pub(crate) fn solve_once(
+        &self,
+        a: &Mat,
+        b: &[f64],
+        lam1: f64,
+        lam2: f64,
+        x0: Option<&[f64]>,
+        engine: &mut Option<PjrtEngine>,
+        ws: &mut NewtonWorkspace,
+    ) -> Result<(SolveResult, Option<SsnalTrace>), EnetError> {
+        match self.backend {
+            Backend::Pjrt => {
+                if engine.is_none() {
+                    *engine = Some(PjrtEngine::load_dir(&self.artifacts_dir).map_err(|e| {
+                        EnetError::Backend(format!(
+                            "loading artifacts from {}: {e}",
+                            self.artifacts_dir.display()
+                        ))
+                    })?);
+                }
+                let engine = engine.as_ref().expect("pjrt engine initialized above");
+                let p = EnetProblem::new(a, b, lam1, lam2);
+                let res = pjrt_solver::solve_pjrt(engine, &p, &self.solver.ssnal_options())
+                    .map_err(|e| EnetError::Backend(format!("{e:#}")))?;
+                Ok((res, None))
+            }
+            Backend::Native => {
+                let run = || {
+                    let p = EnetProblem::new(a, b, lam1, lam2);
+                    match self.algorithm {
+                        Algorithm::SsnalEn => {
+                            let (res, trace) =
+                                ssnal::solve_warm_ws(&p, &self.solver.ssnal_options(), x0, ws);
+                            Ok((res, Some(trace)))
+                        }
+                        other if x0.is_some() => Err(EnetError::Unsupported {
+                            what: format!("explicit warm start with {other:?}"),
+                        }),
+                        other => {
+                            Ok((crate::solver::solve_with_config(&p, other, &self.solver), None))
+                        }
+                    }
+                };
+                if self.threads > 0 {
+                    shard::with_threads(self.threads, run)
+                } else {
+                    run()
+                }
+            }
+        }
+    }
+
+    /// Build the validated low-level [`PathOptions`].
+    fn path_options(&self) -> Result<PathOptions, EnetError> {
+        let c_grid = match &self.grid {
+            GridSpec::Explicit(grid) => {
+                if grid.is_empty() {
+                    return Err(EnetError::InvalidGrid { reason: "grid is empty".to_string() });
+                }
+                if let Some(bad) = grid.iter().find(|c| !(c.is_finite() && **c > 0.0)) {
+                    return Err(EnetError::InvalidGrid {
+                        reason: format!("grid values must be positive and finite, got {bad}"),
+                    });
+                }
+                if grid.windows(2).any(|w| w[0] <= w[1]) {
+                    return Err(EnetError::InvalidGrid {
+                        reason: "grid must be strictly descending".to_string(),
+                    });
+                }
+                grid.clone()
+            }
+            GridSpec::Log { hi, lo, points } => {
+                if !(hi.is_finite() && lo.is_finite() && *hi > *lo && *lo > 0.0) {
+                    return Err(EnetError::InvalidGrid {
+                        reason: format!("need hi > lo > 0, got hi={hi} lo={lo}"),
+                    });
+                }
+                if *points < 2 {
+                    return Err(EnetError::InvalidGrid {
+                        reason: format!("need at least 2 grid points, got {points}"),
+                    });
+                }
+                c_lambda_grid(*hi, *lo, *points)
+            }
+        };
+        Ok(PathOptions {
+            alpha: self.alpha,
+            c_grid,
+            max_active: self.max_active,
+            tol: self.solver.tol,
+            algorithm: self.algorithm,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_synthetic, SyntheticSpec};
+
+    fn problem() -> crate::data::SyntheticProblem {
+        generate_synthetic(&SyntheticSpec {
+            m: 40,
+            n: 120,
+            n0: 5,
+            x_star: 5.0,
+            snr: 8.0,
+            seed: 33,
+        })
+    }
+
+    #[test]
+    fn invalid_settings_surface_as_typed_errors() {
+        let prob = problem();
+        let design = Design::new(&prob.a, &prob.b).unwrap();
+        assert!(matches!(
+            EnetModel::new().alpha(1.5).fit(&design),
+            Err(EnetError::InvalidAlpha { .. })
+        ));
+        assert!(matches!(
+            EnetModel::new().lambda(-1.0, 0.5).fit(&design),
+            Err(EnetError::InvalidPenalty { .. })
+        ));
+        assert!(matches!(
+            EnetModel::new().lambda(0.0, 0.0).fit(&design),
+            Err(EnetError::InvalidPenalty { .. })
+        ));
+        assert!(matches!(
+            EnetModel::new().alpha_c(0.8, -0.3).fit(&design),
+            Err(EnetError::InvalidCLambda { .. })
+        ));
+        assert!(matches!(
+            EnetModel::new().tol(0.0).fit(&design),
+            Err(EnetError::InvalidTolerance { .. })
+        ));
+        assert!(matches!(
+            EnetModel::new().max_iters(0).fit(&design),
+            Err(EnetError::InvalidIterations)
+        ));
+        assert!(matches!(
+            EnetModel::new().grid(0.1, 0.5, 10).fit_path(&design),
+            Err(EnetError::InvalidGrid { .. })
+        ));
+        assert!(matches!(
+            EnetModel::new().c_grid(vec![0.5, 0.5]).fit_path(&design),
+            Err(EnetError::InvalidGrid { .. })
+        ));
+        assert!(matches!(
+            EnetModel::new().cv(1).tune(&design),
+            Err(EnetError::InvalidFolds { .. })
+        ));
+        assert!(matches!(
+            EnetModel::new().algorithm(Algorithm::Fista).fit_path(&design),
+            Err(EnetError::Unsupported { .. })
+        ));
+    }
+
+    #[test]
+    fn fit_path_and_tune_run_end_to_end() {
+        let prob = problem();
+        let design = Design::new(&prob.a, &prob.b).unwrap();
+        let model = EnetModel::new().alpha(0.9).grid(0.9, 0.2, 6).max_active(0).tol(1e-6);
+        let path = model.fit_path(&design).unwrap();
+        assert_eq!(path.runs(), 6);
+        let tuned = model.tune(&design).unwrap();
+        assert_eq!(tuned.points().len(), 6);
+        assert!(tuned.best_ebic() < 6);
+    }
+
+    #[test]
+    fn backend_parsing() {
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        assert!(Backend::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn explicit_warm_start_is_honored_for_ssnal() {
+        let prob = problem();
+        let design = Design::new(&prob.a, &prob.b).unwrap();
+        let model = EnetModel::new().alpha_c(0.8, 0.3).tol(1e-8);
+        let cold = model.fit(&design).unwrap();
+        let warm = model.fit_warm(&design, Some(cold.coefficients())).unwrap();
+        assert!(warm.result().converged);
+        assert!(warm.result().iterations <= cold.result().iterations);
+        // wrong-length warm starts are typed errors
+        assert!(matches!(
+            model.fit_warm(&design, Some(&[0.0; 3])),
+            Err(EnetError::WarmStartShape { .. })
+        ));
+    }
+}

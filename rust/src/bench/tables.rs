@@ -5,23 +5,25 @@
 //! reproductions. All runners print the same row structure as the paper's
 //! tables and return the [`Table`] for capture into EXPERIMENTS.md.
 
+use crate::api::{Design, EnetModel};
 use crate::bench::harness::{measure, MeasureConfig};
 use crate::data::libsvm::ReferenceSet;
 use crate::data::snp::{generate as generate_snp, SnpSpec};
 use crate::data::{generate_synthetic, rho_hat, standardize, SyntheticSpec};
 use crate::linalg::{blas, Mat};
-use crate::parallel::{solve_path_parallel, Chunking, ParallelPathOptions};
-use crate::path::{c_lambda_grid, first_reaching_active, solve_path, PathOptions};
+use crate::parallel::Chunking;
+use crate::path::{c_lambda_grid, first_reaching_active};
 use crate::prox;
 use crate::solver::types::{Algorithm, EnetProblem, SsnalOptions};
 use crate::solver::{solve_with, ssnal};
-use crate::tuning::{tune, TuningOptions};
 use crate::util::json::Json;
 use crate::util::table::{fmt_secs, fmt_secs_iters, Table};
 
 /// Find the largest `c_λ` whose solution has ≥ `target` active features
 /// (paper: "we select the largest c_λ which gives a solution with n₀ active
-/// components"), by walking a descending grid with warm starts.
+/// components"), by walking a descending grid with warm starts
+/// ([`EnetModel::sequential`] — bitwise-identical to the single-chain
+/// driver).
 pub fn c_lambda_for_active(
     a: &Mat,
     b: &[f64],
@@ -29,16 +31,17 @@ pub fn c_lambda_for_active(
     target: usize,
     grid_points: usize,
 ) -> (f64, f64, f64) {
-    let opts = PathOptions {
-        alpha,
-        c_grid: c_lambda_grid(0.99, 0.01, grid_points),
-        max_active: target,
-        tol: 1e-4, // scouting pass only
-        algorithm: Algorithm::SsnalEn,
-    };
-    let path = solve_path(a, b, &opts);
-    let idx = first_reaching_active(&path, target).unwrap_or(path.points.len() - 1);
-    let pt = &path.points[idx];
+    let design = Design::new(a, b).expect("bench design is valid");
+    let path = EnetModel::new()
+        .alpha(alpha)
+        .grid(0.99, 0.01, grid_points)
+        .max_active(target)
+        .tol(1e-4) // scouting pass only
+        .sequential()
+        .fit_path(&design)
+        .expect("bench path configuration is valid");
+    let idx = first_reaching_active(path.path(), target).unwrap_or(path.points().len() - 1);
+    let pt = &path.points()[idx];
     (pt.c_lambda, pt.lam1, pt.lam2)
 }
 
@@ -234,21 +237,20 @@ pub fn insight_run(
     cv_folds: usize,
 ) -> InsightRun {
     let cohort = generate_snp(spec);
+    let design = Design::new(&cohort.a, &cohort.b).expect("snp design is valid");
     let mut curves = Vec::new();
     let mut best: Option<(f64, Vec<usize>)> = None; // (ebic, active set)
     for &alpha in alphas {
-        let topts = TuningOptions {
-            path: PathOptions {
-                alpha,
-                c_grid: c_lambda_grid(0.99, 0.05, grid_points),
-                max_active: 40,
-                tol: 1e-5,
-                algorithm: Algorithm::SsnalEn,
-            },
-            cv_folds,
-            cv_seed: spec.seed,
-        };
-        let tr = tune(&cohort.a, &cohort.b, &topts);
+        let tr = EnetModel::new()
+            .alpha(alpha)
+            .grid(0.99, 0.05, grid_points)
+            .max_active(40)
+            .tol(1e-5)
+            .cv(cv_folds)
+            .cv_seed(spec.seed)
+            .tune(&design)
+            .expect("tuning configuration is valid")
+            .into_inner();
         for p in &tr.points {
             curves.push(vec![
                 format!("{alpha}"),
@@ -445,24 +447,28 @@ pub fn table_d4(
             spec.m = m;
             spec.n0 = spec.n0.min(n / 4).max(1);
             let prob = generate_synthetic(&spec);
+            let design = Design::new(&prob.a, &prob.b).expect("bench design is valid");
             let grid = c_lambda_grid(1.0, 0.1, grid_points);
             let max_active = 100.min(n / 2);
-            let popts = |algorithm| PathOptions {
-                alpha,
-                c_grid: grid.clone(),
-                max_active,
-                tol,
-                algorithm,
+            // Sequential facade model — bitwise-identical to the single-chain
+            // path driver, so the table measures the same work as before.
+            let model = |algorithm| {
+                EnetModel::new()
+                    .alpha(alpha)
+                    .c_grid(grid.clone())
+                    .max_active(max_active)
+                    .tol(tol)
+                    .algorithm(algorithm)
+                    .sequential()
             };
-            let (st_ssnal, path_ssnal) = measure(MeasureConfig::default(), || {
-                solve_path(&prob.a, &prob.b, &popts(Algorithm::SsnalEn))
-            });
-            let (st_cov, _) = measure(MeasureConfig::default(), || {
-                solve_path(&prob.a, &prob.b, &popts(Algorithm::CdCovariance))
-            });
-            let (st_naive, _) = measure(MeasureConfig::default(), || {
-                solve_path(&prob.a, &prob.b, &popts(Algorithm::CdNaive))
-            });
+            let run = |algorithm| {
+                model(algorithm).fit_path(&design).expect("bench path configuration is valid")
+            };
+            let (st_ssnal, path_ssnal) =
+                measure(MeasureConfig::default(), || run(Algorithm::SsnalEn));
+            let path_ssnal = path_ssnal.into_inner().path;
+            let (st_cov, _) = measure(MeasureConfig::default(), || run(Algorithm::CdCovariance));
+            let (st_naive, _) = measure(MeasureConfig::default(), || run(Algorithm::CdNaive));
             // gap-safe "path": screened CD per explored grid point (no warm
             // start across points — biglasso-style safe rules recomputed per λ)
             let (st_gs, _) = measure(MeasureConfig::default(), || {
@@ -623,15 +629,14 @@ pub fn parallel_path_rows(
         seed,
     };
     let prob = generate_synthetic(&spec);
-    let base = PathOptions {
-        alpha: 0.8,
-        c_grid: c_lambda_grid(0.95, 0.1, grid_points),
-        max_active: 0,
-        tol,
-        algorithm: Algorithm::SsnalEn,
-    };
-    let (st_seq, seq) =
-        measure(MeasureConfig::default(), || solve_path(&prob.a, &prob.b, &base));
+    let design = Design::new(&prob.a, &prob.b).expect("bench design is valid");
+    let base = EnetModel::new().alpha(0.8).grid(0.95, 0.1, grid_points).max_active(0).tol(tol);
+    // Sequential baseline through the facade: bitwise-identical to the
+    // single-chain `path::solve_path` driver.
+    let (st_seq, seq) = measure(MeasureConfig::default(), || {
+        base.clone().sequential().fit_path(&design).expect("bench path configuration is valid")
+    });
+    let seq = seq.into_inner().path;
 
     let title = format!(
         "Parallel λ-path: {m}×{n}, {grid_points}-point grid, screening={screening} \
@@ -642,15 +647,15 @@ pub fn parallel_path_rows(
         .with_title(&title);
     let mut rows = Vec::with_capacity(threads_list.len());
     for &threads in threads_list {
-        let popts = ParallelPathOptions {
-            base: base.clone(),
-            num_threads: threads.max(1),
-            chunking: Chunking::Chains(threads.max(1)),
-            screening,
-        };
+        let model = base
+            .clone()
+            .threads(threads.max(1))
+            .chunking(Chunking::Chains(threads.max(1)))
+            .screening(screening);
         let (st, res) = measure(MeasureConfig::default(), || {
-            solve_path_parallel(&prob.a, &prob.b, &popts)
+            model.fit_path(&design).expect("bench path configuration is valid")
         });
+        let res = res.into_inner();
         let max_dist = res
             .path
             .points

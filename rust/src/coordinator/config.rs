@@ -1,29 +1,10 @@
-//! Coordinator configuration.
+//! Coordinator configuration (the [`Backend`] enum itself now lives in the
+//! facade, [`crate::api`], and is re-exported here for compatibility).
 
 use crate::solver::types::{NewtonStrategy, SsnalOptions};
 use std::path::PathBuf;
 
-/// Which execution backend runs the SsNAL-EN inner computations.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Backend {
-    /// Pure-Rust f64 kernels (default; fastest on this CPU testbed).
-    Native,
-    /// AOT-compiled JAX + Pallas graphs executed via PJRT (f32). Demonstrates
-    /// the full three-layer stack; requires `make artifacts` for the problem
-    /// shape.
-    Pjrt,
-}
-
-impl Backend {
-    /// Parse from a CLI string.
-    pub fn parse(s: &str) -> Result<Self, String> {
-        match s {
-            "native" => Ok(Backend::Native),
-            "pjrt" => Ok(Backend::Pjrt),
-            other => Err(format!("unknown backend {other:?} (native|pjrt)")),
-        }
-    }
-}
+pub use crate::api::Backend;
 
 /// High-level configuration for [`super::Coordinator`].
 #[derive(Clone, Debug)]
@@ -76,13 +57,6 @@ impl CoordinatorConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn backend_parsing() {
-        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
-        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
-        assert!(Backend::parse("gpu").is_err());
-    }
 
     #[test]
     fn default_config_is_native() {

@@ -1,32 +1,40 @@
-//! The coordinator — the high-level entry point a downstream user works with.
+//! Compatibility shim over the [`crate::api`] facade.
 //!
-//! Owns backend selection (native f64 kernels vs PJRT-executed JAX/Pallas
-//! artifacts), lazy engine initialization, and the high-level operations:
-//! single solves, warm-started λ-paths, and parameter tuning.
+//! The [`Coordinator`] was the crate's high-level entry point before the
+//! estimator facade landed; it survives (deprecated) so downstream callers
+//! keep compiling, but every operation now delegates to
+//! [`crate::api::EnetModel`] / [`crate::api::Design`] — it is a thin mapping
+//! layer, not a parallel code path. New code should use the facade directly:
+//!
+//! * `Coordinator::solve` → [`crate::api::EnetModel::fit`]
+//! * `Coordinator::solve_path` → [`crate::api::EnetModel::fit_path`]
+//! * `Coordinator::tune` → [`crate::api::EnetModel::tune`]
 
 pub mod config;
-mod pjrt_solver;
+pub(crate) mod pjrt_solver;
 
 pub use config::{Backend, CoordinatorConfig};
 
+use crate::api::{Design, EnetModel};
 use crate::linalg::Mat;
-use crate::parallel::{
-    solve_path_parallel, Chunking, ParallelPathOptions, ParallelPathResult, DEFAULT_CHAINS,
-};
+use crate::parallel::{Chunking, ParallelPathResult, DEFAULT_CHAINS};
 use crate::path::{PathOptions, PathResult};
 use crate::runtime::PjrtEngine;
-use crate::solver::ssnal;
-use crate::solver::types::{EnetProblem, SolveResult};
-use crate::tuning::{tune_with_threads, TuningOptions, TuningResult};
+use crate::solver::types::SolveResult;
+use crate::tuning::{TuningOptions, TuningResult};
 use crate::util::error::{Context, Result};
 use std::cell::OnceCell;
 
-/// High-level solver coordinator.
+/// High-level solver coordinator — deprecated compatibility shim over the
+/// estimator facade (see the module docs).
+#[deprecated(note = "use crate::api::{Design, EnetModel} — the Coordinator is a \
+                     compatibility shim over the facade")]
 pub struct Coordinator {
     config: CoordinatorConfig,
     engine: OnceCell<PjrtEngine>,
 }
 
+#[allow(deprecated)]
 impl Coordinator {
     /// Create a coordinator; the PJRT engine (if configured) loads lazily on
     /// first use so native-only runs never touch the artifacts directory.
@@ -39,24 +47,34 @@ impl Coordinator {
         &self.config
     }
 
-    /// The PJRT engine (loading it on first call).
+    /// The PJRT engine (loading it on first call). Kept for artifact
+    /// introspection; the facade caches its own engine per [`crate::api::Fit`]
+    /// session.
     pub fn engine(&self) -> Result<&PjrtEngine> {
-        if self.engine.get().is_none() {
-            let engine = PjrtEngine::load_dir(&self.config.artifacts_dir).with_context(|| {
-                format!("loading artifacts from {}", self.config.artifacts_dir.display())
-            })?;
-            let _ = self.engine.set(engine);
+        if let Some(engine) = self.engine.get() {
+            return Ok(engine);
         }
-        Ok(self.engine.get().expect("just set"))
+        let engine = PjrtEngine::load_dir(&self.config.artifacts_dir).with_context(|| {
+            format!("loading artifacts from {}", self.config.artifacts_dir.display())
+        })?;
+        Ok(self.engine.get_or_init(|| engine))
+    }
+
+    /// The facade model equivalent to this coordinator's configuration.
+    fn model(&self) -> EnetModel {
+        EnetModel::new()
+            .tol(self.config.ssnal.tol)
+            .verbose(self.config.ssnal.verbose)
+            .ssnal_options(self.config.ssnal.clone())
+            .threads(self.config.num_threads)
+            .backend(self.config.backend)
+            .artifacts_dir(self.config.artifacts_dir.clone())
     }
 
     /// Solve one Elastic Net instance on the configured backend.
     pub fn solve(&self, a: &Mat, b: &[f64], lam1: f64, lam2: f64) -> Result<SolveResult> {
-        let p = EnetProblem::new(a, b, lam1, lam2);
-        match self.config.backend {
-            Backend::Native => Ok(ssnal::solve(&p, &self.config.ssnal)),
-            Backend::Pjrt => pjrt_solver::solve_pjrt(self.engine()?, &p, &self.config.ssnal),
-        }
+        let design = Design::new(a, b)?;
+        Ok(self.model().lambda(lam1, lam2).fit(&design)?.into_result())
     }
 
     /// Solve with an explicit warm start (native backend; the PJRT demo
@@ -69,11 +87,8 @@ impl Coordinator {
         lam2: f64,
         x0: Option<&[f64]>,
     ) -> Result<SolveResult> {
-        let p = EnetProblem::new(a, b, lam1, lam2);
-        match self.config.backend {
-            Backend::Native => Ok(ssnal::solve_warm(&p, &self.config.ssnal, x0).0),
-            Backend::Pjrt => pjrt_solver::solve_pjrt(self.engine()?, &p, &self.config.ssnal),
-        }
+        let design = Design::new(a, b)?;
+        Ok(self.model().lambda(lam1, lam2).fit_warm(&design, x0)?.into_result())
     }
 
     /// Warm-started λ-path (always native — the path driver is the
@@ -82,40 +97,66 @@ impl Coordinator {
     /// result is identical for every `config.num_threads` value;
     /// `num_threads == 1` is the single-threaded fallback (no workers
     /// spawned). Solutions agree with [`crate::path::solve_path`] to solver
-    /// tolerance; for bit-identical sequential output call the engine with
-    /// [`ParallelPathOptions::sequential`].
+    /// tolerance; for bit-identical sequential output use
+    /// [`crate::api::EnetModel::sequential`].
     pub fn solve_path(&self, a: &Mat, b: &[f64], opts: &PathOptions) -> PathResult {
         self.solve_path_parallel(a, b, opts).path
     }
 
     /// Warm-started λ-path with the engine's diagnostics (chain reports,
-    /// survivor fractions, thread count).
+    /// survivor fractions, thread count). Invalid input panics here for
+    /// signature compatibility — the facade returns typed errors instead.
     pub fn solve_path_parallel(
         &self,
         a: &Mat,
         b: &[f64],
         opts: &PathOptions,
     ) -> ParallelPathResult {
-        let popts = ParallelPathOptions {
-            base: opts.clone(),
-            num_threads: self.config.num_threads,
-            chunking: Chunking::Chains(DEFAULT_CHAINS),
-            screening: true,
-        };
-        solve_path_parallel(a, b, &popts)
+        let design =
+            Design::new(a, b).unwrap_or_else(|e| panic!("invalid path request: {e}"));
+        self.model()
+            .alpha(opts.alpha)
+            .c_grid(opts.c_grid.clone())
+            .max_active(opts.max_active)
+            .tol(opts.tol)
+            .algorithm(opts.algorithm)
+            .backend(Backend::Native)
+            .chunking(Chunking::Chains(DEFAULT_CHAINS))
+            .screening(true)
+            .fit_path(&design)
+            .unwrap_or_else(|e| panic!("invalid path request: {e}"))
+            .into_inner()
     }
 
     /// Parameter tuning sweep (§3.3): path + GCV/e-BIC (+ optional k-fold CV),
     /// with the per-point criteria fanned out over `config.num_threads`.
+    /// Invalid input panics here for signature compatibility — the facade
+    /// returns typed errors instead.
     pub fn tune(&self, a: &Mat, b: &[f64], opts: &TuningOptions) -> TuningResult {
-        tune_with_threads(a, b, opts, self.config.num_threads)
+        let design =
+            Design::new(a, b).unwrap_or_else(|e| panic!("invalid tuning request: {e}"));
+        self.model()
+            .alpha(opts.path.alpha)
+            .c_grid(opts.path.c_grid.clone())
+            .max_active(opts.path.max_active)
+            .tol(opts.path.tol)
+            .algorithm(opts.path.algorithm)
+            .backend(Backend::Native)
+            .cv(opts.cv_folds)
+            .cv_seed(opts.cv_seed)
+            .tune(&design)
+            .unwrap_or_else(|e| panic!("invalid tuning request: {e}"))
+            .into_inner()
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
+
     use super::*;
     use crate::data::{generate_synthetic, SyntheticSpec};
+    use crate::solver::types::EnetProblem;
 
     #[test]
     fn native_solve_via_coordinator() {
@@ -133,6 +174,38 @@ mod tests {
         let fit = coord.solve(&prob.a, &prob.b, l1, l2).unwrap();
         assert!(fit.converged);
         assert!(!fit.active_set.is_empty());
+    }
+
+    /// The shim must match the facade bit for bit — it is a mapping layer,
+    /// not a second code path.
+    #[test]
+    fn shim_solve_matches_facade_bitwise() {
+        let prob = generate_synthetic(&SyntheticSpec {
+            m: 30,
+            n: 90,
+            n0: 4,
+            x_star: 5.0,
+            snr: 8.0,
+            seed: 11,
+        });
+        let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, 0.8);
+        let (l1, l2) = EnetProblem::lambdas_from_alpha(0.8, 0.3, lmax);
+        let coord = Coordinator::new(CoordinatorConfig::native(1e-6));
+        let shim = coord.solve(&prob.a, &prob.b, l1, l2).unwrap();
+        let design = Design::new(&prob.a, &prob.b).unwrap();
+        let facade =
+            EnetModel::new().lambda(l1, l2).tol(1e-6).fit(&design).unwrap().into_result();
+        assert_eq!(shim.x, facade.x);
+        assert_eq!(shim.objective.to_bits(), facade.objective.to_bits());
+    }
+
+    #[test]
+    fn invalid_design_is_an_error_not_a_panic() {
+        let coord = Coordinator::new(CoordinatorConfig::native(1e-6));
+        let a = Mat::zeros(3, 2);
+        let b = [0.0; 4]; // shape mismatch
+        let err = coord.solve(&a, &b, 1.0, 0.5).unwrap_err();
+        assert!(format!("{err}").contains("rows"), "{err}");
     }
 
     #[test]

@@ -4,13 +4,55 @@
 //! *An Efficient Semi-smooth Newton Augmented Lagrangian Method for Elastic Net*
 //! (Boschi, Reimherr, Chiaromonte, 2020).
 //!
-//! The crate is organized as:
+//! ## Quickstart
 //!
-//! * [`solver`] — the paper's contribution: the SsNAL-EN solver plus every
-//!   baseline it is benchmarked against (coordinate descent, FISTA, ADMM,
-//!   Gap-Safe screening, celer-style working sets),
+//! The [`api`] module is the crate's canonical surface: a validated
+//! [`Design`], a builder-style [`EnetModel`], and a warm [`Fit`] session.
+//!
+//! ```
+//! use ssnal_en::{Design, EnetModel};
+//! use ssnal_en::data::{generate_synthetic, SyntheticSpec};
+//!
+//! // a small synthetic instance (m observations × n features)
+//! let prob = generate_synthetic(&SyntheticSpec {
+//!     m: 30, n: 90, n0: 4, x_star: 5.0, snr: 8.0, seed: 7,
+//! });
+//!
+//! // validate once, fit many: shape/finite checks return typed errors
+//! let design = Design::new(&prob.a, &prob.b)?;
+//! let mut fit = EnetModel::new()
+//!     .alpha_c(0.8, 0.4)   // the paper's λ1 = α·c·λmax parametrization
+//!     .tol(1e-8)
+//!     .fit(&design)?;
+//! assert!(fit.result().converged);
+//!
+//! // predict, and re-solve the same design against a new response — the
+//! // warm session reuses the Newton workspace + Gram/Cholesky cache, with
+//! // results bitwise-identical to a cold fit
+//! let preds = fit.predict(&prob.a)?;
+//! assert_eq!(preds.len(), 30);
+//! let b2: Vec<f64> = prob.b.iter().rev().copied().collect();
+//! fit.refit(&b2)?;
+//! # Ok::<(), ssnal_en::EnetError>(())
+//! ```
+//!
+//! λ-paths and tuning sweeps go through the same builder
+//! ([`EnetModel::fit_path`], [`EnetModel::tune`]); every algorithm is
+//! reachable via [`EnetModel::algorithm`] and the [`solver::Solver`] trait
+//! registry.
+//!
+//! ## Module map
+//!
+//! * [`api`] — **the estimator facade** (start here): [`Design`] /
+//!   [`EnetModel`] / [`Fit`], typed [`EnetError`]s, JSON export, warm
+//!   sessions,
+//! * [`solver`] — the paper's contribution (SsNAL-EN) plus every baseline it
+//!   is benchmarked against (coordinate descent, FISTA, ADMM, Gap-Safe
+//!   screening, celer-style working sets), all behind the [`solver::Solver`]
+//!   trait registry,
 //! * [`prox`] — the Elastic Net proximal/conjugate toolbox (paper §2),
-//! * [`path`] / [`tuning`] — warm-started λ-paths and CV/GCV/e-BIC tuning (§3.3),
+//! * [`path`] / [`tuning`] — warm-started λ-paths and CV/GCV/e-BIC tuning
+//!   (§3.3) — the primitives the facade drives,
 //! * [`parallel`] — the two-layer execution engine over one **persistent
 //!   worker pool** (long-lived parked `std::thread` workers, woken per
 //!   kernel call; see [`parallel::pool`]). Layer 1 parallelizes *across*
@@ -27,30 +69,31 @@
 //! * [`runtime`] — the artifact manifest/buffer contract for the AOT-compiled
 //!   JAX/Pallas graphs (execution needs an XLA/PJRT binding the offline
 //!   toolchain does not ship; the engine degrades to a descriptive error),
-//! * [`coordinator`] — the high-level API tying solver, path, tuning, data and
-//!   backend selection together,
+//! * [`coordinator`] — **deprecated compatibility shim** over the facade
+//!   (kept so pre-facade callers compile; new code uses [`api`]),
 //! * [`linalg`] / [`rng`] / [`util`] / [`bench`] — the from-scratch substrates
 //!   (the offline build has no BLAS, rand, clap, serde, anyhow or criterion).
 //!   [`linalg::workspace`] holds the solver-wide buffer arena and the
 //!   active-set-aware Gram/Cholesky cache behind the zero-allocation Newton
-//!   hot path: steady-state SsN iterations reuse every buffer and factor
-//!   (bitwise-identically to cold rebuilds; a counting-allocator test pins
-//!   the hot path to zero heap allocations).
+//!   hot path — the state a warm [`Fit`] session carries across
+//!   [`Fit::refit`] calls.
 //!
 //! ## Continuous integration
 //!
 //! `.github/workflows/ci.yml` gates every push/PR on `cargo build --release`,
 //! `cargo test -q` (run twice, under `SSNAL_THREADS=1` and `=4`, so the
 //! sharding determinism contract is exercised on every push), `cargo fmt
-//! --check` and `cargo clippy -- -D warnings`, plus a bench-smoke job that
-//! runs the parallel-path, shard-linalg, pool-dispatch and Newton-workspace
-//! benchmarks on tiny synthetic problems and uploads the resulting four
-//! `BENCH_*.json` tables (the Newton section also gates warm-vs-cold
-//! workspace cost and steady-state allocations), and a bench-regression job
-//! that diffs them against the committed baselines in
-//! `rust/benches/baselines/` via `ssnal-en bench-check` ([`bench::check`]:
-//! structural drift and determinism violations hard-fail; wall-clock
-//! regressions >25% annotate without failing).
+//! --check`, `cargo clippy -- -D warnings` and `cargo doc --no-deps` under
+//! `RUSTDOCFLAGS="-D warnings"` (broken intra-doc links in the API surface
+//! fail the build), plus a bench-smoke job that runs the parallel-path,
+//! shard-linalg, pool-dispatch and Newton-workspace benchmarks on tiny
+//! synthetic problems and uploads the resulting four `BENCH_*.json` tables
+//! (the Newton section also gates warm-vs-cold workspace cost and
+//! steady-state allocations), and a bench-regression job that diffs them
+//! against the committed baselines in `rust/benches/baselines/` via
+//! `ssnal-en bench-check` ([`bench::check`]: structural drift and determinism
+//! violations hard-fail; wall-clock regressions >25% annotate without
+//! failing).
 
 // Numeric-kernel idioms this codebase uses deliberately (index loops that
 // mirror the paper's math, solver entry points with many tuning knobs).
@@ -59,6 +102,7 @@
 #![allow(clippy::type_complexity)]
 #![allow(clippy::inherent_to_string)]
 
+pub mod api;
 pub mod bench;
 pub mod coordinator;
 pub mod data;
@@ -71,3 +115,5 @@ pub mod runtime;
 pub mod solver;
 pub mod tuning;
 pub mod util;
+
+pub use api::{Backend, Design, EnetError, EnetModel, Fit, PathFit, TuneFit};

@@ -17,14 +17,12 @@
 //! Paper-scale sizes are the defaults where feasible on this testbed; every
 //! size is overridable (e.g. `--ns 1e4,1e5,1e6`).
 
+use ssnal_en::api::{Backend, Design, EnetModel};
 use ssnal_en::bench::tables;
-use ssnal_en::coordinator::{Backend, Coordinator, CoordinatorConfig};
 use ssnal_en::data::libsvm::ReferenceSet;
 use ssnal_en::data::snp::SnpSpec;
 use ssnal_en::data::{generate_synthetic, SyntheticSpec};
-use ssnal_en::path::{c_lambda_grid, PathOptions};
-use ssnal_en::solver::types::{Algorithm, EnetProblem};
-use ssnal_en::tuning::TuningOptions;
+use ssnal_en::solver::types::{EnetProblem, NewtonStrategy};
 use ssnal_en::util::csv::write_csv;
 use ssnal_en::util::error::{Error, Result};
 use ssnal_en::util::table::Table;
@@ -137,24 +135,27 @@ fn cmd_solve(args: &Args) -> Result<()> {
     // Within-solve shard threads (also settable via SSNAL_THREADS); the
     // solution is bitwise-identical at every setting.
     let threads = args.get_usize("threads", 0).map_err(Error::msg)?;
-    if threads > 0 {
-        ssnal_en::parallel::shard::set_threads(threads);
-    }
 
     let prob = generate_synthetic(&SyntheticSpec { m, n, n0, x_star: 5.0, snr: 5.0, seed });
-    let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, alpha);
-    let (lam1, lam2) = EnetProblem::lambdas_from_alpha(alpha, c, lmax);
+    let design = Design::new(&prob.a, &prob.b)?;
 
-    let mut cfg = match backend {
-        Backend::Native => CoordinatorConfig::native(tol),
-        Backend::Pjrt => CoordinatorConfig::pjrt(PathBuf::from(
-            args.get_str("artifacts-dir", "artifacts"),
-        )),
+    let model = EnetModel::new()
+        .alpha_c(alpha, c)
+        .threads(threads)
+        .verbose(args.get_flag("verbose"));
+    let model = match backend {
+        Backend::Native => model.tol(tol),
+        // f32 artifacts: the matrix-free CG strategy and a looser tolerance.
+        Backend::Pjrt => model
+            .backend(Backend::Pjrt)
+            .artifacts_dir(PathBuf::from(args.get_str("artifacts-dir", "artifacts")))
+            .tol(1e-4)
+            .newton(NewtonStrategy::ConjugateGradient),
     };
-    cfg.ssnal.verbose = args.get_flag("verbose");
-    let coord = Coordinator::new(cfg);
-    let (res, secs) = ssnal_en::util::timer::time_it(|| coord.solve(&prob.a, &prob.b, lam1, lam2));
-    let res = res?;
+    let (fit, secs) = ssnal_en::util::timer::time_it(|| model.fit(&design));
+    let fit = fit?;
+    let (lam1, lam2) = fit.lambdas();
+    let res = fit.result();
     println!(
         "solved m={m} n={n} λ1={lam1:.4} λ2={lam2:.4} backend={backend:?}\n\
          time={secs:.3}s outer={} inner={} active={} residual={:.2e} objective={:.6}",
@@ -164,7 +165,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         res.residual,
         res.objective
     );
-    let hits = prob.support.iter().filter(|j| res.x[**j] != 0.0).count();
+    let hits = prob.support.iter().filter(|j| fit.coefficients()[**j] != 0.0).count();
     println!("true-support recovery: {hits}/{}", prob.support.len());
     Ok(())
 }
@@ -181,32 +182,26 @@ fn cmd_path(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 0).map_err(Error::msg)?;
     let n0 = 100.min(n / 10).max(1);
     let prob = generate_synthetic(&SyntheticSpec { m, n, n0, x_star: 5.0, snr: 5.0, seed });
-    let opts = PathOptions {
-        alpha,
-        c_grid: c_lambda_grid(1.0, 0.1, grid),
-        max_active,
-        tol,
-        algorithm: Algorithm::SsnalEn,
-    };
-    let popts = ssnal_en::parallel::ParallelPathOptions {
-        base: opts,
-        num_threads: threads,
-        chunking: ssnal_en::parallel::Chunking::Auto,
-        screening: !args.get_flag("no-screening"),
-    };
-    let (engine_out, secs) = ssnal_en::util::timer::time_it(|| {
-        ssnal_en::parallel::solve_path_parallel(&prob.a, &prob.b, &popts)
-    });
-    let path = engine_out.path;
+    let design = Design::new(&prob.a, &prob.b)?;
+    let model = EnetModel::new()
+        .alpha(alpha)
+        .grid(1.0, 0.1, grid)
+        .max_active(max_active)
+        .tol(tol)
+        .threads(threads)
+        .chunking(ssnal_en::parallel::Chunking::Auto)
+        .screening(!args.get_flag("no-screening"));
+    let (engine_out, secs) = ssnal_en::util::timer::time_it(|| model.fit_path(&design));
+    let engine_out = engine_out?;
     let mut t = Table::new(&["c_lambda", "active", "outer_iters", "objective"])
         .with_title(&format!(
             "λ-path: {} points in {secs:.3}s (truncated={}, threads={}, chains={})",
-            path.runs,
-            path.truncated,
-            engine_out.threads,
-            engine_out.chains.len()
+            engine_out.runs(),
+            engine_out.truncated(),
+            engine_out.threads(),
+            engine_out.chains().len()
         ));
-    for p in &path.points {
+    for p in engine_out.points() {
         t.row(vec![
             format!("{:.4}", p.c_lambda),
             format!("{}", p.result.active_set.len()),
@@ -228,22 +223,18 @@ fn cmd_tune(args: &Args) -> Result<()> {
 
     let n0 = 10.min(n / 10).max(1);
     let prob = generate_synthetic(&SyntheticSpec { m, n, n0, x_star: 5.0, snr: 10.0, seed });
-    let topts = TuningOptions {
-        path: PathOptions {
-            alpha,
-            c_grid: c_lambda_grid(0.99, 0.05, grid),
-            max_active: 50,
-            tol,
-            algorithm: Algorithm::SsnalEn,
-        },
-        cv_folds: cv,
-        cv_seed: seed,
-    };
-    let coord = Coordinator::new(CoordinatorConfig::native(tol));
-    let tr = coord.tune(&prob.a, &prob.b, &topts);
+    let design = Design::new(&prob.a, &prob.b)?;
+    let tr = EnetModel::new()
+        .alpha(alpha)
+        .grid(0.99, 0.05, grid)
+        .max_active(50)
+        .tol(tol)
+        .cv(cv)
+        .cv_seed(seed)
+        .tune(&design)?;
     let mut t = Table::new(&["c_lambda", "active", "gcv", "ebic", "cv"])
         .with_title("tuning criteria (paper §3.3)");
-    for p in &tr.points {
+    for p in tr.points() {
         t.row(vec![
             format!("{:.4}", p.c_lambda),
             format!("{}", p.active),
@@ -253,12 +244,10 @@ fn cmd_tune(args: &Args) -> Result<()> {
         ]);
     }
     maybe_write(&t, args)?;
+    let (gcv_pt, ebic_pt) = (&tr.points()[tr.best_gcv()], &tr.points()[tr.best_ebic()]);
     println!(
         "\nbest: gcv → c={:.4} (r={}), e-bic → c={:.4} (r={})",
-        tr.points[tr.best_gcv].c_lambda,
-        tr.points[tr.best_gcv].active,
-        tr.points[tr.best_ebic].c_lambda,
-        tr.points[tr.best_ebic].active
+        gcv_pt.c_lambda, gcv_pt.active, ebic_pt.c_lambda, ebic_pt.active
     );
     Ok(())
 }
@@ -607,14 +596,23 @@ fn cmd_artifacts_check(args: &Args) -> Result<()> {
     let prob = generate_synthetic(&SyntheticSpec { m, n, n0: 5, x_star: 5.0, snr: 5.0, seed: 1 });
     let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, 0.9);
     let (l1, l2) = EnetProblem::lambdas_from_alpha(0.9, 0.4, lmax);
-    let coord = Coordinator::new(CoordinatorConfig::pjrt(dir));
-    match coord.solve(&prob.a, &prob.b, l1, l2) {
-        Ok(res) => println!(
-            "pjrt solve ({m}×{n}): converged={} active={} outer={}",
-            res.converged,
-            res.active_set.len(),
-            res.iterations
-        ),
+    let design = Design::new(&prob.a, &prob.b)?;
+    let model = EnetModel::new()
+        .lambda(l1, l2)
+        .backend(Backend::Pjrt)
+        .artifacts_dir(dir)
+        .tol(1e-4)
+        .newton(NewtonStrategy::ConjugateGradient);
+    match model.fit(&design) {
+        Ok(fit) => {
+            let res = fit.result();
+            println!(
+                "pjrt solve ({m}×{n}): converged={} active={} outer={}",
+                res.converged,
+                res.active_set.len(),
+                res.iterations
+            );
+        }
         Err(e) => println!("pjrt execution unavailable in this build: {e}"),
     }
     Ok(())

@@ -1,4 +1,6 @@
 //! Parallel execution engine: across-grid chains and within-solve shards.
+//! (Reached from user code via the facade — [`crate::api::EnetModel::fit_path`]
+//! configures [`ParallelPathOptions`] from the builder's validated fields.)
 //!
 //! The subsystem has **two parallelism layers**, both dependency-free
 //! (`std::thread` + channels + mutexed deques):

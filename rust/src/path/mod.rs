@@ -9,10 +9,14 @@
 //! [`solve_point`]) and the single-chain driver [`solve_path`]. The
 //! multi-threaded engine in [`crate::parallel`] reuses the exact same
 //! primitive, so a path executed as one chain is bitwise-identical no matter
-//! which driver ran it. "Sequential" here means grid-sequential: each solve
-//! still shards its O(mn) sweeps over [`crate::parallel::shard`]'s ambient
-//! thread budget (`SSNAL_THREADS`), whose results are thread-count-invariant
-//! — so the bitwise guarantee survives within-solve parallelism too.
+//! which driver ran it. Downstream callers reach paths through the facade —
+//! [`crate::api::EnetModel::fit_path`] (with
+//! [`crate::api::EnetModel::sequential`] reproducing this driver's bits) —
+//! which validates inputs into typed errors before handing them here.
+//! "Sequential" here means grid-sequential: each solve still shards its
+//! O(mn) sweeps over [`crate::parallel::shard`]'s ambient thread budget
+//! (`SSNAL_THREADS`), whose results are thread-count-invariant — so the
+//! bitwise guarantee survives within-solve parallelism too.
 
 use crate::linalg::Mat;
 use crate::solver::types::{Algorithm, BaselineOptions, EnetProblem, SolveResult, SsnalOptions};

@@ -117,6 +117,21 @@ pub fn solve_admm(p: &EnetProblem, opts: &BaselineOptions, admm: &AdmmOptions) -
     }
 }
 
+/// [`crate::solver::Solver`] registry entry for ADMM, honoring the config's
+/// `admm` block (ρ, over-relaxation).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmmSolver;
+
+impl crate::solver::Solver for AdmmSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Admm
+    }
+
+    fn solve(&self, p: &EnetProblem, cfg: &crate::solver::SolverConfig) -> SolveResult {
+        solve_admm(p, &cfg.baseline_options(), &cfg.admm)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

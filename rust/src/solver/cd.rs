@@ -210,6 +210,36 @@ fn finish(
     }
 }
 
+/// [`crate::solver::Solver`] registry entry for naive full-sweep CD
+/// (sklearn-like).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NaiveCdSolver;
+
+impl crate::solver::Solver for NaiveCdSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::CdNaive
+    }
+
+    fn solve(&self, p: &EnetProblem, cfg: &crate::solver::SolverConfig) -> SolveResult {
+        solve_naive(p, &cfg.baseline_options())
+    }
+}
+
+/// [`crate::solver::Solver`] registry entry for covariance-updating
+/// working-set CD (glmnet-like).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CovarianceCdSolver;
+
+impl crate::solver::Solver for CovarianceCdSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::CdCovariance
+    }
+
+    fn solve(&self, p: &EnetProblem, cfg: &crate::solver::SolverConfig) -> SolveResult {
+        solve_covariance(p, &cfg.baseline_options())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

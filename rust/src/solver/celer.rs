@@ -124,7 +124,13 @@ pub fn solve_celer(p: &EnetProblem, opts: &BaselineOptions) -> SolveResult {
     let mut last_gap = f64::INFINITY;
     let obj_scale = 1.0 + blas::nrm2_sq(p.b);
 
-    while rounds < 200 {
+    // The caller's iteration cap bounds working-set rounds, clamped to the
+    // solver's 200-round safety net: one round is an O(n) scoring pass,
+    // Anderson extrapolation, and a working-set CD convergence — far coarser
+    // than the sweep/epoch unit `max_iters` means elsewhere, so the 100_000
+    // default must not apply verbatim. (The old hard-coded cap ignored
+    // `opts.max_iters` entirely; tightening now works.)
+    while rounds < opts.max_iters.min(200) {
         rounds += 1;
         // dual candidates: plain residual and Anderson-extrapolated residual;
         // keep whichever gives the better (larger) dual value.
@@ -188,6 +194,21 @@ pub fn solve_celer(p: &EnetProblem, opts: &BaselineOptions) -> SolveResult {
         residual: last_gap,
         converged,
         algorithm: Algorithm::Celer,
+    }
+}
+
+/// [`crate::solver::Solver`] registry entry for the working-set solver with
+/// dual extrapolation (celer-like).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CelerSolver;
+
+impl crate::solver::Solver for CelerSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Celer
+    }
+
+    fn solve(&self, p: &EnetProblem, cfg: &crate::solver::SolverConfig) -> SolveResult {
+        solve_celer(p, &cfg.baseline_options())
     }
 }
 

@@ -137,6 +137,36 @@ fn gap_at(p: &EnetProblem, x: &[f64]) -> f64 {
     primal_objective(p, x) - dual_objective(p, &y, &z)
 }
 
+/// [`crate::solver::Solver`] registry entry for FISTA (accelerated proximal
+/// gradient).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FistaSolver;
+
+impl crate::solver::Solver for FistaSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Fista
+    }
+
+    fn solve(&self, p: &EnetProblem, cfg: &crate::solver::SolverConfig) -> SolveResult {
+        solve_fista(p, &cfg.baseline_options(), true)
+    }
+}
+
+/// [`crate::solver::Solver`] registry entry for plain proximal gradient
+/// (ISTA).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProximalGradientSolver;
+
+impl crate::solver::Solver for ProximalGradientSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::ProximalGradient
+    }
+
+    fn solve(&self, p: &EnetProblem, cfg: &crate::solver::SolverConfig) -> SolveResult {
+        solve_fista(p, &cfg.baseline_options(), false)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -11,8 +11,10 @@
 //! | [`celer`] | working set + dual extrapolation | celer competitor (D.3) |
 //!
 //! All solvers consume the same [`types::EnetProblem`] and produce the same
-//! [`types::SolveResult`], so the benchmark harness and the agreement tests
-//! treat them uniformly.
+//! [`types::SolveResult`], and every algorithm registers a [`Solver`] trait
+//! implementation, so the benchmark harness, the [`crate::api`] facade, the
+//! oracle goldens and the CLI dispatch uniformly through [`registry`] /
+//! [`solve_with_config`] instead of hard-coding per-algorithm matches.
 
 pub mod admm;
 pub mod cd;
@@ -26,23 +28,66 @@ pub mod types;
 
 pub use objective::{duality_gap, kkt_residuals, primal_objective, support_of, KktResiduals};
 pub use types::{
-    Algorithm, BaselineOptions, EnetProblem, NewtonStrategy, SolveResult, SsnalOptions,
+    Algorithm, BaselineOptions, EnetProblem, NewtonStrategy, SolveResult, SolverConfig,
+    SsnalOptions,
 };
 
-/// Solve one instance with the named algorithm and that algorithm's defaults —
-/// the uniform entry point the bench harness uses.
-pub fn solve_with(p: &EnetProblem, algo: Algorithm, tol: f64) -> SolveResult {
-    let bopts = BaselineOptions { tol, ..Default::default() };
-    match algo {
-        Algorithm::SsnalEn => ssnal::solve(p, &SsnalOptions { tol, ..Default::default() }),
-        Algorithm::CdNaive => cd::solve_naive(p, &bopts),
-        Algorithm::CdCovariance => cd::solve_covariance(p, &bopts),
-        Algorithm::Fista => fista::solve_fista(p, &bopts, true),
-        Algorithm::ProximalGradient => fista::solve_fista(p, &bopts, false),
-        Algorithm::Admm => admm::solve_admm(p, &bopts, &admm::AdmmOptions::default()),
-        Algorithm::CdGapSafe => screening::solve_gap_safe(p, &bopts),
-        Algorithm::Celer => celer::solve_celer(p, &bopts),
+/// One registered Elastic Net algorithm behind an object-safe interface.
+///
+/// Implemented by a unit struct per [`Algorithm`] variant (eight in total);
+/// [`registry`] enumerates them in declaration order and [`solver_for`] looks
+/// one up. Every implementation honors the *whole* shared configuration —
+/// `tol`, `max_iters`, `verbose` — not just the tolerance, plus its own block
+/// of [`SolverConfig`] when it has one.
+pub trait Solver: Sync {
+    /// The [`Algorithm`] this solver implements.
+    fn algorithm(&self) -> Algorithm;
+
+    /// Short display name (bench tables, CLI).
+    fn name(&self) -> &'static str {
+        self.algorithm().name()
     }
+
+    /// Solve one instance under the uniform configuration.
+    fn solve(&self, p: &EnetProblem, cfg: &SolverConfig) -> SolveResult;
+}
+
+/// Every algorithm in the crate, in [`Algorithm`] declaration order.
+pub fn registry() -> &'static [&'static dyn Solver] {
+    static REGISTRY: [&dyn Solver; 8] = [
+        &ssnal::SsnalSolver,
+        &cd::NaiveCdSolver,
+        &cd::CovarianceCdSolver,
+        &fista::FistaSolver,
+        &fista::ProximalGradientSolver,
+        &admm::AdmmSolver,
+        &screening::GapSafeSolver,
+        &celer::CelerSolver,
+    ];
+    &REGISTRY
+}
+
+/// The registered [`Solver`] for `algo`.
+pub fn solver_for(algo: Algorithm) -> &'static dyn Solver {
+    registry()
+        .iter()
+        .copied()
+        .find(|s| s.algorithm() == algo)
+        .expect("every Algorithm variant is registered")
+}
+
+/// Solve one instance with the named algorithm at tolerance `tol` and that
+/// algorithm's defaults otherwise — the convenience entry the bench harness
+/// uses. See [`solve_with_config`] for full control.
+pub fn solve_with(p: &EnetProblem, algo: Algorithm, tol: f64) -> SolveResult {
+    solve_with_config(p, algo, &SolverConfig::new(tol))
+}
+
+/// Uniform dispatch through the [`Solver`] registry, honoring the whole
+/// [`SolverConfig`] (`max_iters`, `verbose`, Newton strategy, ADMM knobs) —
+/// not just `tol` like the pre-facade `solve_with` did.
+pub fn solve_with_config(p: &EnetProblem, algo: Algorithm, cfg: &SolverConfig) -> SolveResult {
+    solver_for(algo).solve(p, cfg)
 }
 
 #[cfg(test)]
@@ -91,6 +136,49 @@ mod tests {
                 (res.objective - reference.objective).abs()
                     < 1e-5 * (1.0 + reference.objective),
                 "{algo:?} objective mismatch"
+            );
+        }
+    }
+
+    /// Each of the eight algorithms registers exactly one trait object, and
+    /// lookup round-trips.
+    #[test]
+    fn registry_covers_every_algorithm_once() {
+        let algos: Vec<Algorithm> = registry().iter().map(|s| s.algorithm()).collect();
+        assert_eq!(algos.len(), 8);
+        let unique: std::collections::HashSet<&'static str> =
+            registry().iter().map(|s| s.name()).collect();
+        assert_eq!(unique.len(), 8, "names must be distinct");
+        for &algo in &algos {
+            assert_eq!(solver_for(algo).algorithm(), algo);
+        }
+    }
+
+    /// The registry path must honor the shared `max_iters` knob — the defect
+    /// the trait replaced: `solve_with` used to rebuild default options and
+    /// forward only `tol`.
+    #[test]
+    fn solve_with_config_honors_max_iters() {
+        let prob = generate_synthetic(&SyntheticSpec {
+            m: 40,
+            n: 120,
+            n0: 5,
+            x_star: 5.0,
+            snr: 8.0,
+            seed: 33,
+        });
+        let lmax = EnetProblem::lambda_max(&prob.a, &prob.b, 0.8);
+        let (l1, l2) = EnetProblem::lambdas_from_alpha(0.8, 0.3, lmax);
+        let p = EnetProblem::new(&prob.a, &prob.b, l1, l2);
+        let mut cfg = SolverConfig::new(1e-12);
+        cfg.max_iters = Some(1);
+        for s in registry() {
+            let res = s.solve(&p, &cfg);
+            assert!(
+                res.iterations <= 1,
+                "{} ran {} outer iterations under a cap of 1",
+                s.name(),
+                res.iterations
             );
         }
     }

@@ -233,7 +233,14 @@ pub fn solve_gap_safe(p: &EnetProblem, opts: &BaselineOptions) -> SolveResult {
     // variants resize + overwrite them fully each round).
     let (mut theta_top, mut theta_bottom) = (Vec::new(), Vec::new());
 
-    while rounds < 100 {
+    // The caller's iteration cap bounds screening rounds, clamped to the
+    // solver's 100-round safety net: one round is a full working-set CD
+    // convergence plus an O(mn) screen — far coarser than the sweep/epoch
+    // unit `max_iters` means elsewhere — so honoring a 100_000 default
+    // verbatim would turn a bounded non-convergence into a near-hang. (The
+    // old hard-coded cap ignored `opts.max_iters` entirely; tightening now
+    // works.)
+    while rounds < opts.max_iters.min(100) {
         rounds += 1;
         aug.gap_safe_survivors_into(&x, &mut theta_top, &mut theta_bottom, &mut survivors);
         // keep current nonzeros (they survive by definition, but be safe)
@@ -260,6 +267,21 @@ pub fn solve_gap_safe(p: &EnetProblem, opts: &BaselineOptions) -> SolveResult {
         residual: last_gap,
         converged,
         algorithm: Algorithm::CdGapSafe,
+    }
+}
+
+/// [`crate::solver::Solver`] registry entry for Gap-Safe screened CD
+/// (GSR-like).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GapSafeSolver;
+
+impl crate::solver::Solver for GapSafeSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::CdGapSafe
+    }
+
+    fn solve(&self, p: &EnetProblem, cfg: &crate::solver::SolverConfig) -> SolveResult {
+        solve_gap_safe(p, &cfg.baseline_options())
     }
 }
 

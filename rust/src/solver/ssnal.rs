@@ -293,6 +293,21 @@ fn p_verbose(opts: &SsnalOptions, msg: impl FnOnce() -> String) {
     }
 }
 
+/// [`crate::solver::Solver`] registry entry for SsNAL-EN (the paper's
+/// algorithm).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SsnalSolver;
+
+impl crate::solver::Solver for SsnalSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::SsnalEn
+    }
+
+    fn solve(&self, p: &EnetProblem, cfg: &crate::solver::SolverConfig) -> SolveResult {
+        solve(p, &cfg.ssnal_options())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

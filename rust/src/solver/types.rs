@@ -211,6 +211,73 @@ impl Default for BaselineOptions {
     }
 }
 
+/// Uniform configuration consumed by the [`crate::solver::Solver`] trait.
+///
+/// The shared knobs (`tol`, `max_iters`, `verbose`) are honored by **every**
+/// registered algorithm — unlike the pre-facade `solve_with`, which rebuilt
+/// default option structs and only forwarded `tol`. Algorithm-specific blocks
+/// (`ssnal`, `admm`) ride along for the solvers that need them.
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    /// Stopping tolerance on each solver's own criterion.
+    pub tol: f64,
+    /// Iteration cap: outer AL iterations for SsNAL-EN, sweeps/epochs for the
+    /// first-order baselines. `None` keeps each algorithm's default cap. The
+    /// round-based solvers (gap-safe, celer) clamp it to their 100/200-round
+    /// safety nets — one round there is a full working-set convergence, not a
+    /// sweep — so only tightening below those nets has an effect.
+    pub max_iters: Option<usize>,
+    /// Per-iteration diagnostics.
+    pub verbose: bool,
+    /// SsNAL-specific knobs (σ schedule, Newton strategy, line search, CG).
+    /// The shared `tol`/`verbose`/`max_iters` fields above override the
+    /// matching fields here, so the cross-algorithm knobs have one source of
+    /// truth (see [`SolverConfig::ssnal_options`]).
+    pub ssnal: SsnalOptions,
+    /// ADMM-specific knobs (ρ, over-relaxation).
+    pub admm: crate::solver::admm::AdmmOptions,
+}
+
+impl SolverConfig {
+    /// Per-algorithm defaults at tolerance `tol`.
+    pub fn new(tol: f64) -> Self {
+        Self {
+            tol,
+            max_iters: None,
+            verbose: false,
+            ssnal: SsnalOptions::default(),
+            admm: crate::solver::admm::AdmmOptions::default(),
+        }
+    }
+
+    /// The effective [`SsnalOptions`]: `ssnal` with the shared `tol`,
+    /// `verbose` and `max_iters` knobs folded in.
+    pub fn ssnal_options(&self) -> SsnalOptions {
+        let mut opts = self.ssnal.clone();
+        opts.tol = self.tol;
+        opts.verbose = self.verbose;
+        if let Some(cap) = self.max_iters {
+            opts.max_outer = cap;
+        }
+        opts
+    }
+
+    /// The effective [`BaselineOptions`] for the first-order solvers.
+    pub fn baseline_options(&self) -> BaselineOptions {
+        BaselineOptions {
+            tol: self.tol,
+            max_iters: self.max_iters.unwrap_or_else(|| BaselineOptions::default().max_iters),
+            verbose: self.verbose,
+        }
+    }
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        Self::new(1e-6)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,6 +330,24 @@ mod tests {
         let a = Mat::zeros(3, 2);
         let b = [0.0; 4];
         let _ = EnetProblem::new(&a, &b, 1.0, 0.5);
+    }
+
+    #[test]
+    fn solver_config_folds_shared_knobs_into_option_structs() {
+        let mut cfg = SolverConfig::new(1e-4);
+        cfg.max_iters = Some(7);
+        cfg.verbose = true;
+        cfg.ssnal.sigma0 = 1.0;
+        let s = cfg.ssnal_options();
+        assert_eq!(s.tol, 1e-4);
+        assert_eq!(s.max_outer, 7);
+        assert!(s.verbose);
+        assert_eq!(s.sigma0, 1.0, "algorithm-specific knobs survive");
+        let b = cfg.baseline_options();
+        assert_eq!((b.tol, b.max_iters, b.verbose), (1e-4, 7, true));
+        // no explicit cap → each algorithm's default cap
+        let d = SolverConfig::new(1e-6).baseline_options();
+        assert_eq!(d.max_iters, BaselineOptions::default().max_iters);
     }
 
     #[test]

@@ -7,6 +7,10 @@
 //! where `ν = tr(A_J (A_JᵀA_J + λ2 I)⁻¹ A_Jᵀ)` is the Elastic Net degrees of
 //! freedom and the residual sum of squares is computed **after de-biasing**:
 //! ordinary least squares refit on the selected features (Belloni et al. 2014).
+//!
+//! Downstream callers reach tuning through the facade —
+//! [`crate::api::EnetModel::tune`] — which validates the grid, folds and
+//! tolerances into typed errors before handing them to [`tune_with_threads`].
 
 use crate::linalg::{blas, lstsq, Mat};
 use crate::path::{solve_path, PathOptions, PathResult};

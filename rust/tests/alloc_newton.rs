@@ -16,6 +16,7 @@
 //! genuine hot-path allocation shows up in every attempt. Measured regions
 //! run with the shard budget pinned to 1 (no pool traffic).
 
+use ssnal_en::api::{Design, EnetModel};
 use ssnal_en::data::{generate_synthetic, SyntheticSpec};
 use ssnal_en::linalg::{Mat, NewtonWorkspace};
 use ssnal_en::parallel::shard;
@@ -136,6 +137,47 @@ fn kappa_bumps_refactor_without_allocating() {
             }
         });
         assert_eq!(delta, 0, "κ-alternating Woodbury solves allocated");
+    });
+}
+
+/// ISSUE 5 satellite: a warm `Fit::refit` on the facade session must allocate
+/// strictly less than a cold `EnetModel::fit` of the same (design, response)
+/// pair — the session reuses the Newton workspace buffers and the
+/// Gram/Cholesky cache, while producing bitwise-identical results (pinned in
+/// `tests/api_facade.rs`). Measured at a 1-thread shard budget like every
+/// other pin in this binary (pool dispatch allocates).
+#[test]
+fn warm_refit_allocates_strictly_less_than_cold_fit() {
+    let _serial = gate();
+    let prob = generate_synthetic(&SyntheticSpec {
+        m: 50,
+        n: 400,
+        n0: 6,
+        x_star: 5.0,
+        snr: 5.0,
+        seed: 9,
+    });
+    let b2: Vec<f64> = prob.b.iter().rev().copied().collect();
+    shard::with_threads(1, || {
+        let design = Design::new(&prob.a, &prob.b).unwrap();
+        let design2 = Design::new(&prob.a, &b2).unwrap();
+        let model = EnetModel::new().alpha_c(0.8, 0.4).tol(1e-6);
+        let mut fit = model.fit(&design).unwrap();
+        // prime the session on the refit response once so the measured
+        // region is the steady serve-many-responses state
+        fit.refit(&b2).unwrap();
+        let warm = min_allocs(|| {
+            fit.refit(&b2).unwrap();
+        });
+        let cold = min_allocs(|| {
+            let f = model.fit(&design2).unwrap();
+            std::hint::black_box(f.result().objective);
+        });
+        assert!(
+            warm < cold,
+            "warm refit allocated {warm} times, cold fit {cold} — the session \
+             is not reusing its workspace"
+        );
     });
 }
 

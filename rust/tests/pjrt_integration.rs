@@ -7,7 +7,7 @@
 //! Numerical graph-vs-native comparisons require a PJRT binding plus
 //! `make artifacts`; those tests self-skip when either is unavailable.
 
-use ssnal_en::coordinator::{Coordinator, CoordinatorConfig};
+use ssnal_en::api::{Backend, Design, EnetModel};
 use ssnal_en::linalg::Mat;
 use ssnal_en::runtime::{
     literal_at, literal_from_f64, literal_scalar, literal_to_f64, Manifest, PjrtEngine,
@@ -71,11 +71,16 @@ fn pjrt_backend_degrades_to_an_error_not_a_panic() {
     // Whether or not artifacts exist, this offline build has no PJRT binding:
     // a Pjrt-backend solve must return Err with actionable context.
     let dir = artifacts_dir().unwrap_or_else(|| PathBuf::from("/nonexistent_artifacts_xyz"));
-    let coord = Coordinator::new(CoordinatorConfig::pjrt(dir));
     let a = Mat::zeros(2, 3);
     let b = [1.0, 2.0];
-    let err = coord.solve(&a, &b, 0.5, 0.5).unwrap_err();
-    let msg = format!("{err:#}");
+    let design = Design::new(&a, &b).unwrap();
+    let err = EnetModel::new()
+        .lambda(0.5, 0.5)
+        .backend(Backend::Pjrt)
+        .artifacts_dir(dir)
+        .fit(&design)
+        .unwrap_err();
+    let msg = format!("{err}");
     assert!(msg.contains("artifacts"), "{msg}");
 }
 
