@@ -6,16 +6,21 @@
 //! public surface reports typed [`EnetError`]s. It can borrow caller-owned
 //! buffers (zero-copy, the common case) or own them (for designs built on
 //! the fly and handed across threads/sessions).
+//!
+//! The design matrix may be **dense** ([`Mat`], column-major) or **CSC
+//! sparse** ([`CscMat`]) — every solver in the crate dispatches over
+//! [`DesignRef`] with bitwise-dense-equal sparse kernels, so the storage
+//! choice affects wall-clock time and memory, never the fitted coefficients.
 
 use crate::api::EnetError;
-use crate::linalg::Mat;
+use crate::linalg::{CscMat, DesignRef, DesignStorage, Mat};
 use crate::solver::types::EnetProblem;
 
-/// Owned-or-borrowed design matrix.
+/// Owned-or-borrowed design matrix, over either storage kind.
 #[derive(Clone, Debug)]
 enum DesignMat<'a> {
-    Borrowed(&'a Mat),
-    Owned(Mat),
+    Borrowed(DesignRef<'a>),
+    Owned(DesignStorage),
 }
 
 /// Owned-or-borrowed response vector.
@@ -25,9 +30,9 @@ enum ResponseVec<'a> {
     Owned(Vec<f64>),
 }
 
-/// A validated Elastic Net data set: design matrix `A` (m × n, column-major)
-/// plus response `b` (length m), shape- and finiteness-checked on
-/// construction.
+/// A validated Elastic Net data set: design matrix `A` (m × n, dense
+/// column-major or CSC sparse) plus response `b` (length m), shape- and
+/// finiteness-checked on construction.
 ///
 /// Construct once, then fit any number of [`crate::api::EnetModel`]
 /// configurations against it — a fitted session ([`crate::api::Fit`]) keeps
@@ -42,6 +47,7 @@ enum ResponseVec<'a> {
 /// let b = [1.0, 1.0];
 /// let design = Design::new(&a, &b)?;
 /// assert_eq!((design.m(), design.n()), (2, 3));
+/// assert!(!design.is_sparse());
 ///
 /// // invalid input is a typed error, not a panic
 /// let short = [1.0];
@@ -51,6 +57,22 @@ enum ResponseVec<'a> {
 /// ));
 /// # Ok::<(), EnetError>(())
 /// ```
+///
+/// Sparse designs fit through the identical surface — same model, same bits:
+///
+/// ```
+/// use ssnal_en::api::{Design, EnetModel};
+/// use ssnal_en::linalg::{CscMat, Mat};
+///
+/// let dense = Mat::from_row_major(3, 2, &[1.0, 0.0, 0.0, 2.0, 3.0, 0.0]);
+/// let sparse = CscMat::from_dense(&dense);
+/// let b = [1.0, -1.0, 0.5];
+/// let model = EnetModel::new().lambda(0.3, 0.2).tol(1e-10);
+/// let xd = model.fit(&Design::new(&dense, &b)?)?.coefficients().to_vec();
+/// let xs = model.fit(&Design::from_sparse(&sparse, &b)?)?.coefficients().to_vec();
+/// assert_eq!(xd, xs); // bitwise-identical coefficients
+/// # Ok::<(), ssnal_en::api::EnetError>(())
+/// ```
 #[derive(Clone, Debug)]
 pub struct Design<'a> {
     a: DesignMat<'a>,
@@ -58,21 +80,34 @@ pub struct Design<'a> {
 }
 
 impl<'a> Design<'a> {
-    /// Borrow a caller-owned `(A, b)` pair (zero-copy).
+    /// Borrow a caller-owned dense `(A, b)` pair (zero-copy).
     pub fn new(a: &'a Mat, b: &'a [f64]) -> Result<Self, EnetError> {
-        Self::build(DesignMat::Borrowed(a), ResponseVec::Borrowed(b))
+        Self::build(DesignMat::Borrowed(DesignRef::from(a)), ResponseVec::Borrowed(b))
     }
 
-    /// Take ownership of `(A, b)` — for designs constructed on the fly.
+    /// Borrow a caller-owned CSC-sparse `(A, b)` pair (zero-copy). The GWAS
+    /// entry point: raw genotype dosages at low minor-allele frequency are
+    /// mostly zeros, and the solve stack's sparse kernels skip them.
+    pub fn from_sparse(a: &'a CscMat, b: &'a [f64]) -> Result<Self, EnetError> {
+        Self::build(DesignMat::Borrowed(DesignRef::from(a)), ResponseVec::Borrowed(b))
+    }
+
+    /// Take ownership of a dense `(A, b)` — for designs constructed on the fly.
     pub fn from_owned(a: Mat, b: Vec<f64>) -> Result<Design<'static>, EnetError> {
+        Design::build(DesignMat::Owned(DesignStorage::Dense(a)), ResponseVec::Owned(b))
+    }
+
+    /// Take ownership of either storage kind — e.g. the automatically-chosen
+    /// output of [`crate::data::snp::generate_sparse`].
+    pub fn from_storage(a: DesignStorage, b: Vec<f64>) -> Result<Design<'static>, EnetError> {
         Design::build(DesignMat::Owned(a), ResponseVec::Owned(b))
     }
 
     fn build(a: DesignMat<'a>, b: ResponseVec<'a>) -> Result<Design<'a>, EnetError> {
         {
             let a_ref = match &a {
-                DesignMat::Borrowed(m) => *m,
-                DesignMat::Owned(m) => m,
+                DesignMat::Borrowed(r) => *r,
+                DesignMat::Owned(s) => s.as_ref(),
             };
             let b_ref: &[f64] = match &b {
                 ResponseVec::Borrowed(v) => v,
@@ -85,7 +120,10 @@ impl<'a> Design<'a> {
             if rows != b_ref.len() {
                 return Err(EnetError::ShapeMismatch { rows, response_len: b_ref.len() });
             }
-            if let Some(index) = a_ref.as_slice().iter().position(|v| !v.is_finite()) {
+            // For sparse storage this scans the stored nonzeros (the implicit
+            // zeros are finite by definition); `index` then points into the
+            // stored-values slice rather than the dense data.
+            if let Some(index) = a_ref.values_slice().iter().position(|v| !v.is_finite()) {
                 return Err(EnetError::NonFinite { what: "design", index });
             }
             if let Some(index) = b_ref.iter().position(|v| !v.is_finite()) {
@@ -95,12 +133,23 @@ impl<'a> Design<'a> {
         Ok(Design { a, b })
     }
 
-    /// The design matrix.
-    pub fn a(&self) -> &Mat {
+    /// A borrowed view of the design matrix, over either storage kind — the
+    /// value every solver entry point consumes.
+    pub fn design_ref(&self) -> DesignRef<'_> {
         match &self.a {
-            DesignMat::Borrowed(m) => m,
-            DesignMat::Owned(m) => m,
+            DesignMat::Borrowed(r) => *r,
+            DesignMat::Owned(s) => s.as_ref(),
         }
+    }
+
+    /// The dense design matrix, if this design is dense.
+    pub fn as_dense(&self) -> Option<&Mat> {
+        self.design_ref().as_dense()
+    }
+
+    /// Whether the design is stored CSC-sparse.
+    pub fn is_sparse(&self) -> bool {
+        self.design_ref().is_sparse()
     }
 
     /// The response vector.
@@ -113,19 +162,19 @@ impl<'a> Design<'a> {
 
     /// Observations m.
     pub fn m(&self) -> usize {
-        self.a().rows()
+        self.design_ref().rows()
     }
 
     /// Features n.
     pub fn n(&self) -> usize {
-        self.a().cols()
+        self.design_ref().cols()
     }
 
     /// `λ^max = ‖Aᵀb‖∞ / α` — the smallest λ scale with an all-zero solution
     /// under the paper's `(α, c_λ)` parametrization.
     pub fn lambda_max(&self, alpha: f64) -> Result<f64, EnetError> {
         crate::api::check_alpha(alpha)?;
-        Ok(EnetProblem::lambda_max(self.a(), self.b(), alpha))
+        Ok(EnetProblem::lambda_max(self.design_ref(), self.b(), alpha))
     }
 
     /// A borrowed [`EnetProblem`] view at explicit penalties — the bridge to
@@ -133,7 +182,7 @@ impl<'a> Design<'a> {
     /// validate here; prefer [`crate::api::EnetModel::fit`] for checked
     /// end-to-end solves.
     pub fn problem(&self, lam1: f64, lam2: f64) -> EnetProblem<'_> {
-        EnetProblem::new(self.a(), self.b(), lam1, lam2)
+        EnetProblem::new(self.design_ref(), self.b(), lam1, lam2)
     }
 
     /// Validate a replacement response against this design (shape +
@@ -159,10 +208,36 @@ mod tests {
         let b = vec![1.0, -1.0];
         let borrowed = Design::new(&a, &b).unwrap();
         let owned = Design::from_owned(a.clone(), b.clone()).unwrap();
-        assert_eq!(borrowed.a().as_slice(), owned.a().as_slice());
+        assert_eq!(borrowed.design_ref().values_slice(), owned.design_ref().values_slice());
         assert_eq!(borrowed.b(), owned.b());
         assert_eq!(borrowed.m(), 2);
         assert_eq!(borrowed.n(), 2);
+        assert!(!borrowed.is_sparse());
+        assert!(borrowed.as_dense().is_some());
+    }
+
+    #[test]
+    fn sparse_constructors_validate_and_expose_storage() {
+        let dense = Mat::from_row_major(3, 2, &[1.0, 0.0, 0.0, 2.0, 3.0, 0.0]);
+        let csc = CscMat::from_dense(&dense);
+        let b = vec![1.0, -1.0, 0.5];
+        let d = Design::from_sparse(&csc, &b).unwrap();
+        assert!(d.is_sparse());
+        assert!(d.as_dense().is_none());
+        assert_eq!((d.m(), d.n()), (3, 2));
+        let owned = Design::from_storage(DesignStorage::Sparse(csc.clone()), b.clone()).unwrap();
+        assert!(owned.is_sparse());
+        // shape mismatch is a typed error on the sparse path too
+        assert!(matches!(
+            Design::from_sparse(&csc, &[1.0]),
+            Err(EnetError::ShapeMismatch { rows: 3, response_len: 1 })
+        ));
+        // non-finite stored values are caught
+        let bad = CscMat::new(2, 1, vec![0, 1], vec![1], vec![f64::NAN]);
+        assert!(matches!(
+            Design::from_sparse(&bad, &[0.0, 0.0]),
+            Err(EnetError::NonFinite { what: "design", index: 0 })
+        ));
     }
 
     #[test]

@@ -123,9 +123,9 @@ impl<'d> Fit<'d> {
     /// `tests/api_facade.rs` the bitwise equality).
     pub fn refit(&mut self, b: &[f64]) -> Result<&SolveResult, EnetError> {
         self.design.check_response(b)?;
-        let (lam1, lam2) = self.model.checked_lambdas(self.design.a(), b)?;
+        let (lam1, lam2) = self.model.checked_lambdas(self.design.design_ref(), b)?;
         let (result, trace) = self.model.solve_once(
-            self.design.a(),
+            self.design.design_ref(),
             b,
             lam1,
             lam2,

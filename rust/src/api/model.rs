@@ -11,7 +11,7 @@
 use crate::api::fit::{Fit, PathFit, TuneFit};
 use crate::api::{Design, EnetError};
 use crate::coordinator::pjrt_solver;
-use crate::linalg::{Mat, NewtonWorkspace};
+use crate::linalg::{DesignRef, NewtonWorkspace};
 use crate::parallel::{shard, solve_path_parallel, Chunking, ParallelPathOptions, DEFAULT_CHAINS};
 use crate::path::{c_lambda_grid, PathOptions};
 use crate::runtime::PjrtEngine;
@@ -304,11 +304,18 @@ impl EnetModel {
                 return Err(EnetError::NonFinite { what: "warm start", index });
             }
         }
-        let (lam1, lam2) = self.checked_lambdas(design.a(), design.b())?;
+        let (lam1, lam2) = self.checked_lambdas(design.design_ref(), design.b())?;
         let mut ws = NewtonWorkspace::new();
         let mut engine = None;
-        let (result, trace) =
-            self.solve_once(design.a(), design.b(), lam1, lam2, x0, &mut engine, &mut ws)?;
+        let (result, trace) = self.solve_once(
+            design.design_ref(),
+            design.b(),
+            lam1,
+            lam2,
+            x0,
+            &mut engine,
+            &mut ws,
+        )?;
         Ok(Fit { design, model: self.clone(), lam1, lam2, result, trace, ws, engine })
     }
 
@@ -328,7 +335,7 @@ impl EnetModel {
             chunking: self.chunking.clone(),
             screening: self.screening,
         };
-        Ok(PathFit { result: solve_path_parallel(design.a(), design.b(), &popts) })
+        Ok(PathFit { result: solve_path_parallel(design.design_ref(), design.b(), &popts) })
     }
 
     /// Tuning sweep (paper §3.3): λ-path plus GCV / e-BIC (and k-fold CV when
@@ -348,7 +355,9 @@ impl EnetModel {
             cv_folds: self.cv_folds,
             cv_seed: self.cv_seed,
         };
-        Ok(TuneFit { result: tune_with_threads(design.a(), design.b(), &topts, self.threads) })
+        Ok(TuneFit {
+            result: tune_with_threads(design.design_ref(), design.b(), &topts, self.threads),
+        })
     }
 
     // ---- internals ---------------------------------------------------------
@@ -390,7 +399,11 @@ impl EnetModel {
     }
 
     /// Resolve and validate the single-fit penalties against `(A, b)`.
-    pub(crate) fn checked_lambdas(&self, a: &Mat, b: &[f64]) -> Result<(f64, f64), EnetError> {
+    pub(crate) fn checked_lambdas(
+        &self,
+        a: DesignRef<'_>,
+        b: &[f64],
+    ) -> Result<(f64, f64), EnetError> {
         let (lam1, lam2) = match self.penalty {
             Penalty::Lambda(l1, l2) => (l1, l2),
             Penalty::C(c) => {
@@ -419,7 +432,7 @@ impl EnetModel {
     /// engine loads once per session, not per solve.
     pub(crate) fn solve_once(
         &self,
-        a: &Mat,
+        a: DesignRef<'_>,
         b: &[f64],
         lam1: f64,
         lam2: f64,

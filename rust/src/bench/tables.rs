@@ -1277,6 +1277,202 @@ pub fn newton_workspace_json(rows: &[NewtonBenchRow], reps: usize) -> String {
     .to_string()
 }
 
+// ---------------------------------------------------------------------------
+// Sparse CSC design storage — GWAS-style sweeps, sparse vs dense
+// ---------------------------------------------------------------------------
+
+/// One measured thread budget of the sparse-vs-dense storage comparison: the
+/// same rare-variant cohort held as a dense [`Mat`] and as a
+/// [`crate::linalg::CscMat`], timed through the `Aᵀy` sweep, the Gap-Safe
+/// screening sweep, and a full single-λ SSNAL solve.
+#[derive(Clone, Debug)]
+pub struct SparseDesignRow {
+    /// Within-solve shard thread budget.
+    pub threads: usize,
+    /// Sharded `Aᵀy` over the dense copy, seconds.
+    pub dense_aty_seconds: f64,
+    /// Sharded `Aᵀy` over the CSC copy, seconds.
+    pub sparse_aty_seconds: f64,
+    /// `dense / sparse` (> 1 means CSC is cheaper).
+    pub aty_speedup: f64,
+    /// Gap-Safe survivor sweep over the dense copy, seconds.
+    pub dense_screen_seconds: f64,
+    /// Gap-Safe survivor sweep over the CSC copy, seconds.
+    pub sparse_screen_seconds: f64,
+    /// `dense / sparse` for the screening sweep.
+    pub screen_speedup: f64,
+    /// Full single-λ SSNAL solve on the dense copy, seconds.
+    pub dense_ssnal_seconds: f64,
+    /// Full single-λ SSNAL solve on the CSC copy, seconds.
+    pub sparse_ssnal_seconds: f64,
+    /// `dense / sparse` for the full solve.
+    pub ssnal_speedup: f64,
+    /// Whether every sparse output (and the multi-thread dense ones)
+    /// reproduced the 1-thread dense reference bit for bit.
+    pub bitwise_equal: bool,
+}
+
+/// Measure the storage dispatch on a GWAS-style rare-variant cohort
+/// ([`crate::data::snp::generate_sparse`], ~6% density at the default MAF
+/// range): dense vs CSC `Aᵀy`, Gap-Safe screening, and a full SSNAL solve at
+/// each thread budget, verifying bitwise storage- and thread-invariance
+/// against the 1-thread dense run as it goes. Returns the table, the rows,
+/// and the cohort's stored-entry density.
+pub fn sparse_design_rows(
+    n_snps: usize,
+    m: usize,
+    threads_list: &[usize],
+    tol: f64,
+    seed: u64,
+) -> (Table, Vec<SparseDesignRow>, f64) {
+    use crate::data::snp::{generate_sparse, SnpSpec, SparseSnpSpec};
+    use crate::linalg::{CscMat, DesignStorage};
+    use crate::parallel::shard;
+    use crate::solver::screening::AugmentedView;
+
+    let cohort = generate_sparse(&SparseSnpSpec {
+        base: SnpSpec {
+            m,
+            n_snps,
+            n_causal: (n_snps / 500).clamp(3, 20),
+            seed,
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let density = cohort.density;
+    let sp = match cohort.a {
+        DesignStorage::Sparse(sp) => sp,
+        DesignStorage::Dense(dm) => CscMat::from_dense(&dm),
+    };
+    let dense = sp.to_dense();
+    let b = cohort.b;
+
+    let lmax = EnetProblem::lambda_max(&dense, &b, 0.9);
+    let (lam1, lam2) = EnetProblem::lambdas_from_alpha(0.9, 0.3, lmax);
+    let pd = EnetProblem::new(&dense, &b, lam1, lam2);
+    let ps = EnetProblem::new(&sp, &b, lam1, lam2);
+    let sopts = SsnalOptions { tol, ..Default::default() };
+
+    // Deterministic operands: a smooth dual vector for Aᵀy and a crude
+    // keep-the-strongest-scores iterate for the screening sweep.
+    let y: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.01).sin()).collect();
+    let aty0 = pd.a.t_mul_vec(&b);
+    let x_screen: Vec<f64> =
+        aty0.iter().map(|&v| if v.abs() > 0.5 * lmax { 0.1 * v } else { 0.0 }).collect();
+    let aug_d = AugmentedView::new(&pd);
+    let aug_s = AugmentedView::new(&ps);
+    let kcfg = MeasureConfig { warmup: 1, reps: 3 };
+
+    // 1-thread dense reference outputs: the bitwise bar every
+    // (storage, threads) combination must clear.
+    let (ref_aty, ref_surv, ref_x) = shard::with_threads(1, || {
+        let mut aty = vec![0.0; n_snps];
+        shard::t_mul_vec_into(&dense, &y, &mut aty);
+        let surv = aug_d.gap_safe_survivors(&x_screen);
+        let x = ssnal::solve(&pd, &sopts).x;
+        (aty, surv, x)
+    });
+
+    let title = format!(
+        "CSC sparse vs dense design: {m}×{n_snps} GWAS dosages, density {:.1}%",
+        density * 100.0
+    );
+    let mut t = Table::new(&[
+        "threads",
+        "aty dn(s)",
+        "aty sp(s)",
+        "speedup",
+        "screen dn(s)",
+        "screen sp(s)",
+        "speedup",
+        "ssnal dn(s)",
+        "ssnal sp(s)",
+        "speedup",
+        "bitwise",
+    ])
+    .with_title(&title);
+    let mut rows: Vec<SparseDesignRow> = Vec::with_capacity(threads_list.len());
+    for &threads in threads_list {
+        let threads = threads.max(1);
+        let row = shard::with_threads(threads, || {
+            let mut aty_d = vec![0.0; n_snps];
+            let (sda, _) = measure(kcfg, || shard::t_mul_vec_into(&dense, &y, &mut aty_d));
+            let mut aty_s = vec![0.0; n_snps];
+            let (ssa, _) = measure(kcfg, || shard::t_mul_vec_into(&sp, &y, &mut aty_s));
+            let (sds, surv_d) = measure(kcfg, || aug_d.gap_safe_survivors(&x_screen));
+            let (sss, surv_s) = measure(kcfg, || aug_s.gap_safe_survivors(&x_screen));
+            let (sdn, res_d) = measure(MeasureConfig::default(), || ssnal::solve(&pd, &sopts));
+            let (ssn, res_s) = measure(MeasureConfig::default(), || ssnal::solve(&ps, &sopts));
+            let bitwise_equal = aty_d == ref_aty
+                && aty_s == ref_aty
+                && surv_d == ref_surv
+                && surv_s == ref_surv
+                && res_d.x == ref_x
+                && res_s.x == ref_x;
+            SparseDesignRow {
+                threads,
+                dense_aty_seconds: sda.mean,
+                sparse_aty_seconds: ssa.mean,
+                aty_speedup: sda.mean / ssa.mean.max(1e-12),
+                dense_screen_seconds: sds.mean,
+                sparse_screen_seconds: sss.mean,
+                screen_speedup: sds.mean / sss.mean.max(1e-12),
+                dense_ssnal_seconds: sdn.mean,
+                sparse_ssnal_seconds: ssn.mean,
+                ssnal_speedup: sdn.mean / ssn.mean.max(1e-12),
+                bitwise_equal,
+            }
+        });
+        t.row(vec![
+            format!("{}", row.threads),
+            fmt_secs(row.dense_aty_seconds),
+            fmt_secs(row.sparse_aty_seconds),
+            format!("{:.2}x", row.aty_speedup),
+            fmt_secs(row.dense_screen_seconds),
+            fmt_secs(row.sparse_screen_seconds),
+            format!("{:.2}x", row.screen_speedup),
+            fmt_secs(row.dense_ssnal_seconds),
+            fmt_secs(row.sparse_ssnal_seconds),
+            format!("{:.2}x", row.ssnal_speedup),
+            format!("{}", row.bitwise_equal),
+        ]);
+        rows.push(row);
+    }
+    (t, rows, density)
+}
+
+/// Render the sparse-design bench as the JSON payload CI uploads
+/// (`BENCH_sparse_design.json`).
+pub fn sparse_design_json(rows: &[SparseDesignRow], n: usize, m: usize, density: f64) -> String {
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("threads", Json::Num(r.threads as f64)),
+                ("dense_aty_seconds", Json::Num(r.dense_aty_seconds)),
+                ("sparse_aty_seconds", Json::Num(r.sparse_aty_seconds)),
+                ("aty_speedup", Json::Num(r.aty_speedup)),
+                ("dense_screen_seconds", Json::Num(r.dense_screen_seconds)),
+                ("sparse_screen_seconds", Json::Num(r.sparse_screen_seconds)),
+                ("screen_speedup", Json::Num(r.screen_speedup)),
+                ("dense_ssnal_seconds", Json::Num(r.dense_ssnal_seconds)),
+                ("sparse_ssnal_seconds", Json::Num(r.sparse_ssnal_seconds)),
+                ("ssnal_speedup", Json::Num(r.ssnal_speedup)),
+                ("bitwise_equal", Json::Bool(r.bitwise_equal)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("sparse_design".to_string())),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("density", Json::Num(density)),
+        ("rows", Json::Arr(row_objs)),
+    ])
+    .to_string()
+}
+
 #[cfg(test)]
 mod shard_bench_tests {
     use super::*;
@@ -1337,5 +1533,29 @@ mod shard_bench_tests {
         let js = shard_linalg_json(&rows, &audit, n, m);
         assert!(js.contains("shard_linalg"), "{js}");
         assert!(js.contains("width_audit"), "{js}");
+    }
+
+    #[test]
+    fn sparse_design_rows_tiny() {
+        let (t, rows, density) = sparse_design_rows(6_000, 60, &[1, 2], 1e-5, 11);
+        assert_eq!(t.len(), 2);
+        assert_eq!(rows.len(), 2);
+        // the default MAF range produces a rare-variant (≪25% dense) cohort
+        assert!(density > 0.0 && density < 0.25, "{density}");
+        assert!(rows.iter().all(|r| r.bitwise_equal), "{rows:?}");
+        for r in &rows {
+            assert!(r.dense_aty_seconds > 0.0 && r.sparse_aty_seconds > 0.0);
+            // The strict `speedup > 1` gate runs in the release bench
+            // (`cmd_bench_parallel`), where skipping ~94% of the entries
+            // wins by a wide margin — here (debug, tiny sizes) only guard
+            // against gross inversions so timing jitter cannot flake the
+            // unit suite.
+            assert!(r.aty_speedup > 0.3, "{rows:?}");
+            assert!(r.screen_speedup > 0.3, "{rows:?}");
+        }
+        let js = sparse_design_json(&rows, 6_000, 60, density);
+        assert!(js.contains("sparse_design"), "{js}");
+        assert!(js.contains("screen_speedup"), "{js}");
+        assert!(js.contains("density"), "{js}");
     }
 }

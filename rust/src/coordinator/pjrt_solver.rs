@@ -89,7 +89,15 @@ pub fn solve_pjrt(
 ) -> Result<SolveResult> {
     let m = p.m();
     let n = p.n();
-    let at_lit = literal_at(p.a)?;
+    // The AOT graphs take the design as one dense f32 literal; CSC storage has
+    // no PJRT lowering yet, so reject it up front with an actionable error.
+    let a_dense = p.a.as_dense().ok_or_else(|| {
+        Error::msg(
+            "the PJRT backend requires dense design storage; \
+             densify the design (CscMat::to_dense) or use the native backend",
+        )
+    })?;
+    let at_lit = literal_at(a_dense)?;
     let b_lit = literal_from_f64(p.b, &[m])?;
 
     let mut x = vec![0.0; n];

@@ -15,7 +15,7 @@
 //! configurable correlation between them but **disjoint causal sets**, matching
 //! the paper's observation that the selected sets for CWG and BMI do not overlap.
 
-use crate::linalg::Mat;
+use crate::linalg::{CscMat, DesignStorage, Mat};
 use crate::rng::Xoshiro256pp;
 
 /// Cohort specification.
@@ -203,6 +203,162 @@ pub fn generate(spec: &SnpSpec) -> SnpCohort {
     SnpCohort { a, b, causal, effects, snp_names }
 }
 
+/// Spec for the **sparse** GWAS path: raw (unstandardized) dosages at low
+/// minor-allele frequency, loaded straight into CSC storage.
+///
+/// Standardizing genotype columns subtracts the column mean from every entry
+/// and therefore destroys sparsity, so this path keeps the raw `{0, 1, 2}`
+/// dosage coding — at rare-variant MAFs (the default range) the design is
+/// ≥ 90% zeros and the solve stack's sparse kernels skip all of them.
+#[derive(Clone, Debug)]
+pub struct SparseSnpSpec {
+    /// The cohort structure (size, LD blocks, causal architecture, seed).
+    pub base: SnpSpec,
+    /// Minor-allele-frequency range `(lo, hi)`; expected column density is
+    /// `E[1 − (1−p)²] ≈ 2·E[p]`, so the default rare-variant range
+    /// (0.01, 0.05) gives ~6% density.
+    pub maf_range: (f64, f64),
+    /// Density above which the cohort is handed back densified — the storage
+    /// heuristic: CSC only pays off while most entries are zeros.
+    pub max_sparse_density: f64,
+}
+
+impl Default for SparseSnpSpec {
+    fn default() -> Self {
+        Self { base: SnpSpec::default(), maf_range: (0.01, 0.05), max_sparse_density: 0.25 }
+    }
+}
+
+/// A simulated rare-variant GWAS cohort with automatically-chosen storage.
+#[derive(Clone, Debug)]
+pub struct SnpCohortSparse {
+    /// Raw-dosage genotype design — [`DesignStorage::Sparse`] when the
+    /// measured density is at most [`SparseSnpSpec::max_sparse_density`],
+    /// [`DesignStorage::Dense`] otherwise.
+    pub a: DesignStorage,
+    /// Phenotype (centered), length m.
+    pub b: Vec<f64>,
+    /// Causal SNP indices (first is the dominant one).
+    pub causal: Vec<usize>,
+    /// True effect sizes aligned with `causal`.
+    pub effects: Vec<f64>,
+    /// SNP identifiers ("rs"-style synthetic names).
+    pub snp_names: Vec<String>,
+    /// Measured nonzero fraction of the dosage matrix.
+    pub density: f64,
+}
+
+/// Generate a rare-variant cohort **directly into CSC storage** — nonzero
+/// dosages are appended column by column, so the dense m × n matrix is never
+/// materialized unless the density heuristic decides to densify at the end.
+///
+/// ```
+/// use ssnal_en::api::{Design, EnetModel};
+/// use ssnal_en::data::snp::{generate_sparse, SnpSpec, SparseSnpSpec};
+///
+/// let cohort = generate_sparse(&SparseSnpSpec {
+///     base: SnpSpec { m: 40, n_snps: 300, n_causal: 3, ..Default::default() },
+///     ..Default::default()
+/// });
+/// assert!(cohort.a.is_sparse(), "rare variants stay sparse ({})", cohort.density);
+///
+/// let design = Design::from_storage(cohort.a, cohort.b)?;
+/// let fit = EnetModel::new().alpha_c(0.9, 0.5).fit(&design)?;
+/// assert!(fit.result().converged);
+/// # Ok::<(), ssnal_en::api::EnetError>(())
+/// ```
+pub fn generate_sparse(spec: &SparseSnpSpec) -> SnpCohortSparse {
+    let base = &spec.base;
+    assert!(base.n_causal <= base.n_snps);
+    assert!(base.block_size >= 1);
+    let (maf_lo, maf_hi) = spec.maf_range;
+    assert!(
+        0.0 < maf_lo && maf_lo <= maf_hi && maf_hi < 1.0,
+        "MAF range must satisfy 0 < lo <= hi < 1"
+    );
+    let mut rng = Xoshiro256pp::seed_from_u64(base.seed);
+    let m = base.m;
+    let n = base.n_snps;
+
+    let sqrt_rho = base.ld_rho.sqrt();
+    let sqrt_rem = (1.0 - base.ld_rho).sqrt();
+
+    let mut col_ptr = Vec::with_capacity(n + 1);
+    col_ptr.push(0usize);
+    let mut row_idx = Vec::new();
+    let mut values = Vec::new();
+    let mut shared = vec![0.0; m];
+    for j in 0..n {
+        if j % base.block_size == 0 {
+            rng.fill_gaussian(&mut shared);
+        }
+        let maf = maf_lo + (maf_hi - maf_lo) * rng.next_f64();
+        let (t0, t2) = hw_thresholds(maf);
+        for i in 0..m {
+            let z = sqrt_rho * shared[i] + sqrt_rem * rng.next_gaussian();
+            let g = if z <= t0 {
+                0.0
+            } else if z > t2 {
+                2.0
+            } else {
+                1.0
+            };
+            if g != 0.0 {
+                row_idx.push(i);
+                values.push(g);
+            }
+        }
+        col_ptr.push(row_idx.len());
+    }
+    let csc = CscMat::new(m, n, col_ptr, row_idx, values);
+    let density = csc.density();
+
+    // causal SNPs spread across distinct blocks, as in the dense path
+    let n_blocks = n.div_ceil(base.block_size);
+    let causal_blocks = rng.sample_indices(n_blocks, base.n_causal.min(n_blocks));
+    let mut causal: Vec<usize> = causal_blocks
+        .iter()
+        .map(|&blk| {
+            let lo = blk * base.block_size;
+            let hi = ((blk + 1) * base.block_size).min(n);
+            lo + rng.next_below(hi - lo)
+        })
+        .collect();
+    if causal.len() > 1 {
+        let k = rng.next_below(causal.len());
+        causal.swap(0, k);
+    }
+    let mut effects = vec![0.0; causal.len()];
+    for (idx, e) in effects.iter_mut().enumerate() {
+        *e = if idx == 0 {
+            base.dominant_effect
+        } else {
+            0.5 * base.dominant_effect * if rng.next_f64() < 0.5 { -1.0 } else { 1.0 }
+        };
+    }
+
+    // phenotype from the raw dosages (only stored entries contribute)
+    let mut b = vec![0.0; m];
+    for (c, &j) in causal.iter().enumerate() {
+        let (rs, vs) = csc.col(j);
+        for (&i, &v) in rs.iter().zip(vs.iter()) {
+            b[i] += effects[c] * v;
+        }
+    }
+    for v in b.iter_mut() {
+        *v += base.noise_sd * rng.next_gaussian();
+    }
+    let (b, _) = crate::data::standardize::center(&b);
+
+    let a = if density <= spec.max_sparse_density {
+        DesignStorage::Sparse(csc)
+    } else {
+        DesignStorage::Dense(csc.to_dense())
+    };
+    let snp_names = (0..n).map(|j| format!("rs{}", 100_000 + j * 7)).collect();
+    SnpCohortSparse { a, b, causal, effects, snp_names, density }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,6 +457,51 @@ mod tests {
         // dominant SNP should be among the very top marginal correlations
         let better = (0..500).filter(|&j| score(j) > dom_score * 1.001).count();
         assert!(better <= 5, "dominant not near top: {better} ahead");
+    }
+
+    #[test]
+    fn sparse_cohort_is_sparse_and_deterministic() {
+        let spec = SparseSnpSpec {
+            base: SnpSpec { m: 50, n_snps: 400, n_causal: 4, ..Default::default() },
+            ..Default::default()
+        };
+        let c1 = generate_sparse(&spec);
+        let c2 = generate_sparse(&spec);
+        assert!(c1.a.is_sparse(), "default MAF range must stay sparse");
+        assert!(c1.density < 0.15, "density {}", c1.density);
+        assert!(c1.density > 0.0, "cohort should have some minor alleles");
+        assert_eq!((c1.a.rows(), c1.a.cols()), (50, 400));
+        assert_eq!(c1.b, c2.b);
+        match (&c1.a, &c2.a) {
+            (DesignStorage::Sparse(s1), DesignStorage::Sparse(s2)) => assert_eq!(s1, s2),
+            _ => panic!("expected sparse storage"),
+        }
+        // centered phenotype
+        let bm = c1.b.iter().sum::<f64>() / 50.0;
+        assert!(bm.abs() < 1e-10);
+    }
+
+    #[test]
+    fn density_heuristic_densifies_common_variants() {
+        let spec = SparseSnpSpec {
+            base: SnpSpec { m: 40, n_snps: 60, ..Default::default() },
+            maf_range: (0.3, 0.5),
+            max_sparse_density: 0.25,
+        };
+        let c = generate_sparse(&spec);
+        assert!(c.density > 0.25, "common variants are dense: {}", c.density);
+        assert!(!c.a.is_sparse(), "heuristic must densify above the threshold");
+    }
+
+    #[test]
+    fn sparse_dosages_are_raw_genotypes() {
+        let spec = SparseSnpSpec {
+            base: SnpSpec { m: 30, n_snps: 80, n_causal: 2, ..Default::default() },
+            ..Default::default()
+        };
+        let c = generate_sparse(&spec);
+        let DesignStorage::Sparse(csc) = &c.a else { panic!("expected sparse") };
+        assert!(csc.values().iter().all(|&v| v == 1.0 || v == 2.0));
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //! *An Efficient Semi-smooth Newton Augmented Lagrangian Method for Elastic Net*
 //! (Boschi, Reimherr, Chiaromonte, 2020).
 //!
+//! The narrative architecture map — layer structure, the dense/CSC-sparse
+//! [`linalg::DesignStorage`] dispatch, the pool/shard threading model and
+//! its bitwise-invariance contract, the warm Newton workspace — lives in
+//! `docs/ARCHITECTURE.md` at the repository root; this page and the module
+//! docs are the reference.
+//!
 //! ## Quickstart
 //!
 //! The [`api`] module is the crate's canonical surface: a validated
@@ -65,7 +71,9 @@
 //!   bitwise-deterministic: for a fixed chain split and problem shape the
 //!   output is identical at every thread count and pool warmth
 //!   (`SSNAL_THREADS` governs the within-solve budget),
-//! * [`data`] — synthetic, LIBSVM/polynomial-expansion and SNP/GWAS pipelines (§4),
+//! * [`data`] — synthetic, LIBSVM/polynomial-expansion and SNP/GWAS pipelines
+//!   (§4); [`data::snp::generate_sparse`] builds rare-variant cohorts straight
+//!   into CSC with a density heuristic choosing the storage,
 //! * [`runtime`] — the artifact manifest/buffer contract for the AOT-compiled
 //!   JAX/Pallas graphs (execution needs an XLA/PJRT binding the offline
 //!   toolchain does not ship; the engine degrades to a descriptive error),
@@ -73,10 +81,14 @@
 //!   (kept so pre-facade callers compile; new code uses [`api`]),
 //! * [`linalg`] / [`rng`] / [`util`] / [`bench`] — the from-scratch substrates
 //!   (the offline build has no BLAS, rand, clap, serde, anyhow or criterion).
-//!   [`linalg::workspace`] holds the solver-wide buffer arena and the
-//!   active-set-aware Gram/Cholesky cache behind the zero-allocation Newton
-//!   hot path — the state a warm [`Fit`] session carries across
-//!   [`Fit::refit`] calls.
+//!   [`linalg::design`] defines the dense-or-CSC-sparse storage dispatch
+//!   ([`linalg::DesignRef`] / [`linalg::DesignStorage`] over
+//!   [`linalg::CscMat`]) every solver entry point consumes — the sparse
+//!   kernels reproduce the dense bits exactly, so storage affects wall-clock
+//!   and memory, never coefficients. [`linalg::workspace`] holds the
+//!   solver-wide buffer arena and the active-set-aware Gram/Cholesky cache
+//!   behind the zero-allocation Newton hot path — the state a warm [`Fit`]
+//!   session carries across [`Fit::refit`] calls.
 //!
 //! ## Continuous integration
 //!
@@ -86,10 +98,12 @@
 //! --check`, `cargo clippy -- -D warnings` and `cargo doc --no-deps` under
 //! `RUSTDOCFLAGS="-D warnings"` (broken intra-doc links in the API surface
 //! fail the build), plus a bench-smoke job that runs the parallel-path,
-//! shard-linalg, pool-dispatch and Newton-workspace benchmarks on tiny
-//! synthetic problems and uploads the resulting four `BENCH_*.json` tables
-//! (the Newton section also gates warm-vs-cold workspace cost and
-//! steady-state allocations), and a bench-regression job that diffs them
+//! shard-linalg, sparse-design, pool-dispatch and Newton-workspace
+//! benchmarks on tiny synthetic problems and uploads the resulting five
+//! `BENCH_*.json` tables (the Newton section also gates warm-vs-cold
+//! workspace cost and steady-state allocations; the sparse section gates
+//! CSC sweeps beating their dense twins), and a bench-regression job that
+//! diffs them
 //! against the committed baselines in `rust/benches/baselines/` via
 //! `ssnal-en bench-check` ([`bench::check`]: structural drift and determinism
 //! violations hard-fail; wall-clock regressions >25% annotate without

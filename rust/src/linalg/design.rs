@@ -1,0 +1,369 @@
+//! Storage-polymorphic design matrices: one dispatch point for dense and CSC.
+//!
+//! [`DesignRef`] is a `Copy` borrowed view over either a dense [`Mat`] or a
+//! sparse [`CscMat`], exposing the unified serial kernel surface every solver
+//! consumes (`Aᵀy`, `A x`, support-restricted gathers, column dots/axpys,
+//! Gram blocks). [`DesignStorage`] is the owned counterpart that
+//! [`crate::api::Design`] and the screening path's column gathers hold.
+//!
+//! Dense arms delegate verbatim to the [`Mat`] reference kernels; sparse arms
+//! delegate to [`CscMat`]'s dense-bit-emulating kernels (see
+//! [`crate::linalg::sparse`]'s module docs for why the two storages produce
+//! **bitwise-identical** results). The sharded counterparts in
+//! [`crate::parallel::shard`] dispatch over `DesignRef` too, with shard plans
+//! that are pure functions of the *logical* shape (rows × cols), never of the
+//! storage — so a sparse and a dense copy of the same matrix also shard
+//! identically, which is what extends the bitwise guarantee to multi-thread
+//! fits.
+
+use crate::linalg::blas;
+use crate::linalg::matrix::Mat;
+use crate::linalg::sparse::CscMat;
+
+/// Borrowed storage-polymorphic view of a design matrix.
+#[derive(Clone, Copy, Debug)]
+pub enum DesignRef<'a> {
+    /// Dense column-major storage.
+    Dense(&'a Mat),
+    /// Compressed-sparse-column storage.
+    Sparse(&'a CscMat),
+}
+
+impl<'a> From<&'a Mat> for DesignRef<'a> {
+    fn from(a: &'a Mat) -> Self {
+        DesignRef::Dense(a)
+    }
+}
+
+impl<'a> From<&'a CscMat> for DesignRef<'a> {
+    fn from(a: &'a CscMat) -> Self {
+        DesignRef::Sparse(a)
+    }
+}
+
+impl<'a> From<&'a DesignStorage> for DesignRef<'a> {
+    fn from(a: &'a DesignStorage) -> Self {
+        a.as_ref()
+    }
+}
+
+impl<'a> DesignRef<'a> {
+    #[inline]
+    pub fn rows(self) -> usize {
+        match self {
+            DesignRef::Dense(a) => a.rows(),
+            DesignRef::Sparse(a) => a.rows(),
+        }
+    }
+
+    #[inline]
+    pub fn cols(self) -> usize {
+        match self {
+            DesignRef::Dense(a) => a.cols(),
+            DesignRef::Sparse(a) => a.cols(),
+        }
+    }
+
+    /// Whether the underlying storage is CSC.
+    #[inline]
+    pub fn is_sparse(self) -> bool {
+        matches!(self, DesignRef::Sparse(_))
+    }
+
+    /// The dense matrix behind this view, if dense-backed.
+    #[inline]
+    pub fn as_dense(self) -> Option<&'a Mat> {
+        match self {
+            DesignRef::Dense(a) => Some(a),
+            DesignRef::Sparse(_) => None,
+        }
+    }
+
+    /// The CSC matrix behind this view, if sparse-backed.
+    #[inline]
+    pub fn as_sparse(self) -> Option<&'a CscMat> {
+        match self {
+            DesignRef::Dense(_) => None,
+            DesignRef::Sparse(a) => Some(a),
+        }
+    }
+
+    /// The raw stored-value slice (dense: column-major data; sparse: stored
+    /// nonzeros). Used for workspace fingerprinting.
+    #[inline]
+    pub fn values_slice(self) -> &'a [f64] {
+        match self {
+            DesignRef::Dense(a) => a.as_slice(),
+            DesignRef::Sparse(a) => a.values(),
+        }
+    }
+
+    /// Element access (row, col). O(1) dense, O(log nnz_j) sparse — tuning
+    /// and tests only, never a solver hot path.
+    #[inline]
+    pub fn get(self, i: usize, j: usize) -> f64 {
+        match self {
+            DesignRef::Dense(a) => a.get(i, j),
+            DesignRef::Sparse(a) => a.get(i, j),
+        }
+    }
+
+    /// `A[:,j]ᵀ y` — bitwise-identical across storages.
+    #[inline]
+    pub fn col_dot(self, j: usize, y: &[f64]) -> f64 {
+        match self {
+            DesignRef::Dense(a) => blas::dot(a.col(j), y),
+            DesignRef::Sparse(a) => a.col_dot(j, y),
+        }
+    }
+
+    /// `A[:,a]ᵀ A[:,b]` — the Gram entry kernel (both the cold build and the
+    /// workspace's incremental tail updates route through this, so cache hits
+    /// stay bitwise-cold-equal on every storage).
+    #[inline]
+    pub fn cols_dot(self, a: usize, b: usize) -> f64 {
+        match self {
+            DesignRef::Dense(m) => blas::dot(m.col(a), m.col(b)),
+            DesignRef::Sparse(m) => m.cols_dot(a, b),
+        }
+    }
+
+    /// `‖A[:,j]‖²` — bitwise-identical across storages.
+    #[inline]
+    pub fn col_nrm2_sq(self, j: usize) -> f64 {
+        match self {
+            DesignRef::Dense(a) => blas::nrm2_sq(a.col(j)),
+            DesignRef::Sparse(a) => a.col_nrm2_sq(j),
+        }
+    }
+
+    /// `out += alpha · A[:,j]` — bitwise-identical across storages.
+    #[inline]
+    pub fn col_axpy(self, alpha: f64, j: usize, out: &mut [f64]) {
+        match self {
+            DesignRef::Dense(a) => blas::axpy(alpha, a.col(j), out),
+            DesignRef::Sparse(a) => a.col_axpy(alpha, j, out),
+        }
+    }
+
+    /// Iterate column `j` in ascending row order. The dense arm yields every
+    /// entry (zeros included); the sparse arm yields stored nonzeros only —
+    /// consumers that skip exact zeros (every current caller) see identical
+    /// streams.
+    #[inline]
+    pub fn col_iter(self, j: usize) -> ColIter<'a> {
+        match self {
+            DesignRef::Dense(a) => ColIter::Dense(a.col(j).iter().enumerate()),
+            DesignRef::Sparse(a) => {
+                let (rs, vs) = a.col(j);
+                ColIter::Sparse(rs.iter().zip(vs.iter()))
+            }
+        }
+    }
+
+    /// `out = Aᵀ y` (serial reference; the solvers use the sharded variant).
+    pub fn t_mul_vec_into(self, y: &[f64], out: &mut [f64]) {
+        match self {
+            DesignRef::Dense(a) => a.t_mul_vec_into(y, out),
+            DesignRef::Sparse(a) => a.t_mul_vec_into(y, out),
+        }
+    }
+
+    /// `Aᵀ y`, allocating.
+    pub fn t_mul_vec(self, y: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols()];
+        self.t_mul_vec_into(y, &mut out);
+        out
+    }
+
+    /// `out = A x`, skipping exact zeros in `x`.
+    pub fn mul_vec_into(self, x: &[f64], out: &mut [f64]) {
+        match self {
+            DesignRef::Dense(a) => a.mul_vec_into(x, out),
+            DesignRef::Sparse(a) => a.mul_vec_into(x, out),
+        }
+    }
+
+    /// `A x`, allocating.
+    pub fn mul_vec(self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows()];
+        self.mul_vec_into(x, &mut out);
+        out
+    }
+
+    /// `A x` restricted to a support set.
+    pub fn mul_vec_support_into(self, x: &[f64], support: &[usize], out: &mut [f64]) {
+        match self {
+            DesignRef::Dense(a) => a.mul_vec_support_into(x, support, out),
+            DesignRef::Sparse(a) => a.mul_vec_support_into(x, support, out),
+        }
+    }
+
+    /// Gram matrix of a column subset: `G = A_JᵀA_J + ridge·I`, entry-wise
+    /// bitwise-identical to [`Mat::gram_of_cols`] on any storage.
+    pub fn gram_of_cols(self, idx: &[usize], ridge: f64) -> Mat {
+        match self {
+            DesignRef::Dense(a) => a.gram_of_cols(idx, ridge),
+            DesignRef::Sparse(_) => {
+                let r = idx.len();
+                let mut g = Mat::zeros(r, r);
+                for a in 0..r {
+                    for b in a..r {
+                        let v = self.cols_dot(idx[a], idx[b]);
+                        g.set(a, b, v);
+                        g.set(b, a, v);
+                    }
+                    let d = g.get(a, a) + ridge;
+                    g.set(a, a, d);
+                }
+                g
+            }
+        }
+    }
+
+    /// Gather columns `idx` into an owned design of the same storage kind.
+    pub fn gather_cols(self, idx: &[usize]) -> DesignStorage {
+        match self {
+            DesignRef::Dense(a) => DesignStorage::Dense(a.gather_cols(idx)),
+            DesignRef::Sparse(a) => DesignStorage::Sparse(a.gather_cols(idx)),
+        }
+    }
+}
+
+/// Ascending-row column iterator over either storage (see
+/// [`DesignRef::col_iter`]).
+pub enum ColIter<'a> {
+    /// Dense: every row, zeros included.
+    Dense(std::iter::Enumerate<std::slice::Iter<'a, f64>>),
+    /// Sparse: stored nonzeros only.
+    Sparse(std::iter::Zip<std::slice::Iter<'a, usize>, std::slice::Iter<'a, f64>>),
+}
+
+impl<'a> Iterator for ColIter<'a> {
+    type Item = (usize, f64);
+
+    #[inline]
+    fn next(&mut self) -> Option<(usize, f64)> {
+        match self {
+            ColIter::Dense(it) => it.next().map(|(i, &v)| (i, v)),
+            ColIter::Sparse(it) => it.next().map(|(&i, &v)| (i, v)),
+        }
+    }
+}
+
+/// Owned storage-polymorphic design matrix: what [`crate::api::Design`]
+/// carries and what [`DesignRef::gather_cols`] produces.
+#[derive(Clone, Debug)]
+pub enum DesignStorage {
+    /// Dense column-major storage.
+    Dense(Mat),
+    /// Compressed-sparse-column storage.
+    Sparse(CscMat),
+}
+
+impl DesignStorage {
+    /// Borrow as a dispatchable view.
+    #[inline]
+    pub fn as_ref(&self) -> DesignRef<'_> {
+        match self {
+            DesignStorage::Dense(a) => DesignRef::Dense(a),
+            DesignStorage::Sparse(a) => DesignRef::Sparse(a),
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.as_ref().rows()
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.as_ref().cols()
+    }
+
+    /// Whether the storage is CSC.
+    #[inline]
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, DesignStorage::Sparse(_))
+    }
+}
+
+impl From<Mat> for DesignStorage {
+    fn from(a: Mat) -> Self {
+        DesignStorage::Dense(a)
+    }
+}
+
+impl From<CscMat> for DesignStorage {
+    fn from(a: CscMat) -> Self {
+        DesignStorage::Sparse(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn pair(m: usize, n: usize, seed: u64) -> (Mat, CscMat) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let a = Mat::from_fn(m, n, |_, _| {
+            if rng.next_f64() < 0.85 {
+                0.0
+            } else {
+                rng.next_gaussian()
+            }
+        });
+        let s = CscMat::from_dense(&a);
+        (a, s)
+    }
+
+    #[test]
+    fn dispatch_matches_across_storages_bitwise() {
+        let (a, s) = pair(27, 9, 3);
+        let (da, ds) = (DesignRef::from(&a), DesignRef::from(&s));
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let y: Vec<f64> = (0..27).map(|_| rng.next_gaussian()).collect();
+        let x: Vec<f64> = (0..9).map(|_| rng.next_gaussian()).collect();
+
+        assert_eq!(da.t_mul_vec(&y), ds.t_mul_vec(&y));
+        assert_eq!(da.mul_vec(&x), ds.mul_vec(&x));
+        for j in 0..9 {
+            assert_eq!(da.col_dot(j, &y).to_bits(), ds.col_dot(j, &y).to_bits());
+            assert_eq!(da.col_nrm2_sq(j).to_bits(), ds.col_nrm2_sq(j).to_bits());
+        }
+        let idx = [1usize, 4, 6];
+        let ga = da.gram_of_cols(&idx, 0.25);
+        let gs = ds.gram_of_cols(&idx, 0.25);
+        assert_eq!(ga.as_slice(), gs.as_slice());
+    }
+
+    #[test]
+    fn col_iter_agrees_on_nonzeros() {
+        let (a, s) = pair(15, 4, 9);
+        for j in 0..4 {
+            let dense: Vec<(usize, f64)> = DesignRef::from(&a)
+                .col_iter(j)
+                .filter(|(_, v)| *v != 0.0)
+                .collect();
+            let sparse: Vec<(usize, f64)> = DesignRef::from(&s).col_iter(j).collect();
+            assert_eq!(dense, sparse, "j={j}");
+        }
+    }
+
+    #[test]
+    fn gather_preserves_storage_kind() {
+        let (a, s) = pair(12, 6, 21);
+        let idx = [5usize, 0, 3];
+        let ga = DesignRef::from(&a).gather_cols(&idx);
+        let gs = DesignRef::from(&s).gather_cols(&idx);
+        assert!(!ga.is_sparse());
+        assert!(gs.is_sparse());
+        for (k, &j) in idx.iter().enumerate() {
+            for i in 0..12 {
+                assert_eq!(ga.as_ref().get(i, k), a.get(i, j));
+                assert_eq!(gs.as_ref().get(i, k), a.get(i, j));
+            }
+        }
+    }
+}

@@ -7,17 +7,24 @@
 
 use crate::linalg::chol::{Cholesky, NotPositiveDefinite};
 use crate::linalg::matrix::Mat;
+use crate::linalg::DesignRef;
 
 /// Solve `min_w ‖A_J w − b‖² + ridge·‖w‖²` via normal equations on the gathered
 /// columns `idx` of `a`. With `ridge = 0` a tiny jitter is added if the Gram
 /// matrix is numerically singular (collinear selected columns).
-pub fn ridge_on_support(a: &Mat, idx: &[usize], b: &[f64], ridge: f64) -> Vec<f64> {
+pub fn ridge_on_support<'a>(
+    a: impl Into<DesignRef<'a>>,
+    idx: &[usize],
+    b: &[f64],
+    ridge: f64,
+) -> Vec<f64> {
+    let a = a.into();
     assert_eq!(a.rows(), b.len());
     if idx.is_empty() {
         return Vec::new();
     }
     let mut reg = ridge;
-    let rhs: Vec<f64> = idx.iter().map(|&j| crate::linalg::blas::dot(a.col(j), b)).collect();
+    let rhs: Vec<f64> = idx.iter().map(|&j| a.col_dot(j, b)).collect();
     // escalate jitter until the (PSD + reg I) system factors
     for _attempt in 0..6 {
         let gram = a.gram_of_cols(idx, reg);
@@ -38,7 +45,8 @@ fn gram_diag_max(g: &Mat) -> f64 {
 
 /// Elastic Net degrees of freedom (Tibshirani et al. 2012, paper Eq. after 21):
 /// `ν = tr(A_J (A_JᵀA_J + λ2 I_r)⁻¹ A_Jᵀ) = tr((G + λ2 I)⁻¹ G)` with `G = A_JᵀA_J`.
-pub fn enet_degrees_of_freedom(a: &Mat, idx: &[usize], lam2: f64) -> f64 {
+pub fn enet_degrees_of_freedom<'a>(a: impl Into<DesignRef<'a>>, idx: &[usize], lam2: f64) -> f64 {
+    let a = a.into();
     if idx.is_empty() {
         return 0.0;
     }

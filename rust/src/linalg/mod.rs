@@ -1,22 +1,29 @@
-//! Dense linear-algebra substrate (built from scratch — the offline environment
+//! Linear-algebra substrate (built from scratch — the offline environment
 //! ships no BLAS/LAPACK bindings).
 //!
 //! Everything SsNAL-EN and its baselines need: a column-major [`matrix::Mat`],
-//! level-1 kernels tuned for the solver's streaming access patterns
-//! ([`blas`]), [`chol::Cholesky`] for the direct/Woodbury Newton strategies,
-//! matrix-free [`cg`] for the large-active-set regime, small
-//! least-squares/dof solves for tuning ([`lstsq`]), and the solver-wide
-//! buffer arena + active-set-aware factorization cache behind the
-//! zero-allocation Newton hot path ([`workspace`]).
+//! a CSC sparse matrix with bitwise-dense-equal kernels ([`sparse::CscMat`])
+//! and the storage-polymorphic [`design::DesignRef`]/[`design::DesignStorage`]
+//! views the solvers dispatch over, level-1 kernels tuned for the solver's
+//! streaming access patterns ([`blas`]), [`chol::Cholesky`] for the
+//! direct/Woodbury Newton strategies, matrix-free [`cg`] for the
+//! large-active-set regime, small least-squares/dof solves for tuning
+//! ([`lstsq`]), and the solver-wide buffer arena + active-set-aware
+//! factorization cache behind the zero-allocation Newton hot path
+//! ([`workspace`]).
 
 pub mod blas;
 pub mod cg;
 pub mod chol;
+pub mod design;
 pub mod lstsq;
 pub mod matrix;
+pub mod sparse;
 pub mod workspace;
 
 pub use cg::{solve_cg, solve_cg_with, CgResult};
 pub use chol::{Cholesky, NotPositiveDefinite};
+pub use design::{DesignRef, DesignStorage};
 pub use matrix::Mat;
+pub use sparse::CscMat;
 pub use workspace::{NewtonWorkspace, ShardScratch, WorkspaceStats};

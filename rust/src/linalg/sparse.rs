@@ -1,0 +1,498 @@
+//! Compressed-sparse-column storage for GWAS-scale designs.
+//!
+//! SNP minor-allele dosage matrices are ~95 % exact zeros, and every hot
+//! kernel in the solve stack (`Aᵀy`, active-set `A_J u`, Woodbury Gram, CG
+//! mat-vecs, Gap-Safe column sweeps) streams over columns — so a CSC layout
+//! (`col_ptr` / `row_idx` / `values`) turns each O(m) column pass into an
+//! O(nnz_j) pass without touching the solver's control flow.
+//!
+//! ## The bitwise contract
+//!
+//! Sparse kernels here are not merely "numerically close" to the dense ones in
+//! [`crate::linalg::matrix`] — they reproduce them **bit for bit**, which is
+//! what lets [`crate::linalg::DesignRef`] dispatch storage under the solvers
+//! without changing a single fit. Two facts make this possible:
+//!
+//! 1. **Skipping a stored zero never changes bits.** Every accumulator in the
+//!    dense kernels starts at `+0.0` and only ever adds products; under
+//!    IEEE-754 round-to-nearest a sum can only become `-0.0` when *both*
+//!    addends are `-0.0`, so no accumulator ever holds `-0.0`. Adding
+//!    `±0.0` (the product a zero design entry contributes) to any non-`-0.0`
+//!    value is an identity, hence dropping exact-zero entries is invisible.
+//!    (This relies on the finite-input validation the [`crate::api`] layer
+//!    performs: a NaN/∞ response would make `0.0 · y[i]` NaN.)
+//! 2. **The dense reduction order is reproducible from nonzeros alone.**
+//!    [`crate::linalg::blas::dot`] accumulates index `i < 8·⌊m/8⌋` into lane
+//!    `i % 8`, combines the eight lanes in a fixed tree, then folds the tail
+//!    sequentially. [`sparse_dot_dense`] replays exactly that: each stored
+//!    nonzero feeds lane `row % 8` (rows are ascending, so per-lane order
+//!    matches), the lane-combine tree is identical, and tail rows fold in
+//!    ascending order. Per-element kernels (`axpy` scatters) need no
+//!    emulation — element updates are independent.
+//!
+//! `tests` below pin `to_bits()` equality against the dense kernels across
+//! lengths straddling the 8-lane boundary; `tests/linalg_parallel.rs` extends
+//! the pin to whole fits at every thread budget.
+
+use crate::linalg::blas;
+use crate::linalg::matrix::Mat;
+
+/// Sparse column-major (CSC) matrix of `f64`.
+///
+/// Invariants (checked in [`CscMat::new`]):
+/// * `col_ptr` has length `cols + 1`, starts at 0, ends at `nnz`, and is
+///   non-decreasing,
+/// * `row_idx[col_ptr[j]..col_ptr[j+1]]` is strictly ascending and in
+///   `0..rows` for every column `j`,
+/// * `values.len() == row_idx.len()`.
+///
+/// Stored values may include explicit zeros (they are harmless — see the
+/// module docs); [`CscMat::from_dense`] never stores them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMat {
+    rows: usize,
+    cols: usize,
+    /// Column start offsets into `row_idx`/`values` (length `cols + 1`).
+    col_ptr: Vec<usize>,
+    /// Row index of each stored entry, strictly ascending per column.
+    row_idx: Vec<usize>,
+    /// Stored entry values, parallel to `row_idx`.
+    values: Vec<f64>,
+}
+
+impl CscMat {
+    /// Build from raw CSC arrays, validating the structural invariants.
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        assert_eq!(col_ptr.len(), cols + 1, "col_ptr must have cols + 1 entries");
+        assert_eq!(col_ptr[0], 0, "col_ptr must start at 0");
+        assert_eq!(*col_ptr.last().unwrap(), row_idx.len(), "col_ptr must end at nnz");
+        assert_eq!(row_idx.len(), values.len(), "row_idx and values must be parallel");
+        for j in 0..cols {
+            assert!(col_ptr[j] <= col_ptr[j + 1], "col_ptr must be non-decreasing");
+            let rs = &row_idx[col_ptr[j]..col_ptr[j + 1]];
+            for w in rs.windows(2) {
+                assert!(w[0] < w[1], "row indices must be strictly ascending per column");
+            }
+            if let Some(&last) = rs.last() {
+                assert!(last < rows, "row index {last} out of bounds for {rows} rows");
+            }
+        }
+        Self { rows, cols, col_ptr, row_idx, values }
+    }
+
+    /// Convert a dense matrix, dropping exact zeros (`±0.0`).
+    pub fn from_dense(a: &Mat) -> Self {
+        let (rows, cols) = (a.rows(), a.cols());
+        let mut col_ptr = Vec::with_capacity(cols + 1);
+        let mut row_idx = Vec::new();
+        let mut values = Vec::new();
+        col_ptr.push(0);
+        for j in 0..cols {
+            for (i, &v) in a.col(j).iter().enumerate() {
+                if v != 0.0 {
+                    row_idx.push(i);
+                    values.push(v);
+                }
+            }
+            col_ptr.push(row_idx.len());
+        }
+        Self { rows, cols, col_ptr, row_idx, values }
+    }
+
+    /// Expand back to a dense matrix (tests / small fallbacks only).
+    pub fn to_dense(&self) -> Mat {
+        let mut a = Mat::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            let (rs, vs) = self.col(j);
+            let col = a.col_mut(j);
+            for (&i, &v) in rs.iter().zip(vs) {
+                col[i] = v;
+            }
+        }
+        a
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored entry count.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+
+    /// Fraction of entries stored (`nnz / (rows·cols)`; 0 for empty shapes).
+    pub fn density(&self) -> f64 {
+        let cells = self.rows * self.cols;
+        if cells == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / cells as f64
+        }
+    }
+
+    /// The nonzero pattern of column `j`: `(row_indices, values)`.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        debug_assert!(j < self.cols);
+        let (lo, hi) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        (&self.row_idx[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Stored entries in column `j`.
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// The raw stored-value slice (workspace fingerprinting).
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Element access (row, col) — O(log nnz_j); tuning/tests only.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        let (rs, vs) = self.col(j);
+        match rs.binary_search(&i) {
+            Ok(k) => vs[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// `A[:,j]ᵀ y`, bitwise-identical to `blas::dot(dense_col_j, y)`.
+    #[inline]
+    pub fn col_dot(&self, j: usize, y: &[f64]) -> f64 {
+        debug_assert_eq!(y.len(), self.rows);
+        let (rs, vs) = self.col(j);
+        sparse_dot_dense(rs, vs, y, self.rows)
+    }
+
+    /// `A[:,a]ᵀ A[:,b]`, bitwise-identical to the dense column dot.
+    pub fn cols_dot(&self, a: usize, b: usize) -> f64 {
+        let (ra, va) = self.col(a);
+        let (rb, vb) = self.col(b);
+        sparse_dot_sparse(ra, va, rb, vb, self.rows)
+    }
+
+    /// `‖A[:,j]‖²`, bitwise-identical to `blas::nrm2_sq(dense_col_j)`.
+    #[inline]
+    pub fn col_nrm2_sq(&self, j: usize) -> f64 {
+        self.cols_dot(j, j)
+    }
+
+    /// `out += alpha · A[:,j]` — a per-element scatter, bitwise-identical to
+    /// `blas::axpy(alpha, dense_col_j, out)` (see the module docs).
+    #[inline]
+    pub fn col_axpy(&self, alpha: f64, j: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.rows);
+        let (rs, vs) = self.col(j);
+        for (&i, &v) in rs.iter().zip(vs) {
+            out[i] += alpha * v;
+        }
+    }
+
+    /// `out = Aᵀ y` — one sparse dot per column (O(nnz) total).
+    pub fn t_mul_vec_into(&self, y: &[f64], out: &mut [f64]) {
+        assert_eq!(y.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        for j in 0..self.cols {
+            out[j] = self.col_dot(j, y);
+        }
+    }
+
+    /// `Aᵀ y`, allocating.
+    pub fn t_mul_vec(&self, y: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        self.t_mul_vec_into(y, &mut out);
+        out
+    }
+
+    /// `out = A x`, skipping exact zeros in `x` like the dense kernel.
+    pub fn mul_vec_into(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for j in 0..self.cols {
+            let xj = x[j];
+            if xj != 0.0 {
+                self.col_axpy(xj, j, out);
+            }
+        }
+    }
+
+    /// `A x`, allocating.
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        self.mul_vec_into(x, &mut out);
+        out
+    }
+
+    /// `A x` restricted to a support set.
+    pub fn mul_vec_support_into(&self, x: &[f64], support: &[usize], out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for &j in support {
+            let xj = x[j];
+            if xj != 0.0 {
+                self.col_axpy(xj, j, out);
+            }
+        }
+    }
+
+    /// Gather columns `idx` into a new CSC matrix (contiguous copies of the
+    /// per-column runs; the sparse counterpart of [`Mat::gather_cols`]).
+    pub fn gather_cols(&self, idx: &[usize]) -> CscMat {
+        let nnz: usize = idx.iter().map(|&j| self.col_nnz(j)).sum();
+        let mut col_ptr = Vec::with_capacity(idx.len() + 1);
+        let mut row_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        col_ptr.push(0);
+        for &j in idx {
+            let (rs, vs) = self.col(j);
+            row_idx.extend_from_slice(rs);
+            values.extend_from_slice(vs);
+            col_ptr.push(row_idx.len());
+        }
+        CscMat { rows: self.rows, cols: idx.len(), col_ptr, row_idx, values }
+    }
+}
+
+/// Sparse·dense dot replaying `blas::dot`'s exact reduction order: nonzeros
+/// below the 8-lane boundary feed lane `row % 8` (ascending row order keeps
+/// per-lane order identical), the lanes combine in the same fixed tree, and
+/// tail rows fold sequentially.
+#[inline]
+pub fn sparse_dot_dense(rows: &[usize], vals: &[f64], y: &[f64], m: usize) -> f64 {
+    let boundary = (m / 8) * 8;
+    let split = rows.partition_point(|&r| r < boundary);
+    let mut s = [0.0f64; 8];
+    for k in 0..split {
+        s[rows[k] % 8] += vals[k] * y[rows[k]];
+    }
+    let mut acc = ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]));
+    for k in split..rows.len() {
+        acc += vals[k] * y[rows[k]];
+    }
+    acc
+}
+
+/// Sparse·sparse dot (sorted-merge over the row intersection) with the same
+/// dense reduction order as [`sparse_dot_dense`].
+pub fn sparse_dot_sparse(
+    ra: &[usize],
+    va: &[f64],
+    rb: &[usize],
+    vb: &[f64],
+    m: usize,
+) -> f64 {
+    let boundary = (m / 8) * 8;
+    let sa = ra.partition_point(|&r| r < boundary);
+    let sb = rb.partition_point(|&r| r < boundary);
+    let mut s = [0.0f64; 8];
+    let (mut ia, mut ib) = (0, 0);
+    while ia < sa && ib < sb {
+        match ra[ia].cmp(&rb[ib]) {
+            std::cmp::Ordering::Less => ia += 1,
+            std::cmp::Ordering::Greater => ib += 1,
+            std::cmp::Ordering::Equal => {
+                s[ra[ia] % 8] += va[ia] * vb[ib];
+                ia += 1;
+                ib += 1;
+            }
+        }
+    }
+    let mut acc = ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]));
+    let (mut ia, mut ib) = (sa, sb);
+    while ia < ra.len() && ib < rb.len() {
+        match ra[ia].cmp(&rb[ib]) {
+            std::cmp::Ordering::Less => ia += 1,
+            std::cmp::Ordering::Greater => ib += 1,
+            std::cmp::Ordering::Equal => {
+                acc += va[ia] * vb[ib];
+                ia += 1;
+                ib += 1;
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    /// Pseudo-random dense matrix with roughly `1 - sparsity` nonzero mass.
+    fn random_sparse_dense(m: usize, n: usize, sparsity: f64, seed: u64) -> Mat {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Mat::from_fn(m, n, |_, _| {
+            if rng.next_f64() < sparsity {
+                0.0
+            } else {
+                rng.next_gaussian()
+            }
+        })
+    }
+
+    #[test]
+    fn roundtrip_and_counts() {
+        let a = random_sparse_dense(13, 7, 0.8, 1);
+        let s = CscMat::from_dense(&a);
+        assert_eq!(s.to_dense(), a);
+        assert!(s.density() <= 0.5, "density {}", s.density());
+        let total: usize = (0..7).map(|j| s.col_nnz(j)).sum();
+        assert_eq!(total, s.nnz());
+    }
+
+    #[test]
+    fn get_matches_dense() {
+        let a = random_sparse_dense(9, 5, 0.7, 2);
+        let s = CscMat::from_dense(&a);
+        for j in 0..5 {
+            for i in 0..9 {
+                assert_eq!(s.get(i, j), a.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn col_dot_is_bitwise_dense_across_lane_boundary() {
+        // lengths straddling multiples of the 8-lane unroll boundary
+        for m in (1..=40).chain([63, 64, 65, 127, 128, 129]) {
+            let a = random_sparse_dense(m, 6, 0.85, m as u64);
+            let s = CscMat::from_dense(&a);
+            let mut rng = Xoshiro256pp::seed_from_u64(999 + m as u64);
+            let y: Vec<f64> = (0..m).map(|_| rng.next_gaussian()).collect();
+            for j in 0..6 {
+                let dense = blas::dot(a.col(j), &y);
+                let sparse = s.col_dot(j, &y);
+                assert_eq!(dense.to_bits(), sparse.to_bits(), "m={m} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn cols_dot_is_bitwise_dense() {
+        for m in [5usize, 8, 9, 16, 17, 33, 64, 100] {
+            let a = random_sparse_dense(m, 8, 0.8, 77 + m as u64);
+            let s = CscMat::from_dense(&a);
+            for i in 0..8 {
+                for j in 0..8 {
+                    let dense = blas::dot(a.col(i), a.col(j));
+                    let sparse = s.cols_dot(i, j);
+                    assert_eq!(dense.to_bits(), sparse.to_bits(), "m={m} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_nrm2_sq_is_bitwise_dense() {
+        let a = random_sparse_dense(37, 10, 0.9, 5);
+        let s = CscMat::from_dense(&a);
+        for j in 0..10 {
+            assert_eq!(
+                blas::nrm2_sq(a.col(j)).to_bits(),
+                s.col_nrm2_sq(j).to_bits(),
+                "j={j}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_and_mat_vecs_are_bitwise_dense() {
+        let m = 29;
+        let a = random_sparse_dense(m, 12, 0.85, 11);
+        let s = CscMat::from_dense(&a);
+        let mut rng = Xoshiro256pp::seed_from_u64(4242);
+        let y: Vec<f64> = (0..m).map(|_| rng.next_gaussian()).collect();
+        let mut x: Vec<f64> = (0..12).map(|_| rng.next_gaussian()).collect();
+        x[3] = 0.0;
+        x[7] = 0.0;
+
+        let mut dense_out = vec![0.0; m];
+        let mut sparse_out = vec![0.0; m];
+        blas::axpy(0.37, a.col(2), &mut dense_out);
+        s.col_axpy(0.37, 2, &mut sparse_out);
+        assert_eq!(dense_out, sparse_out);
+
+        assert_eq!(a.mul_vec(&x), s.mul_vec(&x));
+        assert_eq!(a.t_mul_vec(&y), s.t_mul_vec(&y));
+        let support = [0usize, 3, 5, 9];
+        let mut d = vec![0.0; m];
+        let mut sp = vec![0.0; m];
+        a.mul_vec_support_into(&x, &support, &mut d);
+        s.mul_vec_support_into(&x, &support, &mut sp);
+        assert_eq!(d, sp);
+    }
+
+    #[test]
+    fn csc_edge_cases() {
+        // empty column, all-dense column, single-nonzero rows
+        let a = Mat::from_fn(10, 3, |i, j| match j {
+            0 => 0.0,                       // empty column
+            1 => (i as f64) + 1.0,          // fully dense column
+            _ => if i == 4 { 2.5 } else { 0.0 }, // single nonzero
+        });
+        let s = CscMat::from_dense(&a);
+        assert_eq!(s.col_nnz(0), 0);
+        assert_eq!(s.col_nnz(1), 10);
+        assert_eq!(s.col_nnz(2), 1);
+        let y: Vec<f64> = (0..10).map(|i| (i as f64) * 0.5 - 2.0).collect();
+        for j in 0..3 {
+            assert_eq!(
+                blas::dot(a.col(j), &y).to_bits(),
+                s.col_dot(j, &y).to_bits(),
+                "j={j}"
+            );
+        }
+        assert_eq!(s.to_dense(), a);
+        // gather preserves the pattern
+        let g = s.gather_cols(&[2, 0]);
+        assert_eq!(g.cols(), 2);
+        assert_eq!(g.get(4, 0), 2.5);
+        assert_eq!(g.col_nnz(1), 0);
+    }
+
+    #[test]
+    fn zero_matrix_and_empty_shapes() {
+        let z = CscMat::from_dense(&Mat::zeros(6, 4));
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.density(), 0.0);
+        assert_eq!(z.mul_vec(&[1.0; 4]), vec![0.0; 6]);
+        assert_eq!(z.t_mul_vec(&[1.0; 6]), vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn unsorted_rows_rejected() {
+        CscMat::new(4, 1, vec![0, 2], vec![2, 1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_bounds_row_rejected() {
+        CscMat::new(3, 1, vec![0, 1], vec![3], vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "col_ptr must end at nnz")]
+    fn inconsistent_col_ptr_rejected() {
+        CscMat::new(3, 1, vec![0, 2], vec![1], vec![1.0]);
+    }
+}

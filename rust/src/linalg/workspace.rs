@@ -74,7 +74,8 @@
 //! by hand.
 
 use crate::linalg::chol::{Cholesky, NotPositiveDefinite};
-use crate::linalg::{blas, Mat};
+use crate::linalg::DesignRef;
+use crate::linalg::Mat;
 use crate::parallel::shard;
 use std::cell::RefCell;
 
@@ -187,8 +188,8 @@ impl NewtonWorkspace {
     /// design. This remains probabilistic hardening, not a versioning
     /// scheme: a workspace is still *contractually* bound to one design
     /// (call [`NewtonWorkspace::reset`] when retargeting it by hand).
-    fn rebind(&mut self, a: &Mat) {
-        let ptr = a.as_slice().as_ptr() as usize;
+    fn rebind(&mut self, a: DesignRef<'_>) {
+        let ptr = a.values_slice().as_ptr() as usize;
         let sample = Self::sample_bits(a);
         if ptr != self.a_ptr
             || a.rows() != self.a_rows
@@ -203,9 +204,11 @@ impl NewtonWorkspace {
         }
     }
 
-    /// Fold the bit patterns of 8 evenly spaced entries (FNV-style mix).
-    fn sample_bits(a: &Mat) -> u64 {
-        let data = a.as_slice();
+    /// Fold the bit patterns of 8 evenly spaced stored entries (FNV-style
+    /// mix) — column-major data for dense designs, the stored-nonzero slice
+    /// for CSC ones.
+    fn sample_bits(a: DesignRef<'_>) -> u64 {
+        let data = a.values_slice();
         if data.is_empty() {
             return 0;
         }
@@ -222,12 +225,13 @@ impl NewtonWorkspace {
     /// `(active, kappa)`, reusing/incrementing the raw Gram per the module
     /// docs. On error the factor is invalid (the raw Gram stays usable) and
     /// the caller should fall back to CG.
-    pub fn woodbury_factor(
+    pub fn woodbury_factor<'a>(
         &mut self,
-        a: &Mat,
+        a: impl Into<DesignRef<'a>>,
         active: &[usize],
         kappa: f64,
     ) -> Result<(), NotPositiveDefinite> {
+        let a = a.into();
         self.rebind(a);
         let r = active.len();
         let ridge = 1.0 / kappa;
@@ -293,7 +297,7 @@ impl NewtonWorkspace {
 
     /// Recompute Gram rows/columns `p..` against the new active set, keeping
     /// the leading `p×p` block bit-for-bit (its column indices are unchanged).
-    fn gram_update_tail(&mut self, a: &Mat, active: &[usize], p: usize) {
+    fn gram_update_tail(&mut self, a: DesignRef<'_>, active: &[usize], p: usize) {
         let r = active.len();
         if self.gram.rows() != r || self.gram.cols() != r {
             let mut next = Mat::zeros(r, r);
@@ -308,9 +312,8 @@ impl NewtonWorkspace {
         // Same entry computation (and operand order) as the cold build:
         // entry (i, j), i ≤ j, is ⟨A[:, J[i]], A[:, J[j]]⟩.
         for j in p..r {
-            let cj = a.col(active[j]);
             for i in 0..=j {
-                let v = blas::dot(a.col(active[i]), cj);
+                let v = a.cols_dot(active[i], active[j]);
                 self.gram.set(i, j, v);
                 self.gram.set(j, i, v);
             }
@@ -329,12 +332,13 @@ impl NewtonWorkspace {
     /// `a_j a_jᵀ` is dense in V). The m×m build buffer is zeroed and refilled
     /// on a miss; on error the factor is invalid and the caller should fall
     /// back to CG.
-    pub fn direct_factor(
+    pub fn direct_factor<'a>(
         &mut self,
-        a: &Mat,
+        a: impl Into<DesignRef<'a>>,
         active: &[usize],
         kappa: f64,
     ) -> Result<&Cholesky, NotPositiveDefinite> {
+        let a = a.into();
         self.rebind(a);
         let m = a.rows();
         if self.direct_valid

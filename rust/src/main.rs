@@ -100,6 +100,8 @@ fn print_help() {
          bench-parallel   --n 2e4 --m 200 --grid 40 --threads 1,2,4 [--no-screening] [--out BENCH_parallel_path.json]\n\
          \x20                --shard-n 1e5 --shard-m 500 --shard-threads 1,2,4 [--no-shard-bench]\n\
          \x20                [--shard-out BENCH_shard_linalg.json]\n\
+         \x20                --sparse-n 5e4 --sparse-m 200 --sparse-threads 1,2,4 [--no-sparse-bench]\n\
+         \x20                [--sparse-out BENCH_sparse_design.json]\n\
          \x20                --pool-calls 200 --pool-threads 2,4 [--no-pool-bench]\n\
          \x20                [--pool-out BENCH_pool_dispatch.json]\n\
          \x20                --newton-sizes 160:1200:40,320:2000:120 --newton-reps 3\n\
@@ -440,6 +442,54 @@ fn cmd_bench_parallel(args: &Args) -> Result<()> {
             println!("wrote {path}");
         }
         determinism_ok &= srows.iter().all(|r| r.bitwise_equal);
+    }
+
+    // Sparse CSC design storage: the GWAS-scale comparison. The same
+    // rare-variant cohort held dense and CSC, timed through the Aᵀy sweep,
+    // the Gap-Safe screening sweep, and a full single-λ solve; the sparse
+    // copy must reproduce the dense bits and win on the sweeps.
+    if !args.get_flag("no-sparse-bench") {
+        let sparse_threads =
+            args.get_usize_list("sparse-threads", &[1, 2, 4]).map_err(Error::msg)?;
+        let sparse_n = args.get_usize("sparse-n", 50_000).map_err(Error::msg)?;
+        let sparse_m = args.get_usize("sparse-m", 200).map_err(Error::msg)?;
+        let (spt, sprows, density) =
+            tables::sparse_design_rows(sparse_n, sparse_m, &sparse_threads, tol, seed);
+        println!();
+        spt.print();
+        if let Some(best) = sprows.iter().map(|r| r.aty_speedup).reduce(f64::max) {
+            println!(
+                "\nbest sparse Aᵀy speedup at {:.1}% density: {best:.2}x",
+                density * 100.0
+            );
+        }
+        if let Some(path) = args.get("sparse-out") {
+            let json = tables::sparse_design_json(&sprows, sparse_n, sparse_m, density);
+            if let Some(parent) = PathBuf::from(path).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, json)?;
+            println!("wrote {path}");
+        }
+        determinism_ok &= sprows.iter().all(|r| r.bitwise_equal);
+        // The tentpole claim is a gate: at rare-variant density (~6% stored
+        // entries) the CSC sweeps must beat their dense twins at every
+        // thread budget — the expected margin is roughly 1/density, so this
+        // does not flake on noisy boxes.
+        if let Some(slow) =
+            sprows.iter().find(|r| r.aty_speedup <= 1.0 || r.screen_speedup <= 1.0)
+        {
+            return Err(Error::msg(format!(
+                "sparse sweeps no cheaper than dense at {} threads \
+                 (Aᵀy {:.2e}s vs {:.2e}s, screen {:.2e}s vs {:.2e}s, density {:.1}%)",
+                slow.threads,
+                slow.sparse_aty_seconds,
+                slow.dense_aty_seconds,
+                slow.sparse_screen_seconds,
+                slow.dense_screen_seconds,
+                density * 100.0
+            )));
+        }
     }
 
     // Persistent-pool dispatch overhead vs the scoped spawn-per-call

@@ -69,7 +69,7 @@ pub use shared::SharedScreen;
 /// coordinator results are identical for every `num_threads` setting.
 pub const DEFAULT_CHAINS: usize = 8;
 
-use crate::linalg::{blas, Mat};
+use crate::linalg::{blas, DesignRef};
 use crate::path::{
     assert_descending_grid, solve_point, PathOptions, PathPoint, PathResult, WarmState,
 };
@@ -135,11 +135,12 @@ pub struct ParallelPathResult {
 }
 
 /// Run the warm-started λ-path with chains distributed over a worker pool.
-pub fn solve_path_parallel(
-    a: &Mat,
+pub fn solve_path_parallel<'a>(
+    a: impl Into<DesignRef<'a>>,
     b: &[f64],
     opts: &ParallelPathOptions,
 ) -> ParallelPathResult {
+    let a = a.into();
     assert_descending_grid(&opts.base.c_grid);
     let grid_len = opts.base.c_grid.len();
     let lambda_max = EnetProblem::lambda_max(a, b, opts.base.alpha);
@@ -204,7 +205,7 @@ pub fn solve_path_parallel(
 
 /// Solve one chain sequentially with warm starts, publishing to the board.
 fn run_chain(
-    a: &Mat,
+    a: DesignRef<'_>,
     b: &[f64],
     lambda_max: f64,
     seg: Chain,
@@ -255,7 +256,7 @@ fn run_chain(
 /// point — so discarded features are provably zero at this grid point and the
 /// reduced solve recovers the full solution exactly (to solver tolerance).
 fn solve_point_screened(
-    a: &Mat,
+    a: DesignRef<'_>,
     b: &[f64],
     lambda_max: f64,
     c: f64,
@@ -296,6 +297,8 @@ fn solve_point_screened(
     }
 
     let kept = survivors.len();
+    // `gather_cols` preserves the storage kind, so a sparse design solves its
+    // screened subproblems on a sparse sub-design too.
     let a_sub = a.gather_cols(&survivors);
     // Fresh workspace: the reduced design `a_sub` is a new matrix, so the
     // chain's cached factorizations (keyed on the full design's columns)

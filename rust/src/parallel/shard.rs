@@ -80,7 +80,7 @@
 //! that are expected to agree bitwise.
 
 use crate::linalg::workspace::{scratch_give, scratch_take_zeroed};
-use crate::linalg::{blas, Mat};
+use crate::linalg::{blas, DesignRef, Mat};
 use crate::parallel::pool;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -404,15 +404,25 @@ pub fn axpy_planned(plan: Plan, alpha: f64, x: &[f64], y: &mut [f64]) {
     pool::run_tasks(threads(), jobs);
 }
 
-/// Sharded `out = Aᵀy` — the O(mn) dual sweep, one contiguous dot per output
-/// element over disjoint column ranges. Bitwise identical to
-/// [`Mat::t_mul_vec_into`] at every plan and thread count.
-pub fn t_mul_vec_into(a: &Mat, y: &[f64], out: &mut [f64]) {
+/// Sharded `out = Aᵀy` — the O(mn) dual sweep (O(nnz) on CSC designs), one
+/// column dot per output element over disjoint column ranges. Bitwise
+/// identical to [`DesignRef::t_mul_vec_into`] at every plan, thread count,
+/// and storage. The plan is a function of the *logical* shape (`cols × 2·rows`
+/// flops), never the storage, so dense and sparse copies of one matrix shard
+/// identically.
+pub fn t_mul_vec_into<'a>(a: impl Into<DesignRef<'a>>, y: &[f64], out: &mut [f64]) {
+    let a = a.into();
     t_mul_vec_into_planned(Plan::for_work(a.cols(), 2 * a.rows()), a, y, out)
 }
 
 /// [`t_mul_vec_into`] with an explicit plan.
-pub fn t_mul_vec_into_planned(plan: Plan, a: &Mat, y: &[f64], out: &mut [f64]) {
+pub fn t_mul_vec_into_planned<'a>(
+    plan: Plan,
+    a: impl Into<DesignRef<'a>>,
+    y: &[f64],
+    out: &mut [f64],
+) {
+    let a = a.into();
     assert_eq!(y.len(), a.rows());
     assert_eq!(out.len(), a.cols());
     if threads() <= 1 || plan.shards <= 1 || a.cols() <= 1 {
@@ -427,7 +437,7 @@ pub fn t_mul_vec_into_planned(plan: Plan, a: &Mat, y: &[f64], out: &mut [f64]) {
         let start = r.start;
         jobs.push(move || {
             for (k, o) in head.iter_mut().enumerate() {
-                *o = blas::dot(a.col(start + k), y);
+                *o = a.col_dot(start + k, y);
             }
         });
         rest = tail;
@@ -438,18 +448,25 @@ pub fn t_mul_vec_into_planned(plan: Plan, a: &Mat, y: &[f64], out: &mut [f64]) {
 /// Sharded sparse mat-vec `out = Σ_{j∈support} x[j]·A[:,j]` (the gradient's
 /// `A_J u_J` term). Single-shard plans run the exact pre-shard serial kernel;
 /// multi-shard plans accumulate per-shard partials and tree-reduce them.
-pub fn mul_vec_support_into(a: &Mat, x: &[f64], support: &[usize], out: &mut [f64]) {
-    mul_vec_support_into_planned(Plan::for_work(support.len(), 2 * a.rows()), a, x, support, out)
-}
-
-/// [`mul_vec_support_into`] with an explicit plan.
-pub fn mul_vec_support_into_planned(
-    plan: Plan,
-    a: &Mat,
+pub fn mul_vec_support_into<'a>(
+    a: impl Into<DesignRef<'a>>,
     x: &[f64],
     support: &[usize],
     out: &mut [f64],
 ) {
+    let a = a.into();
+    mul_vec_support_into_planned(Plan::for_work(support.len(), 2 * a.rows()), a, x, support, out)
+}
+
+/// [`mul_vec_support_into`] with an explicit plan.
+pub fn mul_vec_support_into_planned<'a>(
+    plan: Plan,
+    a: impl Into<DesignRef<'a>>,
+    x: &[f64],
+    support: &[usize],
+    out: &mut [f64],
+) {
+    let a = a.into();
     assert_eq!(out.len(), a.rows());
     if plan.shards <= 1 || support.len() <= 1 {
         a.mul_vec_support_into(x, support, out);
@@ -470,7 +487,7 @@ pub fn mul_vec_support_into_planned(
                 for &j in ids {
                     let xj = x[j];
                     if xj != 0.0 {
-                        blas::axpy(xj, a.col(j), &mut *part);
+                        a.col_axpy(xj, j, &mut *part);
                     }
                 }
             });
@@ -488,24 +505,31 @@ pub fn mul_vec_support_into_planned(
 /// the serial axpy loop. Single-shard plans accumulate in place (the
 /// pre-shard serial bits); multi-shard plans tree-reduce zero-based partials
 /// and add the total once.
-pub fn add_scaled_cols(a: &Mat, idx: &[usize], coeffs: &[f64], out: &mut [f64]) {
-    add_scaled_cols_planned(Plan::for_work(idx.len(), 2 * a.rows()), a, idx, coeffs, out)
-}
-
-/// [`add_scaled_cols`] with an explicit plan.
-pub fn add_scaled_cols_planned(
-    plan: Plan,
-    a: &Mat,
+pub fn add_scaled_cols<'a>(
+    a: impl Into<DesignRef<'a>>,
     idx: &[usize],
     coeffs: &[f64],
     out: &mut [f64],
 ) {
+    let a = a.into();
+    add_scaled_cols_planned(Plan::for_work(idx.len(), 2 * a.rows()), a, idx, coeffs, out)
+}
+
+/// [`add_scaled_cols`] with an explicit plan.
+pub fn add_scaled_cols_planned<'a>(
+    plan: Plan,
+    a: impl Into<DesignRef<'a>>,
+    idx: &[usize],
+    coeffs: &[f64],
+    out: &mut [f64],
+) {
+    let a = a.into();
     assert_eq!(idx.len(), coeffs.len());
     assert_eq!(out.len(), a.rows());
     if plan.shards <= 1 || idx.len() <= 1 {
         for (k, &j) in idx.iter().enumerate() {
             if coeffs[k] != 0.0 {
-                blas::axpy(coeffs[k], a.col(j), out);
+                a.col_axpy(coeffs[k], j, out);
             }
         }
         return;
@@ -522,7 +546,7 @@ pub fn add_scaled_cols_planned(
             jobs.push(move || {
                 for k in r {
                     if coeffs[k] != 0.0 {
-                        blas::axpy(coeffs[k], a.col(idx[k]), &mut *part);
+                        a.col_axpy(coeffs[k], idx[k], &mut *part);
                     }
                 }
             });
@@ -540,13 +564,20 @@ pub fn add_scaled_cols_planned(
 /// Sharded `out[k] = scale·⟨A[:, idx[k]], v⟩` (Woodbury's `A_Jᵀ rhs` and the
 /// CG operator's dot half). Per-element, disjoint outputs: bitwise identical
 /// to the serial loop at every thread count.
-pub fn col_dots(a: &Mat, idx: &[usize], v: &[f64], scale: f64, out: &mut [f64]) {
+pub fn col_dots<'a>(
+    a: impl Into<DesignRef<'a>>,
+    idx: &[usize],
+    v: &[f64],
+    scale: f64,
+    out: &mut [f64],
+) {
+    let a = a.into();
     assert_eq!(out.len(), idx.len());
     assert_eq!(v.len(), a.rows());
     let plan = Plan::for_work(idx.len(), 2 * a.rows());
     if threads() <= 1 || plan.shards <= 1 || idx.len() <= 1 {
         for (k, &j) in idx.iter().enumerate() {
-            out[k] = scale * blas::dot(a.col(j), v);
+            out[k] = scale * a.col_dot(j, v);
         }
         return;
     }
@@ -558,7 +589,7 @@ pub fn col_dots(a: &Mat, idx: &[usize], v: &[f64], scale: f64, out: &mut [f64]) 
         let ids = &idx[r.start..r.end];
         jobs.push(move || {
             for (k, o) in head.iter_mut().enumerate() {
-                *o = scale * blas::dot(a.col(ids[k]), v);
+                *o = scale * a.col_dot(ids[k], v);
             }
         });
         rest = tail;
@@ -571,7 +602,7 @@ pub fn col_dots(a: &Mat, idx: &[usize], v: &[f64], scale: f64, out: &mut [f64]) 
 /// upper-triangle rows balance. Every entry is the same column-pair dot the
 /// serial [`Mat::gram_of_cols`] computes — the result is bitwise identical at
 /// every thread count.
-pub fn gram_of_cols(a: &Mat, idx: &[usize], ridge: f64) -> Mat {
+pub fn gram_of_cols<'a>(a: impl Into<DesignRef<'a>>, idx: &[usize], ridge: f64) -> Mat {
     let mut g = Mat::zeros(idx.len(), idx.len());
     gram_of_cols_into(a, idx, ridge, &mut g);
     g
@@ -581,7 +612,8 @@ pub fn gram_of_cols(a: &Mat, idx: &[usize], ridge: f64) -> Mat {
 /// its dimension changes. The strided upper-triangle rows are computed into a
 /// flat slab from the calling thread's scratch arena and scattered
 /// sequentially, so repeated builds allocate nothing.
-pub fn gram_of_cols_into(a: &Mat, idx: &[usize], ridge: f64, g: &mut Mat) {
+pub fn gram_of_cols_into<'a>(a: impl Into<DesignRef<'a>>, idx: &[usize], ridge: f64, g: &mut Mat) {
+    let a = a.into();
     let r = idx.len();
     if g.rows() != r || g.cols() != r {
         *g = Mat::zeros(r, r);
@@ -591,9 +623,8 @@ pub fn gram_of_cols_into(a: &Mat, idx: &[usize], ridge: f64, g: &mut Mat) {
     if threads() <= 1 || plan.shards <= 1 {
         // the exact serial build, written into the reused buffer
         for row in 0..r {
-            let ca = a.col(idx[row]);
             for b in row..r {
-                let v = blas::dot(ca, a.col(idx[b]));
+                let v = a.cols_dot(idx[row], idx[b]);
                 g.set(row, b, v);
                 g.set(b, row, v);
             }
@@ -620,9 +651,8 @@ pub fn gram_of_cols_into(a: &Mat, idx: &[usize], ridge: f64, g: &mut Mat) {
             .map(|bucket| {
                 move || {
                     for (row, vals) in bucket {
-                        let ca = a.col(idx[row]);
                         for (off, dst) in vals.iter_mut().enumerate() {
-                            *dst = blas::dot(ca, a.col(idx[row + off]));
+                            *dst = a.cols_dot(idx[row], idx[row + off]);
                         }
                     }
                 }
@@ -685,21 +715,49 @@ where
 /// zero-based partials and add each column once, which matches the serial
 /// in-place loop bit for bit whenever `v`'s triangle starts at zero (as in
 /// `solve_direct`).
-pub fn rank1_lower_accum(a: &Mat, active: &[usize], kappa: f64, v: &mut Mat) {
+pub fn rank1_lower_accum<'a>(
+    a: impl Into<DesignRef<'a>>,
+    active: &[usize],
+    kappa: f64,
+    v: &mut Mat,
+) {
+    let a = a.into();
     let m = a.rows();
     assert_eq!(v.rows(), m);
     assert_eq!(v.cols(), m);
     let plan = Plan::for_work(m * (m + 1) / 2, 2 * active.len().max(1));
     if threads() <= 1 || plan.shards <= 1 {
-        // The exact pre-shard serial loop: j-outer rank-1 updates.
-        for &j in active {
-            let col = a.col(j);
-            for c in 0..m {
-                let s = kappa * col[c];
-                if s != 0.0 {
-                    let vc = v.col_mut(c);
-                    for row in c..m {
-                        vc[row] += s * col[row];
+        // The exact pre-shard serial loop: j-outer rank-1 updates. The dense
+        // loop's `s != 0` guard skips exactly the zero entries a CSC column
+        // does not store, and the skipped inner products are ±0.0 identities
+        // on a zeroed triangle — so the two arms agree bit for bit.
+        match a {
+            DesignRef::Dense(ad) => {
+                for &j in active {
+                    let col = ad.col(j);
+                    for c in 0..m {
+                        let s = kappa * col[c];
+                        if s != 0.0 {
+                            let vc = v.col_mut(c);
+                            for row in c..m {
+                                vc[row] += s * col[row];
+                            }
+                        }
+                    }
+                }
+            }
+            DesignRef::Sparse(asp) => {
+                for &j in active {
+                    let (rs, vs) = asp.col(j);
+                    for (k, (&c, &cv)) in rs.iter().zip(vs.iter()).enumerate() {
+                        let s = kappa * cv;
+                        if s != 0.0 {
+                            let vc = v.col_mut(c);
+                            // rows are ascending, so entries ≥ c are rs[k..]
+                            for (&row, &val) in rs[k..].iter().zip(vs[k..].iter()) {
+                                vc[row] += s * val;
+                            }
+                        }
                     }
                 }
             }
@@ -734,12 +792,32 @@ pub fn rank1_lower_accum(a: &Mat, active: &[usize], kappa: f64, v: &mut Mat) {
             .map(|bucket| {
                 move || {
                     for (c, vals) in bucket {
-                        for &j in active {
-                            let col = a.col(j);
-                            let s = kappa * col[c];
-                            if s != 0.0 {
-                                for (off, dst) in vals.iter_mut().enumerate() {
-                                    *dst += s * col[c + off];
+                        match a {
+                            DesignRef::Dense(ad) => {
+                                for &j in active {
+                                    let col = ad.col(j);
+                                    let s = kappa * col[c];
+                                    if s != 0.0 {
+                                        for (off, dst) in vals.iter_mut().enumerate() {
+                                            *dst += s * col[c + off];
+                                        }
+                                    }
+                                }
+                            }
+                            DesignRef::Sparse(asp) => {
+                                for &j in active {
+                                    let (rs, vsv) = asp.col(j);
+                                    let pos = rs.partition_point(|&row| row < c);
+                                    if pos < rs.len() && rs[pos] == c {
+                                        let s = kappa * vsv[pos];
+                                        if s != 0.0 {
+                                            for (&row, &val) in
+                                                rs[pos..].iter().zip(vsv[pos..].iter())
+                                            {
+                                                vals[row - c] += s * val;
+                                            }
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -917,6 +995,60 @@ mod tests {
         // degenerate: zero units still yields one (empty) range
         let outs = map_ranges(0, 8, |r| r.len());
         assert_eq!(outs, vec![0]);
+    }
+
+    #[test]
+    fn sharded_kernels_are_storage_invariant_bitwise() {
+        use crate::linalg::CscMat;
+        let mut rng = Xoshiro256pp::seed_from_u64(123);
+        let (m, n) = (60usize, 200usize);
+        let a = Mat::from_fn(m, n, |_, _| {
+            if rng.next_f64() < 0.8 {
+                0.0
+            } else {
+                rng.next_gaussian()
+            }
+        });
+        let s = CscMat::from_dense(&a);
+        let y: Vec<f64> = (0..m).map(|_| rng.next_gaussian()).collect();
+        let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let support: Vec<usize> = (0..n).step_by(2).collect();
+        let coeffs: Vec<f64> = support.iter().map(|&j| x[j]).collect();
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        // MIN_SHARD_FLOPS forces the gram/rank-1 triangle builds multi-shard
+        // at this shape; the default target exercises the serial arms.
+        for target in [TARGET_SHARD_FLOPS, MIN_SHARD_FLOPS] {
+            for t in [1usize, 4] {
+                with_target_shard_flops(target, || {
+                    with_threads(t, || {
+                        let plan = Plan::with_shards(5);
+                        let (mut od, mut os) = (vec![0.0; n], vec![0.0; n]);
+                        t_mul_vec_into_planned(plan, &a, &y, &mut od);
+                        t_mul_vec_into_planned(plan, &s, &y, &mut os);
+                        assert_eq!(bits(&od), bits(&os), "t_mul_vec t={t}");
+                        let (mut ud, mut us) = (vec![0.0; m], vec![0.0; m]);
+                        mul_vec_support_into_planned(plan, &a, &x, &support, &mut ud);
+                        mul_vec_support_into_planned(plan, &s, &x, &support, &mut us);
+                        assert_eq!(bits(&ud), bits(&us), "mul_vec_support t={t}");
+                        let (mut vd, mut vs) = (y.clone(), y.clone());
+                        add_scaled_cols_planned(plan, &a, &support, &coeffs, &mut vd);
+                        add_scaled_cols_planned(plan, &s, &support, &coeffs, &mut vs);
+                        assert_eq!(bits(&vd), bits(&vs), "add_scaled_cols t={t}");
+                        let (mut cd, mut cs) = (vec![0.0; support.len()], vec![0.0; support.len()]);
+                        col_dots(&a, &support, &y, 0.3, &mut cd);
+                        col_dots(&s, &support, &y, 0.3, &mut cs);
+                        assert_eq!(bits(&cd), bits(&cs), "col_dots t={t}");
+                        let gd = gram_of_cols(&a, &support, 0.7);
+                        let gs = gram_of_cols(&s, &support, 0.7);
+                        assert_eq!(bits(gd.as_slice()), bits(gs.as_slice()), "gram t={t}");
+                        let (mut rd, mut rs) = (Mat::zeros(m, m), Mat::zeros(m, m));
+                        rank1_lower_accum(&a, &support, 0.9, &mut rd);
+                        rank1_lower_accum(&s, &support, 0.9, &mut rs);
+                        assert_eq!(bits(rd.as_slice()), bits(rs.as_slice()), "rank1 t={t}");
+                    })
+                });
+            }
+        }
     }
 
     #[test]

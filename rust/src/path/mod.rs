@@ -18,7 +18,7 @@
 //! (`SSNAL_THREADS`), whose results are thread-count-invariant — so the
 //! bitwise guarantee survives within-solve parallelism too.
 
-use crate::linalg::Mat;
+use crate::linalg::DesignRef;
 use crate::solver::types::{Algorithm, BaselineOptions, EnetProblem, SolveResult, SsnalOptions};
 use crate::solver::{cd, ssnal};
 
@@ -113,14 +113,15 @@ pub fn assert_descending_grid(grid: &[f64]) {
 /// Solve a single grid point at `c`, reading and updating the chain's warm
 /// state. This is the one primitive both [`solve_path`] and the parallel
 /// engine's chains execute, which keeps their per-point numerics identical.
-pub fn solve_point(
-    a: &Mat,
+pub fn solve_point<'a>(
+    a: impl Into<DesignRef<'a>>,
     b: &[f64],
     lambda_max: f64,
     c: f64,
     opts: &PathOptions,
     warm: &mut WarmState,
 ) -> PathPoint {
+    let a = a.into();
     let (lam1, lam2) = EnetProblem::lambdas_from_alpha(opts.alpha, c, lambda_max);
     let p = EnetProblem::new(a, b, lam1, lam2);
     let result = match opts.algorithm {
@@ -151,7 +152,8 @@ pub fn solve_point(
 }
 
 /// Run the warm-started path as a single sequential chain.
-pub fn solve_path(a: &Mat, b: &[f64], opts: &PathOptions) -> PathResult {
+pub fn solve_path<'a>(a: impl Into<DesignRef<'a>>, b: &[f64], opts: &PathOptions) -> PathResult {
+    let a = a.into();
     assert_descending_grid(&opts.c_grid);
     let lambda_max = EnetProblem::lambda_max(a, b, opts.alpha);
     let mut points = Vec::with_capacity(opts.c_grid.len());

@@ -8,7 +8,7 @@
 //! `(AᵀA + cI)⁻¹ v = (v − Aᵀ(AAᵀ + cI)⁻¹ A v)/c`, so a single m×m Cholesky
 //! factorization is reused across all iterations.
 
-use crate::linalg::{blas, Cholesky, Mat};
+use crate::linalg::{blas, Cholesky, DesignRef, Mat};
 use crate::solver::objective::{primal_objective, support_of};
 use crate::solver::types::{Algorithm, BaselineOptions, EnetProblem, SolveResult};
 
@@ -34,16 +34,34 @@ pub fn solve_admm(p: &EnetProblem, opts: &BaselineOptions, admm: &AdmmOptions) -
     let rho = admm.rho;
     let c = p.lam2 + rho;
 
-    // Factor (AAᵀ + cI) once — m×m.
+    // Factor (AAᵀ + cI) once — m×m. Both storage arms accumulate the lower
+    // triangle in the same (j, a_, b_) order; the sparse arm only skips terms
+    // where the stored column is exactly zero, which the dense arm's `s != 0.0`
+    // guard (and the ±0.0 addition identity) already make bit-neutral.
     let mut aat = Mat::zeros(m, m);
-    for j in 0..n {
-        let col = p.a.col(j);
-        for a_ in 0..m {
-            let s = col[a_];
-            if s != 0.0 {
-                let cc = aat.col_mut(a_);
-                for b_ in a_..m {
-                    cc[b_] += s * col[b_];
+    match p.a {
+        DesignRef::Dense(dm) => {
+            for j in 0..n {
+                let col = dm.col(j);
+                for a_ in 0..m {
+                    let s = col[a_];
+                    if s != 0.0 {
+                        let cc = aat.col_mut(a_);
+                        for b_ in a_..m {
+                            cc[b_] += s * col[b_];
+                        }
+                    }
+                }
+            }
+        }
+        DesignRef::Sparse(sp) => {
+            for j in 0..n {
+                let (rs, vs) = sp.col(j);
+                for (k, (&a_, &s)) in rs.iter().zip(vs.iter()).enumerate() {
+                    let cc = aat.col_mut(a_);
+                    for (&b_, &val) in rs[k..].iter().zip(vs[k..].iter()) {
+                        cc[b_] += s * val;
+                    }
                 }
             }
         }

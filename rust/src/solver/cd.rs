@@ -35,23 +35,22 @@ impl CdState {
         let x = x0.map(|v| v.to_vec()).unwrap_or_else(|| vec![0.0; n]);
         let ax = p.a.mul_vec(&x);
         let res: Vec<f64> = (0..p.m()).map(|i| p.b[i] - ax[i]).collect();
-        let col_sq: Vec<f64> = (0..n).map(|j| blas::nrm2_sq(p.a.col(j))).collect();
+        let col_sq: Vec<f64> = (0..n).map(|j| p.a.col_nrm2_sq(j)).collect();
         Self { x, res, col_sq }
     }
 
     /// One coordinate update; returns |Δx_j|.
     #[inline]
     fn update(&mut self, p: &EnetProblem, j: usize) -> f64 {
-        let aj = p.a.col(j);
         let cj = self.col_sq[j];
         if cj == 0.0 {
             return 0.0;
         }
-        let rho = blas::dot(aj, &self.res) + cj * self.x[j];
+        let rho = p.a.col_dot(j, &self.res) + cj * self.x[j];
         let new = soft_threshold(rho, p.lam1) / (cj + p.lam2);
         let delta = new - self.x[j];
         if delta != 0.0 {
-            blas::axpy(-delta, aj, &mut self.res);
+            p.a.col_axpy(-delta, j, &mut self.res);
             self.x[j] = new;
         }
         delta.abs()

@@ -114,7 +114,7 @@ pub fn solve_celer(p: &EnetProblem, opts: &BaselineOptions) -> SolveResult {
     let aug = AugmentedView::new(p);
     let mut x = vec![0.0; n];
     let mut res: Vec<f64> = p.b.to_vec(); // b − Ax with x = 0
-    let col_sq: Vec<f64> = (0..n).map(|j| blas::nrm2_sq(p.a.col(j))).collect();
+    let col_sq: Vec<f64> = (0..n).map(|j| p.a.col_nrm2_sq(j)).collect();
 
     let mut history: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
     let mut ws_size = WS_START.min(n);

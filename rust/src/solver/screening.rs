@@ -26,14 +26,19 @@ pub struct AugmentedView<'a> {
 }
 
 impl<'a> AugmentedView<'a> {
-    /// Precompute augmented column norms (an O(mn) feature sweep, sharded
-    /// over the worker pool on large designs — per-column values identical to
-    /// the serial loop at every thread count).
+    /// Precompute augmented column norms (an O(mn) feature sweep — O(nnz) on
+    /// CSC designs — sharded over the worker pool on large designs;
+    /// per-column values identical to the serial loop at every thread count
+    /// and every storage).
     pub fn new(p: &'a EnetProblem<'a>) -> Self {
         let lam2 = p.lam2;
-        let col_norms = crate::parallel::shard::map_cols(p.a, 2 * p.m(), move |col| {
-            (blas::nrm2_sq(col) + lam2).sqrt()
-        });
+        let a = p.a;
+        let col_norms = shard::map_ranges(p.n(), 2 * p.m(), move |range| {
+            range.map(|j| (a.col_nrm2_sq(j) + lam2).sqrt()).collect::<Vec<f64>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
         Self { p, sqrt_lam2: p.lam2.sqrt(), col_norms }
     }
 
@@ -62,7 +67,7 @@ impl<'a> AugmentedView<'a> {
     /// `Ã_jᵀ ṽ` for split vector `(v_top, v_bottom)`.
     #[inline]
     pub fn col_dot(&self, j: usize, v_top: &[f64], v_bottom: &[f64]) -> f64 {
-        blas::dot(self.p.a.col(j), v_top) + self.sqrt_lam2 * v_bottom[j]
+        self.p.a.col_dot(j, v_top) + self.sqrt_lam2 * v_bottom[j]
     }
 
     /// Primal objective of the augmented Lasso = the Elastic Net objective.
@@ -191,12 +196,11 @@ pub fn cd_on_set(
             if cj == 0.0 {
                 continue;
             }
-            let aj = p.a.col(j);
-            let rho = blas::dot(aj, res) + cj * x[j];
+            let rho = p.a.col_dot(j, res) + cj * x[j];
             let new = crate::prox::soft_threshold(rho, p.lam1) / (cj + p.lam2);
             let delta = new - x[j];
             if delta != 0.0 {
-                blas::axpy(-delta, aj, res);
+                p.a.col_axpy(-delta, j, res);
                 x[j] = new;
             }
             max_change = max_change.max(delta.abs());
@@ -219,9 +223,16 @@ pub fn solve_gap_safe(p: &EnetProblem, opts: &BaselineOptions) -> SolveResult {
     let mut x = vec![0.0; n];
     let ax = p.a.mul_vec(&x);
     let mut res: Vec<f64> = (0..p.m()).map(|i| p.b[i] - ax[i]).collect();
-    // O(mn) column-norm precompute, sharded (per-column values are identical
-    // to the serial sweep at every thread budget).
-    let col_sq: Vec<f64> = shard::map_cols(p.a, 2 * p.m(), blas::nrm2_sq);
+    // O(mn) column-norm precompute (O(nnz) on CSC), sharded (per-column
+    // values are identical to the serial sweep at every thread budget and
+    // storage).
+    let a = p.a;
+    let col_sq: Vec<f64> = shard::map_ranges(p.n(), 2 * p.m(), move |range| {
+        range.map(|j| a.col_nrm2_sq(j)).collect::<Vec<f64>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect();
 
     let mut rounds = 0usize;
     let mut inner = 0usize;

@@ -21,7 +21,7 @@
 //! the `A_J w` accumulation matches serial exactly only while its plan is
 //! single-shard).
 
-use crate::linalg::{solve_cg_with, Mat, NewtonWorkspace};
+use crate::linalg::{solve_cg_with, DesignRef, NewtonWorkspace};
 use crate::parallel::shard;
 use crate::solver::types::NewtonStrategy;
 
@@ -44,8 +44,8 @@ pub enum ResolvedStrategy {
 /// [`solve_newton_system_ws`]).
 ///
 /// Returns the resolved strategy (for diagnostics / EXPERIMENTS.md §Perf).
-pub fn solve_newton_system(
-    a: &Mat,
+pub fn solve_newton_system<'a>(
+    a: impl Into<DesignRef<'a>>,
     active: &[usize],
     kappa: f64,
     rhs: &[f64],
@@ -66,8 +66,8 @@ pub fn solve_newton_system(
 /// performing zero heap allocations. On a numerical factorization failure
 /// the solve falls back to CG instead of panicking and reports
 /// [`ResolvedStrategy::CgFallback`].
-pub fn solve_newton_system_ws(
-    a: &Mat,
+pub fn solve_newton_system_ws<'a>(
+    a: impl Into<DesignRef<'a>>,
     active: &[usize],
     kappa: f64,
     rhs: &[f64],
@@ -77,6 +77,7 @@ pub fn solve_newton_system_ws(
     cg_max_iters: usize,
     ws: &mut NewtonWorkspace,
 ) -> ResolvedStrategy {
+    let a = a.into();
     let m = a.rows();
     let r = active.len();
     assert_eq!(rhs.len(), m);
@@ -150,7 +151,7 @@ pub fn solve_newton_system_ws(
 /// factorization failure (numerically non-SPD) surfaces as `Err` for the CG
 /// fallback instead of panicking.
 fn solve_direct(
-    a: &Mat,
+    a: DesignRef<'_>,
     active: &[usize],
     kappa: f64,
     rhs: &[f64],
@@ -168,7 +169,7 @@ fn solve_direct(
 /// policy in [`crate::linalg::workspace`]); factorization failure surfaces
 /// as `Err` for the CG fallback.
 fn solve_woodbury(
-    a: &Mat,
+    a: DesignRef<'_>,
     active: &[usize],
     kappa: f64,
     rhs: &[f64],
@@ -193,7 +194,7 @@ fn solve_woodbury(
 /// Matrix-free CG on `v ↦ v + κ A_J (A_Jᵀ v)`; all four working vectors come
 /// from the workspace.
 fn solve_cg_strategy(
-    a: &Mat,
+    a: DesignRef<'_>,
     active: &[usize],
     kappa: f64,
     rhs: &[f64],
@@ -224,7 +225,7 @@ fn solve_cg_strategy(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::blas;
+    use crate::linalg::{blas, Mat};
     use crate::rng::Xoshiro256pp;
 
     fn apply_v(a: &Mat, active: &[usize], kappa: f64, v: &[f64]) -> Vec<f64> {

@@ -1,13 +1,17 @@
 //! Shared types for all Elastic Net solvers in this crate.
 
-use crate::linalg::Mat;
+use crate::linalg::DesignRef;
 
 /// A borrowed view of one Elastic Net instance:
 /// `min_x ½‖Ax − b‖² + λ1‖x‖₁ + (λ2/2)‖x‖₂²` (paper Eq. 1).
+///
+/// The design is a storage-polymorphic [`DesignRef`] — dense and CSC-sparse
+/// designs flow through every solver identically (and bitwise-identically;
+/// see [`crate::linalg::sparse`]).
 #[derive(Clone, Copy, Debug)]
 pub struct EnetProblem<'a> {
-    /// Design matrix (column-major, m × n, typically n ≫ m).
-    pub a: &'a Mat,
+    /// Design matrix view (m × n, typically n ≫ m), dense or CSC.
+    pub a: DesignRef<'a>,
     /// Response vector, length m.
     pub b: &'a [f64],
     /// ℓ1 penalty weight λ1 ≥ 0.
@@ -17,8 +21,10 @@ pub struct EnetProblem<'a> {
 }
 
 impl<'a> EnetProblem<'a> {
-    /// Construct and validate.
-    pub fn new(a: &'a Mat, b: &'a [f64], lam1: f64, lam2: f64) -> Self {
+    /// Construct and validate. Accepts `&Mat`, `&CscMat`, `&DesignStorage`
+    /// or an existing [`DesignRef`].
+    pub fn new(a: impl Into<DesignRef<'a>>, b: &'a [f64], lam1: f64, lam2: f64) -> Self {
+        let a = a.into();
         assert_eq!(a.rows(), b.len(), "A rows must match b length");
         assert!(lam1 >= 0.0 && lam2 >= 0.0, "penalties must be nonnegative");
         Self { a, b, lam1, lam2 }
@@ -37,9 +43,9 @@ impl<'a> EnetProblem<'a> {
     /// `λ^max = ‖Aᵀb‖∞ / α` — the smallest λ scale with an all-zero solution,
     /// under the paper's parametrization `λ1 = α·c·λ^max`, `λ2 = (1−α)·c·λ^max`
     /// (§4.1). `alpha = 1` gives the Lasso λ_max.
-    pub fn lambda_max(a: &Mat, b: &[f64], alpha: f64) -> f64 {
+    pub fn lambda_max<'b>(a: impl Into<DesignRef<'b>>, b: &[f64], alpha: f64) -> f64 {
         assert!(alpha > 0.0 && alpha <= 1.0, "alpha in (0,1]");
-        crate::linalg::blas::nrm_inf(&a.t_mul_vec(b)) / alpha
+        crate::linalg::blas::nrm_inf(&a.into().t_mul_vec(b)) / alpha
     }
 
     /// The paper's `(λ1, λ2)` from `(α, c_λ, λ^max)`.
@@ -281,6 +287,7 @@ impl Default for SolverConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Mat;
 
     #[test]
     fn lambda_parametrization_matches_paper() {

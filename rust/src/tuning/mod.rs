@@ -12,7 +12,7 @@
 //! [`crate::api::EnetModel::tune`] — which validates the grid, folds and
 //! tolerances into typed errors before handing them to [`tune_with_threads`].
 
-use crate::linalg::{blas, lstsq, Mat};
+use crate::linalg::{blas, lstsq, DesignRef, Mat};
 use crate::path::{solve_path, PathOptions, PathResult};
 use crate::rng::Xoshiro256pp;
 use crate::solver::types::{BaselineOptions, EnetProblem, SsnalOptions};
@@ -53,7 +53,8 @@ pub struct TuningResult {
 }
 
 /// De-biased residual sum of squares: OLS refit on the active set `idx`.
-pub fn debiased_rss(a: &Mat, b: &[f64], idx: &[usize]) -> f64 {
+pub fn debiased_rss<'a>(a: impl Into<DesignRef<'a>>, b: &[f64], idx: &[usize]) -> f64 {
+    let a = a.into();
     let m = a.rows();
     if idx.is_empty() {
         return blas::nrm2_sq(b);
@@ -120,7 +121,7 @@ impl Default for TuningOptions {
 /// optionally k-fold CV) at every explored point, fanning the per-point
 /// criteria out over the shared persistent worker pool
 /// ([`crate::parallel::run_tasks`]) on all available cores.
-pub fn tune(a: &Mat, b: &[f64], opts: &TuningOptions) -> TuningResult {
+pub fn tune<'a>(a: impl Into<DesignRef<'a>>, b: &[f64], opts: &TuningOptions) -> TuningResult {
     tune_with_threads(a, b, opts, 0)
 }
 
@@ -130,12 +131,13 @@ pub fn tune(a: &Mat, b: &[f64], opts: &TuningOptions) -> TuningResult {
 /// the K refits of cross-validation — is computed whole inside one task, so
 /// the result is bitwise-identical for every thread count (the paper's CV
 /// protocol, §3.3, parallelized across the λ-grid).
-pub fn tune_with_threads(
-    a: &Mat,
+pub fn tune_with_threads<'a>(
+    a: impl Into<DesignRef<'a>>,
     b: &[f64],
     opts: &TuningOptions,
     num_threads: usize,
 ) -> TuningResult {
+    let a = a.into();
     let path = solve_path(a, b, &opts.path);
     let m = a.rows();
     let n = a.cols();
@@ -194,7 +196,7 @@ pub fn tune_with_threads(
 
 /// k-fold CV mean-squared prediction error at one (λ1, λ2).
 fn cv_mse(
-    a: &Mat,
+    a: DesignRef<'_>,
     b: &[f64],
     fold_of: &[usize],
     k: usize,

@@ -10,8 +10,9 @@
 //! `dual_point`/survivor scoring sweeps, the direct-Newton rank-1 triangle
 //! build, and kernel reuse on the warm persistent pool.
 
+use ssnal_en::data::snp::{generate_sparse, SnpSpec, SparseSnpSpec};
 use ssnal_en::data::{generate_synthetic, SyntheticSpec};
-use ssnal_en::linalg::{blas, Mat, NewtonWorkspace};
+use ssnal_en::linalg::{blas, CscMat, DesignRef, DesignStorage, Mat, NewtonWorkspace};
 use ssnal_en::parallel::shard::{self, Plan};
 use ssnal_en::rng::Xoshiro256pp;
 use ssnal_en::solver::screening::AugmentedView;
@@ -498,5 +499,190 @@ fn ssnal_solve_is_bitwise_invariant_to_shard_threads() {
         assert_eq!(res.y, reference.y, "dual drifted at shard threads={t}");
         assert_eq!(res.iterations, reference.iterations);
         assert_eq!(res.inner_iterations, reference.inner_iterations);
+    }
+}
+
+// ---- ISSUE 6: sparse (CSC) storage must reproduce dense bits -------------
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A rare-variant cohort (~6% dense) plus its densified twin.
+fn sparse_cohort(m: usize, n: usize, seed: u64) -> (CscMat, Mat, Vec<f64>) {
+    let cohort = generate_sparse(&SparseSnpSpec {
+        base: SnpSpec { m, n_snps: n, n_causal: 8, seed, ..Default::default() },
+        ..Default::default()
+    });
+    let DesignStorage::Sparse(sp) = cohort.a else {
+        panic!("default MAF range must produce sparse storage")
+    };
+    let dense = sp.to_dense();
+    (sp, dense, cohort.b)
+}
+
+/// CSC edge cases — an empty column, an all-dense column, single-nonzero
+/// rows (first/middle/last) — through every storage-dispatched kernel,
+/// bitwise against the dense loops, at single- and multi-shard plans and
+/// every thread budget.
+#[test]
+fn csc_edge_case_columns_match_dense_bitwise() {
+    let m = 9;
+    let mut a = Mat::zeros(m, 5);
+    // col 0: empty (all zeros)
+    for i in 0..m {
+        a.set(i, 1, i as f64 - 3.5); // col 1: fully dense
+    }
+    a.set(4, 2, 2.25); // col 2: single interior nonzero
+    a.set(0, 3, -1.5); // col 3: first and last rows only
+    a.set(m - 1, 3, 0.5);
+    for i in (0..m).step_by(2) {
+        a.set(i, 4, 1.0 + i as f64); // col 4: alternating rows
+    }
+    let sp = CscMat::from_dense(&a);
+    assert_eq!(sp.col(0).0.len(), 0, "col 0 must be stored empty");
+    assert_eq!(sp.col(1).0.len(), m, "col 1 must be stored fully dense");
+    let (dr, sr) = (DesignRef::from(&a), DesignRef::from(&sp));
+
+    let mut rng = Xoshiro256pp::seed_from_u64(6_006);
+    let y = random_vec(&mut rng, m);
+    let x = random_vec(&mut rng, 5);
+    let idx: Vec<usize> = vec![0, 1, 2, 3, 4];
+
+    assert_eq!(bits(&dr.t_mul_vec(&y)), bits(&sr.t_mul_vec(&y)));
+    assert_eq!(bits(&dr.mul_vec(&x)), bits(&sr.mul_vec(&x)));
+    let gd = dr.gram_of_cols(&idx, 0.3);
+    let gs = sr.gram_of_cols(&idx, 0.3);
+    assert_eq!(bits(gd.as_slice()), bits(gs.as_slice()));
+    for j in 0..5 {
+        assert_eq!(dr.col_dot(j, &y).to_bits(), sr.col_dot(j, &y).to_bits(), "col {j}");
+        assert_eq!(dr.col_nrm2_sq(j).to_bits(), sr.col_nrm2_sq(j).to_bits(), "col {j}");
+    }
+
+    for shards in [1usize, 3, 8] {
+        let plan = Plan::with_shards(shards);
+        for &t in &THREADS {
+            let (aty_d, aty_s, ax_d, ax_s) = shard::with_threads(t, || {
+                let mut aty_d = vec![0.0; 5];
+                shard::t_mul_vec_into_planned(plan, dr, &y, &mut aty_d);
+                let mut aty_s = vec![0.0; 5];
+                shard::t_mul_vec_into_planned(plan, sr, &y, &mut aty_s);
+                let mut ax_d = vec![0.0; m];
+                shard::mul_vec_support_into_planned(plan, dr, &x, &idx, &mut ax_d);
+                let mut ax_s = vec![0.0; m];
+                shard::mul_vec_support_into_planned(plan, sr, &x, &idx, &mut ax_s);
+                (aty_d, aty_s, ax_d, ax_s)
+            });
+            assert_eq!(bits(&aty_d), bits(&aty_s), "Aᵀy shards={shards} threads={t}");
+            assert_eq!(bits(&ax_d), bits(&ax_s), "A_J x shards={shards} threads={t}");
+        }
+    }
+}
+
+/// The tentpole guarantee, end to end: a full SSNAL solve on a GWAS-style
+/// sparse design produces coefficients, duals and traces bitwise-identical
+/// to the densified design, at every `SSNAL_THREADS` budget.
+#[test]
+fn sparse_fit_is_bitwise_dense_at_every_thread_budget() {
+    let (sp, dense, b) = sparse_cohort(60, 4_000, 9);
+    let lmax = EnetProblem::lambda_max(&dense, &b, 0.9);
+    let (l1, l2) = EnetProblem::lambdas_from_alpha(0.9, 0.3, lmax);
+    assert_eq!(
+        EnetProblem::lambda_max(&sp, &b, 0.9).to_bits(),
+        lmax.to_bits(),
+        "λmax must not depend on storage"
+    );
+    let opts = SsnalOptions::default();
+
+    let solve = |a: DesignRef<'_>| {
+        let p = EnetProblem::new(a, &b, l1, l2);
+        ssnal_en::solver::ssnal::solve_warm(&p, &opts, None)
+    };
+    let (res_ref, trace_ref) = shard::with_threads(1, || solve(DesignRef::from(&dense)));
+    assert!(res_ref.converged);
+    assert!(!res_ref.active_set.is_empty());
+    for &t in &THREADS {
+        let (res, trace) = shard::with_threads(t, || solve(DesignRef::from(&sp)));
+        assert_eq!(bits(&res.x), bits(&res_ref.x), "coefficients drifted at threads={t}");
+        assert_eq!(bits(&res.y), bits(&res_ref.y), "dual drifted at threads={t}");
+        assert_eq!(res.active_set, res_ref.active_set);
+        assert_eq!(res.iterations, res_ref.iterations);
+        assert_eq!(res.inner_iterations, res_ref.inner_iterations);
+        assert_eq!(
+            bits(&trace.outer_residuals),
+            bits(&trace_ref.outer_residuals),
+            "trace residuals drifted at threads={t}"
+        );
+        assert_eq!(trace.inner_counts, trace_ref.inner_counts);
+        assert_eq!(trace.active_sizes, trace_ref.active_sizes);
+        assert_eq!(trace.final_sigma.to_bits(), trace_ref.final_sigma.to_bits());
+    }
+}
+
+/// Gap-Safe screening — the augmented column norms, the scaled dual point
+/// and the survivor index set — must be storage-invariant bit for bit at a
+/// shape where its sweeps genuinely multi-shard.
+#[test]
+fn screening_survivors_match_across_storage_bitwise() {
+    let (sp, dense, b) = sparse_cohort(100, 30_000, 21);
+    assert!(Plan::for_work(30_000, 2 * 100).shards > 1, "sweeps must fan out");
+    let lmax = EnetProblem::lambda_max(&dense, &b, 0.9);
+    let (l1, l2) = EnetProblem::lambdas_from_alpha(0.9, 0.4, lmax);
+    let pd = EnetProblem::new(&dense, &b, l1, l2);
+    let ps = EnetProblem::new(&sp, &b, l1, l2);
+    // crude reference iterate: ridge-ish shrink of the top marginal scores
+    let aty = pd.a.t_mul_vec(&b);
+    let x: Vec<f64> =
+        aty.iter().map(|&v| if v.abs() > 0.5 * lmax { 0.1 * v } else { 0.0 }).collect();
+
+    let aug_d = AugmentedView::new(&pd);
+    let aug_s = AugmentedView::new(&ps);
+    assert_eq!(bits(&aug_d.col_norms), bits(&aug_s.col_norms), "‖Ã_j‖ drifted");
+    for &t in &THREADS {
+        let ((dual_d, top_d, bot_d), surv_d) =
+            shard::with_threads(t, || (aug_d.dual_point(&x), aug_d.gap_safe_survivors(&x)));
+        let ((dual_s, top_s, bot_s), surv_s) =
+            shard::with_threads(t, || (aug_s.dual_point(&x), aug_s.gap_safe_survivors(&x)));
+        assert_eq!(dual_d.to_bits(), dual_s.to_bits(), "dual value drifted at threads={t}");
+        assert_eq!(bits(&top_d), bits(&top_s), "θ_top drifted at threads={t}");
+        assert_eq!(bits(&bot_d), bits(&bot_s), "θ_bottom drifted at threads={t}");
+        assert_eq!(surv_d, surv_s, "survivor set drifted at threads={t}");
+        assert!(!surv_d.is_empty(), "survivor set must be nonempty");
+    }
+}
+
+/// The screened parallel λ-path — including the `gather_cols` sub-designs,
+/// which must stay sparse — reproduces the dense path's bits at every
+/// thread budget.
+#[test]
+fn screened_sparse_path_matches_dense_bitwise() {
+    let (sp, dense, b) = sparse_cohort(50, 2_000, 33);
+    let base = ssnal_en::path::PathOptions {
+        alpha: 0.9,
+        c_grid: ssnal_en::path::c_lambda_grid(0.9, 0.2, 8),
+        max_active: 0,
+        tol: 1e-6,
+        algorithm: ssnal_en::solver::types::Algorithm::SsnalEn,
+    };
+    for threads in [1usize, 4] {
+        let opts = ssnal_en::parallel::ParallelPathOptions {
+            base: base.clone(),
+            num_threads: threads,
+            chunking: ssnal_en::parallel::Chunking::Chains(2),
+            screening: true,
+        };
+        let pd = ssnal_en::parallel::solve_path_parallel(&dense, &b, &opts);
+        let ps = ssnal_en::parallel::solve_path_parallel(&sp, &b, &opts);
+        assert_eq!(pd.path.runs, ps.path.runs, "threads={threads}");
+        for (d, s) in pd.path.points.iter().zip(ps.path.points.iter()) {
+            assert_eq!(
+                bits(&d.result.x),
+                bits(&s.result.x),
+                "path point c={} drifted (threads={threads})",
+                d.c_lambda
+            );
+            assert_eq!(d.result.active_set, s.result.active_set);
+            assert_eq!(d.result.screen_survivors, s.result.screen_survivors);
+        }
     }
 }
