@@ -71,6 +71,13 @@ pub enum EnetError {
         /// Observations available.
         m: usize,
     },
+    /// Structurally invalid design data supplied by an untrusted caller
+    /// (e.g. malformed CSC arrays or a flat dense payload of the wrong
+    /// length in a serving request) — rejected before any matrix is built.
+    InvalidDesign {
+        /// Human-readable description of the defect.
+        reason: String,
+    },
     /// A prediction input with the wrong number of features.
     PredictShape {
         /// Feature count of the fitted design.
@@ -127,6 +134,7 @@ impl fmt::Display for EnetError {
                 f,
                 "cv folds must be 0 (disabled) or between 2 and m={m}, got {folds}"
             ),
+            EnetError::InvalidDesign { reason } => write!(f, "invalid design data: {reason}"),
             EnetError::PredictShape { expected, got } => write!(
                 f,
                 "prediction input has {got} features but the fit has {expected}"

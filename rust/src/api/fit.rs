@@ -9,7 +9,7 @@
 //! at workspace-cache cost, with results bitwise-identical to a cold fit.
 
 use crate::api::{Design, EnetError, EnetModel};
-use crate::linalg::{Mat, NewtonWorkspace, WorkspaceStats};
+use crate::linalg::{DesignRef, NewtonWorkspace, WorkspaceStats};
 use crate::runtime::PjrtEngine;
 use crate::parallel::{ChainReport, ParallelPathResult};
 use crate::path::{PathPoint, PathResult};
@@ -97,8 +97,12 @@ impl<'d> Fit<'d> {
     }
 
     /// Predict responses for new observations: `ŷ = A_new · x̂` (sparse
-    /// mat-vec over the active set).
-    pub fn predict(&self, a_new: &Mat) -> Result<Vec<f64>, EnetError> {
+    /// mat-vec over the active set). Accepts either storage kind — `&Mat`,
+    /// `&CscMat`, or `&DesignStorage` — so a model fit on a sparse CSC
+    /// cohort scores sparse held-out data without densifying it; the CSC
+    /// mat-vec is bitwise-identical to the dense one.
+    pub fn predict<'a>(&self, a_new: impl Into<DesignRef<'a>>) -> Result<Vec<f64>, EnetError> {
+        let a_new = a_new.into();
         if a_new.cols() != self.design.n() {
             return Err(EnetError::PredictShape {
                 expected: self.design.n(),
@@ -140,37 +144,80 @@ impl<'d> Fit<'d> {
         Ok(&self.result)
     }
 
+    /// Re-solve on the same design for a *batch* of responses, amortizing the
+    /// λmax resolution: for `(α, c_λ)` models all per-response `λ^max` values
+    /// are computed in one fused pass over the design's columns (a running
+    /// max per response), which reads `A` once instead of once per response —
+    /// bitwise-identical to resolving each response separately, because both
+    /// reduce the same `|aⱼᵀb|` column dots through the same in-order max
+    /// fold.
+    ///
+    /// All responses are validated up front (one bad response fails the whole
+    /// batch before any solve runs). Solves then run sequentially through the
+    /// warm workspace; the session is left at the state of the *last* response
+    /// in the batch, exactly as if [`Fit::refit`] had been called in a loop.
+    pub fn refit_many<B: AsRef<[f64]>>(&mut self, bs: &[B]) -> Result<Vec<SolveResult>, EnetError> {
+        for b in bs {
+            self.design.check_response(b.as_ref())?;
+        }
+        let lambdas = self.model.checked_lambdas_many(self.design.design_ref(), bs)?;
+        let mut results = Vec::with_capacity(bs.len());
+        for (b, &(lam1, lam2)) in bs.iter().zip(&lambdas) {
+            let (result, trace) = self.model.solve_once(
+                self.design.design_ref(),
+                b.as_ref(),
+                lam1,
+                lam2,
+                None,
+                &mut self.engine,
+                &mut self.ws,
+            )?;
+            self.lam1 = lam1;
+            self.lam2 = lam2;
+            self.result = result;
+            self.trace = trace;
+            results.push(self.result.clone());
+        }
+        Ok(results)
+    }
+
     /// Structured export of the latest solve (sparse coefficients: the
     /// `coefficients` array holds the values at `active_set`'s indices).
     pub fn to_json(&self) -> Json {
-        let r = &self.result;
-        Json::obj(vec![
-            ("kind", Json::Str("ssnal_en.fit".to_string())),
-            ("algorithm", Json::Str(r.algorithm.name().to_string())),
-            ("m", Json::Num(self.design.m() as f64)),
-            ("n", Json::Num(self.design.n() as f64)),
-            ("lam1", Json::Num(self.lam1)),
-            ("lam2", Json::Num(self.lam2)),
-            ("converged", Json::Bool(r.converged)),
-            ("iterations", Json::Num(r.iterations as f64)),
-            ("inner_iterations", Json::Num(r.inner_iterations as f64)),
-            ("residual", Json::Num(r.residual)),
-            ("objective", Json::Num(r.objective)),
-            (
-                "active_set",
-                Json::Arr(r.active_set.iter().map(|&j| Json::Num(j as f64)).collect()),
-            ),
-            (
-                "coefficients",
-                Json::Arr(r.active_set.iter().map(|&j| Json::Num(r.x[j])).collect()),
-            ),
-        ])
+        solve_json(self.design.m(), self.design.n(), self.lam1, self.lam2, &self.result)
     }
 
     /// [`Fit::to_json`] rendered as a compact JSON string.
     pub fn export_json(&self) -> String {
         self.to_json().to_string()
     }
+}
+
+/// The canonical JSON shape of one solve — shared by [`Fit::to_json`] and the
+/// serve handlers so a server response is byte-identical to a direct
+/// `Fit::export_json()` on the same solve.
+pub(crate) fn solve_json(m: usize, n: usize, lam1: f64, lam2: f64, r: &SolveResult) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.fit".to_string())),
+        ("algorithm", Json::Str(r.algorithm.name().to_string())),
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(n as f64)),
+        ("lam1", Json::Num(lam1)),
+        ("lam2", Json::Num(lam2)),
+        ("converged", Json::Bool(r.converged)),
+        ("iterations", Json::Num(r.iterations as f64)),
+        ("inner_iterations", Json::Num(r.inner_iterations as f64)),
+        ("residual", Json::Num(r.residual)),
+        ("objective", Json::Num(r.objective)),
+        (
+            "active_set",
+            Json::Arr(r.active_set.iter().map(|&j| Json::Num(j as f64)).collect()),
+        ),
+        (
+            "coefficients",
+            Json::Arr(r.active_set.iter().map(|&j| Json::Num(r.x[j])).collect()),
+        ),
+    ])
 }
 
 /// A solved λ-path with the parallel engine's diagnostics.

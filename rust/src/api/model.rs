@@ -362,8 +362,9 @@ impl EnetModel {
 
     // ---- internals ---------------------------------------------------------
 
-    /// Field-level validation shared by every workload.
-    fn validate_common(&self, _design: &Design<'_>) -> Result<(), EnetError> {
+    /// Field-level validation shared by every workload (also used by the
+    /// serve sessions, which drive `checked_lambdas`/`solve_once` directly).
+    pub(crate) fn validate_common(&self, _design: &Design<'_>) -> Result<(), EnetError> {
         crate::api::check_alpha(self.alpha)?;
         if !(self.solver.tol.is_finite() && self.solver.tol > 0.0) {
             return Err(EnetError::InvalidTolerance { tol: self.solver.tol });
@@ -414,15 +415,46 @@ impl EnetModel {
                 EnetProblem::lambdas_from_alpha(self.alpha, c, lmax)
             }
         };
-        let valid = lam1.is_finite()
-            && lam2.is_finite()
-            && lam1 >= 0.0
-            && lam2 >= 0.0
-            && (lam1 > 0.0 || lam2 > 0.0);
-        if !valid {
-            return Err(EnetError::InvalidPenalty { lam1, lam2 });
+        check_lambda_pair(lam1, lam2)
+    }
+
+    /// [`EnetModel::checked_lambdas`] for a batch of responses, with the λmax
+    /// resolution fused into one pass over the design's columns: for
+    /// `(α, c_λ)` models every response's `‖Aᵀbᵢ‖∞` is a running max over the
+    /// same per-column `|aⱼᵀbᵢ|` dots that [`EnetProblem::lambda_max`]
+    /// reduces, folded in the same column order — so the results are
+    /// bitwise-identical to per-response calls while `A` is read once instead
+    /// of once per response.
+    pub(crate) fn checked_lambdas_many<B: AsRef<[f64]>>(
+        &self,
+        a: DesignRef<'_>,
+        bs: &[B],
+    ) -> Result<Vec<(f64, f64)>, EnetError> {
+        match self.penalty {
+            Penalty::Lambda(l1, l2) => {
+                let pair = check_lambda_pair(l1, l2)?;
+                Ok(vec![pair; bs.len()])
+            }
+            Penalty::C(c) => {
+                if !(c.is_finite() && c > 0.0) {
+                    return Err(EnetError::InvalidCLambda { c });
+                }
+                let mut maxes = vec![0.0f64; bs.len()];
+                for j in 0..a.cols() {
+                    for (max, b) in maxes.iter_mut().zip(bs) {
+                        *max = max.max(a.col_dot(j, b.as_ref()).abs());
+                    }
+                }
+                maxes
+                    .into_iter()
+                    .map(|nrm| {
+                        let (lam1, lam2) =
+                            EnetProblem::lambdas_from_alpha(self.alpha, c, nrm / self.alpha);
+                        check_lambda_pair(lam1, lam2)
+                    })
+                    .collect()
+            }
         }
-        Ok((lam1, lam2))
     }
 
     /// One solve against caller-owned session state (the PJRT engine cache
@@ -442,15 +474,18 @@ impl EnetModel {
     ) -> Result<(SolveResult, Option<SsnalTrace>), EnetError> {
         match self.backend {
             Backend::Pjrt => {
-                if engine.is_none() {
-                    *engine = Some(PjrtEngine::load_dir(&self.artifacts_dir).map_err(|e| {
-                        EnetError::Backend(format!(
-                            "loading artifacts from {}: {e}",
-                            self.artifacts_dir.display()
-                        ))
-                    })?);
-                }
-                let engine = engine.as_ref().expect("pjrt engine initialized above");
+                let engine = match engine {
+                    Some(engine) => &*engine,
+                    None => {
+                        let loaded = PjrtEngine::load_dir(&self.artifacts_dir).map_err(|e| {
+                            EnetError::Backend(format!(
+                                "loading artifacts from {}: {e}",
+                                self.artifacts_dir.display()
+                            ))
+                        })?;
+                        &*engine.insert(loaded)
+                    }
+                };
                 let p = EnetProblem::new(a, b, lam1, lam2);
                 let res = pjrt_solver::solve_pjrt(engine, &p, &self.solver.ssnal_options())
                     .map_err(|e| EnetError::Backend(format!("{e:#}")))?;
@@ -523,6 +558,20 @@ impl EnetModel {
             algorithm: self.algorithm,
         })
     }
+}
+
+/// The λ-pair validity contract shared by [`EnetModel::checked_lambdas`] and
+/// [`EnetModel::checked_lambdas_many`]: finite, nonnegative, not both zero.
+fn check_lambda_pair(lam1: f64, lam2: f64) -> Result<(f64, f64), EnetError> {
+    let valid = lam1.is_finite()
+        && lam2.is_finite()
+        && lam1 >= 0.0
+        && lam2 >= 0.0
+        && (lam1 > 0.0 || lam2 > 0.0);
+    if !valid {
+        return Err(EnetError::InvalidPenalty { lam1, lam2 });
+    }
+    Ok((lam1, lam2))
 }
 
 #[cfg(test)]

@@ -1473,6 +1473,255 @@ pub fn sparse_design_json(rows: &[SparseDesignRow], n: usize, m: usize, density:
     .to_string()
 }
 
+/// One concurrency level of the serve bench: N keep-alive clients hammering
+/// one warm session with refit requests, each response checked byte-for-byte
+/// against the direct `api::Fit` call it must equal.
+#[derive(Clone, Debug)]
+pub struct ServeBenchRow {
+    /// Concurrent keep-alive clients.
+    pub clients: usize,
+    /// Total requests this row served (`clients × requests_per_client`).
+    pub requests: usize,
+    /// Median request latency, seconds.
+    pub p50_seconds: f64,
+    /// 95th-percentile request latency, seconds.
+    pub p95_seconds: f64,
+    /// Wall-clock for the whole row, seconds.
+    pub total_seconds: f64,
+    /// Whether every response (this row's and the cold/warm prelude's) was
+    /// byte-identical to the direct `api::` call on the same solve.
+    pub bitwise_equal: bool,
+}
+
+/// Value at quantile `q` of an ascending-sorted latency list (nearest rank).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Measure the serve front end on an in-process server (ephemeral port):
+/// register one synthetic design, time a cold `/v1/fit` (session creation +
+/// solve from scratch) against warm `/v1/refit`s on the same response (full
+/// Gram/Cholesky-cache hits), then sweep concurrency levels where every
+/// client refits on its own deterministic response and every response byte
+/// is compared against a precomputed direct [`crate::api::Fit`] call.
+///
+/// Returns the table, the per-concurrency rows, and the
+/// `(cold_fit_seconds, warm_refit_seconds)` pair the caller gates on.
+pub fn serve_bench_rows(
+    n: usize,
+    m: usize,
+    clients_list: &[usize],
+    requests_per_client: usize,
+    tol: f64,
+    seed: u64,
+) -> (Table, Vec<ServeBenchRow>, f64, f64) {
+    use crate::serve::{Client, Server, ServerConfig};
+    use crate::util::timer::time_it;
+
+    let requests_per_client = requests_per_client.max(1);
+    let prob = generate_synthetic(&SyntheticSpec {
+        m,
+        n,
+        n0: (n / 100).clamp(2, 10),
+        x_star: 5.0,
+        snr: 5.0,
+        seed,
+    });
+    // Response i is the base response rotated by i — deterministic, shape-
+    // preserving, and i = 0 is the stored response itself (so the warm-refit
+    // prelude re-solves the exact cold-fit problem through the factor cache).
+    let response = |i: usize| -> Vec<f64> { (0..m).map(|k| prob.b[(k + i) % m]).collect() };
+
+    // Direct-api reference: the byte strings every server response must equal.
+    let design = Design::new(&prob.a, &prob.b).expect("serve bench design is valid");
+    let model = EnetModel::new().alpha_c(0.8, 0.5).tol(tol);
+    let mut reference = model.fit(&design).expect("serve bench reference fit");
+    let expected_fit = reference.export_json();
+    let max_requests =
+        clients_list.iter().map(|&c| c.max(1)).max().unwrap_or(1) * requests_per_client;
+    let mut expected = Vec::with_capacity(max_requests);
+    for i in 0..max_requests {
+        reference.refit(&response(i)).expect("serve bench reference refit");
+        expected.push(reference.export_json());
+    }
+
+    // Request bodies. Json's number formatting round-trips f64 exactly, so
+    // the server fits bit-identical inputs.
+    let mut dense = Vec::with_capacity(m * n);
+    for i in 0..m {
+        for j in 0..n {
+            dense.push(Json::Num(prob.a.col(j)[i]));
+        }
+    }
+    let design_body = Json::obj(vec![
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(n as f64)),
+        ("dense", Json::Arr(dense)),
+        ("b", Json::Arr(prob.b.iter().map(|&v| Json::Num(v)).collect())),
+    ])
+    .to_string();
+    let model_json = || Json::obj(vec![("c", Json::Num(0.5)), ("tol", Json::Num(tol))]);
+
+    let max_clients = clients_list.iter().map(|&c| c.max(1)).max().unwrap_or(1);
+    let cfg = ServerConfig {
+        port: 0,
+        max_inflight: 2 * max_clients + 8,
+        ..ServerConfig::default()
+    };
+    let server = Server::bind(cfg).expect("bind ephemeral serve port");
+    let handle = server.spawn().expect("spawn serve accept loop");
+    let addr = handle.addr();
+
+    let mut prelude = Client::connect(&addr).expect("connect serve bench client");
+    let (status, body) =
+        prelude.request("POST", "/v1/designs", &design_body).expect("register design");
+    assert_eq!(status, 200, "design registration failed: {body}");
+    let design_id = Json::parse(&body)
+        .ok()
+        .and_then(|j| j.get("design_id").and_then(|v| v.as_str().map(String::from)))
+        .expect("design_id in registration response");
+
+    let make_fit_body = || {
+        Json::obj(vec![("design_id", Json::Str(design_id.clone())), ("model", model_json())])
+            .to_string()
+    };
+    let make_refit_body = |i: usize| {
+        Json::obj(vec![
+            ("design_id", Json::Str(design_id.clone())),
+            ("model", model_json()),
+            ("b", Json::Arr(response(i).iter().map(|&v| Json::Num(v)).collect())),
+        ])
+        .to_string()
+    };
+
+    // Cold: the first fit creates the session and solves from scratch.
+    let fit_body = make_fit_body();
+    let (resp, cold_fit_seconds) = time_it(|| prelude.request("POST", "/v1/fit", &fit_body));
+    let (status, body) = resp.expect("cold fit request");
+    let mut prelude_bitwise = status == 200 && body == expected_fit;
+
+    // Warm: refits on the stored response re-solve the identical problem
+    // through the warm workspace (buffer arena + full factor-cache hits).
+    let warm_reps = 3;
+    let mut warm_total = 0.0;
+    for _ in 0..warm_reps {
+        let refit_body = make_refit_body(0);
+        let (resp, secs) = time_it(|| prelude.request("POST", "/v1/refit", &refit_body));
+        let (status, body) = resp.expect("warm refit request");
+        prelude_bitwise &= status == 200 && body == expected[0];
+        warm_total += secs;
+    }
+    let warm_refit_seconds = warm_total / warm_reps as f64;
+
+    let mut t = Table::new(&["clients", "requests", "p50(s)", "p95(s)", "total(s)", "bitwise"])
+        .with_title(&format!(
+            "serve front end: {m}×{n} design, cold fit {} vs warm refit {}",
+            fmt_secs(cold_fit_seconds),
+            fmt_secs(warm_refit_seconds)
+        ));
+    let mut rows: Vec<ServeBenchRow> = Vec::with_capacity(clients_list.len());
+    for &clients in clients_list {
+        let clients = clients.max(1);
+        let total = clients * requests_per_client;
+        let addr_ref: &str = &addr;
+        let expected_ref: &[String] = &expected;
+        let make_refit_body = &make_refit_body;
+        let ((mut lats, row_bitwise), total_seconds) = time_it(|| {
+            std::thread::scope(|scope| {
+                let workers: Vec<_> = (0..clients)
+                    .map(|c| {
+                        scope.spawn(move || {
+                            let mut client =
+                                Client::connect(addr_ref).expect("connect serve bench client");
+                            let mut lat = Vec::with_capacity(requests_per_client);
+                            let mut ok = true;
+                            for r in 0..requests_per_client {
+                                let i = c * requests_per_client + r;
+                                let body = make_refit_body(i);
+                                let (resp, secs) =
+                                    time_it(|| client.request("POST", "/v1/refit", &body));
+                                let (status, rbody) = resp.expect("serve bench refit");
+                                ok &= status == 200 && rbody == expected_ref[i];
+                                lat.push(secs);
+                            }
+                            (lat, ok)
+                        })
+                    })
+                    .collect();
+                let mut lats = Vec::with_capacity(total);
+                let mut ok = true;
+                for w in workers {
+                    let (lat, o) = w.join().expect("serve bench client thread");
+                    lats.extend(lat);
+                    ok &= o;
+                }
+                (lats, ok)
+            })
+        });
+        lats.sort_by(|a, b| a.total_cmp(b));
+        let row = ServeBenchRow {
+            clients,
+            requests: total,
+            p50_seconds: percentile(&lats, 0.50),
+            p95_seconds: percentile(&lats, 0.95),
+            total_seconds,
+            bitwise_equal: prelude_bitwise && row_bitwise,
+        };
+        t.row(vec![
+            format!("{}", row.clients),
+            format!("{}", row.requests),
+            fmt_secs(row.p50_seconds),
+            fmt_secs(row.p95_seconds),
+            fmt_secs(row.total_seconds),
+            format!("{}", row.bitwise_equal),
+        ]);
+        rows.push(row);
+    }
+    handle.stop();
+    (t, rows, cold_fit_seconds, warm_refit_seconds)
+}
+
+/// Render the serve bench as the JSON payload CI uploads
+/// (`BENCH_serve.json`). Rows carry no `threads` key, so the baseline diff
+/// matches them by index — keep the clients list order stable.
+pub fn serve_bench_json(
+    rows: &[ServeBenchRow],
+    n: usize,
+    m: usize,
+    requests_per_client: usize,
+    cold_fit_seconds: f64,
+    warm_refit_seconds: f64,
+) -> String {
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("clients", Json::Num(r.clients as f64)),
+                ("requests", Json::Num(r.requests as f64)),
+                ("p50_seconds", Json::Num(r.p50_seconds)),
+                ("p95_seconds", Json::Num(r.p95_seconds)),
+                ("total_seconds", Json::Num(r.total_seconds)),
+                ("bitwise_equal", Json::Bool(r.bitwise_equal)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("serve".to_string())),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("requests_per_client", Json::Num(requests_per_client as f64)),
+        ("cold_fit_seconds", Json::Num(cold_fit_seconds)),
+        ("warm_refit_seconds", Json::Num(warm_refit_seconds)),
+        ("warm_speedup", Json::Num(cold_fit_seconds / warm_refit_seconds.max(1e-12))),
+        ("rows", Json::Arr(row_objs)),
+    ])
+    .to_string()
+}
+
 #[cfg(test)]
 mod shard_bench_tests {
     use super::*;
@@ -1557,5 +1806,27 @@ mod shard_bench_tests {
         assert!(js.contains("sparse_design"), "{js}");
         assert!(js.contains("screen_speedup"), "{js}");
         assert!(js.contains("density"), "{js}");
+    }
+
+    #[test]
+    fn serve_bench_rows_tiny() {
+        let (t, rows, cold, warm) = serve_bench_rows(400, 30, &[1, 2], 2, 1e-5, 13);
+        assert_eq!(t.len(), 2);
+        assert_eq!(rows.len(), 2);
+        // Byte-identical server responses are the load-bearing contract; the
+        // strict warm < cold gate runs in the release bench
+        // (`cmd_bench_parallel`) — here (debug, tiny sizes) only guard
+        // against gross inversions so timing jitter cannot flake the suite.
+        assert!(rows.iter().all(|r| r.bitwise_equal), "{rows:?}");
+        assert!(cold > 0.0 && warm > 0.0);
+        assert!(cold / warm > 0.2, "warm refit grossly slower than cold fit: {cold} vs {warm}");
+        for r in &rows {
+            assert!(r.p50_seconds > 0.0 && r.p95_seconds >= r.p50_seconds, "{rows:?}");
+            assert_eq!(r.requests, r.clients * 2);
+        }
+        let js = serve_bench_json(&rows, 400, 30, 2, cold, warm);
+        assert!(js.contains("\"bench\":\"serve\""), "{js}");
+        assert!(js.contains("warm_speedup"), "{js}");
+        assert!(js.contains("p95_seconds"), "{js}");
     }
 }

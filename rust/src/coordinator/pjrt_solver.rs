@@ -126,22 +126,37 @@ pub fn solve_pjrt(
             }
             inner += 1;
 
-            // CG on V d = −grad with the PJRT hess_vec operator
+            // CG on V d = −grad with the PJRT hess_vec operator. The CG
+            // driver's matvec closure cannot return a Result, so a graph
+            // failure is captured in `hv_err` (zeroing the output so CG
+            // terminates benignly) and surfaced once the solve returns.
             let kappa = sigma / (1.0 + sigma * p.lam2);
             let rhs: Vec<f64> = eval.grad.iter().map(|g| -g).collect();
             let mut d = vec![0.0; m];
             let mask = eval.mask.clone();
+            let mut hv_err: Option<Error> = None;
             crate::linalg::solve_cg(
                 |v, out| {
-                    let hv = hess_vec(engine, &at_lit, &mask, kappa, v, p)
-                        .expect("pjrt hess_vec failed");
-                    out.copy_from_slice(&hv);
+                    if hv_err.is_some() {
+                        out.iter_mut().for_each(|o| *o = 0.0);
+                        return;
+                    }
+                    match hess_vec(engine, &at_lit, &mask, kappa, v, p) {
+                        Ok(hv) => out.copy_from_slice(&hv),
+                        Err(e) => {
+                            hv_err = Some(e);
+                            out.iter_mut().for_each(|o| *o = 0.0);
+                        }
+                    }
                 },
                 &rhs,
                 &mut d,
                 1e-6,
                 200,
             );
+            if let Some(e) = hv_err {
+                return Err(Error::msg(format!("pjrt hess_vec failed: {e}")));
+            }
 
             // Armijo backtracking using ψ from the graph
             let gtd = blas::dot(&eval.grad, &d);

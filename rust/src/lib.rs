@@ -77,6 +77,12 @@
 //! * [`runtime`] — the artifact manifest/buffer contract for the AOT-compiled
 //!   JAX/Pallas graphs (execution needs an XLA/PJRT binding the offline
 //!   toolchain does not ship; the engine degrades to a descriptive error),
+//! * [`serve`] — the `ssnal-en serve` HTTP/1.1 front end: a fingerprint-keyed
+//!   design registry, an LRU of warm [`Fit`]-equivalent sessions, batched
+//!   refits, per-request thread budgeting and a total `EnetError` → HTTP
+//!   status mapping — all over `std::net`, no dependencies. Rides on the
+//!   crate's determinism contracts: server responses are byte-identical to
+//!   direct [`api`] calls,
 //! * [`coordinator`] — **deprecated compatibility shim** over the facade
 //!   (kept so pre-facade callers compile; new code uses [`api`]),
 //! * [`linalg`] / [`rng`] / [`util`] / [`bench`] — the from-scratch substrates
@@ -126,6 +132,7 @@ pub mod path;
 pub mod prox;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod tuning;
 pub mod util;

@@ -62,6 +62,9 @@ pub struct CscMat {
 
 impl CscMat {
     /// Build from raw CSC arrays, validating the structural invariants.
+    /// Panics on invalid input — in-crate constructors have already
+    /// established the invariants; untrusted data (e.g. a serving request)
+    /// goes through [`CscMat::try_new`] instead.
     pub fn new(
         rows: usize,
         cols: usize,
@@ -69,21 +72,65 @@ impl CscMat {
         row_idx: Vec<usize>,
         values: Vec<f64>,
     ) -> Self {
-        assert_eq!(col_ptr.len(), cols + 1, "col_ptr must have cols + 1 entries");
-        assert_eq!(col_ptr[0], 0, "col_ptr must start at 0");
-        assert_eq!(*col_ptr.last().unwrap(), row_idx.len(), "col_ptr must end at nnz");
-        assert_eq!(row_idx.len(), values.len(), "row_idx and values must be parallel");
+        match Self::try_new(rows, cols, col_ptr, row_idx, values) {
+            Ok(m) => m,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible [`CscMat::new`]: validate the structural invariants and
+    /// return a description of the first violation instead of panicking —
+    /// the entry point for CSC arrays arriving from untrusted callers
+    /// (`ssnal-en serve` request bodies).
+    pub fn try_new(
+        rows: usize,
+        cols: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Result<Self, String> {
+        if col_ptr.len() != cols + 1 {
+            return Err(format!(
+                "col_ptr must have cols + 1 entries (got {} for {cols} columns)",
+                col_ptr.len()
+            ));
+        }
+        if col_ptr[0] != 0 {
+            return Err("col_ptr must start at 0".to_string());
+        }
+        if col_ptr[cols] != row_idx.len() {
+            return Err(format!(
+                "col_ptr must end at nnz ({} vs {})",
+                col_ptr[cols],
+                row_idx.len()
+            ));
+        }
+        if row_idx.len() != values.len() {
+            return Err(format!(
+                "row_idx and values must be parallel ({} vs {})",
+                row_idx.len(),
+                values.len()
+            ));
+        }
         for j in 0..cols {
-            assert!(col_ptr[j] <= col_ptr[j + 1], "col_ptr must be non-decreasing");
+            if col_ptr[j] > col_ptr[j + 1] {
+                return Err(format!("col_ptr must be non-decreasing (column {j})"));
+            }
             let rs = &row_idx[col_ptr[j]..col_ptr[j + 1]];
             for w in rs.windows(2) {
-                assert!(w[0] < w[1], "row indices must be strictly ascending per column");
+                if w[0] >= w[1] {
+                    return Err(format!(
+                        "row indices must be strictly ascending per column (column {j})"
+                    ));
+                }
             }
             if let Some(&last) = rs.last() {
-                assert!(last < rows, "row index {last} out of bounds for {rows} rows");
+                if last >= rows {
+                    return Err(format!("row index {last} out of bounds for {rows} rows"));
+                }
             }
         }
-        Self { rows, cols, col_ptr, row_idx, values }
+        Ok(Self { rows, cols, col_ptr, row_idx, values })
     }
 
     /// Convert a dense matrix, dropping exact zeros (`±0.0`).
@@ -162,6 +209,20 @@ impl CscMat {
     #[inline]
     pub fn values(&self) -> &[f64] {
         &self.values
+    }
+
+    /// The raw column-offset slice, length `cols + 1` (design
+    /// fingerprinting / serialization).
+    #[inline]
+    pub fn col_ptr(&self) -> &[usize] {
+        &self.col_ptr
+    }
+
+    /// The raw row-index slice, parallel to [`CscMat::values`] (design
+    /// fingerprinting / serialization).
+    #[inline]
+    pub fn row_idx(&self) -> &[usize] {
+        &self.row_idx
     }
 
     /// Element access (row, col) — O(log nnz_j); tuning/tests only.

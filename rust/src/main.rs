@@ -62,6 +62,7 @@ fn main() {
         "bench-parallel" => cmd_bench_parallel(&args),
         "bench-check" => cmd_bench_check(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
+        "serve" => cmd_serve(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -106,8 +107,12 @@ fn print_help() {
          \x20                [--pool-out BENCH_pool_dispatch.json]\n\
          \x20                --newton-sizes 160:1200:40,320:2000:120 --newton-reps 3\n\
          \x20                [--no-newton-bench] [--newton-out BENCH_newton_workspace.json]\n\
+         \x20                --serve-n 2000 --serve-m 100 --serve-clients 1,8,64 --serve-requests 4\n\
+         \x20                [--no-serve-bench] [--serve-out BENCH_serve.json]\n\
          bench-check      --current BENCH_x.json --baseline benches/baselines/BENCH_x.json\n\
-         artifacts-check  [--artifacts-dir artifacts]\n"
+         artifacts-check  [--artifacts-dir artifacts]\n\
+         serve            --host 127.0.0.1 --port 7878 --sessions 16 --max-inflight 32\n\
+         \x20                --threads 0 --max-body-mb 256\n"
     );
 }
 
@@ -564,6 +569,40 @@ fn cmd_bench_parallel(args: &Args) -> Result<()> {
         }
     }
 
+    // Serve front end: cold fit vs warm refit through the HTTP path, plus
+    // latency percentiles at each concurrency level, every response checked
+    // byte-for-byte against the direct api:: call it must equal.
+    if !args.get_flag("no-serve-bench") {
+        let serve_clients =
+            args.get_usize_list("serve-clients", &[1, 8, 64]).map_err(Error::msg)?;
+        let serve_n = args.get_usize("serve-n", 2_000).map_err(Error::msg)?;
+        let serve_m = args.get_usize("serve-m", 100).map_err(Error::msg)?;
+        let serve_requests = args.get_usize("serve-requests", 4).map_err(Error::msg)?;
+        let (vt, vrows, cold, warm) =
+            tables::serve_bench_rows(serve_n, serve_m, &serve_clients, serve_requests, tol, seed);
+        println!();
+        vt.print();
+        println!("\nwarm refit vs cold fit through the server: {:.2}x", cold / warm.max(1e-12));
+        if let Some(path) = args.get("serve-out") {
+            let json = tables::serve_bench_json(&vrows, serve_n, serve_m, serve_requests, cold, warm);
+            if let Some(parent) = PathBuf::from(path).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, json)?;
+            println!("wrote {path}");
+        }
+        determinism_ok &= vrows.iter().all(|r| r.bitwise_equal);
+        // The warm-session claim is a gate: a refit through a warm server
+        // session skips session construction and hits the Gram/Cholesky
+        // cache, so it must be strictly cheaper than the cold fit (the
+        // margin is wide enough not to flake on noisy boxes).
+        if warm >= cold {
+            return Err(Error::msg(format!(
+                "warm server refit no cheaper than cold fit ({warm:.2e}s vs {cold:.2e}s)"
+            )));
+        }
+    }
+
     // The determinism contract is load-bearing: a bench run that observes a
     // bitwise divergence must fail loudly (CI runs this on every push).
     if !determinism_ok {
@@ -624,6 +663,30 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
         )));
     }
     println!("bench-check ok: {current} vs {baseline} ({} warning(s))", rep.warnings.len());
+    Ok(())
+}
+
+/// `ssnal-en serve` — run the HTTP front end on the calling thread until
+/// killed (see `ssnal_en::serve` for the wire format).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = ssnal_en::serve::ServerConfig {
+        host: args.get_str("host", "127.0.0.1"),
+        port: args.get_usize("port", 7878).map_err(Error::msg)? as u16,
+        sessions: args.get_usize("sessions", 16).map_err(Error::msg)?,
+        max_inflight: args.get_usize("max-inflight", 32).map_err(Error::msg)?,
+        threads: args.get_usize("threads", 0).map_err(Error::msg)?,
+        max_body: args.get_usize("max-body-mb", 256).map_err(Error::msg)? << 20,
+    };
+    let server = ssnal_en::serve::Server::bind(cfg.clone())?;
+    let addr = server.local_addr()?;
+    println!(
+        "ssnal-en serve listening on http://{addr} (sessions={}, max-inflight={}, threads={})",
+        cfg.sessions,
+        cfg.max_inflight,
+        ssnal_en::parallel::resolve_threads(cfg.threads)
+    );
+    println!("routes: GET /v1/health · POST /v1/designs /v1/fit /v1/refit /v1/predict /v1/path");
+    server.run()?;
     Ok(())
 }
 

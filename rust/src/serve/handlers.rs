@@ -1,0 +1,502 @@
+//! Request handlers: JSON wire format in, JSON out, typed errors throughout.
+//!
+//! The contract that matters here is **no panic is reachable from a request
+//! body**: every malformed field becomes a [`ServeError`] (and so an HTTP
+//! status), every solver failure arrives as a typed
+//! [`EnetError`] — and the status mapping below matches on every variant by
+//! name, so adding an error variant without classifying it is a compile
+//! error, not a 500 at 2am.
+//!
+//! Fit-shaped responses are rendered by the same `solve_json` as
+//! [`crate::api::Fit::to_json`], which makes a server response byte-identical
+//! to the equivalent direct `api::` call.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::api::fit::solve_json;
+use crate::api::{EnetError, EnetModel};
+use crate::linalg::{CscMat, DesignStorage, Mat};
+use crate::parallel::resolve_threads;
+use crate::serve::http::Request;
+use crate::serve::registry::{lock, Session, StoredDesign};
+use crate::serve::server::ServerState;
+use crate::solver::types::Algorithm;
+use crate::util::json::Json;
+
+/// Everything a request can fail with, mapped totally onto HTTP statuses.
+#[derive(Debug)]
+pub enum ServeError {
+    /// A typed error from the solve stack.
+    Api(EnetError),
+    /// The request body or fields did not parse.
+    BadRequest(String),
+    /// Unknown route or unknown `design_id`.
+    NotFound(String),
+    /// Known path, wrong method.
+    MethodNotAllowed,
+    /// Admission control rejected the request.
+    Busy {
+        /// Requests in flight, this one included.
+        inflight: usize,
+        /// The configured cap.
+        max_inflight: usize,
+    },
+}
+
+impl From<EnetError> for ServeError {
+    fn from(e: EnetError) -> Self {
+        ServeError::Api(e)
+    }
+}
+
+impl ServeError {
+    /// The HTTP status for this error. The `EnetError` arm lists every
+    /// variant — no wildcard — so the mapping stays total by construction.
+    pub fn status(&self) -> u16 {
+        match self {
+            ServeError::Api(e) => match e {
+                EnetError::ShapeMismatch { .. }
+                | EnetError::EmptyDesign { .. }
+                | EnetError::NonFinite { .. }
+                | EnetError::InvalidPenalty { .. }
+                | EnetError::InvalidAlpha { .. }
+                | EnetError::InvalidCLambda { .. }
+                | EnetError::InvalidGrid { .. }
+                | EnetError::InvalidTolerance { .. }
+                | EnetError::InvalidIterations
+                | EnetError::InvalidFolds { .. }
+                | EnetError::InvalidDesign { .. }
+                | EnetError::PredictShape { .. }
+                | EnetError::WarmStartShape { .. } => 400,
+                EnetError::Unsupported { .. } => 422,
+                EnetError::Backend(_) => 502,
+            },
+            ServeError::BadRequest(_) => 400,
+            ServeError::NotFound(_) => 404,
+            ServeError::MethodNotAllowed => 405,
+            ServeError::Busy { .. } => 503,
+        }
+    }
+
+    /// Human-readable description for the error body.
+    pub fn message(&self) -> String {
+        match self {
+            ServeError::Api(e) => e.to_string(),
+            ServeError::BadRequest(msg) => msg.clone(),
+            ServeError::NotFound(what) => format!("{what} not found"),
+            ServeError::MethodNotAllowed => "method not allowed".to_string(),
+            ServeError::Busy { inflight, max_inflight } => format!(
+                "server at capacity ({inflight} requests in flight, cap {max_inflight}); retry"
+            ),
+        }
+    }
+}
+
+/// The uniform JSON error body.
+pub fn error_body(status: u16, message: &str) -> String {
+    Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.error".to_string())),
+        ("status", Json::Num(status as f64)),
+        ("error", Json::Str(message.to_string())),
+    ])
+    .to_string()
+}
+
+/// Dispatch one request to its handler; errors become `(status, error body)`.
+pub fn handle(state: &ServerState, req: &Request) -> (u16, String) {
+    match route(state, req) {
+        Ok(body) => (200, body),
+        Err(e) => {
+            let status = e.status();
+            (status, error_body(status, &e.message()))
+        }
+    }
+}
+
+fn route(state: &ServerState, req: &Request) -> Result<String, ServeError> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/v1/health") => health(state),
+        ("POST", "/v1/designs") => register_design(state, &parse_body(&req.body)?),
+        ("POST", "/v1/fit") => fit(state, &parse_body(&req.body)?),
+        ("POST", "/v1/refit") => refit(state, &parse_body(&req.body)?),
+        ("POST", "/v1/predict") => predict(state, &parse_body(&req.body)?),
+        ("POST", "/v1/path") => path(state, &parse_body(&req.body)?),
+        (_, "/v1/health" | "/v1/designs" | "/v1/fit" | "/v1/refit" | "/v1/predict" | "/v1/path") => {
+            Err(ServeError::MethodNotAllowed)
+        }
+        _ => Err(ServeError::NotFound(format!("route {} {}", req.method, req.path))),
+    }
+}
+
+// ---- request parsing --------------------------------------------------------
+
+fn parse_body(body: &[u8]) -> Result<Json, ServeError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| ServeError::BadRequest("body is not UTF-8".to_string()))?;
+    if text.trim().is_empty() {
+        return Ok(Json::Obj(BTreeMap::new()));
+    }
+    Json::parse(text).map_err(|e| ServeError::BadRequest(format!("invalid JSON body: {e}")))
+}
+
+fn num_field(spec: &Json, key: &str) -> Result<Option<f64>, ServeError> {
+    match spec.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => match v.as_f64() {
+            Some(x) => Ok(Some(x)),
+            None => Err(ServeError::BadRequest(format!("field {key:?} must be a number"))),
+        },
+    }
+}
+
+fn usize_field(spec: &Json, key: &str) -> Result<Option<usize>, ServeError> {
+    match spec.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => match v.as_usize() {
+            Some(x) => Ok(Some(x)),
+            None => Err(ServeError::BadRequest(format!(
+                "field {key:?} must be a non-negative integer"
+            ))),
+        },
+    }
+}
+
+fn str_field<'a>(spec: &'a Json, key: &str) -> Result<Option<&'a str>, ServeError> {
+    match spec.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => match v.as_str() {
+            Some(s) => Ok(Some(s)),
+            None => Err(ServeError::BadRequest(format!("field {key:?} must be a string"))),
+        },
+    }
+}
+
+fn f64_vec(v: &Json, what: &str) -> Result<Vec<f64>, ServeError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| ServeError::BadRequest(format!("{what} must be an array of numbers")))?;
+    arr.iter()
+        .map(|x| {
+            x.as_f64()
+                .ok_or_else(|| ServeError::BadRequest(format!("{what} must contain only numbers")))
+        })
+        .collect()
+}
+
+fn usize_vec(v: &Json, what: &str) -> Result<Vec<usize>, ServeError> {
+    let arr = v.as_arr().ok_or_else(|| {
+        ServeError::BadRequest(format!("{what} must be an array of non-negative integers"))
+    })?;
+    arr.iter()
+        .map(|x| {
+            x.as_usize().ok_or_else(|| {
+                ServeError::BadRequest(format!("{what} must contain only non-negative integers"))
+            })
+        })
+        .collect()
+}
+
+/// Parse a matrix spec: `{"m", "n", "dense": [row-major values]}` or
+/// `{"m", "n", "col_ptr", "row_idx", "values"}` (CSC). CSC structure defects
+/// surface as `EnetError::InvalidDesign` via `CscMat::try_new` — the same
+/// validation the library applies, never a panic.
+fn parse_matrix(spec: &Json, what: &str) -> Result<DesignStorage, ServeError> {
+    let m = usize_field(spec, "m")?
+        .ok_or_else(|| ServeError::BadRequest(format!("{what}: missing \"m\" (rows)")))?;
+    let n = usize_field(spec, "n")?
+        .ok_or_else(|| ServeError::BadRequest(format!("{what}: missing \"n\" (columns)")))?;
+    match (spec.get("dense"), spec.get("col_ptr")) {
+        (Some(dense), None) => {
+            let values = f64_vec(dense, &format!("{what}.dense"))?;
+            let expect = m
+                .checked_mul(n)
+                .ok_or_else(|| ServeError::BadRequest(format!("{what}: m*n overflows")))?;
+            if values.len() != expect {
+                return Err(ServeError::BadRequest(format!(
+                    "{what}: \"dense\" has {} values, expected m*n = {expect}",
+                    values.len()
+                )));
+            }
+            Ok(DesignStorage::from(Mat::from_row_major(m, n, &values)))
+        }
+        (None, Some(col_ptr)) => {
+            let col_ptr = usize_vec(col_ptr, &format!("{what}.col_ptr"))?;
+            let row_idx = match spec.get("row_idx") {
+                Some(v) => usize_vec(v, &format!("{what}.row_idx"))?,
+                None => {
+                    return Err(ServeError::BadRequest(format!("{what}: missing \"row_idx\"")))
+                }
+            };
+            let values = match spec.get("values") {
+                Some(v) => f64_vec(v, &format!("{what}.values"))?,
+                None => return Err(ServeError::BadRequest(format!("{what}: missing \"values\""))),
+            };
+            let csc = CscMat::try_new(m, n, col_ptr, row_idx, values)
+                .map_err(|reason| ServeError::Api(EnetError::InvalidDesign { reason }))?;
+            Ok(DesignStorage::from(csc))
+        }
+        (Some(_), Some(_)) => Err(ServeError::BadRequest(format!(
+            "{what}: give \"dense\" or CSC arrays, not both"
+        ))),
+        (None, None) => Err(ServeError::BadRequest(format!(
+            "{what}: missing matrix payload (\"dense\" or \"col_ptr\"/\"row_idx\"/\"values\")"
+        ))),
+    }
+}
+
+/// Parse the string name of an [`Algorithm`] — the same names
+/// `Algorithm::name` renders and the CLI accepts.
+fn parse_algorithm(name: &str) -> Result<Algorithm, ServeError> {
+    match name {
+        "ssnal-en" => Ok(Algorithm::SsnalEn),
+        "cd-naive" => Ok(Algorithm::CdNaive),
+        "cd-cov" => Ok(Algorithm::CdCovariance),
+        "fista" => Ok(Algorithm::Fista),
+        "prox-grad" => Ok(Algorithm::ProximalGradient),
+        "admm" => Ok(Algorithm::Admm),
+        "gap-safe" => Ok(Algorithm::CdGapSafe),
+        "celer" => Ok(Algorithm::Celer),
+        other => Err(ServeError::BadRequest(format!(
+            "unknown algorithm {other:?} (ssnal-en|cd-naive|cd-cov|fista|prox-grad|admm|gap-safe|celer)"
+        ))),
+    }
+}
+
+/// Parse the optional `"model"` object into an [`EnetModel`] plus the
+/// canonical session key (the spec re-serialized — `Json::Obj` is a
+/// `BTreeMap`, so equivalent specs produce the same key regardless of field
+/// order in the request).
+fn parse_model(spec: Option<&Json>) -> Result<(EnetModel, String), ServeError> {
+    let Some(spec) = spec else {
+        return Ok((EnetModel::new(), "{}".to_string()));
+    };
+    let Json::Obj(fields) = spec else {
+        return Err(ServeError::BadRequest("\"model\" must be an object".to_string()));
+    };
+    for key in fields.keys() {
+        match key.as_str() {
+            "alpha" | "c" | "lam1" | "lam2" | "tol" | "max_iters" | "algorithm" | "grid"
+            | "max_active" => {}
+            "threads" => {
+                return Err(ServeError::BadRequest(
+                    "\"model.threads\" is not accepted: the server owns thread budgeting \
+                     (see the --threads server flag)"
+                        .to_string(),
+                ))
+            }
+            other => return Err(ServeError::BadRequest(format!("unknown model field {other:?}"))),
+        }
+    }
+    let mut model = EnetModel::new();
+    let alpha = num_field(spec, "alpha")?;
+    let c = num_field(spec, "c")?;
+    let lam1 = num_field(spec, "lam1")?;
+    let lam2 = num_field(spec, "lam2")?;
+    match (lam1, lam2, c) {
+        (Some(l1), Some(l2), None) => {
+            if alpha.is_some() {
+                return Err(ServeError::BadRequest(
+                    "\"alpha\" does not combine with explicit (\"lam1\", \"lam2\")".to_string(),
+                ));
+            }
+            model = model.lambda(l1, l2);
+        }
+        (None, None, Some(c)) => {
+            // The paper's (α, c_λ) parametrization; α defaults to the
+            // builder's 0.8 when absent.
+            model = model.alpha_c(alpha.unwrap_or(0.8), c);
+        }
+        (None, None, None) => {
+            if let Some(a) = alpha {
+                model = model.alpha(a);
+            }
+        }
+        _ => {
+            return Err(ServeError::BadRequest(
+                "penalty spec must be (\"lam1\" and \"lam2\") or \"c\" (optionally with \"alpha\")"
+                    .to_string(),
+            ))
+        }
+    }
+    if let Some(tol) = num_field(spec, "tol")? {
+        model = model.tol(tol);
+    }
+    if let Some(iters) = usize_field(spec, "max_iters")? {
+        model = model.max_iters(iters);
+    }
+    if let Some(name) = str_field(spec, "algorithm")? {
+        model = model.algorithm(parse_algorithm(name)?);
+    }
+    if let Some(grid) = spec.get("grid") {
+        let hi = num_field(grid, "hi")?
+            .ok_or_else(|| ServeError::BadRequest("\"model.grid\" needs \"hi\"".to_string()))?;
+        let lo = num_field(grid, "lo")?
+            .ok_or_else(|| ServeError::BadRequest("\"model.grid\" needs \"lo\"".to_string()))?;
+        let points = usize_field(grid, "points")?
+            .ok_or_else(|| ServeError::BadRequest("\"model.grid\" needs \"points\"".to_string()))?;
+        model = model.grid(hi, lo, points);
+    }
+    if let Some(max_active) = usize_field(spec, "max_active")? {
+        model = model.max_active(max_active);
+    }
+    Ok((model, spec.to_string()))
+}
+
+fn lookup_design(state: &ServerState, body: &Json) -> Result<Arc<StoredDesign>, ServeError> {
+    let id = str_field(body, "design_id")?
+        .ok_or_else(|| ServeError::BadRequest("missing \"design_id\"".to_string()))?;
+    state
+        .registry
+        .design(id)
+        .ok_or_else(|| ServeError::NotFound(format!("design {id:?}")))
+}
+
+fn lookup_session(state: &ServerState, body: &Json) -> Result<Arc<Mutex<Session>>, ServeError> {
+    let design = lookup_design(state, body)?;
+    let (model, model_key) = parse_model(body.get("model"))?;
+    Ok(state.registry.session(&design, &model, &model_key)?)
+}
+
+// ---- handlers ---------------------------------------------------------------
+
+fn health(state: &ServerState) -> Result<String, ServeError> {
+    Ok(Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.health".to_string())),
+        ("status", Json::Str("ok".to_string())),
+        ("designs", Json::Num(state.registry.design_count() as f64)),
+        ("sessions", Json::Num(state.registry.session_count() as f64)),
+        ("threads", Json::Num(resolve_threads(state.cfg.threads) as f64)),
+    ])
+    .to_string())
+}
+
+/// `POST /v1/designs` — body: a matrix spec plus `"b"` (response vector).
+/// Registration is idempotent; the returned `design_id` is a content
+/// fingerprint.
+fn register_design(state: &ServerState, body: &Json) -> Result<String, ServeError> {
+    let storage = parse_matrix(body, "design")?;
+    let b = body
+        .get("b")
+        .ok_or_else(|| ServeError::BadRequest("missing \"b\" (response vector)".to_string()))?;
+    let b = f64_vec(b, "b")?;
+    let stored = state.registry.register(storage, b)?;
+    Ok(Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.design".to_string())),
+        ("design_id", Json::Str(stored.id.clone())),
+        ("m", Json::Num(stored.design.m() as f64)),
+        ("n", Json::Num(stored.design.n() as f64)),
+        ("sparse", Json::Bool(stored.design.is_sparse())),
+    ])
+    .to_string())
+}
+
+/// `POST /v1/fit` — body: `"design_id"`, optional `"model"`, optional `"b"`
+/// override. Without `"b"` the design's stored response is fit (cached: a
+/// repeat call returns the same solve without re-running it); with `"b"` the
+/// warm session refits on the new response.
+fn fit(state: &ServerState, body: &Json) -> Result<String, ServeError> {
+    let session = lookup_session(state, body)?;
+    let mut session = lock(&session);
+    if let Some(b) = body.get("b") {
+        let b = f64_vec(b, "b")?;
+        session.refit(&b)?;
+    }
+    Ok(session.solved_json()?.to_string())
+}
+
+/// `POST /v1/refit` — body: `"design_id"`, optional `"model"`, and exactly
+/// one of `"b"` (single response → one fit object) or `"bs"` (batch → all
+/// fits, λmax sweeps fused across the batch).
+fn refit(state: &ServerState, body: &Json) -> Result<String, ServeError> {
+    let session = lookup_session(state, body)?;
+    let mut session = lock(&session);
+    match (body.get("b"), body.get("bs")) {
+        (Some(b), None) => {
+            let b = f64_vec(b, "b")?;
+            session.refit(&b)?;
+            Ok(session.solved_json()?.to_string())
+        }
+        (None, Some(bs)) => {
+            let arr = bs.as_arr().ok_or_else(|| {
+                ServeError::BadRequest("\"bs\" must be an array of response vectors".to_string())
+            })?;
+            let mut batch = Vec::with_capacity(arr.len());
+            for (i, b) in arr.iter().enumerate() {
+                batch.push(f64_vec(b, &format!("bs[{i}]"))?);
+            }
+            let solved = session.refit_many(&batch)?;
+            let (m, n) = (session.design().design.m(), session.design().design.n());
+            let fits: Vec<Json> =
+                solved.iter().map(|s| solve_json(m, n, s.lam1, s.lam2, &s.result)).collect();
+            Ok(Json::obj(vec![
+                ("kind", Json::Str("ssnal_en.refit_batch".to_string())),
+                ("count", Json::Num(fits.len() as f64)),
+                ("fits", Json::Arr(fits)),
+            ])
+            .to_string())
+        }
+        _ => Err(ServeError::BadRequest(
+            "give exactly one of \"b\" (single response) or \"bs\" (batch)".to_string(),
+        )),
+    }
+}
+
+/// `POST /v1/predict` — body: `"design_id"`, optional `"model"`, `"a_new"`
+/// (matrix spec, dense or CSC). Fits lazily on the stored response if the
+/// session has no solve yet.
+fn predict(state: &ServerState, body: &Json) -> Result<String, ServeError> {
+    let session = lookup_session(state, body)?;
+    let a_new = body
+        .get("a_new")
+        .ok_or_else(|| ServeError::BadRequest("missing \"a_new\" (matrix spec)".to_string()))?;
+    let storage = parse_matrix(a_new, "a_new")?;
+    let mut session = lock(&session);
+    let preds = session.predict(storage.as_ref())?;
+    Ok(Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.predictions".to_string())),
+        ("m", Json::Num(preds.len() as f64)),
+        ("predictions", Json::Arr(preds.iter().map(|&v| Json::Num(v)).collect())),
+    ])
+    .to_string())
+}
+
+/// `POST /v1/path` — body: `"design_id"`, optional `"model"` (its `grid`
+/// drives the sweep). Coefficients per point are sparse: values at
+/// `active_set`'s indices, like the fit export.
+fn path(state: &ServerState, body: &Json) -> Result<String, ServeError> {
+    let session = lookup_session(state, body)?;
+    let session = lock(&session);
+    let path = session.path()?;
+    let (m, n) = (session.design().design.m(), session.design().design.n());
+    let points: Vec<Json> = path
+        .points()
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("c_lambda", Json::Num(p.c_lambda)),
+                ("converged", Json::Bool(p.result.converged)),
+                ("objective", Json::Num(p.result.objective)),
+                ("iterations", Json::Num(p.result.iterations as f64)),
+                (
+                    "active_set",
+                    Json::Arr(p.result.active_set.iter().map(|&j| Json::Num(j as f64)).collect()),
+                ),
+                (
+                    "coefficients",
+                    Json::Arr(p.result.active_set.iter().map(|&j| Json::Num(p.result.x[j])).collect()),
+                ),
+            ])
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.path".to_string())),
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(n as f64)),
+        ("lambda_max", Json::Num(path.lambda_max())),
+        ("runs", Json::Num(path.runs() as f64)),
+        ("truncated", Json::Bool(path.truncated())),
+        ("points", Json::Arr(points)),
+    ])
+    .to_string())
+}

@@ -1,0 +1,234 @@
+//! Minimal HTTP/1.1 framing over `std::net` — just enough protocol for the
+//! serving front end (and its tests and benches) without a dependency.
+//!
+//! Scope: request line + headers + `Content-Length` bodies, keep-alive
+//! connections with strictly serial request handling per connection, and
+//! fixed JSON responses. No chunked transfer encoding, no TLS — the front
+//! end targets trusted internal traffic, not the open internet.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    /// Uppercased method token (`GET`, `POST`, ...).
+    pub method: String,
+    /// Request path, query string stripped.
+    pub path: String,
+    /// Raw body bytes (empty without a `Content-Length`).
+    pub body: Vec<u8>,
+    /// Whether the client asked to keep the connection open.
+    pub keep_alive: bool,
+}
+
+/// Why a request could not be framed. Everything here is a transport-level
+/// defect — handler-level defects (bad JSON, unknown routes) are typed
+/// responses, not parse errors.
+#[derive(Debug)]
+pub enum ParseError {
+    /// The peer closed the connection before a request line arrived — the
+    /// normal end of a keep-alive connection, not an error to report.
+    Eof,
+    /// Malformed request line or headers — answer 400 and close.
+    Malformed(String),
+    /// Declared body exceeds the configured cap — answer 413 and close
+    /// without reading the body.
+    TooLarge {
+        /// The declared `Content-Length`.
+        declared: usize,
+        /// The configured cap.
+        limit: usize,
+    },
+    /// Transport error mid-request.
+    Io(std::io::Error),
+}
+
+/// Read one request from a buffered stream, enforcing the body-size cap
+/// before any body byte is read.
+pub fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    max_body: usize,
+) -> Result<Request, ParseError> {
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => return Err(ParseError::Eof),
+        Ok(_) => {}
+        Err(e) => return Err(ParseError::Io(e)),
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let target = parts.next().unwrap_or("");
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(ParseError::Malformed(format!("bad request line {:?}", line.trim_end())));
+    }
+    let path = target.split('?').next().unwrap_or("").to_string();
+
+    let mut content_length = 0usize;
+    let mut keep_alive = true; // the HTTP/1.1 default
+    loop {
+        let mut header = String::new();
+        match reader.read_line(&mut header) {
+            Ok(0) => return Err(ParseError::Malformed("truncated headers".to_string())),
+            Ok(_) => {}
+            Err(e) => return Err(ParseError::Io(e)),
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        let Some((name, value)) = header.split_once(':') else {
+            return Err(ParseError::Malformed(format!("bad header {header:?}")));
+        };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .parse::<usize>()
+                .map_err(|_| ParseError::Malformed(format!("bad content-length {value:?}")))?;
+        } else if name.eq_ignore_ascii_case("connection") {
+            keep_alive = !value.eq_ignore_ascii_case("close");
+        }
+    }
+    if content_length > max_body {
+        return Err(ParseError::TooLarge { declared: content_length, limit: max_body });
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body).map_err(ParseError::Io)?;
+    }
+    Ok(Request { method, path, body, keep_alive })
+}
+
+/// Reason phrases for the status codes the handlers emit.
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Write one JSON response; `close` adds `Connection: close`.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    close: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n{}\r\n",
+        reason(status),
+        body.len(),
+        if close { "connection: close\r\n" } else { "" }
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Parse one response from a buffered stream into `(status, body)`.
+pub fn read_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16, String)> {
+    use std::io::{Error, ErrorKind};
+    fn bad(msg: &str) -> Error {
+        Error::new(ErrorKind::InvalidData, msg.to_string())
+    }
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Err(bad("connection closed before a status line"));
+    }
+    let status = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| bad("bad status line"))?;
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 {
+            return Err(bad("truncated response headers"));
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.trim().parse::<usize>().map_err(|_| bad("bad content-length"))?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    String::from_utf8(body).map(|b| (status, b)).map_err(|_| bad("non-utf8 body"))
+}
+
+/// A keep-alive client connection: strictly serial requests over one TCP
+/// stream. This is the test/bench driver, not a general HTTP client.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    /// Connect to `addr` (`host:port`).
+    pub fn connect(addr: &str) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { writer, reader: BufReader::new(stream) })
+    }
+
+    /// Send one request and block for its response: `(status, body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> std::io::Result<(u16, String)> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: ssnal-en\r\ncontent-type: application/json\r\n\
+             content-length: {}\r\n\r\n",
+            body.len()
+        );
+        self.writer.write_all(head.as_bytes())?;
+        self.writer.write_all(body.as_bytes())?;
+        self.writer.flush()?;
+        read_response(&mut self.reader)
+    }
+
+    /// Send raw bytes down the stream and read one response — for tests that
+    /// exercise the server's handling of malformed requests.
+    pub fn request_raw(&mut self, raw: &[u8]) -> std::io::Result<(u16, String)> {
+        self.writer.write_all(raw)?;
+        self.writer.flush()?;
+        read_response(&mut self.reader)
+    }
+}
+
+/// One-shot convenience: connect, send a single `Connection: close` request,
+/// return `(status, body)`.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nhost: ssnal-en\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    read_response(&mut reader)
+}

@@ -1,0 +1,48 @@
+//! `ssnal-en serve` — a zero-dependency HTTP/1.1 model server over the
+//! estimator facade.
+//!
+//! The serving scenario this targets is the paper's solver used as a warm
+//! backend: register a design once, then fit, refit (singly or in batches),
+//! predict, and sweep λ-paths against it over JSON, with the Newton
+//! workspace and Gram/Cholesky cache staying hot between requests exactly as
+//! they do in a [`crate::api::Fit`] session.
+//!
+//! Layout:
+//!
+//! * [`http`] — HTTP/1.1 framing over `std::net` (requests, responses, a
+//!   keep-alive client for tests and benches),
+//! * [`registry`] — fingerprint-keyed design store and the warm-session LRU,
+//! * [`handlers`] — wire format, routing, and the total
+//!   `EnetError` → status mapping (no panic reachable from a request),
+//! * [`server`] — accept loop, admission control, per-request thread
+//!   budgeting, panic containment.
+//!
+//! Everything rides on the determinism contracts the rest of the crate pins:
+//! because solves are bitwise-identical at every thread count and warm
+//! workspaces are bitwise-identical to cold ones, the server can cache
+//! sessions and rebalance threads per request without ever changing a
+//! response byte (`tests/serve_integration.rs`).
+//!
+//! Wire format in one sitting:
+//!
+//! ```text
+//! POST /v1/designs  {"m":2,"n":2,"dense":[1,0,0,1],"b":[3,-1]}   → {"design_id":"d…",…}
+//! POST /v1/fit      {"design_id":"d…","model":{"c":0.5}}          → fit JSON (== Fit::export_json)
+//! POST /v1/refit    {"design_id":"d…","bs":[[…],[…]]}             → batched fit JSONs
+//! POST /v1/predict  {"design_id":"d…","a_new":{…matrix spec…}}    → predictions
+//! POST /v1/path     {"design_id":"d…","model":{"grid":{…}}}       → λ-path
+//! GET  /v1/health                                                 → counters
+//! ```
+//!
+//! Matrix specs are dense (`"dense"`: row-major values) or CSC
+//! (`"col_ptr"`/`"row_idx"`/`"values"`) — sparse designs round-trip through
+//! the server without densification.
+
+pub mod handlers;
+pub mod http;
+pub mod registry;
+pub mod server;
+
+pub use http::{http_request, Client};
+pub use registry::{Registry, Session, StoredDesign};
+pub use server::{Server, ServerConfig, ServerHandle, ServerState};

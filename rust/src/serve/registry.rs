@@ -1,0 +1,326 @@
+//! Design registry and warm-session cache behind the serve front end.
+//!
+//! Two stores, both content-addressed off the design:
+//!
+//! * **Designs** — immutable `(A, b)` pairs keyed by a FNV-1a fingerprint of
+//!   their exact bit content. Registration is idempotent: posting the same
+//!   matrix twice yields the same `design_id` and stores one copy.
+//! * **Sessions** — warm solver state ([`Session`]: Newton workspace +
+//!   Gram/Cholesky cache + lazily-loaded PJRT engine) keyed by
+//!   `design_id : model-spec`. An LRU bound (default 16) caps resident
+//!   workspace memory; eviction drops only the registry's handle, so requests
+//!   already running on an evicted session finish unharmed on their own
+//!   `Arc` clone.
+//!
+//! Sessions mirror [`crate::api::Fit`] exactly — same `checked_lambdas` →
+//! `solve_once` call sequence against the same workspace contract — so a
+//! server response is byte-identical to the equivalent direct `api::` call
+//! (`tests/serve_integration.rs` pins this).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::api::fit::{solve_json, PathFit};
+use crate::api::{Design, EnetError, EnetModel};
+use crate::linalg::{DesignRef, DesignStorage, NewtonWorkspace};
+use crate::runtime::PjrtEngine;
+use crate::solver::types::SolveResult;
+use crate::util::json::Json;
+
+/// Lock a mutex, recovering from poisoning instead of propagating a panic
+/// into every subsequent request.
+///
+/// Recovery is sound here because the guarded structures are valid at rest:
+/// the registry maps hold only fully-constructed entries, and a workspace
+/// abandoned mid-solve is indistinguishable from a warm one by contract (a
+/// fresh and a warm workspace produce bitwise-identical results).
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// FNV-1a (64-bit) — tiny, allocation-free, and stable across platforms;
+/// collision risk is irrelevant at registry scale (dozens of designs).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+}
+
+/// Content fingerprint of a design: storage kind, shape, the exact value
+/// bits, and (for CSC) the sparsity pattern — plus the response vector, so
+/// the same matrix with a different stored `b` is a different design.
+pub(crate) fn fingerprint(design: &Design<'_>) -> String {
+    let mut h = Fnv::new();
+    let a = design.design_ref();
+    match a.as_sparse() {
+        Some(csc) => {
+            h.write(b"csc");
+            h.write_u64(csc.rows() as u64);
+            h.write_u64(csc.cols() as u64);
+            for &p in csc.col_ptr() {
+                h.write_u64(p as u64);
+            }
+            for &i in csc.row_idx() {
+                h.write_u64(i as u64);
+            }
+            for &v in csc.values() {
+                h.write_u64(v.to_bits());
+            }
+        }
+        None => {
+            h.write(b"dense");
+            h.write_u64(a.rows() as u64);
+            h.write_u64(a.cols() as u64);
+            for &v in a.values_slice() {
+                h.write_u64(v.to_bits());
+            }
+        }
+    }
+    for &v in design.b() {
+        h.write_u64(v.to_bits());
+    }
+    format!("d{:016x}", h.0)
+}
+
+/// A registered design: the owned `(A, b)` pair plus its registry id.
+pub struct StoredDesign {
+    /// Content fingerprint, handed to clients as `design_id`.
+    pub id: String,
+    /// The validated, owned design.
+    pub design: Design<'static>,
+}
+
+/// One solve's outcome with its resolved penalties — what a session carries
+/// between requests (a serve-side analogue of [`crate::api::Fit`]'s
+/// `(lam1, lam2, result)` triple).
+#[derive(Clone)]
+pub struct Solved {
+    /// Resolved ℓ1 penalty.
+    pub lam1: f64,
+    /// Resolved ℓ2 penalty.
+    pub lam2: f64,
+    /// The full solver result.
+    pub result: SolveResult,
+}
+
+/// A warm solver session bound to one registered design and one model spec.
+///
+/// Holds the same state as [`crate::api::Fit`] — Newton workspace, cached
+/// PJRT engine, latest solve — but owns its design through an `Arc` so it can
+/// outlive registry eviction while a request is mid-flight.
+pub struct Session {
+    design: Arc<StoredDesign>,
+    model: EnetModel,
+    ws: NewtonWorkspace,
+    engine: Option<PjrtEngine>,
+    solved: Option<Solved>,
+}
+
+impl Session {
+    /// Validate the model against the design and create an empty (unsolved)
+    /// session.
+    pub fn new(design: Arc<StoredDesign>, model: EnetModel) -> Result<Session, EnetError> {
+        model.validate_common(&design.design)?;
+        Ok(Session { design, model, ws: NewtonWorkspace::new(), engine: None, solved: None })
+    }
+
+    /// The design this session is bound to.
+    pub fn design(&self) -> &Arc<StoredDesign> {
+        &self.design
+    }
+
+    /// One solve against the warm workspace — the same `checked_lambdas` →
+    /// `solve_once` sequence as [`crate::api::Fit::refit`].
+    fn solve(&mut self, b: &[f64]) -> Result<(), EnetError> {
+        let design = Arc::clone(&self.design);
+        design.design.check_response(b)?;
+        let (lam1, lam2) = self.model.checked_lambdas(design.design.design_ref(), b)?;
+        let (result, _trace) = self.model.solve_once(
+            design.design.design_ref(),
+            b,
+            lam1,
+            lam2,
+            None,
+            &mut self.engine,
+            &mut self.ws,
+        )?;
+        self.solved = Some(Solved { lam1, lam2, result });
+        Ok(())
+    }
+
+    /// Solve on the design's stored response if no solve exists yet; a
+    /// repeated call returns the cached state untouched (same bits — it *is*
+    /// the stored result).
+    pub fn ensure_solved(&mut self) -> Result<(), EnetError> {
+        if self.solved.is_none() {
+            let design = Arc::clone(&self.design);
+            self.solve(design.design.b())?;
+        }
+        Ok(())
+    }
+
+    /// Re-solve on a new response, reusing the warm workspace.
+    pub fn refit(&mut self, b: &[f64]) -> Result<(), EnetError> {
+        self.solve(b)
+    }
+
+    /// Batch refit mirroring [`crate::api::Fit::refit_many`]: all responses
+    /// validated up front, λmax resolution fused into one pass over the
+    /// design's columns, solves run sequentially through the warm workspace.
+    /// Returns every solve (with its resolved penalties); the session is left
+    /// at the last one.
+    pub fn refit_many<B: AsRef<[f64]>>(&mut self, bs: &[B]) -> Result<Vec<Solved>, EnetError> {
+        let design = Arc::clone(&self.design);
+        for b in bs {
+            design.design.check_response(b.as_ref())?;
+        }
+        let lambdas = self.model.checked_lambdas_many(design.design.design_ref(), bs)?;
+        let mut out = Vec::with_capacity(bs.len());
+        for (b, &(lam1, lam2)) in bs.iter().zip(&lambdas) {
+            let (result, _trace) = self.model.solve_once(
+                design.design.design_ref(),
+                b.as_ref(),
+                lam1,
+                lam2,
+                None,
+                &mut self.engine,
+                &mut self.ws,
+            )?;
+            let solved = Solved { lam1, lam2, result };
+            self.solved = Some(solved.clone());
+            out.push(solved);
+        }
+        Ok(out)
+    }
+
+    /// JSON of the latest solve (fitting lazily on the stored response if
+    /// needed) — byte-identical to [`crate::api::Fit::to_json`] for the same
+    /// solve, because both render through the same `solve_json`.
+    pub fn solved_json(&mut self) -> Result<Json, EnetError> {
+        self.ensure_solved()?;
+        let (m, n) = (self.design.design.m(), self.design.design.n());
+        match self.solved.as_ref() {
+            Some(s) => Ok(solve_json(m, n, s.lam1, s.lam2, &s.result)),
+            // Unreachable after ensure_solved, but a typed error beats an
+            // unwrap reachable from a request handler.
+            None => Err(EnetError::Backend("solve completed without state".to_string())),
+        }
+    }
+
+    /// Predict on new observations, fitting lazily on the stored response if
+    /// no solve exists yet. Same shape check and active-set mat-vec as
+    /// [`crate::api::Fit::predict`].
+    pub fn predict(&mut self, a_new: DesignRef<'_>) -> Result<Vec<f64>, EnetError> {
+        let n = self.design.design.n();
+        if a_new.cols() != n {
+            return Err(EnetError::PredictShape { expected: n, got: a_new.cols() });
+        }
+        self.ensure_solved()?;
+        let s = match self.solved.as_ref() {
+            Some(s) => s,
+            None => return Err(EnetError::Backend("solve completed without state".to_string())),
+        };
+        let mut out = vec![0.0; a_new.rows()];
+        a_new.mul_vec_support_into(&s.result.x, &s.result.active_set, &mut out);
+        Ok(out)
+    }
+
+    /// A λ-path over the model's grid on the stored response (stateless with
+    /// respect to the warm workspace — the path engine owns its own state).
+    pub fn path(&self) -> Result<PathFit, EnetError> {
+        self.model.fit_path(&self.design.design)
+    }
+}
+
+/// The server's shared stores: registered designs plus the warm-session LRU.
+pub struct Registry {
+    max_sessions: usize,
+    designs: Mutex<HashMap<String, Arc<StoredDesign>>>,
+    /// LRU order, least-recently-used first. A `Vec` is the right structure
+    /// at this scale (default cap 16): the O(len) reorder is noise next to
+    /// the solve the session exists to serve.
+    sessions: Mutex<Vec<(String, Arc<Mutex<Session>>)>>,
+}
+
+impl Registry {
+    /// An empty registry holding at most `max_sessions` warm sessions
+    /// (floored at 1).
+    pub fn new(max_sessions: usize) -> Registry {
+        Registry {
+            max_sessions: max_sessions.max(1),
+            designs: Mutex::new(HashMap::new()),
+            sessions: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Validate and store a design, returning its fingerprint id. Idempotent:
+    /// re-registering identical content returns the existing id.
+    pub fn register(&self, a: DesignStorage, b: Vec<f64>) -> Result<Arc<StoredDesign>, EnetError> {
+        let design = Design::from_storage(a, b)?;
+        let id = fingerprint(&design);
+        let mut designs = lock(&self.designs);
+        let entry = designs
+            .entry(id.clone())
+            .or_insert_with(|| Arc::new(StoredDesign { id, design }));
+        Ok(Arc::clone(entry))
+    }
+
+    /// Look up a registered design by id.
+    pub fn design(&self, id: &str) -> Option<Arc<StoredDesign>> {
+        lock(&self.designs).get(id).cloned()
+    }
+
+    /// Number of registered designs.
+    pub fn design_count(&self) -> usize {
+        lock(&self.designs).len()
+    }
+
+    /// Number of resident warm sessions.
+    pub fn session_count(&self) -> usize {
+        lock(&self.sessions).len()
+    }
+
+    /// Fetch or create the warm session for `(design, model)`, marking it
+    /// most-recently-used. `model_key` must be the canonical serialization of
+    /// the model spec (`Json::Obj` is a `BTreeMap`, so equivalent specs
+    /// serialize identically); creating a session past the cap evicts the
+    /// least-recently-used one — dropping only the registry's `Arc`, never a
+    /// clone held by an in-flight request.
+    pub fn session(
+        &self,
+        design: &Arc<StoredDesign>,
+        model: &EnetModel,
+        model_key: &str,
+    ) -> Result<Arc<Mutex<Session>>, EnetError> {
+        let key = format!("{}:{}", design.id, model_key);
+        let mut sessions = lock(&self.sessions);
+        if let Some(pos) = sessions.iter().position(|(k, _)| *k == key) {
+            let entry = sessions.remove(pos);
+            let found = Arc::clone(&entry.1);
+            sessions.push(entry);
+            return Ok(found);
+        }
+        let session = Arc::new(Mutex::new(Session::new(Arc::clone(design), model.clone())?));
+        if sessions.len() >= self.max_sessions {
+            sessions.remove(0);
+        }
+        sessions.push((key, Arc::clone(&session)));
+        Ok(session)
+    }
+}

@@ -1,0 +1,211 @@
+//! The TCP front end: accept loop, per-connection threads, admission
+//! control, and panic containment.
+//!
+//! Threading model: one OS thread per connection (requests on a connection
+//! are serial per HTTP/1.1), with two server-wide controls layered on top:
+//!
+//! * **Admission** — an atomic in-flight counter; past `max_inflight` a
+//!   request is answered `503` immediately instead of queueing unboundedly.
+//!   The counter is released by a drop guard, so every exit path — success,
+//!   typed error, even a handler panic — frees the slot.
+//! * **Thread budget** — each admitted request runs under
+//!   `shard::with_threads(total / inflight)`, an even share of the server's
+//!   worker budget (floored at one thread). Because every kernel in the
+//!   solve stack is thread-count invariant (`tests/determinism.rs`), the
+//!   budget affects latency only — response bytes are identical at every
+//!   concurrency level, which is what makes this scheduling safe to do at
+//!   all.
+//!
+//! A handler panic (there should be none — see `handlers`' no-panic
+//! contract) is caught per-request and answered as a 500; the worker thread
+//! and the listener survive.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::parallel::{resolve_threads, shard};
+use crate::serve::handlers::{self, error_body, ServeError};
+use crate::serve::http::{self, read_request, write_response, ParseError};
+use crate::serve::registry::Registry;
+
+/// Server configuration (all CLI-settable; see `ssnal-en serve --help`).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address.
+    pub host: String,
+    /// Bind port (0 = ephemeral, for tests and benches).
+    pub port: u16,
+    /// Warm-session LRU capacity.
+    pub sessions: usize,
+    /// Admission cap: requests in flight before `503`s.
+    pub max_inflight: usize,
+    /// Total solver thread budget shared across requests (0 = all cores).
+    pub threads: usize,
+    /// Request body cap in bytes.
+    pub max_body: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            host: "127.0.0.1".to_string(),
+            port: 7878,
+            sessions: 16,
+            max_inflight: 32,
+            threads: 0,
+            max_body: 256 << 20,
+        }
+    }
+}
+
+/// State shared by every connection thread.
+pub struct ServerState {
+    /// Design store + warm-session LRU.
+    pub registry: Registry,
+    /// The configuration the server was built with.
+    pub cfg: ServerConfig,
+    inflight: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+/// Releases one admission slot on drop — every exit path, panics included.
+struct InflightGuard<'a>(&'a AtomicUsize);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A bound-but-not-yet-running server.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind the listener and build the shared state.
+    pub fn bind(cfg: ServerConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))?;
+        let state = Arc::new(ServerState {
+            registry: Registry::new(cfg.sessions),
+            inflight: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            cfg,
+        });
+        Ok(Server { listener, state })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Run the accept loop on the calling thread — the CLI entry point;
+    /// returns only on listener error or [`ServerHandle::stop`].
+    pub fn run(self) -> std::io::Result<()> {
+        for conn in self.listener.incoming() {
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let state = Arc::clone(&self.state);
+            std::thread::spawn(move || serve_connection(state, stream));
+        }
+        Ok(())
+    }
+
+    /// Run the accept loop on a background thread — the test/bench entry
+    /// point. The returned handle stops and joins the server on
+    /// [`ServerHandle::stop`].
+    pub fn spawn(self) -> std::io::Result<ServerHandle> {
+        let addr = self.local_addr()?;
+        let state = Arc::clone(&self.state);
+        let join = std::thread::spawn(move || {
+            let _ = self.run();
+        });
+        Ok(ServerHandle { addr, state, join })
+    }
+}
+
+/// Handle to a server running on a background thread.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    join: JoinHandle<()>,
+}
+
+impl ServerHandle {
+    /// The server's `host:port` address for clients.
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Stop the accept loop and join its thread. Connections already accepted
+    /// finish their current request; no new connections are accepted.
+    pub fn stop(self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        // `accept` blocks with no timeout in std; a throwaway connection
+        // wakes it so it observes the shutdown flag.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.join.join();
+    }
+}
+
+/// Serial request loop for one connection.
+fn serve_connection(state: Arc<ServerState>, stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        let req = match read_request(&mut reader, state.cfg.max_body) {
+            Ok(req) => req,
+            Err(ParseError::Eof) => return,
+            Err(ParseError::Malformed(msg)) => {
+                let body = error_body(400, &format!("malformed request: {msg}"));
+                let _ = write_response(&mut writer, 400, &body, true);
+                return;
+            }
+            Err(ParseError::TooLarge { declared, limit }) => {
+                let body = error_body(
+                    413,
+                    &format!("body of {declared} bytes exceeds the {limit}-byte limit"),
+                );
+                let _ = write_response(&mut writer, 413, &body, true);
+                return;
+            }
+            Err(ParseError::Io(_)) => return,
+        };
+        let keep_alive = req.keep_alive;
+        let (status, body) = dispatch(&state, &req);
+        if write_response(&mut writer, status, &body, !keep_alive).is_err() {
+            return;
+        }
+        if !keep_alive {
+            return;
+        }
+    }
+}
+
+/// Admission, thread budgeting, and panic containment around one request.
+fn dispatch(state: &ServerState, req: &http::Request) -> (u16, String) {
+    let inflight = state.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+    let _guard = InflightGuard(&state.inflight);
+    if inflight > state.cfg.max_inflight {
+        let e = ServeError::Busy { inflight, max_inflight: state.cfg.max_inflight };
+        let status = e.status();
+        return (status, error_body(status, &e.message()));
+    }
+    let budget = (resolve_threads(state.cfg.threads) / inflight).max(1);
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        shard::with_threads(budget, || handlers::handle(state, req))
+    }));
+    match outcome {
+        Ok(response) => response,
+        Err(_) => (500, error_body(500, "internal error: request handler panicked")),
+    }
+}

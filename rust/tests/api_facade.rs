@@ -208,6 +208,85 @@ fn assert_json_close(key: &str, got: &Json, want: &Json) {
     }
 }
 
+/// ISSUE 7 satellite: `Fit::predict` accepts sparse new observations, and
+/// the CSC mat-vec reproduces the dense predictions bit-for-bit — a model
+/// fit on any storage scores CSC held-out data without densifying it.
+#[test]
+fn sparse_predict_is_bitwise_identical_to_dense() {
+    let prob = problem();
+    let design = Design::new(&prob.a, &prob.b).unwrap();
+    let fit = EnetModel::new().alpha_c(0.8, 0.3).tol(1e-8).fit(&design).unwrap();
+    assert!(!fit.active_set().is_empty());
+
+    let csc = ssnal_en::linalg::CscMat::from_dense(&prob.a);
+    let storage = ssnal_en::linalg::DesignStorage::from(csc.clone());
+    let dense_preds = fit.predict(&prob.a).unwrap();
+    let sparse_preds = fit.predict(&csc).unwrap();
+    let storage_preds = fit.predict(&storage).unwrap();
+    for (i, ((d, s), st)) in
+        dense_preds.iter().zip(&sparse_preds).zip(&storage_preds).enumerate()
+    {
+        assert_eq!(d.to_bits(), s.to_bits(), "row {i}: CSC predict diverges");
+        assert_eq!(d.to_bits(), st.to_bits(), "row {i}: storage predict diverges");
+    }
+
+    // sparse inputs get the same typed shape check as dense ones
+    let skinny = ssnal_en::linalg::CscMat::from_dense(&Mat::zeros(3, 7));
+    assert!(matches!(fit.predict(&skinny), Err(EnetError::PredictShape { .. })));
+}
+
+/// ISSUE 7 satellite: `Fit::refit_many` (one fused λmax sweep for the whole
+/// batch) is bitwise-identical to calling `Fit::refit` per response, and
+/// leaves the session at the last response's state.
+#[test]
+fn refit_many_matches_sequential_refits_bitwise() {
+    let prob = problem();
+    let responses: Vec<Vec<f64>> = vec![
+        prob.b.clone(),
+        prob.b.iter().rev().copied().collect(),
+        prob.b.iter().map(|v| 1.5 * v).collect(),
+    ];
+    let design = Design::new(&prob.a, &prob.b).unwrap();
+    let model = EnetModel::new().alpha_c(0.8, 0.35).tol(1e-8);
+
+    let mut sequential = model.fit(&design).unwrap();
+    let mut expected = Vec::new();
+    for b in &responses {
+        expected.push((sequential.refit(b).unwrap().clone(), sequential.lambdas()));
+    }
+
+    let mut batched = model.fit(&design).unwrap();
+    let results = batched.refit_many(&responses).unwrap();
+    assert_eq!(results.len(), responses.len());
+    for (i, (got, (want, want_lams))) in results.iter().zip(&expected).enumerate() {
+        let got_bits: Vec<u64> = got.x.iter().map(|v| v.to_bits()).collect();
+        let want_bits: Vec<u64> = want.x.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, want_bits, "response {i}: x differs");
+        assert_eq!(got.active_set, want.active_set, "response {i}");
+        assert_eq!(
+            got.objective.to_bits(),
+            want.objective.to_bits(),
+            "response {i}: objective differs"
+        );
+        assert_eq!(got.iterations, want.iterations, "response {i}");
+        if i == responses.len() - 1 {
+            assert_eq!(batched.lambdas(), *want_lams, "session not left at the last response");
+        }
+    }
+
+    // one bad response fails the whole batch up front, with no partial solves
+    let before = batched.result().x.clone();
+    let mixed: Vec<Vec<f64>> = vec![prob.b.clone(), vec![1.0]];
+    assert!(matches!(
+        batched.refit_many(&mixed),
+        Err(EnetError::ShapeMismatch { .. })
+    ));
+    assert_eq!(
+        batched.result().x, before,
+        "a rejected batch must not touch the session state"
+    );
+}
+
 /// Invalid inputs reach the caller as typed errors end-to-end (the acceptance
 /// criterion: no panics on bad requests).
 #[test]

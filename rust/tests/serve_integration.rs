@@ -1,0 +1,499 @@
+//! Integration tests for the `ssnal-en serve` front end (ISSUE 7): server
+//! responses byte-identical to the direct `api::` calls they wrap, sparse CSC
+//! designs round-tripping fit→predict without densification, malformed
+//! requests answered with 4xx statuses (never a panic, never a wedged
+//! server), concurrency at several client counts leaving response bytes
+//! unchanged, and LRU session eviction staying invisible to correctness.
+
+use ssnal_en::api::{Design, EnetModel};
+use ssnal_en::data::{generate_synthetic, SyntheticSpec};
+use ssnal_en::linalg::{CscMat, Mat};
+use ssnal_en::serve::{http_request, Client, Server, ServerConfig};
+use ssnal_en::util::json::Json;
+
+const TOL: f64 = 1e-6;
+
+fn problem() -> ssnal_en::data::SyntheticProblem {
+    generate_synthetic(&SyntheticSpec {
+        m: 30,
+        n: 200,
+        n0: 4,
+        x_star: 5.0,
+        snr: 6.0,
+        seed: 91,
+    })
+}
+
+/// Spawn a server on an ephemeral port with the given session cap, solver
+/// thread budget, and body cap.
+fn spawn_server(sessions: usize, threads: usize, max_body: usize) -> ssnal_en::serve::ServerHandle {
+    let cfg = ServerConfig {
+        port: 0,
+        sessions,
+        threads,
+        max_body,
+        ..ServerConfig::default()
+    };
+    Server::bind(cfg).expect("bind ephemeral port").spawn().expect("spawn server")
+}
+
+/// Row-major dense matrix spec for a column-major `Mat`, built through
+/// `Json` so every f64 round-trips bit-exactly over the wire.
+fn dense_spec(a: &Mat) -> Vec<(&'static str, Json)> {
+    let (m, n) = (a.rows(), a.cols());
+    let mut values = Vec::with_capacity(m * n);
+    for i in 0..m {
+        for j in 0..n {
+            values.push(Json::Num(a.col(j)[i]));
+        }
+    }
+    vec![
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(n as f64)),
+        ("dense", Json::Arr(values)),
+    ]
+}
+
+fn num_arr(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+}
+
+/// Register a dense design, returning its `design_id`.
+fn register_dense(client: &mut Client, a: &Mat, b: &[f64]) -> String {
+    let mut fields = dense_spec(a);
+    fields.push(("b", num_arr(b)));
+    let (status, body) =
+        client.request("POST", "/v1/designs", &Json::obj(fields).to_string()).expect("register");
+    assert_eq!(status, 200, "registration failed: {body}");
+    Json::parse(&body)
+        .expect("registration response parses")
+        .get("design_id")
+        .and_then(|v| v.as_str().map(String::from))
+        .expect("design_id present")
+}
+
+fn model_spec(c: f64) -> Json {
+    Json::obj(vec![("c", Json::Num(c)), ("tol", Json::Num(TOL))])
+}
+
+fn fit_body(design_id: &str, c: f64) -> String {
+    Json::obj(vec![("design_id", Json::Str(design_id.to_string())), ("model", model_spec(c))])
+        .to_string()
+}
+
+fn refit_body(design_id: &str, c: f64, b: &[f64]) -> String {
+    Json::obj(vec![
+        ("design_id", Json::Str(design_id.to_string())),
+        ("model", model_spec(c)),
+        ("b", num_arr(b)),
+    ])
+    .to_string()
+}
+
+/// Exact-bit comparison of a parsed JSON number array against reference
+/// values (`Json` round-trips f64 exactly, so this is a bitwise check of the
+/// wire payload).
+fn assert_num_arr_bits(got: &Json, want: &[f64], what: &str) {
+    let arr = got.as_arr().unwrap_or_else(|| panic!("{what} is an array"));
+    assert_eq!(arr.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in arr.iter().zip(want).enumerate() {
+        let g = g.as_f64().unwrap_or_else(|| panic!("{what}[{i}] is a number"));
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}[{i}]: {g} vs {w}");
+    }
+}
+
+/// The headline acceptance criterion: `/v1/fit`, `/v1/refit` (single and
+/// batch), `/v1/predict`, and `/v1/path` return exactly the bytes (or bits)
+/// the equivalent direct `api::` calls produce.
+#[test]
+fn server_responses_match_direct_api_bitwise() {
+    let prob = problem();
+    let design = Design::new(&prob.a, &prob.b).unwrap();
+    let model = EnetModel::new().alpha_c(0.8, 0.5).tol(TOL);
+    let mut reference = model.fit(&design).unwrap();
+    let expected_fit = reference.export_json();
+
+    let handle = spawn_server(16, 0, 256 << 20);
+    let mut client = Client::connect(&handle.addr()).unwrap();
+    let id = register_dense(&mut client, &prob.a, &prob.b);
+
+    // fit on the stored response == direct Fit::export_json
+    let (status, body) = client.request("POST", "/v1/fit", &fit_body(&id, 0.5)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body, expected_fit, "server fit diverges from direct api");
+
+    // a repeat fit is served from the cached solve — same bytes again
+    let (status, body) = client.request("POST", "/v1/fit", &fit_body(&id, 0.5)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body, expected_fit, "cached fit diverges");
+
+    // single refit == direct Fit::refit
+    let b2: Vec<f64> = prob.b.iter().rev().copied().collect();
+    reference.refit(&b2).unwrap();
+    let expected_refit = reference.export_json();
+    let (status, body) = client.request("POST", "/v1/refit", &refit_body(&id, 0.5, &b2)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body, expected_refit, "server refit diverges from direct api");
+
+    // batch refit == the same solves run sequentially through Fit::refit
+    let b3: Vec<f64> = prob.b.iter().map(|v| 1.5 * v).collect();
+    let mut expected_batch = Vec::new();
+    for b in [&prob.b, &b3] {
+        reference.refit(b).unwrap();
+        expected_batch.push(reference.export_json());
+    }
+    let batch = Json::obj(vec![
+        ("design_id", Json::Str(id.clone())),
+        ("model", model_spec(0.5)),
+        ("bs", Json::Arr(vec![num_arr(&prob.b), num_arr(&b3)])),
+    ])
+    .to_string();
+    let (status, body) = client.request("POST", "/v1/refit", &batch).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let parsed = Json::parse(&body).expect("batch response parses");
+    assert_eq!(parsed.get("count").and_then(Json::as_usize), Some(2));
+    let fits = parsed.get("fits").and_then(Json::as_arr).expect("fits array");
+    for (got, want) in fits.iter().zip(&expected_batch) {
+        // Json::Obj is a BTreeMap, so re-rendering the parsed object
+        // reproduces the exact original bytes.
+        assert_eq!(&got.to_string(), want, "batch element diverges from sequential refit");
+    }
+
+    // predict == direct Fit::predict (bit-for-bit through the JSON numbers);
+    // both sessions sit at the batch's last solve, so the coefficients agree
+    let expected_preds = reference.predict(&prob.a).unwrap();
+    let pred_req = Json::obj(vec![
+        ("design_id", Json::Str(id.clone())),
+        ("model", model_spec(0.5)),
+        ("a_new", Json::obj(dense_spec(&prob.a))),
+    ])
+    .to_string();
+    let (status, body) = client.request("POST", "/v1/predict", &pred_req).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let parsed = Json::parse(&body).expect("predictions parse");
+    assert_num_arr_bits(
+        parsed.get("predictions").expect("predictions field"),
+        &expected_preds,
+        "predictions",
+    );
+
+    // path == direct EnetModel::fit_path over the same grid
+    let path_model = Json::obj(vec![
+        ("alpha", Json::Num(0.8)),
+        ("tol", Json::Num(TOL)),
+        (
+            "grid",
+            Json::obj(vec![
+                ("hi", Json::Num(0.9)),
+                ("lo", Json::Num(0.2)),
+                ("points", Json::Num(4.0)),
+            ]),
+        ),
+    ]);
+    let path_req = Json::obj(vec![
+        ("design_id", Json::Str(id.clone())),
+        ("model", path_model),
+    ])
+    .to_string();
+    let (status, body) = client.request("POST", "/v1/path", &path_req).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let direct = EnetModel::new()
+        .alpha(0.8)
+        .tol(TOL)
+        .grid(0.9, 0.2, 4)
+        .fit_path(&design)
+        .unwrap();
+    let parsed = Json::parse(&body).expect("path response parses");
+    assert_eq!(
+        parsed.get("lambda_max").and_then(Json::as_f64).map(f64::to_bits),
+        Some(direct.lambda_max().to_bits()),
+        "lambda_max diverges"
+    );
+    assert_eq!(parsed.get("runs").and_then(Json::as_usize), Some(direct.runs()));
+    let points = parsed.get("points").and_then(Json::as_arr).expect("points array");
+    assert_eq!(points.len(), direct.points().len());
+    for (got, want) in points.iter().zip(direct.points()) {
+        assert_eq!(
+            got.get("objective").and_then(Json::as_f64).map(f64::to_bits),
+            Some(want.result.objective.to_bits()),
+            "path objective diverges"
+        );
+        let coefs: Vec<f64> =
+            want.result.active_set.iter().map(|&j| want.result.x[j]).collect();
+        assert_num_arr_bits(got.get("coefficients").expect("coefficients"), &coefs, "path coefs");
+    }
+
+    handle.stop();
+}
+
+/// Sparse acceptance criterion: a CSC design registered over the wire fits
+/// and predicts through the server with bytes identical to the dense direct
+/// api on the same values — no densification anywhere in the round trip.
+#[test]
+fn sparse_design_roundtrips_fit_and_predict() {
+    let (m, n) = (24, 80);
+    let a = Mat::from_fn(m, n, |i, j| {
+        if (i + 2 * j) % 7 == 0 {
+            (i + 1) as f64 * 0.3 - (j % 5) as f64 * 0.7
+        } else {
+            0.0
+        }
+    });
+    let b: Vec<f64> = (0..m).map(|i| ((i * i % 11) as f64) - 5.0).collect();
+    let csc = CscMat::from_dense(&a);
+
+    // direct dense reference — the sparse kernels' contract is to reproduce
+    // these bits exactly
+    let design = Design::new(&a, &b).unwrap();
+    let fit = EnetModel::new().alpha_c(0.8, 0.4).tol(TOL).fit(&design).unwrap();
+    let expected_fit = fit.export_json();
+    let expected_preds = fit.predict(&csc).unwrap();
+
+    let csc_spec = |mat: &CscMat| -> Vec<(&'static str, Json)> {
+        vec![
+            ("m", Json::Num(mat.rows() as f64)),
+            ("n", Json::Num(mat.cols() as f64)),
+            ("col_ptr", Json::Arr(mat.col_ptr().iter().map(|&p| Json::Num(p as f64)).collect())),
+            ("row_idx", Json::Arr(mat.row_idx().iter().map(|&i| Json::Num(i as f64)).collect())),
+            ("values", num_arr(mat.values())),
+        ]
+    };
+
+    let handle = spawn_server(16, 0, 256 << 20);
+    let mut client = Client::connect(&handle.addr()).unwrap();
+    let mut fields = csc_spec(&csc);
+    fields.push(("b", num_arr(&b)));
+    let (status, body) =
+        client.request("POST", "/v1/designs", &Json::obj(fields).to_string()).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let reg = Json::parse(&body).expect("registration parses");
+    assert_eq!(reg.get("sparse"), Some(&Json::Bool(true)), "stored as CSC: {body}");
+    let id = reg.get("design_id").and_then(|v| v.as_str().map(String::from)).unwrap();
+
+    let (status, body) = client.request("POST", "/v1/fit", &fit_body(&id, 0.4)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body, expected_fit, "sparse server fit diverges from dense direct api");
+
+    // predict with a sparse a_new spec (the design itself)
+    let pred_req = Json::obj(vec![
+        ("design_id", Json::Str(id)),
+        ("model", model_spec(0.4)),
+        ("a_new", Json::obj(csc_spec(&csc))),
+    ])
+    .to_string();
+    let (status, body) = client.request("POST", "/v1/predict", &pred_req).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let parsed = Json::parse(&body).expect("predictions parse");
+    assert_num_arr_bits(
+        parsed.get("predictions").expect("predictions field"),
+        &expected_preds,
+        "sparse predictions",
+    );
+
+    handle.stop();
+}
+
+/// Every malformed request maps to a 4xx with a JSON error body — no panic,
+/// and the server keeps answering afterwards (health stays 200).
+#[test]
+fn malformed_requests_get_4xx_and_never_wedge_the_server() {
+    let a = Mat::from_row_major(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+    let b = [3.0, -1.0];
+    let handle = spawn_server(16, 0, 2048);
+    let addr = handle.addr();
+    let mut client = Client::connect(&addr).unwrap();
+    let id = register_dense(&mut client, &a, &b);
+
+    let post = |path: &str, body: &str| http_request(&addr, "POST", path, body).unwrap();
+
+    // transport- and routing-level defects
+    assert_eq!(post("/v1/fit", "{not json").0, 400, "bad JSON");
+    assert_eq!(post("/v1/nope", "{}").0, 404, "unknown route");
+    assert_eq!(http_request(&addr, "GET", "/v1/fit", "").unwrap().0, 405, "wrong method");
+
+    // registration defects
+    let short_dense = Json::obj(vec![
+        ("m", Json::Num(2.0)),
+        ("n", Json::Num(2.0)),
+        ("dense", num_arr(&[1.0, 2.0, 3.0])),
+        ("b", num_arr(&b)),
+    ])
+    .to_string();
+    assert_eq!(post("/v1/designs", &short_dense).0, 400, "wrong dense length");
+    let bad_csc = Json::obj(vec![
+        ("m", Json::Num(2.0)),
+        ("n", Json::Num(2.0)),
+        ("col_ptr", num_arr(&[0.0, 1.0])), // wrong length: needs n+1 entries
+        ("row_idx", num_arr(&[0.0])),
+        ("values", num_arr(&[1.0])),
+        ("b", num_arr(&b)),
+    ])
+    .to_string();
+    let (status, body) = post("/v1/designs", &bad_csc);
+    assert_eq!(status, 400, "defective CSC structure: {body}");
+    assert_eq!(post("/v1/designs", "{}").0, 400, "missing matrix payload");
+
+    // lookup and field defects
+    assert_eq!(post("/v1/fit", "{}").0, 400, "missing design_id");
+    assert_eq!(post("/v1/fit", r#"{"design_id":"d0000000000000000"}"#).0, 404, "unknown design");
+    let wrong_b = refit_body(&id, 0.5, &[1.0, 2.0, 3.0]);
+    assert_eq!(post("/v1/refit", &wrong_b).0, 400, "shape-mismatched response");
+    let both = Json::obj(vec![
+        ("design_id", Json::Str(id.clone())),
+        ("b", num_arr(&b)),
+        ("bs", Json::Arr(vec![num_arr(&b)])),
+    ])
+    .to_string();
+    assert_eq!(post("/v1/refit", &both).0, 400, "b and bs together");
+
+    // model-spec defects
+    let model_req = |model: Json| {
+        Json::obj(vec![("design_id", Json::Str(id.clone())), ("model", model)]).to_string()
+    };
+    let unknown = model_req(Json::obj(vec![("ridge", Json::Num(1.0))]));
+    assert_eq!(post("/v1/fit", &unknown).0, 400, "unknown model field");
+    let threads = model_req(Json::obj(vec![("threads", Json::Num(4.0))]));
+    assert_eq!(post("/v1/fit", &threads).0, 400, "client-set threads rejected");
+    let bad_algo = model_req(Json::obj(vec![("algorithm", Json::Str("lars".to_string()))]));
+    assert_eq!(post("/v1/fit", &bad_algo).0, 400, "unknown algorithm");
+    let conflict = model_req(Json::obj(vec![
+        ("alpha", Json::Num(0.8)),
+        ("lam1", Json::Num(0.5)),
+        ("lam2", Json::Num(0.5)),
+    ]));
+    assert_eq!(post("/v1/fit", &conflict).0, 400, "alpha with explicit lambdas");
+    let negative = model_req(Json::obj(vec![("lam1", Json::Num(-0.5)), ("lam2", Json::Num(0.5))]));
+    assert_eq!(post("/v1/fit", &negative).0, 400, "negative penalty");
+
+    // oversized declared body: rejected before a body byte is read
+    let mut raw = Client::connect(&addr).unwrap();
+    let head = b"POST /v1/fit HTTP/1.1\r\nhost: t\r\ncontent-length: 4096\r\n\r\n";
+    let (status, _) = raw.request_raw(head).unwrap();
+    assert_eq!(status, 413, "body over the cap");
+
+    // garbage request line
+    let mut raw = Client::connect(&addr).unwrap();
+    let (status, _) = raw.request_raw(b"BLARG\r\n\r\n").unwrap();
+    assert_eq!(status, 400, "malformed request line");
+
+    // after all of the above the server still answers correctly
+    let (status, body) = http_request(&addr, "GET", "/v1/health", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let health = Json::parse(&body).expect("health parses");
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    let (status, body) = client.request("POST", "/v1/fit", &fit_body(&id, 0.5)).unwrap();
+    assert_eq!(status, 200, "fit after the error barrage: {body}");
+
+    handle.stop();
+}
+
+/// Concurrency and thread budget change latency only: at 1, 8, and 64
+/// concurrent clients, against servers budgeted at 1 and at 4 solver
+/// threads, every response is byte-identical to the sequential direct call.
+#[test]
+fn concurrent_clients_are_bitwise_identical_to_sequential() {
+    let prob = problem();
+    let design = Design::new(&prob.a, &prob.b).unwrap();
+    let mut reference = EnetModel::new().alpha_c(0.8, 0.5).tol(TOL).fit(&design).unwrap();
+    let m = prob.b.len();
+    let response = |i: usize| -> Vec<f64> { (0..m).map(|k| prob.b[(k + i) % m]).collect() };
+    let max_clients = 64;
+    let mut expected = Vec::with_capacity(max_clients);
+    for i in 0..max_clients {
+        reference.refit(&response(i)).unwrap();
+        expected.push(reference.export_json());
+    }
+
+    for budget in [1usize, 4] {
+        let handle = spawn_server(16, budget, 256 << 20);
+        let addr = handle.addr();
+        let mut setup = Client::connect(&addr).unwrap();
+        let id = register_dense(&mut setup, &prob.a, &prob.b);
+        for clients in [1usize, 8, 64] {
+            let expected = &expected;
+            let addr = &addr;
+            let id = &id;
+            let response = &response;
+            std::thread::scope(|scope| {
+                let workers: Vec<_> = (0..clients)
+                    .map(|c| {
+                        scope.spawn(move || {
+                            let mut client = Client::connect(addr).expect("connect");
+                            let body = refit_body(id, 0.5, &response(c));
+                            let (status, got) =
+                                client.request("POST", "/v1/refit", &body).expect("refit");
+                            assert_eq!(status, 200, "budget {budget}: {got}");
+                            assert_eq!(
+                                got, expected[c],
+                                "budget {budget}, {clients} clients: response {c} diverges"
+                            );
+                        })
+                    })
+                    .collect();
+                for w in workers {
+                    w.join().expect("client thread");
+                }
+            });
+        }
+        handle.stop();
+    }
+}
+
+/// LRU eviction under a tiny session cap: sessions churn while another model
+/// spec is being hammered concurrently, yet every response stays bitwise
+/// equal to the direct api and the resident count respects the cap.
+#[test]
+fn lru_eviction_does_not_corrupt_warm_sessions() {
+    let prob = problem();
+    let design = Design::new(&prob.a, &prob.b).unwrap();
+    let b2: Vec<f64> = prob.b.iter().rev().copied().collect();
+    let mut reference = EnetModel::new().alpha_c(0.8, 0.5).tol(TOL).fit(&design).unwrap();
+    reference.refit(&b2).unwrap();
+    let expected_a = reference.export_json();
+
+    let handle = spawn_server(2, 0, 256 << 20);
+    let addr = handle.addr();
+    let mut setup = Client::connect(&addr).unwrap();
+    let id = register_dense(&mut setup, &prob.a, &prob.b);
+
+    // model A stays under continuous refit load while fresh model specs
+    // (distinct c values → distinct session keys) churn the 2-slot LRU
+    std::thread::scope(|scope| {
+        let addr = &addr;
+        let id = &id;
+        let expected_a = &expected_a;
+        let b2 = &b2;
+        let hammer = scope.spawn(move || {
+            let mut client = Client::connect(addr).expect("connect");
+            for round in 0..6 {
+                let body = refit_body(id, 0.5, b2);
+                let (status, got) = client.request("POST", "/v1/refit", &body).expect("refit");
+                assert_eq!(status, 200, "round {round}: {got}");
+                assert_eq!(got, *expected_a, "round {round}: eviction churn changed the bytes");
+            }
+        });
+        let mut churn = Client::connect(addr).expect("connect");
+        for k in 0..5 {
+            let c = 0.3 + 0.05 * k as f64;
+            let (status, got) = churn.request("POST", "/v1/fit", &fit_body(id, c)).expect("fit");
+            assert_eq!(status, 200, "churn fit {k}: {got}");
+        }
+        hammer.join().expect("hammer thread");
+    });
+
+    // the cap held, and the evicted-then-recreated model A still solves to
+    // the exact same bytes
+    let (status, body) = http_request(&addr, "GET", "/v1/health", "").unwrap();
+    assert_eq!(status, 200);
+    let sessions = Json::parse(&body)
+        .expect("health parses")
+        .get("sessions")
+        .and_then(Json::as_usize)
+        .expect("sessions counter");
+    assert!(sessions <= 2, "LRU cap violated: {sessions} resident sessions");
+    let (status, got) = setup.request("POST", "/v1/refit", &refit_body(&id, 0.5, &b2)).unwrap();
+    assert_eq!(status, 200, "{got}");
+    assert_eq!(got, expected_a, "recreated session diverges from direct api");
+
+    handle.stop();
+}
