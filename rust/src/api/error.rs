@@ -99,6 +99,13 @@ pub enum EnetError {
     },
     /// Backend (PJRT artifact loading / graph execution) failure.
     Backend(String),
+    /// A per-request deadline expired before the work could run (serving:
+    /// the request spent its whole budget queued or reading its body, so the
+    /// solve was never dispatched).
+    Deadline {
+        /// The request's total time budget, milliseconds.
+        budget_ms: u64,
+    },
 }
 
 impl fmt::Display for EnetError {
@@ -145,6 +152,9 @@ impl fmt::Display for EnetError {
             ),
             EnetError::Unsupported { what } => write!(f, "unsupported request: {what}"),
             EnetError::Backend(msg) => write!(f, "backend error: {msg}"),
+            EnetError::Deadline { budget_ms } => {
+                write!(f, "request deadline of {budget_ms} ms exceeded before dispatch")
+            }
         }
     }
 }

@@ -8,8 +8,8 @@
 //! serve-many-responses scenario (GWAS permutation tests, online re-scoring)
 //! at workspace-cache cost, with results bitwise-identical to a cold fit.
 
-use crate::api::{Design, EnetError, EnetModel};
-use crate::linalg::{DesignRef, NewtonWorkspace, WorkspaceStats};
+use crate::api::{Design, EnetError, EnetModel, StatsSnapshot};
+use crate::linalg::{DesignRef, NewtonWorkspace};
 use crate::runtime::PjrtEngine;
 use crate::parallel::{ChainReport, ParallelPathResult};
 use crate::path::{PathPoint, PathResult};
@@ -86,9 +86,10 @@ impl<'d> Fit<'d> {
     }
 
     /// Workspace cache/reuse counters — how much of the Newton state the
-    /// session reused so far (diagnostics only).
-    pub fn workspace_stats(&self) -> &WorkspaceStats {
-        &self.ws.stats
+    /// session reused so far, as the typed public snapshot shared with the
+    /// serving layer's `GET /v1/stats` (diagnostics only).
+    pub fn workspace_stats(&self) -> StatsSnapshot {
+        StatsSnapshot::from(&self.ws.stats)
     }
 
     /// Consume the session, keeping only the solver result.

@@ -43,11 +43,13 @@ pub mod design;
 pub mod error;
 pub mod fit;
 pub mod model;
+pub mod stats;
 
 pub use design::Design;
 pub use error::EnetError;
 pub use fit::{Fit, PathFit, TuneFit};
 pub use model::{Backend, EnetModel};
+pub use stats::StatsSnapshot;
 
 /// The one α-range rule (0 < α ≤ 1, finite), shared by
 /// [`Design::lambda_max`] and the builder's validation so the two surfaces

@@ -1,0 +1,167 @@
+//! Typed snapshot of the Newton-workspace reuse counters.
+//!
+//! [`crate::linalg::WorkspaceStats`] is the raw per-workspace counter block
+//! the solver mutates on its hot path; [`StatsSnapshot`] is the *public*,
+//! serializable view of it — one struct, one JSON schema — consumed by
+//! [`crate::api::Fit::workspace_stats`], the serving layer's `GET /v1/stats`
+//! (per-session cache-hit rates), and the serve bench tables. Anything that
+//! reports warm-session economics goes through this type rather than poking
+//! at counter fields ad hoc, so the schema can only drift in one place.
+
+use crate::linalg::WorkspaceStats;
+use crate::util::json::Json;
+
+/// A point-in-time copy of one workspace's cache/reuse counters plus the
+/// derived rates every consumer wants (diagnostics only — never consulted by
+/// the numerics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    /// Woodbury solves that reused Gram *and* Cholesky outright.
+    pub factor_hits: usize,
+    /// Woodbury solves that reused the raw Gram but refactored (κ changed).
+    pub gram_hits: usize,
+    /// Woodbury Gram updates that recomputed only tail rows/columns.
+    pub gram_incremental: usize,
+    /// Woodbury Grams rebuilt from scratch (sharded).
+    pub gram_rebuilds: usize,
+    /// Cholesky refactors restarted at a pivot > 0.
+    pub partial_refactors: usize,
+    /// Direct solves that reused the cached m×m factor.
+    pub direct_hits: usize,
+    /// Direct solves that rebuilt V and refactored.
+    pub direct_rebuilds: usize,
+    /// Newton solves that fell back to CG after a factorization failure.
+    pub cg_fallbacks: usize,
+}
+
+impl StatsSnapshot {
+    /// Total cache-relevant Newton-system events recorded so far.
+    pub fn events(&self) -> usize {
+        self.factor_hits
+            + self.gram_hits
+            + self.gram_incremental
+            + self.gram_rebuilds
+            + self.direct_hits
+            + self.direct_rebuilds
+    }
+
+    /// Events that reused cached state instead of rebuilding it from scratch
+    /// (outright factor hits, Gram-only hits, incremental tail updates,
+    /// direct-factor hits).
+    pub fn hits(&self) -> usize {
+        self.factor_hits + self.gram_hits + self.gram_incremental + self.direct_hits
+    }
+
+    /// Cache-hit rate in `[0, 1]` (`0.0` before any event) — the number the
+    /// warm-session economics hinge on: a warm refit beats a cold fit
+    /// exactly to the extent this stays high.
+    pub fn hit_rate(&self) -> f64 {
+        let events = self.events();
+        if events == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / events as f64
+        }
+    }
+
+    /// The canonical JSON schema (field names mirror the struct; `events`,
+    /// `hits`, and `hit_rate` are included so consumers need no arithmetic).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("factor_hits", Json::Num(self.factor_hits as f64)),
+            ("gram_hits", Json::Num(self.gram_hits as f64)),
+            ("gram_incremental", Json::Num(self.gram_incremental as f64)),
+            ("gram_rebuilds", Json::Num(self.gram_rebuilds as f64)),
+            ("partial_refactors", Json::Num(self.partial_refactors as f64)),
+            ("direct_hits", Json::Num(self.direct_hits as f64)),
+            ("direct_rebuilds", Json::Num(self.direct_rebuilds as f64)),
+            ("cg_fallbacks", Json::Num(self.cg_fallbacks as f64)),
+            ("events", Json::Num(self.events() as f64)),
+            ("hits", Json::Num(self.hits() as f64)),
+            ("hit_rate", Json::Num(self.hit_rate())),
+        ])
+    }
+
+    /// Parse the schema [`StatsSnapshot::to_json`] writes — the client half
+    /// of `GET /v1/stats` (the serve bench reads per-session workspace stats
+    /// back through this). Derived fields are ignored; missing or malformed
+    /// counters yield `None`.
+    pub fn from_json(v: &Json) -> Option<StatsSnapshot> {
+        let field = |key: &str| v.get(key).and_then(Json::as_usize);
+        Some(StatsSnapshot {
+            factor_hits: field("factor_hits")?,
+            gram_hits: field("gram_hits")?,
+            gram_incremental: field("gram_incremental")?,
+            gram_rebuilds: field("gram_rebuilds")?,
+            partial_refactors: field("partial_refactors")?,
+            direct_hits: field("direct_hits")?,
+            direct_rebuilds: field("direct_rebuilds")?,
+            cg_fallbacks: field("cg_fallbacks")?,
+        })
+    }
+}
+
+impl From<&WorkspaceStats> for StatsSnapshot {
+    fn from(ws: &WorkspaceStats) -> Self {
+        StatsSnapshot {
+            factor_hits: ws.factor_hits,
+            gram_hits: ws.gram_hits,
+            gram_incremental: ws.gram_incremental,
+            gram_rebuilds: ws.gram_rebuilds,
+            partial_refactors: ws.partial_refactors,
+            direct_hits: ws.direct_hits,
+            direct_rebuilds: ws.direct_rebuilds,
+            cg_fallbacks: ws.cg_fallbacks,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StatsSnapshot {
+        StatsSnapshot {
+            factor_hits: 6,
+            gram_hits: 2,
+            gram_incremental: 1,
+            gram_rebuilds: 3,
+            partial_refactors: 1,
+            direct_hits: 0,
+            direct_rebuilds: 0,
+            cg_fallbacks: 0,
+        }
+    }
+
+    #[test]
+    fn rates_and_totals() {
+        let s = sample();
+        assert_eq!(s.events(), 12);
+        assert_eq!(s.hits(), 9);
+        assert!((s.hit_rate() - 0.75).abs() < 1e-15);
+        assert_eq!(StatsSnapshot::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let s = sample();
+        let j = s.to_json();
+        assert_eq!(j.get("hit_rate").and_then(Json::as_f64), Some(s.hit_rate()));
+        let parsed = Json::parse(&j.to_string()).expect("snapshot json parses");
+        assert_eq!(StatsSnapshot::from_json(&parsed), Some(s));
+        assert_eq!(StatsSnapshot::from_json(&Json::Null), None);
+    }
+
+    #[test]
+    fn mirrors_workspace_counters() {
+        let ws = crate::linalg::WorkspaceStats {
+            factor_hits: 4,
+            gram_rebuilds: 1,
+            ..Default::default()
+        };
+        let s = StatsSnapshot::from(&ws);
+        assert_eq!(s.factor_hits, 4);
+        assert_eq!(s.gram_rebuilds, 1);
+        assert_eq!(s.events(), 5);
+    }
+}

@@ -1685,9 +1685,230 @@ pub fn serve_bench_rows(
     (t, rows, cold_fit_seconds, warm_refit_seconds)
 }
 
+/// The queued-load section of the serve bench: offered load at 2× the
+/// in-flight cap against one warm session, through a deliberately small
+/// server. What this pins: the admission queue absorbs the whole burst
+/// (zero 503s), concurrent single-`b` refits coalesce into `refit_many`
+/// batches (ratio > 1), and every response stays byte-identical to the
+/// uncoalesced direct-api solve — all read back through `GET /v1/stats`.
+#[derive(Clone, Debug)]
+pub struct ServeQueuedRow {
+    /// The server's in-flight cap for this measurement.
+    pub max_inflight: usize,
+    /// Concurrent keep-alive clients (2× the cap).
+    pub clients: usize,
+    /// Total requests offered.
+    pub requests: usize,
+    /// Median request latency under queued load, seconds.
+    pub p50_seconds: f64,
+    /// 95th-percentile request latency under queued load, seconds.
+    pub p95_seconds: f64,
+    /// Wall-clock for the whole burst, seconds.
+    pub total_seconds: f64,
+    /// 503s from a full admission queue (must be 0: the queue is sized to
+    /// absorb the burst).
+    pub rejected_queue_full: usize,
+    /// Requests that waited in the queue before executing.
+    pub queued_total: usize,
+    /// Coalesced-refit batches executed.
+    pub coalesce_batches: usize,
+    /// Single-refit requests served through those batches.
+    pub coalesce_requests: usize,
+    /// Requests per batch (> 1 once concurrent refits actually merged).
+    pub coalesce_ratio: f64,
+    /// The warm session's workspace cache-hit rate, read back from
+    /// `/v1/stats` through [`crate::api::StatsSnapshot::from_json`].
+    pub workspace_hit_rate: f64,
+    /// Whether every response was byte-identical to the direct `api::` call.
+    pub bitwise_equal: bool,
+}
+
+/// Run the queued-load measurement (see [`ServeQueuedRow`]). The server is
+/// sized so the burst *must* queue (`max_inflight` 4, clients 8) and the
+/// default queue depth absorbs it without rejections; all requests target
+/// one warm session so concurrent refits contend on the session lock and
+/// coalesce.
+pub fn serve_queued_load(
+    n: usize,
+    m: usize,
+    requests_per_client: usize,
+    tol: f64,
+    seed: u64,
+) -> (Table, ServeQueuedRow) {
+    use crate::api::StatsSnapshot;
+    use crate::serve::{Client, Server, ServerConfig};
+    use crate::util::timer::time_it;
+
+    let requests_per_client = requests_per_client.max(2);
+    let max_inflight = 4usize;
+    let clients = 2 * max_inflight;
+    let total = clients * requests_per_client;
+    let prob = generate_synthetic(&SyntheticSpec {
+        m,
+        n,
+        n0: (n / 100).clamp(2, 10),
+        x_star: 5.0,
+        snr: 5.0,
+        seed,
+    });
+    let response = |i: usize| -> Vec<f64> { (0..m).map(|k| prob.b[(k + i) % m]).collect() };
+
+    // Direct-api reference bytes, one per request index — coalesced or not,
+    // the server must reproduce exactly these.
+    let design = Design::new(&prob.a, &prob.b).expect("serve queued bench design is valid");
+    let model = EnetModel::new().alpha_c(0.8, 0.5).tol(tol);
+    let mut reference = model.fit(&design).expect("serve queued bench reference fit");
+    let mut expected = Vec::with_capacity(total);
+    for i in 0..total {
+        reference.refit(&response(i)).expect("serve queued bench reference refit");
+        expected.push(reference.export_json());
+    }
+
+    let mut dense = Vec::with_capacity(m * n);
+    for i in 0..m {
+        for j in 0..n {
+            dense.push(Json::Num(prob.a.col(j)[i]));
+        }
+    }
+    let design_body = Json::obj(vec![
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(n as f64)),
+        ("dense", Json::Arr(dense)),
+        ("b", Json::Arr(prob.b.iter().map(|&v| Json::Num(v)).collect())),
+    ])
+    .to_string();
+    let model_json = || Json::obj(vec![("c", Json::Num(0.5)), ("tol", Json::Num(tol))]);
+
+    let cfg = ServerConfig { port: 0, max_inflight, ..ServerConfig::default() };
+    let queue_capacity = cfg.queue_depth;
+    let server = Server::bind(cfg).expect("bind ephemeral serve port");
+    let handle = server.spawn().expect("spawn serve accept loop");
+    let addr = handle.addr();
+
+    let mut prelude = Client::connect(&addr).expect("connect serve queued client");
+    let (status, body) =
+        prelude.request("POST", "/v1/designs", &design_body).expect("register design");
+    assert_eq!(status, 200, "design registration failed: {body}");
+    let design_id = Json::parse(&body)
+        .ok()
+        .and_then(|j| j.get("design_id").and_then(|v| v.as_str().map(String::from)))
+        .expect("design_id in registration response");
+    let make_refit_body = |i: usize| {
+        Json::obj(vec![
+            ("design_id", Json::Str(design_id.clone())),
+            ("model", model_json()),
+            ("b", Json::Arr(response(i).iter().map(|&v| Json::Num(v)).collect())),
+        ])
+        .to_string()
+    };
+
+    // Warm the session so the burst measures steady-state serving, not the
+    // one-off session construction.
+    let warmup = make_refit_body(0);
+    let (status, body) = prelude.request("POST", "/v1/refit", &warmup).expect("warmup refit");
+    let mut bitwise = status == 200 && body == expected[0];
+
+    let addr_ref: &str = &addr;
+    let expected_ref: &[String] = &expected;
+    let make_refit_body = &make_refit_body;
+    let ((mut lats, burst_bitwise), total_seconds) = time_it(|| {
+        std::thread::scope(|scope| {
+            let workers: Vec<_> = (0..clients)
+                .map(|c| {
+                    scope.spawn(move || {
+                        let mut client =
+                            Client::connect(addr_ref).expect("connect serve queued client");
+                        let mut lat = Vec::with_capacity(requests_per_client);
+                        let mut ok = true;
+                        for r in 0..requests_per_client {
+                            let i = c * requests_per_client + r;
+                            let body = make_refit_body(i);
+                            let (resp, secs) =
+                                time_it(|| client.request("POST", "/v1/refit", &body));
+                            let (status, rbody) = resp.expect("serve queued refit");
+                            ok &= status == 200 && rbody == expected_ref[i];
+                            lat.push(secs);
+                        }
+                        (lat, ok)
+                    })
+                })
+                .collect();
+            let mut lats = Vec::with_capacity(total);
+            let mut ok = true;
+            for w in workers {
+                let (lat, o) = w.join().expect("serve queued client thread");
+                lats.extend(lat);
+                ok &= o;
+            }
+            (lats, ok)
+        })
+    });
+    bitwise &= burst_bitwise;
+    lats.sort_by(|a, b| a.total_cmp(b));
+
+    // Read the serving counters back through the typed stats surface.
+    let (status, stats_body) = prelude.request("GET", "/v1/stats", "").expect("stats request");
+    assert_eq!(status, 200, "stats request failed: {stats_body}");
+    let stats = Json::parse(&stats_body).expect("stats body parses");
+    let counter = |obj: &str, key: &str| -> usize {
+        stats.get(obj).and_then(|o| o.get(key)).and_then(Json::as_usize).unwrap_or(0)
+    };
+    let workspace_hit_rate = stats
+        .get("sessions")
+        .and_then(Json::as_arr)
+        .and_then(|sessions| {
+            sessions.iter().find_map(|s| {
+                s.get("workspace").and_then(StatsSnapshot::from_json).map(|ws| ws.hit_rate())
+            })
+        })
+        .unwrap_or(0.0);
+    let row = ServeQueuedRow {
+        max_inflight,
+        clients,
+        requests: total,
+        p50_seconds: percentile(&lats, 0.50),
+        p95_seconds: percentile(&lats, 0.95),
+        total_seconds,
+        rejected_queue_full: counter("queue", "rejected_full"),
+        queued_total: counter("queue", "queued_total"),
+        coalesce_batches: counter("coalesce", "batches"),
+        coalesce_requests: counter("coalesce", "requests"),
+        coalesce_ratio: stats
+            .get("coalesce")
+            .and_then(|c| c.get("ratio"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0),
+        workspace_hit_rate,
+        bitwise_equal: bitwise,
+    };
+    handle.stop();
+
+    let mut t = Table::new(&[
+        "clients", "inflight-cap", "requests", "p50(s)", "p95(s)", "503s", "queued", "coalesce",
+        "bitwise",
+    ])
+    .with_title(&format!(
+        "serve queued load: {m}×{n} design, {clients} clients vs cap {max_inflight} \
+         (queue {queue_capacity})"
+    ));
+    t.row(vec![
+        format!("{}", row.clients),
+        format!("{}", row.max_inflight),
+        format!("{}", row.requests),
+        fmt_secs(row.p50_seconds),
+        fmt_secs(row.p95_seconds),
+        format!("{}", row.rejected_queue_full),
+        format!("{}", row.queued_total),
+        format!("{:.2}x", row.coalesce_ratio),
+        format!("{}", row.bitwise_equal),
+    ]);
+    (t, row)
+}
+
 /// Render the serve bench as the JSON payload CI uploads
 /// (`BENCH_serve.json`). Rows carry no `threads` key, so the baseline diff
-/// matches them by index — keep the clients list order stable.
+/// matches them by index — keep the clients list order stable. The `queued`
+/// section carries the queued-load measurement when it ran.
 pub fn serve_bench_json(
     rows: &[ServeBenchRow],
     n: usize,
@@ -1695,6 +1916,7 @@ pub fn serve_bench_json(
     requests_per_client: usize,
     cold_fit_seconds: f64,
     warm_refit_seconds: f64,
+    queued: Option<&ServeQueuedRow>,
 ) -> String {
     let row_objs: Vec<Json> = rows
         .iter()
@@ -1709,7 +1931,7 @@ pub fn serve_bench_json(
             ])
         })
         .collect();
-    Json::obj(vec![
+    let mut fields = vec![
         ("bench", Json::Str("serve".to_string())),
         ("n", Json::Num(n as f64)),
         ("m", Json::Num(m as f64)),
@@ -1718,8 +1940,28 @@ pub fn serve_bench_json(
         ("warm_refit_seconds", Json::Num(warm_refit_seconds)),
         ("warm_speedup", Json::Num(cold_fit_seconds / warm_refit_seconds.max(1e-12))),
         ("rows", Json::Arr(row_objs)),
-    ])
-    .to_string()
+    ];
+    if let Some(q) = queued {
+        fields.push((
+            "queued",
+            Json::obj(vec![
+                ("max_inflight", Json::Num(q.max_inflight as f64)),
+                ("clients", Json::Num(q.clients as f64)),
+                ("requests", Json::Num(q.requests as f64)),
+                ("p50_seconds", Json::Num(q.p50_seconds)),
+                ("p95_seconds", Json::Num(q.p95_seconds)),
+                ("total_seconds", Json::Num(q.total_seconds)),
+                ("rejected_queue_full", Json::Num(q.rejected_queue_full as f64)),
+                ("queued_total", Json::Num(q.queued_total as f64)),
+                ("coalesce_batches", Json::Num(q.coalesce_batches as f64)),
+                ("coalesce_requests", Json::Num(q.coalesce_requests as f64)),
+                ("coalesce_ratio", Json::Num(q.coalesce_ratio)),
+                ("workspace_hit_rate", Json::Num(q.workspace_hit_rate)),
+                ("bitwise_equal", Json::Bool(q.bitwise_equal)),
+            ]),
+        ));
+    }
+    Json::obj(fields).to_string()
 }
 
 #[cfg(test)]
@@ -1824,9 +2066,33 @@ mod shard_bench_tests {
             assert!(r.p50_seconds > 0.0 && r.p95_seconds >= r.p50_seconds, "{rows:?}");
             assert_eq!(r.requests, r.clients * 2);
         }
-        let js = serve_bench_json(&rows, 400, 30, 2, cold, warm);
+        let js = serve_bench_json(&rows, 400, 30, 2, cold, warm, None);
         assert!(js.contains("\"bench\":\"serve\""), "{js}");
         assert!(js.contains("warm_speedup"), "{js}");
         assert!(js.contains("p95_seconds"), "{js}");
+        assert!(!js.contains("\"queued\""), "{js}");
+    }
+
+    #[test]
+    fn serve_queued_load_tiny() {
+        let (t, row) = serve_queued_load(400, 30, 2, 1e-5, 13);
+        assert_eq!(t.len(), 1);
+        // The hard gates (ratio > 1, rejected == 0 at release sizes) run in
+        // `cmd_bench_parallel`; here just pin the contract pieces that are
+        // deterministic at any size: byte-identical responses, a queue deep
+        // enough that nothing was rejected, and coherent counters.
+        assert!(row.bitwise_equal, "{row:?}");
+        assert_eq!(row.rejected_queue_full, 0, "{row:?}");
+        assert_eq!(row.requests, row.clients * 2);
+        assert!(row.p95_seconds >= row.p50_seconds, "{row:?}");
+        assert!(
+            row.coalesce_requests >= row.coalesce_batches,
+            "batches served more requests than arrived: {row:?}"
+        );
+        assert!(row.workspace_hit_rate > 0.0, "warm session saw no cache hits: {row:?}");
+        let js = serve_bench_json(&[], 400, 30, 2, 1e-3, 1e-4, Some(&row));
+        assert!(js.contains("\"queued\""), "{js}");
+        assert!(js.contains("coalesce_ratio"), "{js}");
+        assert!(js.contains("rejected_queue_full"), "{js}");
     }
 }

@@ -79,10 +79,14 @@
 //!   toolchain does not ship; the engine degrades to a descriptive error),
 //! * [`serve`] — the `ssnal-en serve` HTTP/1.1 front end: a fingerprint-keyed
 //!   design registry, an LRU of warm [`Fit`]-equivalent sessions, batched
-//!   refits, per-request thread budgeting and a total `EnetError` → HTTP
-//!   status mapping — all over `std::net`, no dependencies. Rides on the
-//!   crate's determinism contracts: server responses are byte-identical to
-//!   direct [`api`] calls,
+//!   refits with cross-request coalescing, per-request thread budgeting, a
+//!   bounded FIFO admission queue with per-request deadlines (408/503 with
+//!   `Retry-After`, never a wedged connection), graceful SIGTERM drain, a
+//!   typed `GET /v1/stats` metrics surface ([`serve::ServeMetrics`]) and a
+//!   total `EnetError` → HTTP status mapping — all over `std::net`, no
+//!   dependencies. Rides on the crate's determinism contracts: server
+//!   responses are byte-identical to direct [`api`] calls, and coalesced
+//!   refits are byte-identical to sequential ones,
 //! * [`coordinator`] — **deprecated compatibility shim** over the facade
 //!   (kept so pre-facade callers compile; new code uses [`api`]),
 //! * [`linalg`] / [`rng`] / [`util`] / [`bench`] — the from-scratch substrates
@@ -104,12 +108,14 @@
 //! --check`, `cargo clippy -- -D warnings` and `cargo doc --no-deps` under
 //! `RUSTDOCFLAGS="-D warnings"` (broken intra-doc links in the API surface
 //! fail the build), plus a bench-smoke job that runs the parallel-path,
-//! shard-linalg, sparse-design, pool-dispatch and Newton-workspace
-//! benchmarks on tiny synthetic problems and uploads the resulting five
+//! shard-linalg, sparse-design, pool-dispatch, Newton-workspace and serve
+//! benchmarks on tiny synthetic problems and uploads the resulting six
 //! `BENCH_*.json` tables (the Newton section also gates warm-vs-cold
 //! workspace cost and steady-state allocations; the sparse section gates
-//! CSC sweeps beating their dense twins), and a bench-regression job that
-//! diffs them
+//! CSC sweeps beating their dense twins; the serve section gates warm
+//! refits beating cold fits through HTTP, zero queue rejections at 2×
+//! offered load, and the refit-coalesce ratio exceeding 1), and a
+//! bench-regression job that diffs them
 //! against the committed baselines in `rust/benches/baselines/` via
 //! `ssnal-en bench-check` ([`bench::check`]: structural drift and determinism
 //! violations hard-fail; wall-clock regressions >25% annotate without

@@ -112,7 +112,8 @@ fn print_help() {
          bench-check      --current BENCH_x.json --baseline benches/baselines/BENCH_x.json\n\
          artifacts-check  [--artifacts-dir artifacts]\n\
          serve            --host 127.0.0.1 --port 7878 --sessions 16 --max-inflight 32\n\
-         \x20                --threads 0 --max-body-mb 256\n"
+         \x20                --threads 0 --max-body-mb 256 --queue-depth 64\n\
+         \x20                --request-timeout-ms 30000 --drain-timeout-ms 30000\n"
     );
 }
 
@@ -583,15 +584,37 @@ fn cmd_bench_parallel(args: &Args) -> Result<()> {
         println!();
         vt.print();
         println!("\nwarm refit vs cold fit through the server: {:.2}x", cold / warm.max(1e-12));
+        // Queued load: offer 2× the in-flight cap against one warm session
+        // and read the admission/coalescing counters back through /v1/stats.
+        let (qt, qrow) = tables::serve_queued_load(serve_n, serve_m, serve_requests, tol, seed);
+        println!();
+        qt.print();
+        println!(
+            "\nqueued load: {} queued, {} rejected, coalesce ratio {:.2}x \
+             ({} requests in {} batches)",
+            qrow.queued_total,
+            qrow.rejected_queue_full,
+            qrow.coalesce_ratio,
+            qrow.coalesce_requests,
+            qrow.coalesce_batches
+        );
         if let Some(path) = args.get("serve-out") {
-            let json = tables::serve_bench_json(&vrows, serve_n, serve_m, serve_requests, cold, warm);
+            let json = tables::serve_bench_json(
+                &vrows,
+                serve_n,
+                serve_m,
+                serve_requests,
+                cold,
+                warm,
+                Some(&qrow),
+            );
             if let Some(parent) = PathBuf::from(path).parent() {
                 std::fs::create_dir_all(parent)?;
             }
             std::fs::write(path, json)?;
             println!("wrote {path}");
         }
-        determinism_ok &= vrows.iter().all(|r| r.bitwise_equal);
+        determinism_ok &= vrows.iter().all(|r| r.bitwise_equal) && qrow.bitwise_equal;
         // The warm-session claim is a gate: a refit through a warm server
         // session skips session construction and hits the Gram/Cholesky
         // cache, so it must be strictly cheaper than the cold fit (the
@@ -599,6 +622,23 @@ fn cmd_bench_parallel(args: &Args) -> Result<()> {
         if warm >= cold {
             return Err(Error::msg(format!(
                 "warm server refit no cheaper than cold fit ({warm:.2e}s vs {cold:.2e}s)"
+            )));
+        }
+        // Admission gates: the default queue must absorb a burst at 2× the
+        // in-flight cap without a single 503, and concurrent single-b refits
+        // on one session must actually coalesce (ratio > 1 means at least
+        // one refit_many batch carried more than one request).
+        if qrow.rejected_queue_full > 0 {
+            return Err(Error::msg(format!(
+                "admission queue rejected {} requests at 2x offered load \
+                 ({} clients vs cap {})",
+                qrow.rejected_queue_full, qrow.clients, qrow.max_inflight
+            )));
+        }
+        if qrow.coalesce_ratio <= 1.0 {
+            return Err(Error::msg(format!(
+                "concurrent refits never coalesced (ratio {:.2} over {} batches)",
+                qrow.coalesce_ratio, qrow.coalesce_batches
             )));
         }
     }
@@ -666,8 +706,9 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `ssnal-en serve` — run the HTTP front end on the calling thread until
-/// killed (see `ssnal_en::serve` for the wire format).
+/// `ssnal-en serve` — run the HTTP front end on the calling thread until a
+/// SIGTERM begins a graceful drain (see `ssnal_en::serve` for the wire
+/// format and overload behavior).
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = ssnal_en::serve::ServerConfig {
         host: args.get_str("host", "127.0.0.1"),
@@ -676,17 +717,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_inflight: args.get_usize("max-inflight", 32).map_err(Error::msg)?,
         threads: args.get_usize("threads", 0).map_err(Error::msg)?,
         max_body: args.get_usize("max-body-mb", 256).map_err(Error::msg)? << 20,
+        queue_depth: args.get_usize("queue-depth", 64).map_err(Error::msg)?,
+        request_timeout_ms: args.get_usize("request-timeout-ms", 30_000).map_err(Error::msg)?
+            as u64,
+        drain_timeout_ms: args.get_usize("drain-timeout-ms", 30_000).map_err(Error::msg)? as u64,
     };
+    ssnal_en::serve::install_sigterm_drain();
     let server = ssnal_en::serve::Server::bind(cfg.clone())?;
     let addr = server.local_addr()?;
     println!(
-        "ssnal-en serve listening on http://{addr} (sessions={}, max-inflight={}, threads={})",
+        "ssnal-en serve listening on http://{addr} (sessions={}, max-inflight={}, \
+         queue-depth={}, request-timeout-ms={}, threads={})",
         cfg.sessions,
         cfg.max_inflight,
+        cfg.queue_depth,
+        cfg.request_timeout_ms,
         ssnal_en::parallel::resolve_threads(cfg.threads)
     );
-    println!("routes: GET /v1/health · POST /v1/designs /v1/fit /v1/refit /v1/predict /v1/path");
+    println!(
+        "routes: GET /v1/health /v1/stats · POST /v1/designs /v1/fit /v1/refit /v1/predict \
+         /v1/path"
+    );
     server.run()?;
+    println!("ssnal-en serve drained cleanly");
     Ok(())
 }
 

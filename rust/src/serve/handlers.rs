@@ -7,20 +7,22 @@
 //! name, so adding an error variant without classifying it is a compile
 //! error, not a 500 at 2am.
 //!
-//! Fit-shaped responses are rendered by the same `solve_json` as
-//! [`crate::api::Fit::to_json`], which makes a server response byte-identical
-//! to the equivalent direct `api::` call.
+//! Response bodies are built exclusively by [`crate::serve::wire`] — the one
+//! encoder set shared with the `api::` layer, which makes a server response
+//! byte-identical to the equivalent direct `api::` call.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use std::time::Instant;
 
-use crate::api::fit::solve_json;
 use crate::api::{EnetError, EnetModel};
 use crate::linalg::{CscMat, DesignStorage, Mat};
 use crate::parallel::resolve_threads;
 use crate::serve::http::Request;
-use crate::serve::registry::{lock, Session, StoredDesign};
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::registry::{SessionSlot, StoredDesign};
 use crate::serve::server::ServerState;
+use crate::serve::wire::{self, Reply, SessionStatsEntry};
 use crate::solver::types::Algorithm;
 use crate::util::json::Json;
 
@@ -35,12 +37,13 @@ pub enum ServeError {
     NotFound(String),
     /// Known path, wrong method.
     MethodNotAllowed,
-    /// Admission control rejected the request.
+    /// Admission control rejected the request: the queue in front of the
+    /// in-flight cap is full.
     Busy {
-        /// Requests in flight, this one included.
-        inflight: usize,
-        /// The configured cap.
-        max_inflight: usize,
+        /// Requests waiting in the admission queue.
+        queued: usize,
+        /// The queue capacity.
+        queue_capacity: usize,
     },
 }
 
@@ -71,6 +74,10 @@ impl ServeError {
                 | EnetError::WarmStartShape { .. } => 400,
                 EnetError::Unsupported { .. } => 422,
                 EnetError::Backend(_) => 502,
+                // The request's budget ran out before the solve was
+                // dispatched — the server never started the work, so the
+                // client can safely retry.
+                EnetError::Deadline { .. } => 503,
             },
             ServeError::BadRequest(_) => 400,
             ServeError::NotFound(_) => 404,
@@ -86,30 +93,42 @@ impl ServeError {
             ServeError::BadRequest(msg) => msg.clone(),
             ServeError::NotFound(what) => format!("{what} not found"),
             ServeError::MethodNotAllowed => "method not allowed".to_string(),
-            ServeError::Busy { inflight, max_inflight } => format!(
-                "server at capacity ({inflight} requests in flight, cap {max_inflight}); retry"
+            ServeError::Busy { queued, queue_capacity } => format!(
+                "server at capacity (admission queue full: {queued} waiting, cap \
+                 {queue_capacity}); retry"
             ),
+        }
+    }
+
+    /// `Retry-After` seconds for errors where a retry is the protocol
+    /// (admission-control 503s), `None` otherwise.
+    pub fn retry_after_secs(&self) -> Option<u64> {
+        match self {
+            ServeError::Busy { .. } | ServeError::Api(EnetError::Deadline { .. }) => Some(1),
+            _ => None,
+        }
+    }
+
+    /// Render as a full HTTP reply.
+    pub fn reply(&self) -> Reply {
+        let status = self.status();
+        let reply = Reply::error(status, &self.message());
+        match self.retry_after_secs() {
+            Some(secs) => reply.retry_after(secs),
+            None => reply,
         }
     }
 }
 
-/// The uniform JSON error body.
-pub fn error_body(status: u16, message: &str) -> String {
-    Json::obj(vec![
-        ("kind", Json::Str("ssnal_en.error".to_string())),
-        ("status", Json::Num(status as f64)),
-        ("error", Json::Str(message.to_string())),
-    ])
-    .to_string()
-}
-
-/// Dispatch one request to its handler; errors become `(status, error body)`.
-pub fn handle(state: &ServerState, req: &Request) -> (u16, String) {
+/// Dispatch one request to its handler; errors become typed replies.
+pub fn handle(state: &ServerState, req: &Request) -> Reply {
     match route(state, req) {
-        Ok(body) => (200, body),
+        Ok(body) => Reply::ok(body),
         Err(e) => {
-            let status = e.status();
-            (status, error_body(status, &e.message()))
+            if matches!(e, ServeError::Api(EnetError::Deadline { .. })) {
+                ServeMetrics::bump(&state.metrics.rejected_deadline);
+            }
+            e.reply()
         }
     }
 }
@@ -117,15 +136,31 @@ pub fn handle(state: &ServerState, req: &Request) -> (u16, String) {
 fn route(state: &ServerState, req: &Request) -> Result<String, ServeError> {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/v1/health") => health(state),
+        ("GET", "/v1/stats") => stats(state),
         ("POST", "/v1/designs") => register_design(state, &parse_body(&req.body)?),
-        ("POST", "/v1/fit") => fit(state, &parse_body(&req.body)?),
-        ("POST", "/v1/refit") => refit(state, &parse_body(&req.body)?),
-        ("POST", "/v1/predict") => predict(state, &parse_body(&req.body)?),
-        ("POST", "/v1/path") => path(state, &parse_body(&req.body)?),
-        (_, "/v1/health" | "/v1/designs" | "/v1/fit" | "/v1/refit" | "/v1/predict" | "/v1/path") => {
-            Err(ServeError::MethodNotAllowed)
-        }
+        ("POST", "/v1/fit") => fit(state, req, &parse_body(&req.body)?),
+        ("POST", "/v1/refit") => refit(state, req, &parse_body(&req.body)?),
+        ("POST", "/v1/predict") => predict(state, req, &parse_body(&req.body)?),
+        ("POST", "/v1/path") => path(state, req, &parse_body(&req.body)?),
+        (
+            _,
+            "/v1/health" | "/v1/stats" | "/v1/designs" | "/v1/fit" | "/v1/refit" | "/v1/predict"
+            | "/v1/path",
+        ) => Err(ServeError::MethodNotAllowed),
         _ => Err(ServeError::NotFound(format!("route {} {}", req.method, req.path))),
+    }
+}
+
+/// Fail with a typed 503 if the request's deadline expired before the
+/// expensive part (the solve) was dispatched — a request that spent its whole
+/// budget queued must not burn a solver slot on an answer nobody is waiting
+/// for.
+fn check_deadline(req: &Request) -> Result<(), ServeError> {
+    match (req.deadline, req.budget_ms) {
+        (Some(d), Some(budget_ms)) if Instant::now() >= d => {
+            Err(ServeError::Api(EnetError::Deadline { budget_ms }))
+        }
+        _ => Ok(()),
     }
 }
 
@@ -352,7 +387,7 @@ fn lookup_design(state: &ServerState, body: &Json) -> Result<Arc<StoredDesign>, 
         .ok_or_else(|| ServeError::NotFound(format!("design {id:?}")))
 }
 
-fn lookup_session(state: &ServerState, body: &Json) -> Result<Arc<Mutex<Session>>, ServeError> {
+fn lookup_session(state: &ServerState, body: &Json) -> Result<Arc<SessionSlot>, ServeError> {
     let design = lookup_design(state, body)?;
     let (model, model_key) = parse_model(body.get("model"))?;
     Ok(state.registry.session(&design, &model, &model_key)?)
@@ -361,14 +396,35 @@ fn lookup_session(state: &ServerState, body: &Json) -> Result<Arc<Mutex<Session>
 // ---- handlers ---------------------------------------------------------------
 
 fn health(state: &ServerState) -> Result<String, ServeError> {
-    Ok(Json::obj(vec![
-        ("kind", Json::Str("ssnal_en.health".to_string())),
-        ("status", Json::Str("ok".to_string())),
-        ("designs", Json::Num(state.registry.design_count() as f64)),
-        ("sessions", Json::Num(state.registry.session_count() as f64)),
-        ("threads", Json::Num(resolve_threads(state.cfg.threads) as f64)),
-    ])
-    .to_string())
+    Ok(wire::health_body(
+        state.registry.design_count(),
+        state.registry.session_count(),
+        resolve_threads(state.cfg.threads),
+        state.draining(),
+    ))
+}
+
+/// `GET /v1/stats` — the observability surface: admission gauges, queue and
+/// deadline counters, coalescing economics, per-endpoint latency histograms,
+/// and per-session workspace reuse stats. Never blocks on a solve: busy
+/// sessions are reported as such with their counters omitted.
+fn stats(state: &ServerState) -> Result<String, ServeError> {
+    let snap = state.metrics.snapshot(state.admission_gauges());
+    let entries: Vec<SessionStatsEntry> = state
+        .registry
+        .sessions_snapshot()
+        .into_iter()
+        .map(|(key, slot)| match slot.try_session() {
+            Some(session) => SessionStatsEntry {
+                key,
+                busy: false,
+                solves: session.solves(),
+                workspace: Some(session.workspace_snapshot()),
+            },
+            None => SessionStatsEntry { key, busy: true, solves: 0, workspace: None },
+        })
+        .collect();
+    Ok(wire::stats_body(&snap, &entries))
 }
 
 /// `POST /v1/designs` — body: a matrix spec plus `"b"` (response vector).
@@ -381,23 +437,17 @@ fn register_design(state: &ServerState, body: &Json) -> Result<String, ServeErro
         .ok_or_else(|| ServeError::BadRequest("missing \"b\" (response vector)".to_string()))?;
     let b = f64_vec(b, "b")?;
     let stored = state.registry.register(storage, b)?;
-    Ok(Json::obj(vec![
-        ("kind", Json::Str("ssnal_en.design".to_string())),
-        ("design_id", Json::Str(stored.id.clone())),
-        ("m", Json::Num(stored.design.m() as f64)),
-        ("n", Json::Num(stored.design.n() as f64)),
-        ("sparse", Json::Bool(stored.design.is_sparse())),
-    ])
-    .to_string())
+    Ok(wire::design_body(&stored))
 }
 
 /// `POST /v1/fit` — body: `"design_id"`, optional `"model"`, optional `"b"`
 /// override. Without `"b"` the design's stored response is fit (cached: a
 /// repeat call returns the same solve without re-running it); with `"b"` the
 /// warm session refits on the new response.
-fn fit(state: &ServerState, body: &Json) -> Result<String, ServeError> {
-    let session = lookup_session(state, body)?;
-    let mut session = lock(&session);
+fn fit(state: &ServerState, req: &Request, body: &Json) -> Result<String, ServeError> {
+    let slot = lookup_session(state, body)?;
+    check_deadline(req)?;
+    let mut session = slot.session();
     if let Some(b) = body.get("b") {
         let b = f64_vec(b, "b")?;
         session.refit(&b)?;
@@ -408,14 +458,20 @@ fn fit(state: &ServerState, body: &Json) -> Result<String, ServeError> {
 /// `POST /v1/refit` — body: `"design_id"`, optional `"model"`, and exactly
 /// one of `"b"` (single response → one fit object) or `"bs"` (batch → all
 /// fits, λmax sweeps fused across the batch).
-fn refit(state: &ServerState, body: &Json) -> Result<String, ServeError> {
-    let session = lookup_session(state, body)?;
-    let mut session = lock(&session);
+///
+/// Single-`b` refits go through the session's coalescer: concurrent requests
+/// on the same warm session merge into one `refit_many` batch. The response
+/// bytes are identical either way (the pinned `refit_many` == sequential
+/// `refit` bitwise contract).
+fn refit(state: &ServerState, req: &Request, body: &Json) -> Result<String, ServeError> {
+    let slot = lookup_session(state, body)?;
+    let (m, n) = (slot.design().design.m(), slot.design().design.n());
     match (body.get("b"), body.get("bs")) {
         (Some(b), None) => {
             let b = f64_vec(b, "b")?;
-            session.refit(&b)?;
-            Ok(session.solved_json()?.to_string())
+            check_deadline(req)?;
+            let solved = slot.refit_coalesced(b, &state.metrics)?;
+            Ok(wire::fit_body(m, n, &solved))
         }
         (None, Some(bs)) => {
             let arr = bs.as_arr().ok_or_else(|| {
@@ -425,16 +481,9 @@ fn refit(state: &ServerState, body: &Json) -> Result<String, ServeError> {
             for (i, b) in arr.iter().enumerate() {
                 batch.push(f64_vec(b, &format!("bs[{i}]"))?);
             }
-            let solved = session.refit_many(&batch)?;
-            let (m, n) = (session.design().design.m(), session.design().design.n());
-            let fits: Vec<Json> =
-                solved.iter().map(|s| solve_json(m, n, s.lam1, s.lam2, &s.result)).collect();
-            Ok(Json::obj(vec![
-                ("kind", Json::Str("ssnal_en.refit_batch".to_string())),
-                ("count", Json::Num(fits.len() as f64)),
-                ("fits", Json::Arr(fits)),
-            ])
-            .to_string())
+            check_deadline(req)?;
+            let solved = slot.session().refit_many(&batch)?;
+            Ok(wire::refit_batch_body(m, n, &solved))
         }
         _ => Err(ServeError::BadRequest(
             "give exactly one of \"b\" (single response) or \"bs\" (batch)".to_string(),
@@ -445,58 +494,26 @@ fn refit(state: &ServerState, body: &Json) -> Result<String, ServeError> {
 /// `POST /v1/predict` — body: `"design_id"`, optional `"model"`, `"a_new"`
 /// (matrix spec, dense or CSC). Fits lazily on the stored response if the
 /// session has no solve yet.
-fn predict(state: &ServerState, body: &Json) -> Result<String, ServeError> {
-    let session = lookup_session(state, body)?;
+fn predict(state: &ServerState, req: &Request, body: &Json) -> Result<String, ServeError> {
+    let slot = lookup_session(state, body)?;
     let a_new = body
         .get("a_new")
         .ok_or_else(|| ServeError::BadRequest("missing \"a_new\" (matrix spec)".to_string()))?;
     let storage = parse_matrix(a_new, "a_new")?;
-    let mut session = lock(&session);
+    check_deadline(req)?;
+    let mut session = slot.session();
     let preds = session.predict(storage.as_ref())?;
-    Ok(Json::obj(vec![
-        ("kind", Json::Str("ssnal_en.predictions".to_string())),
-        ("m", Json::Num(preds.len() as f64)),
-        ("predictions", Json::Arr(preds.iter().map(|&v| Json::Num(v)).collect())),
-    ])
-    .to_string())
+    Ok(wire::predictions_body(&preds))
 }
 
 /// `POST /v1/path` — body: `"design_id"`, optional `"model"` (its `grid`
 /// drives the sweep). Coefficients per point are sparse: values at
 /// `active_set`'s indices, like the fit export.
-fn path(state: &ServerState, body: &Json) -> Result<String, ServeError> {
-    let session = lookup_session(state, body)?;
-    let session = lock(&session);
+fn path(state: &ServerState, req: &Request, body: &Json) -> Result<String, ServeError> {
+    let slot = lookup_session(state, body)?;
+    check_deadline(req)?;
+    let session = slot.session();
     let path = session.path()?;
-    let (m, n) = (session.design().design.m(), session.design().design.n());
-    let points: Vec<Json> = path
-        .points()
-        .iter()
-        .map(|p| {
-            Json::obj(vec![
-                ("c_lambda", Json::Num(p.c_lambda)),
-                ("converged", Json::Bool(p.result.converged)),
-                ("objective", Json::Num(p.result.objective)),
-                ("iterations", Json::Num(p.result.iterations as f64)),
-                (
-                    "active_set",
-                    Json::Arr(p.result.active_set.iter().map(|&j| Json::Num(j as f64)).collect()),
-                ),
-                (
-                    "coefficients",
-                    Json::Arr(p.result.active_set.iter().map(|&j| Json::Num(p.result.x[j])).collect()),
-                ),
-            ])
-        })
-        .collect();
-    Ok(Json::obj(vec![
-        ("kind", Json::Str("ssnal_en.path".to_string())),
-        ("m", Json::Num(m as f64)),
-        ("n", Json::Num(n as f64)),
-        ("lambda_max", Json::Num(path.lambda_max())),
-        ("runs", Json::Num(path.runs() as f64)),
-        ("truncated", Json::Bool(path.truncated())),
-        ("points", Json::Arr(points)),
-    ])
-    .to_string())
+    let (m, n) = (slot.design().design.m(), slot.design().design.n());
+    Ok(wire::path_body(m, n, &path))
 }

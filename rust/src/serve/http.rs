@@ -5,9 +5,19 @@
 //! connections with strictly serial request handling per connection, and
 //! fixed JSON responses. No chunked transfer encoding, no TLS — the front
 //! end targets trusted internal traffic, not the open internet.
+//!
+//! Reads are deadline-aware: the caller hands [`read_request`] a per-request
+//! time budget, and the budget is enforced with socket read timeouts on the
+//! request line, every header line, and the body. A peer that stalls
+//! mid-request (the slow-loris shape: partial headers, then silence) comes
+//! back as [`ParseError::Stalled`] — answered `408` and closed — instead of
+//! holding a connection thread forever; a connection that goes quiet
+//! *between* requests is a normal keep-alive idle timeout
+//! ([`ParseError::IdleTimeout`]) and closes silently.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 /// One parsed HTTP request.
 #[derive(Debug)]
@@ -20,6 +30,19 @@ pub struct Request {
     pub body: Vec<u8>,
     /// Whether the client asked to keep the connection open.
     pub keep_alive: bool,
+    /// When this request's time budget expires (set at request-line arrival;
+    /// `None` when the server runs without request timeouts).
+    pub deadline: Option<Instant>,
+    /// The budget behind [`Request::deadline`], milliseconds (for error
+    /// bodies).
+    pub budget_ms: Option<u64>,
+}
+
+impl Request {
+    /// Whether the request's deadline has already passed.
+    pub fn deadline_expired(&self) -> bool {
+        matches!(self.deadline, Some(d) if Instant::now() >= d)
+    }
 }
 
 /// Why a request could not be framed. Everything here is a transport-level
@@ -30,6 +53,15 @@ pub enum ParseError {
     /// The peer closed the connection before a request line arrived — the
     /// normal end of a keep-alive connection, not an error to report.
     Eof,
+    /// No request bytes arrived within the budget — a keep-alive connection
+    /// gone quiet. Close silently.
+    IdleTimeout,
+    /// The peer sent a partial request (request line, headers, or body) and
+    /// then stalled past the deadline — answer `408` and close.
+    Stalled {
+        /// The request time budget that was exhausted, milliseconds.
+        budget_ms: u64,
+    },
     /// Malformed request line or headers — answer 400 and close.
     Malformed(String),
     /// Declared body exceeds the configured cap — answer 413 and close
@@ -44,18 +76,63 @@ pub enum ParseError {
     Io(std::io::Error),
 }
 
+/// Whether an I/O error is a read-timeout expiry (Linux surfaces
+/// `SO_RCVTIMEO` as `EAGAIN` → `WouldBlock`; other platforms use
+/// `TimedOut`).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Arm the stream's read timeout with the remaining budget, or fail with
+/// `Stalled` when the budget is already spent. With no deadline the stream
+/// reads block indefinitely (the pre-timeout behavior).
+fn arm_read_timeout(
+    stream: &TcpStream,
+    deadline: Option<Instant>,
+    budget_ms: u64,
+) -> Result<(), ParseError> {
+    let timeout = match deadline {
+        None => None,
+        Some(d) => {
+            let remaining = d.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(ParseError::Stalled { budget_ms });
+            }
+            // set_read_timeout rejects a zero Duration; floor at 1ms.
+            Some(remaining.max(Duration::from_millis(1)))
+        }
+    };
+    stream.set_read_timeout(timeout).map_err(ParseError::Io)
+}
+
 /// Read one request from a buffered stream, enforcing the body-size cap
-/// before any body byte is read.
+/// before any body byte is read and `timeout` (when given) as the total
+/// budget for the request line, headers, and body.
 pub fn read_request(
     reader: &mut BufReader<TcpStream>,
     max_body: usize,
+    timeout: Option<Duration>,
 ) -> Result<Request, ParseError> {
+    let budget_ms = timeout.map(|t| t.as_millis() as u64).unwrap_or(0);
+    // Idle wait: the full budget to produce a complete request line.
+    reader.get_ref().set_read_timeout(timeout).map_err(ParseError::Io)?;
     let mut line = String::new();
     match reader.read_line(&mut line) {
         Ok(0) => return Err(ParseError::Eof),
         Ok(_) => {}
+        Err(e) if is_timeout(&e) => {
+            // Nothing read: a quiet keep-alive connection. Partial line:
+            // a stalled (slow-loris) request.
+            return if line.is_empty() {
+                Err(ParseError::IdleTimeout)
+            } else {
+                Err(ParseError::Stalled { budget_ms })
+            };
+        }
         Err(e) => return Err(ParseError::Io(e)),
     }
+    // The request exists from here on; its deadline starts now.
+    let deadline = timeout.map(|t| Instant::now() + t);
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_ascii_uppercase();
     let target = parts.next().unwrap_or("");
@@ -68,10 +145,12 @@ pub fn read_request(
     let mut content_length = 0usize;
     let mut keep_alive = true; // the HTTP/1.1 default
     loop {
+        arm_read_timeout(reader.get_ref(), deadline, budget_ms)?;
         let mut header = String::new();
         match reader.read_line(&mut header) {
             Ok(0) => return Err(ParseError::Malformed("truncated headers".to_string())),
             Ok(_) => {}
+            Err(e) if is_timeout(&e) => return Err(ParseError::Stalled { budget_ms }),
             Err(e) => return Err(ParseError::Io(e)),
         }
         let header = header.trim_end();
@@ -95,9 +174,14 @@ pub fn read_request(
     }
     let mut body = vec![0u8; content_length];
     if content_length > 0 {
-        reader.read_exact(&mut body).map_err(ParseError::Io)?;
+        arm_read_timeout(reader.get_ref(), deadline, budget_ms)?;
+        match reader.read_exact(&mut body) {
+            Ok(()) => {}
+            Err(e) if is_timeout(&e) => return Err(ParseError::Stalled { budget_ms }),
+            Err(e) => return Err(ParseError::Io(e)),
+        }
     }
-    Ok(Request { method, path, body, keep_alive })
+    Ok(Request { method, path, body, keep_alive, deadline, budget_ms: timeout.map(|_| budget_ms) })
 }
 
 /// Reason phrases for the status codes the handlers emit.
@@ -107,6 +191,7 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
         422 => "Unprocessable Entity",
         502 => "Bad Gateway",
@@ -115,26 +200,37 @@ fn reason(status: u16) -> &'static str {
     }
 }
 
-/// Write one JSON response; `close` adds `Connection: close`.
+/// Write one JSON response; `close` adds `Connection: close`, `retry_after`
+/// a `Retry-After: <seconds>` header (admission-control 503s).
 pub fn write_response(
     stream: &mut TcpStream,
     status: u16,
     body: &str,
     close: bool,
+    retry_after: Option<u64>,
 ) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n{}\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
         reason(status),
         body.len(),
-        if close { "connection: close\r\n" } else { "" }
     );
+    if let Some(secs) = retry_after {
+        head.push_str(&format!("retry-after: {secs}\r\n"));
+    }
+    if close {
+        head.push_str("connection: close\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
     stream.flush()
 }
 
-/// Parse one response from a buffered stream into `(status, body)`.
-pub fn read_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16, String)> {
+/// Parse one response from a buffered stream into
+/// `(status, headers, body)` — headers lowercased.
+pub fn read_response_full(
+    reader: &mut BufReader<TcpStream>,
+) -> std::io::Result<(u16, Vec<(String, String)>, String)> {
     use std::io::{Error, ErrorKind};
     fn bad(msg: &str) -> Error {
         Error::new(ErrorKind::InvalidData, msg.to_string())
@@ -148,6 +244,7 @@ pub fn read_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16,
         .nth(1)
         .and_then(|s| s.parse::<u16>().ok())
         .ok_or_else(|| bad("bad status line"))?;
+    let mut headers = Vec::new();
     let mut content_length = 0usize;
     loop {
         let mut header = String::new();
@@ -159,15 +256,23 @@ pub fn read_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16,
             break;
         }
         if let Some((name, value)) = header.split_once(':') {
-            if name.eq_ignore_ascii_case("content-length") {
-                content_length =
-                    value.trim().parse::<usize>().map_err(|_| bad("bad content-length"))?;
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                content_length = value.parse().map_err(|_| bad("bad content-length"))?;
             }
+            headers.push((name, value));
         }
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
-    String::from_utf8(body).map(|b| (status, b)).map_err(|_| bad("non-utf8 body"))
+    let body = String::from_utf8(body).map_err(|_| bad("non-utf8 body"))?;
+    Ok((status, headers, body))
+}
+
+/// Parse one response from a buffered stream into `(status, body)`.
+pub fn read_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16, String)> {
+    read_response_full(reader).map(|(status, _headers, body)| (status, body))
 }
 
 /// A keep-alive client connection: strictly serial requests over one TCP
@@ -185,13 +290,7 @@ impl Client {
         Ok(Client { writer, reader: BufReader::new(stream) })
     }
 
-    /// Send one request and block for its response: `(status, body)`.
-    pub fn request(
-        &mut self,
-        method: &str,
-        path: &str,
-        body: &str,
-    ) -> std::io::Result<(u16, String)> {
+    fn send(&mut self, method: &str, path: &str, body: &str) -> std::io::Result<()> {
         let head = format!(
             "{method} {path} HTTP/1.1\r\nhost: ssnal-en\r\ncontent-type: application/json\r\n\
              content-length: {}\r\n\r\n",
@@ -199,8 +298,31 @@ impl Client {
         );
         self.writer.write_all(head.as_bytes())?;
         self.writer.write_all(body.as_bytes())?;
-        self.writer.flush()?;
+        self.writer.flush()
+    }
+
+    /// Send one request and block for its response: `(status, body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> std::io::Result<(u16, String)> {
+        self.send(method, path, body)?;
         read_response(&mut self.reader)
+    }
+
+    /// [`Client::request`] keeping the response headers:
+    /// `(status, headers, body)` with header names lowercased — for tests
+    /// that assert on `Retry-After` and friends.
+    pub fn request_full(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> std::io::Result<(u16, Vec<(String, String)>, String)> {
+        self.send(method, path, body)?;
+        read_response_full(&mut self.reader)
     }
 
     /// Send raw bytes down the stream and read one response — for tests that
@@ -208,6 +330,19 @@ impl Client {
     pub fn request_raw(&mut self, raw: &[u8]) -> std::io::Result<(u16, String)> {
         self.writer.write_all(raw)?;
         self.writer.flush()?;
+        read_response(&mut self.reader)
+    }
+
+    /// Send raw bytes without reading a response (for deadline tests that
+    /// dribble a partial request).
+    pub fn send_raw(&mut self, raw: &[u8]) -> std::io::Result<()> {
+        self.writer.write_all(raw)?;
+        self.writer.flush()
+    }
+
+    /// Block for one response without sending anything (pairs with
+    /// [`Client::send_raw`]).
+    pub fn read_reply(&mut self) -> std::io::Result<(u16, String)> {
         read_response(&mut self.reader)
     }
 }

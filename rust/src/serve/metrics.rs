@@ -1,0 +1,448 @@
+//! Lock-cheap serving metrics: per-endpoint request counters and
+//! fixed-bucket latency histograms, plus the admission/coalescing counters
+//! behind `GET /v1/stats`.
+//!
+//! Everything on the record path is a relaxed atomic increment — no locks,
+//! no allocation — so instrumentation cannot perturb the request paths it
+//! measures. Reads (`/v1/stats`) take a point-in-time snapshot into plain
+//! structs; the snapshot is not a consistent cut across counters (readers
+//! race writers by design), which is fine for observability and disastrous
+//! for nothing.
+//!
+//! Histogram buckets are fixed at compile time: half-decade log spacing from
+//! 100µs to 10s plus an overflow bucket. Fixed buckets keep recording O(1),
+//! make histograms mergeable across processes, and give `/v1/stats` a stable
+//! schema; quantiles are read off the cumulative bucket counts (reported as
+//! the upper bound of the bucket containing the rank, i.e. conservatively).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Upper bounds (seconds) of the finite latency buckets; one overflow bucket
+/// follows. Half-decade log spacing: 100µs … 10s.
+pub const BUCKET_BOUNDS_SECONDS: [f64; 11] =
+    [1e-4, 3.16e-4, 1e-3, 3.16e-3, 1e-2, 3.16e-2, 1e-1, 3.16e-1, 1.0, 3.16, 10.0];
+
+/// Finite buckets + overflow.
+pub const BUCKETS: usize = BUCKET_BOUNDS_SECONDS.len() + 1;
+
+/// The serve endpoints metrics are kept for, in display order. `Other`
+/// absorbs unknown routes (404s) so they are visible rather than untracked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// `GET /v1/health`
+    Health,
+    /// `POST /v1/designs`
+    Designs,
+    /// `POST /v1/fit`
+    Fit,
+    /// `POST /v1/refit`
+    Refit,
+    /// `POST /v1/predict`
+    Predict,
+    /// `POST /v1/path`
+    Path,
+    /// `GET /v1/stats`
+    Stats,
+    /// Anything else (unknown routes, wrong methods).
+    Other,
+}
+
+/// All endpoints, in the order `/v1/stats` reports them.
+pub const ENDPOINTS: [Endpoint; 8] = [
+    Endpoint::Health,
+    Endpoint::Designs,
+    Endpoint::Fit,
+    Endpoint::Refit,
+    Endpoint::Predict,
+    Endpoint::Path,
+    Endpoint::Stats,
+    Endpoint::Other,
+];
+
+impl Endpoint {
+    /// Classify a request path (method-independent: a wrong-method hit on a
+    /// known path still counts against that path's endpoint).
+    pub fn from_path(path: &str) -> Endpoint {
+        match path {
+            "/v1/health" => Endpoint::Health,
+            "/v1/designs" => Endpoint::Designs,
+            "/v1/fit" => Endpoint::Fit,
+            "/v1/refit" => Endpoint::Refit,
+            "/v1/predict" => Endpoint::Predict,
+            "/v1/path" => Endpoint::Path,
+            "/v1/stats" => Endpoint::Stats,
+            _ => Endpoint::Other,
+        }
+    }
+
+    /// Stable name used in the stats schema.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Endpoint::Health => "health",
+            Endpoint::Designs => "designs",
+            Endpoint::Fit => "fit",
+            Endpoint::Refit => "refit",
+            Endpoint::Predict => "predict",
+            Endpoint::Path => "path",
+            Endpoint::Stats => "stats",
+            Endpoint::Other => "other",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            Endpoint::Health => 0,
+            Endpoint::Designs => 1,
+            Endpoint::Fit => 2,
+            Endpoint::Refit => 3,
+            Endpoint::Predict => 4,
+            Endpoint::Path => 5,
+            Endpoint::Stats => 6,
+            Endpoint::Other => 7,
+        }
+    }
+}
+
+/// Fixed-bucket latency histogram; every operation is a relaxed atomic.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_nanos: AtomicU64,
+}
+
+impl LatencyHistogram {
+    fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&self, seconds: f64) {
+        let idx = BUCKET_BOUNDS_SECONDS
+            .iter()
+            .position(|&bound| seconds <= bound)
+            .unwrap_or(BUCKETS - 1);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        let nanos = (seconds * 1e9).clamp(0.0, u64::MAX as f64 / 2.0) as u64;
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed)),
+            sum_seconds: self.sum_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+}
+
+/// Plain-struct copy of a [`LatencyHistogram`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts (finite buckets in [`BUCKET_BOUNDS_SECONDS`] order,
+    /// then the overflow bucket).
+    pub counts: [u64; BUCKETS],
+    /// Sum of all observations, seconds (for means).
+    pub sum_seconds: f64,
+}
+
+impl HistogramSnapshot {
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Quantile estimate: the upper bound of the bucket holding the
+    /// rank-`q` observation (the overflow bucket reports the last finite
+    /// bound — a floor, clearly saturated). `0.0` with no observations.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return BUCKET_BOUNDS_SECONDS[i.min(BUCKET_BOUNDS_SECONDS.len() - 1)];
+            }
+        }
+        BUCKET_BOUNDS_SECONDS[BUCKET_BOUNDS_SECONDS.len() - 1]
+    }
+
+    /// The canonical JSON shape: cumulative-style bucket list plus count,
+    /// mean, p50, p95.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let le = match BUCKET_BOUNDS_SECONDS.get(i) {
+                    Some(&bound) => Json::Num(bound),
+                    None => Json::Str("inf".to_string()),
+                };
+                Json::obj(vec![("le_seconds", le), ("count", Json::Num(c as f64))])
+            })
+            .collect();
+        let count = self.count();
+        let mean = if count == 0 { 0.0 } else { self.sum_seconds / count as f64 };
+        Json::obj(vec![
+            ("count", Json::Num(count as f64)),
+            ("mean_seconds", Json::Num(mean)),
+            ("p50_seconds", Json::Num(self.quantile(0.50))),
+            ("p95_seconds", Json::Num(self.quantile(0.95))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// One endpoint's counters.
+#[derive(Debug)]
+struct EndpointMetrics {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    latency: LatencyHistogram,
+}
+
+/// Plain-struct copy of one endpoint's counters.
+#[derive(Clone, Copy, Debug)]
+pub struct EndpointSnapshot {
+    /// Which endpoint.
+    pub endpoint: Endpoint,
+    /// Requests answered (all statuses).
+    pub requests: u64,
+    /// Requests answered with status ≥ 400.
+    pub errors: u64,
+    /// Latency distribution (request read end → response written).
+    pub latency: HistogramSnapshot,
+}
+
+impl EndpointSnapshot {
+    /// JSON for one entry of the stats `endpoints` array.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("endpoint", Json::Str(self.endpoint.name().to_string())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("latency", self.latency.to_json()),
+        ])
+    }
+}
+
+/// All server-wide counters behind `GET /v1/stats`. Gauges that live in the
+/// admission structure (queue depth, in-flight) are passed in at snapshot
+/// time by the server.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    started: Instant,
+    endpoints: [EndpointMetrics; ENDPOINTS.len()],
+    /// Requests admitted to run (immediately or after queueing).
+    pub admitted: AtomicU64,
+    /// Requests that waited in the admission queue before running.
+    pub queued_total: AtomicU64,
+    /// 503s: admission queue full.
+    pub rejected_queue_full: AtomicU64,
+    /// 503s: deadline expired while queued or before solve dispatch.
+    pub rejected_deadline: AtomicU64,
+    /// 408s: header or body read stalled past the request deadline.
+    pub timeouts_read: AtomicU64,
+    /// Coalesced-refit batches executed (one `refit_many` call each).
+    pub coalesce_batches: AtomicU64,
+    /// Single-refit requests served through those batches.
+    pub coalesce_requests: AtomicU64,
+    /// Of those, requests that shared a batch with at least one other.
+    pub coalesced_requests: AtomicU64,
+}
+
+impl ServeMetrics {
+    /// Fresh counters; `started` anchors the uptime gauge.
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            started: Instant::now(),
+            endpoints: std::array::from_fn(|_| EndpointMetrics {
+                requests: AtomicU64::new(0),
+                errors: AtomicU64::new(0),
+                latency: LatencyHistogram::new(),
+            }),
+            admitted: AtomicU64::new(0),
+            queued_total: AtomicU64::new(0),
+            rejected_queue_full: AtomicU64::new(0),
+            rejected_deadline: AtomicU64::new(0),
+            timeouts_read: AtomicU64::new(0),
+            coalesce_batches: AtomicU64::new(0),
+            coalesce_requests: AtomicU64::new(0),
+            coalesced_requests: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one answered request.
+    pub fn record(&self, endpoint: Endpoint, seconds: f64, status: u16) {
+        let e = &self.endpoints[endpoint.index()];
+        e.requests.fetch_add(1, Ordering::Relaxed);
+        if status >= 400 {
+            e.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        e.latency.record(seconds);
+    }
+
+    /// Record one coalesced-refit batch of `size` requests.
+    pub fn record_batch(&self, size: usize) {
+        self.coalesce_batches.fetch_add(1, Ordering::Relaxed);
+        self.coalesce_requests.fetch_add(size as u64, Ordering::Relaxed);
+        if size >= 2 {
+            self.coalesced_requests.fetch_add(size as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Bump a plain counter (relaxed).
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of everything; the admission gauges come from the
+    /// server, which owns them.
+    pub fn snapshot(&self, gauges: AdmissionGauges) -> MetricsSnapshot {
+        MetricsSnapshot {
+            uptime_seconds: self.started.elapsed().as_secs_f64(),
+            gauges,
+            admitted: self.admitted.load(Ordering::Relaxed),
+            queued_total: self.queued_total.load(Ordering::Relaxed),
+            rejected_queue_full: self.rejected_queue_full.load(Ordering::Relaxed),
+            rejected_deadline: self.rejected_deadline.load(Ordering::Relaxed),
+            timeouts_read: self.timeouts_read.load(Ordering::Relaxed),
+            coalesce_batches: self.coalesce_batches.load(Ordering::Relaxed),
+            coalesce_requests: self.coalesce_requests.load(Ordering::Relaxed),
+            coalesced_requests: self.coalesced_requests.load(Ordering::Relaxed),
+            endpoints: ENDPOINTS.map(|ep| EndpointSnapshot {
+                endpoint: ep,
+                requests: self.endpoints[ep.index()].requests.load(Ordering::Relaxed),
+                errors: self.endpoints[ep.index()].errors.load(Ordering::Relaxed),
+                latency: self.endpoints[ep.index()].latency.snapshot(),
+            }),
+        }
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics::new()
+    }
+}
+
+/// Instantaneous admission-control gauges, read from the server's admission
+/// structure at snapshot time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmissionGauges {
+    /// Requests currently executing.
+    pub inflight: usize,
+    /// The in-flight cap.
+    pub max_inflight: usize,
+    /// Requests currently waiting in the admission queue.
+    pub queue_depth: usize,
+    /// The queue capacity.
+    pub queue_capacity: usize,
+}
+
+/// Point-in-time copy of [`ServeMetrics`] — the typed struct `/v1/stats`
+/// renders (via `serve::wire`).
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    /// Seconds since the metrics (== the server) were created.
+    pub uptime_seconds: f64,
+    /// Instantaneous admission gauges.
+    pub gauges: AdmissionGauges,
+    /// Requests admitted to run.
+    pub admitted: u64,
+    /// Requests that waited in the queue before running.
+    pub queued_total: u64,
+    /// 503s from a full queue.
+    pub rejected_queue_full: u64,
+    /// 503s from an expired deadline (queued or pre-dispatch).
+    pub rejected_deadline: u64,
+    /// 408s from stalled header/body reads.
+    pub timeouts_read: u64,
+    /// Coalesced-refit batches executed.
+    pub coalesce_batches: u64,
+    /// Single-refit requests served through batches.
+    pub coalesce_requests: u64,
+    /// Requests that shared a batch with at least one other.
+    pub coalesced_requests: u64,
+    /// Per-endpoint counters in [`ENDPOINTS`] order.
+    pub endpoints: [EndpointSnapshot; ENDPOINTS.len()],
+}
+
+impl MetricsSnapshot {
+    /// Requests per executed batch (`1.0` when every batch was a singleton,
+    /// higher when coalescing merged concurrent refits; `0.0` before any
+    /// batch ran).
+    pub fn coalesce_ratio(&self) -> f64 {
+        if self.coalesce_batches == 0 {
+            0.0
+        } else {
+            self.coalesce_requests as f64 / self.coalesce_batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for &s in &[2e-4, 2e-4, 2e-4, 5e-3, 5e-3, 0.2, 100.0] {
+            h.record(s);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 7);
+        // 2e-4 lands in (1e-4, 3.16e-4]; 100s overflows
+        assert_eq!(snap.counts[1], 3);
+        assert_eq!(snap.counts[BUCKETS - 1], 1);
+        assert_eq!(snap.quantile(0.5), 3.16e-4, "p50 is the 4th of 7 → 2nd bucket bound");
+        assert_eq!(snap.quantile(0.95), 10.0, "p95 saturates at the last finite bound");
+        assert_eq!(HistogramSnapshot::default().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn endpoint_classification_is_total() {
+        assert_eq!(Endpoint::from_path("/v1/refit"), Endpoint::Refit);
+        assert_eq!(Endpoint::from_path("/v1/stats"), Endpoint::Stats);
+        assert_eq!(Endpoint::from_path("/nope"), Endpoint::Other);
+        for ep in ENDPOINTS {
+            assert_eq!(ENDPOINTS[ep.index()], ep, "index/order agreement");
+        }
+    }
+
+    #[test]
+    fn snapshot_carries_counters_and_ratio() {
+        let m = ServeMetrics::new();
+        m.record(Endpoint::Fit, 1e-3, 200);
+        m.record(Endpoint::Fit, 2e-3, 400);
+        m.record_batch(3);
+        m.record_batch(1);
+        ServeMetrics::bump(&m.rejected_queue_full);
+        let snap = m.snapshot(AdmissionGauges {
+            inflight: 1,
+            max_inflight: 4,
+            queue_depth: 2,
+            queue_capacity: 8,
+        });
+        let fit = &snap.endpoints[Endpoint::Fit.index()];
+        assert_eq!((fit.requests, fit.errors), (2, 1));
+        assert_eq!(fit.latency.count(), 2);
+        assert_eq!(snap.rejected_queue_full, 1);
+        assert_eq!(snap.coalesce_batches, 2);
+        assert_eq!(snap.coalesce_requests, 4);
+        assert_eq!(snap.coalesced_requests, 3);
+        assert!((snap.coalesce_ratio() - 2.0).abs() < 1e-15);
+        assert_eq!(snap.gauges.queue_depth, 2);
+    }
+}

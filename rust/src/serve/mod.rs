@@ -9,19 +9,27 @@
 //!
 //! Layout:
 //!
-//! * [`http`] — HTTP/1.1 framing over `std::net` (requests, responses, a
-//!   keep-alive client for tests and benches),
+//! * [`http`] — HTTP/1.1 framing over `std::net` with deadline-aware reads
+//!   (requests, responses, a keep-alive client for tests and benches),
+//! * [`wire`] — every JSON body the server emits, in one encoder set shared
+//!   with the `api::` layer (server bytes == api bytes by construction),
 //! * [`registry`] — fingerprint-keyed design store and the warm-session LRU,
-//! * [`handlers`] — wire format, routing, and the total
+//!   including the cross-request refit coalescer,
+//! * [`handlers`] — routing, request parsing, and the total
 //!   `EnetError` → status mapping (no panic reachable from a request),
-//! * [`server`] — accept loop, admission control, per-request thread
-//!   budgeting, panic containment.
+//! * [`metrics`] — lock-cheap counters and fixed-bucket latency histograms
+//!   behind `GET /v1/stats`,
+//! * [`server`] — accept loop, bounded-FIFO admission queue, request
+//!   deadlines, graceful drain (SIGTERM), per-request thread budgeting,
+//!   panic containment.
 //!
 //! Everything rides on the determinism contracts the rest of the crate pins:
-//! because solves are bitwise-identical at every thread count and warm
-//! workspaces are bitwise-identical to cold ones, the server can cache
-//! sessions and rebalance threads per request without ever changing a
-//! response byte (`tests/serve_integration.rs`).
+//! because solves are bitwise-identical at every thread count, warm
+//! workspaces are bitwise-identical to cold ones, and `refit_many` is
+//! bitwise-identical to sequential refits, the server can cache sessions,
+//! rebalance threads per request, and *coalesce concurrent refits into one
+//! batch* without ever changing a response byte
+//! (`tests/serve_integration.rs`).
 //!
 //! Wire format in one sitting:
 //!
@@ -31,18 +39,32 @@
 //! POST /v1/refit    {"design_id":"d…","bs":[[…],[…]]}             → batched fit JSONs
 //! POST /v1/predict  {"design_id":"d…","a_new":{…matrix spec…}}    → predictions
 //! POST /v1/path     {"design_id":"d…","model":{"grid":{…}}}       → λ-path
-//! GET  /v1/health                                                 → counters
+//! GET  /v1/health                                                 → liveness + counters
+//! GET  /v1/stats                                                  → queue/deadline/coalesce
+//!                                                                   counters, per-endpoint
+//!                                                                   latency, session stats
 //! ```
 //!
 //! Matrix specs are dense (`"dense"`: row-major values) or CSC
 //! (`"col_ptr"`/`"row_idx"`/`"values"`) — sparse designs round-trip through
 //! the server without densification.
+//!
+//! Overload and lifecycle behavior: a request beyond `max_inflight` queues
+//! (FIFO, bounded by `--queue-depth`); only a full queue answers `503`, with
+//! a `Retry-After` header. Each request has a total time budget
+//! (`--request-timeout-ms`): stalled header/body reads answer `408`, and a
+//! budget spent entirely in the queue answers `503` without running the
+//! solve. SIGTERM begins a graceful drain — late connects refused, admitted
+//! work finishes, exit 0.
 
 pub mod handlers;
 pub mod http;
+pub mod metrics;
 pub mod registry;
 pub mod server;
+pub mod wire;
 
 pub use http::{http_request, Client};
-pub use registry::{Registry, Session, StoredDesign};
-pub use server::{Server, ServerConfig, ServerHandle, ServerState};
+pub use metrics::{MetricsSnapshot, ServeMetrics};
+pub use registry::{Registry, Session, SessionSlot, StoredDesign};
+pub use server::{install_sigterm_drain, Server, ServerConfig, ServerHandle, ServerState};

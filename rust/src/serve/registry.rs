@@ -18,12 +18,13 @@
 //! (`tests/serve_integration.rs` pins this).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, TryLockError};
 
 use crate::api::fit::{solve_json, PathFit};
-use crate::api::{Design, EnetError, EnetModel};
+use crate::api::{Design, EnetError, EnetModel, StatsSnapshot};
 use crate::linalg::{DesignRef, DesignStorage, NewtonWorkspace};
 use crate::runtime::PjrtEngine;
+use crate::serve::metrics::ServeMetrics;
 use crate::solver::types::SolveResult;
 use crate::util::json::Json;
 
@@ -130,6 +131,9 @@ pub struct Session {
     ws: NewtonWorkspace,
     engine: Option<PjrtEngine>,
     solved: Option<Solved>,
+    /// Solves this session has run (cold fits + refits) — diagnostics for
+    /// `GET /v1/stats`.
+    solves: u64,
 }
 
 impl Session {
@@ -137,12 +141,30 @@ impl Session {
     /// session.
     pub fn new(design: Arc<StoredDesign>, model: EnetModel) -> Result<Session, EnetError> {
         model.validate_common(&design.design)?;
-        Ok(Session { design, model, ws: NewtonWorkspace::new(), engine: None, solved: None })
+        Ok(Session {
+            design,
+            model,
+            ws: NewtonWorkspace::new(),
+            engine: None,
+            solved: None,
+            solves: 0,
+        })
     }
 
     /// The design this session is bound to.
     pub fn design(&self) -> &Arc<StoredDesign> {
         &self.design
+    }
+
+    /// Solves this session has run (cold fits + refits).
+    pub fn solves(&self) -> u64 {
+        self.solves
+    }
+
+    /// Workspace reuse counters as the typed public snapshot — the same
+    /// struct [`crate::api::Fit::workspace_stats`] returns.
+    pub fn workspace_snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot::from(&self.ws.stats)
     }
 
     /// One solve against the warm workspace — the same `checked_lambdas` →
@@ -161,6 +183,7 @@ impl Session {
             &mut self.ws,
         )?;
         self.solved = Some(Solved { lam1, lam2, result });
+        self.solves += 1;
         Ok(())
     }
 
@@ -178,6 +201,16 @@ impl Session {
     /// Re-solve on a new response, reusing the warm workspace.
     pub fn refit(&mut self, b: &[f64]) -> Result<(), EnetError> {
         self.solve(b)
+    }
+
+    /// [`Session::refit`] returning the solve itself — the per-request unit
+    /// the coalescer hands back to each caller.
+    pub fn refit_solved(&mut self, b: &[f64]) -> Result<Solved, EnetError> {
+        self.solve(b)?;
+        match self.solved.clone() {
+            Some(s) => Ok(s),
+            None => Err(EnetError::Backend("solve completed without state".to_string())),
+        }
     }
 
     /// Batch refit mirroring [`crate::api::Fit::refit_many`]: all responses
@@ -204,6 +237,7 @@ impl Session {
             )?;
             let solved = Solved { lam1, lam2, result };
             self.solved = Some(solved.clone());
+            self.solves += 1;
             out.push(solved);
         }
         Ok(out)
@@ -248,6 +282,109 @@ impl Session {
     }
 }
 
+/// One single-`b` refit waiting for a coalescing leader.
+struct PendingRefit {
+    b: Vec<f64>,
+    tx: mpsc::Sender<Result<Solved, EnetError>>,
+}
+
+/// A warm session plus its cross-request refit coalescer — what the registry
+/// actually hands out.
+///
+/// The coalescer is a combining lock: a single-`b` `/v1/refit` enqueues its
+/// response on `pending` and then contends for the session mutex. Whoever
+/// wins the lock becomes the leader, drains *everything* pending at that
+/// moment, and serves the whole batch through one
+/// [`Session::refit_many`] call (one fused λmax pass over the design instead
+/// of one per request); followers find their own solve waiting on their
+/// channel. Correctness leans entirely on the pinned bitwise contract:
+/// `refit_many` == sequential `refit` bit for bit, so a coalesced response is
+/// byte-identical to the uncoalesced one.
+///
+/// No entry can be stranded: every enqueuer contends for the session lock
+/// *after* pushing, so the first winner after any push drains it — at
+/// worst the enqueuer itself. If a leader dies mid-batch, dropping the batch
+/// disconnects every follower's channel, which surfaces as a typed 5xx
+/// rather than a hang.
+pub struct SessionSlot {
+    /// The slot's design, readable without touching the session lock.
+    design: Arc<StoredDesign>,
+    session: Mutex<Session>,
+    pending: Mutex<Vec<PendingRefit>>,
+}
+
+impl SessionSlot {
+    fn new(session: Session) -> SessionSlot {
+        let design = Arc::clone(session.design());
+        SessionSlot { design, session: Mutex::new(session), pending: Mutex::new(Vec::new()) }
+    }
+
+    /// The design this slot's session is bound to (lock-free).
+    pub fn design(&self) -> &Arc<StoredDesign> {
+        &self.design
+    }
+
+    /// Lock the session for a non-coalescing request (fit, predict, path,
+    /// batch refit).
+    pub fn session(&self) -> MutexGuard<'_, Session> {
+        lock(&self.session)
+    }
+
+    /// Try to peek at the session without blocking — `None` while a solve is
+    /// in flight. For `/v1/stats`, which must never queue behind a solve.
+    pub fn try_session(&self) -> Option<MutexGuard<'_, Session>> {
+        match self.session.try_lock() {
+            Ok(guard) => Some(guard),
+            Err(TryLockError::Poisoned(poisoned)) => Some(poisoned.into_inner()),
+            Err(TryLockError::WouldBlock) => None,
+        }
+    }
+
+    /// One single-response refit through the coalescer (see the type docs for
+    /// the protocol). `metrics` records the realized batch sizes.
+    pub fn refit_coalesced(
+        &self,
+        b: Vec<f64>,
+        metrics: &ServeMetrics,
+    ) -> Result<Solved, EnetError> {
+        let (tx, rx) = mpsc::channel();
+        lock(&self.pending).push(PendingRefit { b, tx });
+        {
+            let mut session = lock(&self.session);
+            let batch: Vec<PendingRefit> = std::mem::take(&mut *lock(&self.pending));
+            if !batch.is_empty() {
+                metrics.record_batch(batch.len());
+                let bs: Vec<&[f64]> = batch.iter().map(|p| p.b.as_slice()).collect();
+                match session.refit_many(&bs) {
+                    Ok(solved) => {
+                        for (p, s) in batch.iter().zip(solved) {
+                            let _ = p.tx.send(Ok(s));
+                        }
+                    }
+                    Err(_) if batch.len() > 1 => {
+                        // A batch-level failure (refit_many validates every
+                        // response up front) must not fail innocent
+                        // bystanders: fall back to per-request refits so each
+                        // entry gets its own verdict, exactly as without
+                        // coalescing.
+                        for p in &batch {
+                            let _ = p.tx.send(session.refit_solved(&p.b));
+                        }
+                    }
+                    Err(e) => {
+                        let _ = batch[0].tx.send(Err(e));
+                    }
+                }
+            }
+        }
+        match rx.recv() {
+            Ok(result) => result,
+            // Disconnected sender: the leader died mid-batch.
+            Err(_) => Err(EnetError::Backend("coalescing leader failed mid-batch".to_string())),
+        }
+    }
+}
+
 /// The server's shared stores: registered designs plus the warm-session LRU.
 pub struct Registry {
     max_sessions: usize,
@@ -255,7 +392,7 @@ pub struct Registry {
     /// LRU order, least-recently-used first. A `Vec` is the right structure
     /// at this scale (default cap 16): the O(len) reorder is noise next to
     /// the solve the session exists to serve.
-    sessions: Mutex<Vec<(String, Arc<Mutex<Session>>)>>,
+    sessions: Mutex<Vec<(String, Arc<SessionSlot>)>>,
 }
 
 impl Registry {
@@ -307,7 +444,7 @@ impl Registry {
         design: &Arc<StoredDesign>,
         model: &EnetModel,
         model_key: &str,
-    ) -> Result<Arc<Mutex<Session>>, EnetError> {
+    ) -> Result<Arc<SessionSlot>, EnetError> {
         let key = format!("{}:{}", design.id, model_key);
         let mut sessions = lock(&self.sessions);
         if let Some(pos) = sessions.iter().position(|(k, _)| *k == key) {
@@ -316,11 +453,18 @@ impl Registry {
             sessions.push(entry);
             return Ok(found);
         }
-        let session = Arc::new(Mutex::new(Session::new(Arc::clone(design), model.clone())?));
+        let slot = Arc::new(SessionSlot::new(Session::new(Arc::clone(design), model.clone())?));
         if sessions.len() >= self.max_sessions {
             sessions.remove(0);
         }
-        sessions.push((key, Arc::clone(&session)));
-        Ok(session)
+        sessions.push((key, Arc::clone(&slot)));
+        Ok(slot)
+    }
+
+    /// A point-in-time copy of the resident sessions (key + slot handle), in
+    /// LRU order — the `/v1/stats` walk, done on a clone so the session
+    /// mutexes are probed without holding the registry lock.
+    pub fn sessions_snapshot(&self) -> Vec<(String, Arc<SessionSlot>)> {
+        lock(&self.sessions).iter().map(|(k, s)| (k.clone(), Arc::clone(s))).collect()
     }
 }

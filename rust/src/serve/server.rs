@@ -1,13 +1,21 @@
 //! The TCP front end: accept loop, per-connection threads, admission
-//! control, and panic containment.
+//! control, request deadlines, graceful drain, and panic containment.
 //!
 //! Threading model: one OS thread per connection (requests on a connection
-//! are serial per HTTP/1.1), with two server-wide controls layered on top:
+//! are serial per HTTP/1.1), with server-wide controls layered on top:
 //!
-//! * **Admission** — an atomic in-flight counter; past `max_inflight` a
-//!   request is answered `503` immediately instead of queueing unboundedly.
-//!   The counter is released by a drop guard, so every exit path — success,
+//! * **Admission** — a bounded FIFO queue in front of an in-flight cap.
+//!   A request past `max_inflight` waits its turn in ticket order instead of
+//!   failing; only a *full queue* answers `503` (with `Retry-After`), so
+//!   short bursts above capacity absorb into latency rather than errors.
+//!   Permits are released by drop guards, so every exit path — success,
 //!   typed error, even a handler panic — frees the slot.
+//! * **Deadlines** — each request gets a total time budget
+//!   (`request_timeout_ms`), enforced on the header read, the body read, and
+//!   again at solve dispatch. A peer that stalls mid-request is answered
+//!   `408` and closed (never a wedged connection thread); a request whose
+//!   budget expires while queued is answered `503` without burning a solver
+//!   slot.
 //! * **Thread budget** — each admitted request runs under
 //!   `shard::with_threads(total / inflight)`, an even share of the server's
 //!   worker budget (floored at one thread). Because every kernel in the
@@ -15,22 +23,32 @@
 //!   budget affects latency only — response bytes are identical at every
 //!   concurrency level, which is what makes this scheduling safe to do at
 //!   all.
+//! * **Drain** — on SIGTERM (see [`install_sigterm_drain`]) or
+//!   [`ServerHandle::begin_drain`], the listener closes immediately (late
+//!   connects are refused), in-flight *and queued* requests run to
+//!   completion (bounded by `drain_timeout_ms`), connections are told
+//!   `Connection: close`, and [`Server::run`] returns cleanly.
 //!
 //! A handler panic (there should be none — see `handlers`' no-panic
 //! contract) is caught per-request and answered as a 500; the worker thread
 //! and the listener survive.
 
+use std::collections::VecDeque;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
+use crate::api::EnetError;
 use crate::parallel::{resolve_threads, shard};
-use crate::serve::handlers::{self, error_body, ServeError};
-use crate::serve::http::{self, read_request, write_response, ParseError};
+use crate::serve::handlers::{self, ServeError};
+use crate::serve::http::{read_request, write_response, ParseError, Request};
+use crate::serve::metrics::{AdmissionGauges, Endpoint, ServeMetrics};
 use crate::serve::registry::Registry;
+use crate::serve::wire::Reply;
 
 /// Server configuration (all CLI-settable; see `ssnal-en serve --help`).
 #[derive(Clone, Debug)]
@@ -41,12 +59,21 @@ pub struct ServerConfig {
     pub port: u16,
     /// Warm-session LRU capacity.
     pub sessions: usize,
-    /// Admission cap: requests in flight before `503`s.
+    /// Admission cap: requests executing concurrently.
     pub max_inflight: usize,
     /// Total solver thread budget shared across requests (0 = all cores).
     pub threads: usize,
     /// Request body cap in bytes.
     pub max_body: usize,
+    /// Admission queue capacity in front of the in-flight cap; only a full
+    /// queue rejects with `503`.
+    pub queue_depth: usize,
+    /// Per-request time budget in milliseconds, enforced on header read,
+    /// body read, and solve dispatch (0 = no deadline).
+    pub request_timeout_ms: u64,
+    /// How long a graceful drain waits for in-flight and queued requests
+    /// before giving up, milliseconds.
+    pub drain_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -58,7 +85,235 @@ impl Default for ServerConfig {
             max_inflight: 32,
             threads: 0,
             max_body: 256 << 20,
+            queue_depth: 64,
+            request_timeout_ms: 30_000,
+            drain_timeout_ms: 30_000,
         }
+    }
+}
+
+impl ServerConfig {
+    /// The per-request deadline as a `Duration` (`None` when disabled).
+    fn request_timeout(&self) -> Option<Duration> {
+        match self.request_timeout_ms {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        }
+    }
+}
+
+/// Set by the SIGTERM handler; polled by every accept loop in the process.
+static SIGTERM_DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Whether a SIGTERM arrived since [`install_sigterm_drain`].
+pub fn sigterm_requested() -> bool {
+    SIGTERM_DRAIN.load(Ordering::SeqCst)
+}
+
+/// Install a SIGTERM handler that flips the process-wide drain flag: the
+/// accept loop stops taking connections, finishes in-flight and queued work,
+/// and [`Server::run`] returns `Ok` so the process exits 0.
+///
+/// Declares libc's `signal` directly (std already links libc on unix) — the
+/// handler body is a single atomic store, which is async-signal-safe.
+#[cfg(unix)]
+pub fn install_sigterm_drain() {
+    extern "C" fn on_sigterm(_sig: i32) {
+        SIGTERM_DRAIN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_sigterm as extern "C" fn(i32) as usize);
+    }
+}
+
+/// No-op off unix: drain remains reachable programmatically via
+/// [`ServerHandle::begin_drain`].
+#[cfg(not(unix))]
+pub fn install_sigterm_drain() {}
+
+/// Admission book-keeping, all under one mutex: the FIFO ticket queue in
+/// front of the in-flight cap, plus the `active` request count drain waits
+/// on (`active` spans parse → response written, so a drain cannot complete
+/// with a response half-sent).
+struct AdmissionState {
+    /// Requests between parse and response written (admitted, queued, or
+    /// being answered with a rejection).
+    active: usize,
+    /// Requests currently executing a handler.
+    inflight: usize,
+    /// Tickets of requests waiting for an execution slot, FIFO.
+    queue: VecDeque<u64>,
+    next_ticket: u64,
+}
+
+/// The bounded FIFO admission queue + in-flight cap.
+pub(crate) struct Admission {
+    max_inflight: usize,
+    queue_capacity: usize,
+    state: Mutex<AdmissionState>,
+    cv: Condvar,
+}
+
+/// How one admission attempt resolved.
+enum Admitted<'a> {
+    /// Run now; `queued` says whether the request waited in the queue first.
+    Ready { permit: Permit<'a>, queued: bool },
+    /// The queue is full — reject with `503` + `Retry-After`.
+    QueueFull { queued: usize },
+    /// The request's deadline expired while it waited in the queue.
+    Expired,
+}
+
+/// Releases one execution slot on drop — every exit path, panics included.
+pub(crate) struct Permit<'a>(&'a Admission);
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.0.release_permit();
+    }
+}
+
+/// Marks one request active from parse until its response is written; drain
+/// waits for all of these to drop.
+struct RequestGuard<'a>(&'a Admission);
+
+impl Drop for RequestGuard<'_> {
+    fn drop(&mut self) {
+        self.0.end_request();
+    }
+}
+
+impl Admission {
+    fn new(max_inflight: usize, queue_capacity: usize) -> Admission {
+        Admission {
+            max_inflight: max_inflight.max(1),
+            queue_capacity,
+            state: Mutex::new(AdmissionState {
+                active: 0,
+                inflight: 0,
+                queue: VecDeque::new(),
+                next_ticket: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Lock the admission state, recovering from poisoning (counters are
+    /// valid at rest; a panicking holder can only have been between
+    /// increments).
+    fn lock_state(&self) -> MutexGuard<'_, AdmissionState> {
+        match self.state.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Mark a request active (parse done, response not yet written).
+    fn begin_request(&self) -> RequestGuard<'_> {
+        self.lock_state().active += 1;
+        RequestGuard(self)
+    }
+
+    fn end_request(&self) {
+        let mut st = self.lock_state();
+        st.active = st.active.saturating_sub(1);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn release_permit(&self) {
+        let mut st = self.lock_state();
+        st.inflight = st.inflight.saturating_sub(1);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Wait for an execution slot in strict FIFO order. Fast path: no queue
+    /// and a free slot. Otherwise take a ticket and wait until it is at the
+    /// head with a slot free, the queue is full (reject), or the request's
+    /// deadline passes (the ticket is withdrawn from wherever it sits).
+    fn admit(&self, deadline: Option<Instant>) -> Admitted<'_> {
+        let mut st = self.lock_state();
+        if st.queue.is_empty() && st.inflight < self.max_inflight {
+            st.inflight += 1;
+            return Admitted::Ready { permit: Permit(self), queued: false };
+        }
+        if st.queue.len() >= self.queue_capacity {
+            return Admitted::QueueFull { queued: st.queue.len() };
+        }
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.queue.push_back(ticket);
+        loop {
+            if st.queue.front() == Some(&ticket) && st.inflight < self.max_inflight {
+                st.queue.pop_front();
+                st.inflight += 1;
+                drop(st);
+                // another slot may also be free — wake the next ticket
+                self.cv.notify_all();
+                return Admitted::Ready { permit: Permit(self), queued: true };
+            }
+            match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        if let Some(pos) = st.queue.iter().position(|&t| t == ticket) {
+                            st.queue.remove(pos);
+                        }
+                        drop(st);
+                        self.cv.notify_all();
+                        return Admitted::Expired;
+                    }
+                    st = match self.cv.wait_timeout(st, d - now) {
+                        Ok((guard, _)) => guard,
+                        Err(poisoned) => poisoned.into_inner().0,
+                    };
+                }
+                None => {
+                    st = match self.cv.wait(st) {
+                        Ok(guard) => guard,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                }
+            }
+        }
+    }
+
+    /// Requests currently executing (for the per-request thread budget).
+    fn inflight(&self) -> usize {
+        self.lock_state().inflight
+    }
+
+    /// Instantaneous gauges for `/v1/stats`.
+    fn gauges(&self) -> AdmissionGauges {
+        let st = self.lock_state();
+        AdmissionGauges {
+            inflight: st.inflight,
+            max_inflight: self.max_inflight,
+            queue_depth: st.queue.len(),
+            queue_capacity: self.queue_capacity,
+        }
+    }
+
+    /// Block until no request is active (parse → response written) or the
+    /// deadline passes; returns whether idle was reached.
+    fn wait_idle(&self, deadline: Instant) -> bool {
+        let mut st = self.lock_state();
+        while st.active > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            st = match self.cv.wait_timeout(st, deadline - now) {
+                Ok((guard, _)) => guard,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
+        true
     }
 }
 
@@ -68,16 +323,21 @@ pub struct ServerState {
     pub registry: Registry,
     /// The configuration the server was built with.
     pub cfg: ServerConfig,
-    inflight: AtomicUsize,
-    shutdown: AtomicBool,
+    /// Server-wide counters behind `GET /v1/stats`.
+    pub metrics: ServeMetrics,
+    admission: Admission,
+    drain: AtomicBool,
 }
 
-/// Releases one admission slot on drop — every exit path, panics included.
-struct InflightGuard<'a>(&'a AtomicUsize);
+impl ServerState {
+    /// Whether a drain has begun (programmatic or SIGTERM).
+    pub fn draining(&self) -> bool {
+        self.drain.load(Ordering::SeqCst) || sigterm_requested()
+    }
 
-impl Drop for InflightGuard<'_> {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
+    /// Instantaneous admission gauges for `/v1/stats`.
+    pub fn admission_gauges(&self) -> AdmissionGauges {
+        self.admission.gauges()
     }
 }
 
@@ -87,14 +347,19 @@ pub struct Server {
     state: Arc<ServerState>,
 }
 
+/// Accept-loop poll interval: how often the drain flag is observed while no
+/// connections arrive.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
 impl Server {
     /// Bind the listener and build the shared state.
     pub fn bind(cfg: ServerConfig) -> std::io::Result<Server> {
         let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))?;
         let state = Arc::new(ServerState {
             registry: Registry::new(cfg.sessions),
-            inflight: AtomicUsize::new(0),
-            shutdown: AtomicBool::new(false),
+            metrics: ServeMetrics::new(),
+            admission: Admission::new(cfg.max_inflight, cfg.queue_depth),
+            drain: AtomicBool::new(false),
             cfg,
         });
         Ok(Server { listener, state })
@@ -105,22 +370,43 @@ impl Server {
         self.listener.local_addr()
     }
 
-    /// Run the accept loop on the calling thread — the CLI entry point;
-    /// returns only on listener error or [`ServerHandle::stop`].
+    /// Run the accept loop on the calling thread — the CLI entry point.
+    /// Returns `Ok(())` after a graceful drain (SIGTERM or
+    /// [`ServerHandle::begin_drain`]): the listener closes first (late
+    /// connects refused), then in-flight and queued requests finish, bounded
+    /// by `drain_timeout_ms`.
     pub fn run(self) -> std::io::Result<()> {
-        for conn in self.listener.incoming() {
-            if self.state.shutdown.load(Ordering::SeqCst) {
+        let Server { listener, state } = self;
+        // Nonblocking accept so the drain flag is observed promptly even
+        // with no traffic; a wake drains the whole backlog before sleeping.
+        listener.set_nonblocking(true)?;
+        loop {
+            if state.draining() {
                 break;
             }
-            let Ok(stream) = conn else { continue };
-            let state = Arc::clone(&self.state);
-            std::thread::spawn(move || serve_connection(state, stream));
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let state = Arc::clone(&state);
+                    std::thread::spawn(move || serve_connection(state, stream));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => std::thread::sleep(ACCEPT_POLL),
+            }
         }
+        // Make the drain observable to connection threads even when only the
+        // process-wide SIGTERM flag was set, then refuse new connections
+        // while the admitted work completes.
+        state.drain.store(true, Ordering::SeqCst);
+        drop(listener);
+        let deadline = Instant::now() + Duration::from_millis(state.cfg.drain_timeout_ms.max(1));
+        state.admission.wait_idle(deadline);
         Ok(())
     }
 
     /// Run the accept loop on a background thread — the test/bench entry
-    /// point. The returned handle stops and joins the server on
+    /// point. The returned handle drains and joins the server on
     /// [`ServerHandle::stop`].
     pub fn spawn(self) -> std::io::Result<ServerHandle> {
         let addr = self.local_addr()?;
@@ -145,67 +431,120 @@ impl ServerHandle {
         self.addr.to_string()
     }
 
-    /// Stop the accept loop and join its thread. Connections already accepted
-    /// finish their current request; no new connections are accepted.
+    /// Begin a graceful drain without blocking: the accept loop closes the
+    /// listener on its next poll (late connects refused) while in-flight and
+    /// queued requests run to completion.
+    pub fn begin_drain(&self) {
+        self.state.drain.store(true, Ordering::SeqCst);
+    }
+
+    /// Drain gracefully and join the server thread: no new connections,
+    /// in-flight and queued requests finish (bounded by `drain_timeout_ms`).
     pub fn stop(self) {
-        self.state.shutdown.store(true, Ordering::SeqCst);
-        // `accept` blocks with no timeout in std; a throwaway connection
-        // wakes it so it observes the shutdown flag.
-        let _ = TcpStream::connect(self.addr);
+        self.begin_drain();
         let _ = self.join.join();
     }
 }
 
+/// Write one reply, honoring its `Retry-After`.
+fn write_reply(stream: &mut TcpStream, reply: &Reply, close: bool) -> std::io::Result<()> {
+    write_response(stream, reply.status, &reply.body, close, reply.retry_after_secs)
+}
+
 /// Serial request loop for one connection.
 fn serve_connection(state: Arc<ServerState>, stream: TcpStream) {
+    // The listener is nonblocking; this stream must block (with timeouts).
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let timeout = state.cfg.request_timeout();
+    let _ = stream.set_write_timeout(timeout);
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
     loop {
-        let req = match read_request(&mut reader, state.cfg.max_body) {
+        if state.draining() {
+            return;
+        }
+        let req = match read_request(&mut reader, state.cfg.max_body, timeout) {
             Ok(req) => req,
-            Err(ParseError::Eof) => return,
+            // Peer closed, or a keep-alive connection went quiet: no request
+            // exists, nothing to answer.
+            Err(ParseError::Eof) | Err(ParseError::IdleTimeout) => return,
+            Err(ParseError::Stalled { budget_ms }) => {
+                ServeMetrics::bump(&state.metrics.timeouts_read);
+                let reply = Reply::error(
+                    408,
+                    &format!("request stalled: not fully received within {budget_ms} ms"),
+                );
+                let _ = write_reply(&mut writer, &reply, true);
+                return;
+            }
             Err(ParseError::Malformed(msg)) => {
-                let body = error_body(400, &format!("malformed request: {msg}"));
-                let _ = write_response(&mut writer, 400, &body, true);
+                let reply = Reply::error(400, &format!("malformed request: {msg}"));
+                let _ = write_reply(&mut writer, &reply, true);
                 return;
             }
             Err(ParseError::TooLarge { declared, limit }) => {
-                let body = error_body(
+                let reply = Reply::error(
                     413,
                     &format!("body of {declared} bytes exceeds the {limit}-byte limit"),
                 );
-                let _ = write_response(&mut writer, 413, &body, true);
+                let _ = write_reply(&mut writer, &reply, true);
                 return;
             }
             Err(ParseError::Io(_)) => return,
         };
-        let keep_alive = req.keep_alive;
-        let (status, body) = dispatch(&state, &req);
-        if write_response(&mut writer, status, &body, !keep_alive).is_err() {
-            return;
-        }
-        if !keep_alive {
+        // Active from here until the response is written — drain waits on
+        // this guard, so it can never cut off a half-answered request.
+        let request_guard = state.admission.begin_request();
+        let endpoint = Endpoint::from_path(&req.path);
+        let started = Instant::now();
+        let (reply, permit) = dispatch(&state, &req);
+        let close = !req.keep_alive || state.draining();
+        let write_ok = write_reply(&mut writer, &reply, close).is_ok();
+        state.metrics.record(endpoint, started.elapsed().as_secs_f64(), reply.status);
+        drop(permit);
+        drop(request_guard);
+        if !write_ok || close {
             return;
         }
     }
 }
 
-/// Admission, thread budgeting, and panic containment around one request.
-fn dispatch(state: &ServerState, req: &http::Request) -> (u16, String) {
-    let inflight = state.inflight.fetch_add(1, Ordering::SeqCst) + 1;
-    let _guard = InflightGuard(&state.inflight);
-    if inflight > state.cfg.max_inflight {
-        let e = ServeError::Busy { inflight, max_inflight: state.cfg.max_inflight };
-        let status = e.status();
-        return (status, error_body(status, &e.message()));
-    }
-    let budget = (resolve_threads(state.cfg.threads) / inflight).max(1);
-    let outcome = catch_unwind(AssertUnwindSafe(|| {
-        shard::with_threads(budget, || handlers::handle(state, req))
-    }));
-    match outcome {
-        Ok(response) => response,
-        Err(_) => (500, error_body(500, "internal error: request handler panicked")),
+/// Admission (queue + deadline), thread budgeting, and panic containment
+/// around one request. The returned [`Permit`] (when admitted) must be held
+/// until the response is written, so drain and the thread budget account for
+/// the full request lifetime.
+fn dispatch<'a>(state: &'a ServerState, req: &Request) -> (Reply, Option<Permit<'a>>) {
+    match state.admission.admit(req.deadline) {
+        Admitted::QueueFull { queued } => {
+            ServeMetrics::bump(&state.metrics.rejected_queue_full);
+            let e = ServeError::Busy { queued, queue_capacity: state.cfg.queue_depth };
+            (e.reply(), None)
+        }
+        Admitted::Expired => {
+            ServeMetrics::bump(&state.metrics.rejected_deadline);
+            let e = ServeError::from(EnetError::Deadline {
+                budget_ms: req.budget_ms.unwrap_or(0),
+            });
+            (e.reply(), None)
+        }
+        Admitted::Ready { permit, queued } => {
+            ServeMetrics::bump(&state.metrics.admitted);
+            if queued {
+                ServeMetrics::bump(&state.metrics.queued_total);
+            }
+            let inflight = state.admission.inflight().max(1);
+            let budget = (resolve_threads(state.cfg.threads) / inflight).max(1);
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                shard::with_threads(budget, || handlers::handle(state, req))
+            }));
+            let reply = match outcome {
+                Ok(reply) => reply,
+                Err(_) => Reply::error(500, "internal error: request handler panicked"),
+            };
+            (reply, Some(permit))
+        }
     }
 }

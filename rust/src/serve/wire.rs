@@ -1,0 +1,220 @@
+//! The serve wire format, in one place: every JSON body the server emits —
+//! success or error, fit or stats — is built by an encoder in this module.
+//!
+//! Fit-shaped responses render through the same
+//! [`crate::api::fit::solve_json`] as [`crate::api::Fit::to_json`], and
+//! workspace stats render through [`crate::api::StatsSnapshot::to_json`] —
+//! the single-source-of-truth contract behind the pinned
+//! "server bytes == direct `api::` bytes" tests: a schema can only change by
+//! changing the one encoder both sides share.
+
+use crate::api::fit::{solve_json, PathFit};
+use crate::api::StatsSnapshot;
+use crate::serve::metrics::MetricsSnapshot;
+use crate::serve::registry::{Solved, StoredDesign};
+use crate::util::json::Json;
+
+/// One fully-rendered HTTP response: status, JSON body, and the optional
+/// `Retry-After` header admission rejections carry.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    /// HTTP status code.
+    pub status: u16,
+    /// JSON body.
+    pub body: String,
+    /// `Retry-After` header value, seconds (503s from admission control).
+    pub retry_after_secs: Option<u64>,
+}
+
+impl Reply {
+    /// A 200 with the given body.
+    pub fn ok(body: String) -> Reply {
+        Reply { status: 200, body, retry_after_secs: None }
+    }
+
+    /// An error reply with the uniform error body.
+    pub fn error(status: u16, message: &str) -> Reply {
+        Reply { status, body: error_body(status, message), retry_after_secs: None }
+    }
+
+    /// Attach a `Retry-After` header (builder-style).
+    pub fn retry_after(mut self, secs: u64) -> Reply {
+        self.retry_after_secs = Some(secs);
+        self
+    }
+}
+
+/// The uniform JSON error body.
+pub fn error_body(status: u16, message: &str) -> String {
+    Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.error".to_string())),
+        ("status", Json::Num(status as f64)),
+        ("error", Json::Str(message.to_string())),
+    ])
+    .to_string()
+}
+
+/// `GET /v1/health` body.
+pub fn health_body(designs: usize, sessions: usize, threads: usize, draining: bool) -> String {
+    Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.health".to_string())),
+        ("status", Json::Str(if draining { "draining" } else { "ok" }.to_string())),
+        ("designs", Json::Num(designs as f64)),
+        ("sessions", Json::Num(sessions as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("draining", Json::Bool(draining)),
+    ])
+    .to_string()
+}
+
+/// `POST /v1/designs` body: the registered design's id and shape.
+pub fn design_body(stored: &StoredDesign) -> String {
+    Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.design".to_string())),
+        ("design_id", Json::Str(stored.id.clone())),
+        ("m", Json::Num(stored.design.m() as f64)),
+        ("n", Json::Num(stored.design.n() as f64)),
+        ("sparse", Json::Bool(stored.design.is_sparse())),
+    ])
+    .to_string()
+}
+
+/// One solve as JSON — [`solve_json`] with the session's resolved penalties;
+/// byte-identical to [`crate::api::Fit::to_json`] on the same solve.
+pub fn fit_json(m: usize, n: usize, s: &Solved) -> Json {
+    solve_json(m, n, s.lam1, s.lam2, &s.result)
+}
+
+/// `POST /v1/fit` / single-`b` `POST /v1/refit` body.
+pub fn fit_body(m: usize, n: usize, s: &Solved) -> String {
+    fit_json(m, n, s).to_string()
+}
+
+/// Batch `POST /v1/refit` body: every solve of the batch, each rendered by
+/// the same encoder as a single fit.
+pub fn refit_batch_body(m: usize, n: usize, solved: &[Solved]) -> String {
+    let fits: Vec<Json> = solved.iter().map(|s| fit_json(m, n, s)).collect();
+    Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.refit_batch".to_string())),
+        ("count", Json::Num(fits.len() as f64)),
+        ("fits", Json::Arr(fits)),
+    ])
+    .to_string()
+}
+
+/// `POST /v1/predict` body.
+pub fn predictions_body(preds: &[f64]) -> String {
+    Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.predictions".to_string())),
+        ("m", Json::Num(preds.len() as f64)),
+        ("predictions", Json::Arr(preds.iter().map(|&v| Json::Num(v)).collect())),
+    ])
+    .to_string()
+}
+
+/// `POST /v1/path` body.
+pub fn path_body(m: usize, n: usize, path: &PathFit) -> String {
+    let points: Vec<Json> = path
+        .points()
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("c_lambda", Json::Num(p.c_lambda)),
+                ("converged", Json::Bool(p.result.converged)),
+                ("objective", Json::Num(p.result.objective)),
+                ("iterations", Json::Num(p.result.iterations as f64)),
+                (
+                    "active_set",
+                    Json::Arr(p.result.active_set.iter().map(|&j| Json::Num(j as f64)).collect()),
+                ),
+                (
+                    "coefficients",
+                    Json::Arr(
+                        p.result.active_set.iter().map(|&j| Json::Num(p.result.x[j])).collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.path".to_string())),
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(n as f64)),
+        ("lambda_max", Json::Num(path.lambda_max())),
+        ("runs", Json::Num(path.runs() as f64)),
+        ("truncated", Json::Bool(path.truncated())),
+        ("points", Json::Arr(points)),
+    ])
+    .to_string()
+}
+
+/// One warm session's entry in the stats `sessions` array.
+#[derive(Clone, Debug)]
+pub struct SessionStatsEntry {
+    /// The registry key: `design_id:model-spec`.
+    pub key: String,
+    /// Whether the session was mid-solve when stats were read (its workspace
+    /// counters are then omitted rather than waiting on the lock).
+    pub busy: bool,
+    /// Solves this session has run (cold + refits).
+    pub solves: u64,
+    /// Workspace reuse counters, absent while busy.
+    pub workspace: Option<StatsSnapshot>,
+}
+
+impl SessionStatsEntry {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("key", Json::Str(self.key.clone())),
+            ("busy", Json::Bool(self.busy)),
+            ("solves", Json::Num(self.solves as f64)),
+        ];
+        match &self.workspace {
+            Some(ws) => fields.push(("workspace", ws.to_json())),
+            None => fields.push(("workspace", Json::Null)),
+        }
+        Json::obj(fields)
+    }
+}
+
+/// `GET /v1/stats` body: server-wide counters ([`MetricsSnapshot`]), the
+/// admission gauges, coalescing economics, per-endpoint latency histograms,
+/// and per-session workspace stats.
+pub fn stats_body(snap: &MetricsSnapshot, sessions: &[SessionStatsEntry]) -> String {
+    let g = snap.gauges;
+    Json::obj(vec![
+        ("kind", Json::Str("ssnal_en.stats".to_string())),
+        ("uptime_seconds", Json::Num(snap.uptime_seconds)),
+        ("inflight", Json::Num(g.inflight as f64)),
+        ("max_inflight", Json::Num(g.max_inflight as f64)),
+        (
+            "queue",
+            Json::obj(vec![
+                ("depth", Json::Num(g.queue_depth as f64)),
+                ("capacity", Json::Num(g.queue_capacity as f64)),
+                ("queued_total", Json::Num(snap.queued_total as f64)),
+                ("rejected_full", Json::Num(snap.rejected_queue_full as f64)),
+            ]),
+        ),
+        (
+            "deadlines",
+            Json::obj(vec![
+                ("read_timeouts_408", Json::Num(snap.timeouts_read as f64)),
+                ("expired_503", Json::Num(snap.rejected_deadline as f64)),
+            ]),
+        ),
+        (
+            "coalesce",
+            Json::obj(vec![
+                ("batches", Json::Num(snap.coalesce_batches as f64)),
+                ("requests", Json::Num(snap.coalesce_requests as f64)),
+                ("coalesced_requests", Json::Num(snap.coalesced_requests as f64)),
+                ("ratio", Json::Num(snap.coalesce_ratio())),
+            ]),
+        ),
+        ("admitted", Json::Num(snap.admitted as f64)),
+        ("endpoints", Json::Arr(snap.endpoints.iter().map(|e| e.to_json()).collect())),
+        ("sessions", Json::Arr(sessions.iter().map(|s| s.to_json()).collect())),
+    ])
+    .to_string()
+}

@@ -1,9 +1,18 @@
-//! Integration tests for the `ssnal-en serve` front end (ISSUE 7): server
-//! responses byte-identical to the direct `api::` calls they wrap, sparse CSC
-//! designs round-tripping fit→predict without densification, malformed
-//! requests answered with 4xx statuses (never a panic, never a wedged
-//! server), concurrency at several client counts leaving response bytes
-//! unchanged, and LRU session eviction staying invisible to correctness.
+//! Integration tests for the `ssnal-en serve` front end: server responses
+//! byte-identical to the direct `api::` calls they wrap, sparse CSC designs
+//! round-tripping fit→predict without densification, malformed requests
+//! answered with 4xx statuses (never a panic, never a wedged server),
+//! concurrency at several client counts leaving response bytes unchanged,
+//! and LRU session eviction staying invisible to correctness.
+//!
+//! The serving-hardening layer is pinned here too: a full admission queue
+//! answers `503` with `Retry-After`, a request whose budget expires in the
+//! queue answers `503` without reaching the solver, stalled partial requests
+//! answer `408` (idle keep-alive connections close silently), graceful drain
+//! finishes in-flight work while refusing late connects — programmatically
+//! and via SIGTERM against the real binary — and concurrent single-`b`
+//! refits coalesce into `refit_many` batches without changing a response
+//! byte, observable through `GET /v1/stats`.
 
 use ssnal_en::api::{Design, EnetModel};
 use ssnal_en::data::{generate_synthetic, SyntheticSpec};
@@ -496,4 +505,369 @@ fn lru_eviction_does_not_corrupt_warm_sessions() {
     assert_eq!(got, expected_a, "recreated session diverges from direct api");
 
     handle.stop();
+}
+
+/// A λ-path request heavy enough (multi-point grid, tight tolerance, debug
+/// build) to hold an execution slot while probe requests observe the
+/// admission behavior around it.
+fn heavy_path_body(design_id: &str) -> String {
+    let model = Json::obj(vec![
+        ("alpha", Json::Num(0.8)),
+        ("tol", Json::Num(1e-9)),
+        (
+            "grid",
+            Json::obj(vec![
+                ("hi", Json::Num(0.9)),
+                ("lo", Json::Num(0.02)),
+                ("points", Json::Num(16.0)),
+            ]),
+        ),
+    ]);
+    Json::obj(vec![("design_id", Json::Str(design_id.to_string())), ("model", model)]).to_string()
+}
+
+/// With a single execution slot and no queue in front of it, a request that
+/// arrives while the slot is held is rejected `503` with `Retry-After` — and
+/// the in-flight request still completes normally.
+#[test]
+fn full_admission_queue_answers_503_with_retry_after() {
+    let prob = problem();
+    let cfg = ServerConfig {
+        port: 0,
+        max_inflight: 1,
+        queue_depth: 0,
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(cfg).expect("bind").spawn().expect("spawn");
+    let addr = handle.addr();
+    let mut setup = Client::connect(&addr).unwrap();
+    let id = register_dense(&mut setup, &prob.a, &prob.b);
+
+    let mut rejection = None;
+    for round in 0..3 {
+        let heavy_addr = addr.clone();
+        let heavy_body = heavy_path_body(&id);
+        let heavy = std::thread::spawn(move || {
+            let mut client = Client::connect(&heavy_addr).expect("connect heavy");
+            client.request("POST", "/v1/path", &heavy_body).expect("heavy path request")
+        });
+        // Give the heavy request time to claim the slot before probing, so a
+        // probe can never race it into the single slot.
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        while !heavy.is_finished() {
+            let mut probe = Client::connect(&addr).expect("connect probe");
+            let (status, headers, body) =
+                probe.request_full("GET", "/v1/health", "").expect("probe");
+            if status == 503 {
+                rejection = Some((headers, body));
+                break;
+            }
+        }
+        let (status, body) = heavy.join().expect("heavy thread");
+        assert_eq!(status, 200, "round {round}: rejected-around request must complete: {body}");
+        if rejection.is_some() {
+            break;
+        }
+    }
+    let (headers, body) = rejection.expect("no probe observed a full admission queue");
+    assert!(
+        headers.iter().any(|(name, value)| name == "retry-after" && value == "1"),
+        "503 without Retry-After: {headers:?}"
+    );
+    assert!(body.contains("queue"), "busy body names the queue: {body}");
+
+    // the rejection wedged nothing
+    let (status, _) = setup.request("GET", "/v1/health", "").unwrap();
+    assert_eq!(status, 200);
+    handle.stop();
+}
+
+/// A request whose whole time budget is spent waiting in the admission queue
+/// is answered `503` (typed deadline expiry) without ever reaching the
+/// solver — and the request holding the slot still completes.
+#[test]
+fn deadline_spent_in_queue_answers_503() {
+    let prob = problem();
+    let cfg = ServerConfig {
+        port: 0,
+        max_inflight: 1,
+        queue_depth: 8,
+        request_timeout_ms: 400,
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(cfg).expect("bind").spawn().expect("spawn");
+    let addr = handle.addr();
+    let mut setup = Client::connect(&addr).unwrap();
+    let id = register_dense(&mut setup, &prob.a, &prob.b);
+
+    let mut expiry = None;
+    for round in 0..3 {
+        let heavy_addr = addr.clone();
+        let heavy_body = heavy_path_body(&id);
+        let heavy = std::thread::spawn(move || {
+            let mut client = Client::connect(&heavy_addr).expect("connect heavy");
+            client.request("POST", "/v1/path", &heavy_body).expect("heavy path request")
+        });
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        // The probe queues behind the heavy solve; its 400 ms budget expires
+        // in the queue and it must be answered 503 rather than admitted.
+        let mut probe = Client::connect(&addr).expect("connect probe");
+        let (status, headers, body) = probe.request_full("GET", "/v1/health", "").expect("probe");
+        if status == 503 {
+            expiry = Some((headers, body));
+        }
+        let (status, body) = heavy.join().expect("heavy thread");
+        assert_eq!(status, 200, "round {round}: slot holder must complete: {body}");
+        if expiry.is_some() {
+            break;
+        }
+    }
+    let (headers, body) = expiry.expect("no probe expired in the queue");
+    assert!(body.contains("deadline"), "expiry body names the deadline: {body}");
+    assert!(
+        headers.iter().any(|(name, value)| name == "retry-after" && value == "1"),
+        "deadline 503 without Retry-After: {headers:?}"
+    );
+
+    // fresh connection: `setup` idled past the 400 ms budget and was closed
+    let (status, _) = http_request(&addr, "GET", "/v1/health", "").unwrap();
+    assert_eq!(status, 200);
+    handle.stop();
+}
+
+/// Slow-loris shapes: a peer that sends a partial request and stalls is
+/// answered `408` and closed (never a wedged connection thread), while a
+/// keep-alive connection that goes quiet between requests closes silently —
+/// and the server keeps answering either way.
+#[test]
+fn stalled_partial_request_answers_408_and_idle_closes_silently() {
+    let cfg = ServerConfig { port: 0, request_timeout_ms: 250, ..ServerConfig::default() };
+    let handle = Server::bind(cfg).expect("bind").spawn().expect("spawn");
+    let addr = handle.addr();
+
+    // partial headers, then silence → 408
+    let mut stalled = Client::connect(&addr).unwrap();
+    stalled.send_raw(b"POST /v1/fit HTTP/1.1\r\nhost: t\r\n").unwrap();
+    let (status, body) = stalled.read_reply().expect("408 reply");
+    assert_eq!(status, 408, "{body}");
+    assert!(body.contains("stalled"), "{body}");
+
+    // complete headers but a body that never arrives → 408
+    let mut bodyless = Client::connect(&addr).unwrap();
+    bodyless
+        .send_raw(b"POST /v1/fit HTTP/1.1\r\nhost: t\r\ncontent-length: 10\r\n\r\n")
+        .unwrap();
+    let (status, body) = bodyless.read_reply().expect("408 reply");
+    assert_eq!(status, 408, "{body}");
+
+    // a quiet keep-alive connection closes with no response bytes at all
+    let mut idle = Client::connect(&addr).unwrap();
+    assert!(idle.read_reply().is_err(), "idle connection must close silently");
+
+    let (status, _) = http_request(&addr, "GET", "/v1/health", "").unwrap();
+    assert_eq!(status, 200, "server healthy after the stalls");
+    handle.stop();
+}
+
+/// Programmatic graceful drain: once a drain begins, the in-flight request
+/// runs to completion and is answered normally, while late connects are
+/// refused (the listener closes).
+#[test]
+fn graceful_drain_finishes_inflight_and_refuses_new_connects() {
+    let prob = problem();
+    let handle = spawn_server(16, 0, 256 << 20);
+    let addr = handle.addr();
+    let mut setup = Client::connect(&addr).unwrap();
+    let id = register_dense(&mut setup, &prob.a, &prob.b);
+
+    let heavy_addr = addr.clone();
+    let heavy_body = heavy_path_body(&id);
+    let heavy = std::thread::spawn(move || {
+        let mut client = Client::connect(&heavy_addr).expect("connect heavy");
+        client.request("POST", "/v1/path", &heavy_body).expect("heavy path request")
+    });
+
+    // Wait until the heavy request is observably in flight (the stats probe
+    // itself holds one slot, so in-flight ≥ 2 means the path solve is
+    // running), then begin the drain around it.
+    let observe_deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while !heavy.is_finished() && std::time::Instant::now() < observe_deadline {
+        let mut probe = Client::connect(&addr).expect("connect probe");
+        let (status, body) = probe.request("GET", "/v1/stats", "").expect("stats probe");
+        assert_eq!(status, 200, "{body}");
+        let inflight = Json::parse(&body)
+            .expect("stats parse")
+            .get("inflight")
+            .and_then(Json::as_usize)
+            .expect("inflight gauge");
+        if inflight >= 2 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    handle.begin_drain();
+
+    // the accept loop observes the flag within one poll and closes the
+    // listener; from then on connects are refused
+    let refuse_deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    let mut refused = false;
+    while std::time::Instant::now() < refuse_deadline {
+        match std::net::TcpStream::connect(&addr) {
+            Err(_) => {
+                refused = true;
+                break;
+            }
+            Ok(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+        }
+    }
+    assert!(refused, "late connects must be refused once the drain begins");
+
+    // the request that was in flight when the drain began completed normally
+    let (status, body) = heavy.join().expect("heavy thread");
+    assert_eq!(status, 200, "drain cut off an in-flight request: {body}");
+    handle.stop();
+}
+
+/// SIGTERM against the real binary: the process stops accepting, finishes
+/// its work, prints the drain message, and exits 0.
+#[test]
+#[cfg(unix)]
+fn sigterm_drains_the_serve_process_cleanly() {
+    use std::io::{BufRead, BufReader, Read};
+    use std::process::{Command, Stdio};
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_ssnal-en"))
+        .args(["serve", "--port", "0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn serve subprocess");
+    let mut stdout = BufReader::new(child.stdout.take().expect("child stdout"));
+
+    // banner: "ssnal-en serve listening on http://127.0.0.1:PORT (…)"
+    let mut addr = None;
+    let mut line = String::new();
+    for _ in 0..50 {
+        line.clear();
+        if stdout.read_line(&mut line).unwrap_or(0) == 0 {
+            break;
+        }
+        if let Some(rest) = line.split("http://").nth(1) {
+            addr = rest.split_whitespace().next().map(String::from);
+            break;
+        }
+    }
+    let addr = addr.expect("serve banner with a listen address");
+    let (status, body) = http_request(&addr, "GET", "/v1/health", "").expect("health");
+    assert_eq!(status, 200, "{body}");
+
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    assert_eq!(unsafe { kill(child.id() as i32, 15) }, 0, "deliver SIGTERM");
+
+    let exit_deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let status = loop {
+        match child.try_wait().expect("try_wait") {
+            Some(status) => break status,
+            None if std::time::Instant::now() >= exit_deadline => {
+                let _ = child.kill();
+                panic!("serve did not exit within 30s of SIGTERM");
+            }
+            None => std::thread::sleep(std::time::Duration::from_millis(20)),
+        }
+    };
+    assert!(status.success(), "SIGTERM drain must exit 0, got {status:?}");
+    let mut rest = String::new();
+    stdout.read_to_string(&mut rest).expect("drain output");
+    assert!(rest.contains("drained cleanly"), "missing drain message: {rest:?}");
+}
+
+/// Concurrent single-`b` refits on one warm session coalesce into
+/// `refit_many` batches without changing a byte: at solver thread budgets 1
+/// and 4, every coalesced response equals the sequential direct-api refit,
+/// and `/v1/stats` accounts for every one of them.
+#[test]
+fn coalesced_concurrent_refits_match_sequential_and_surface_in_stats() {
+    use ssnal_en::api::StatsSnapshot;
+
+    let prob = problem();
+    let design = Design::new(&prob.a, &prob.b).unwrap();
+    let mut reference = EnetModel::new().alpha_c(0.8, 0.5).tol(TOL).fit(&design).unwrap();
+    let m = prob.b.len();
+    let response = |i: usize| -> Vec<f64> { (0..m).map(|k| prob.b[(k + i) % m]).collect() };
+    let clients = 12;
+    let mut expected = Vec::with_capacity(clients);
+    for i in 0..clients {
+        reference.refit(&response(i)).unwrap();
+        expected.push(reference.export_json());
+    }
+
+    for budget in [1usize, 4] {
+        let handle = spawn_server(16, budget, 256 << 20);
+        let addr = handle.addr();
+        let mut setup = Client::connect(&addr).unwrap();
+        let id = register_dense(&mut setup, &prob.a, &prob.b);
+        // All clients target the same design/model → the same session slot,
+        // so concurrent single-b refits contend and coalesce.
+        std::thread::scope(|scope| {
+            let expected = &expected;
+            let addr = &addr;
+            let id = &id;
+            let response = &response;
+            let workers: Vec<_> = (0..clients)
+                .map(|c| {
+                    scope.spawn(move || {
+                        let mut client = Client::connect(addr).expect("connect");
+                        let body = refit_body(id, 0.5, &response(c));
+                        let (status, got) =
+                            client.request("POST", "/v1/refit", &body).expect("refit");
+                        assert_eq!(status, 200, "budget {budget}: {got}");
+                        assert_eq!(
+                            got, expected[c],
+                            "budget {budget}: coalesced refit {c} diverges from sequential"
+                        );
+                    })
+                })
+                .collect();
+            for w in workers {
+                w.join().expect("client thread");
+            }
+        });
+
+        // Every single-b refit flowed through the coalescer; the stats
+        // surface must account for all of them, reject nothing, and expose
+        // the warm session's workspace through the typed snapshot.
+        let (status, body) = setup.request("GET", "/v1/stats", "").expect("stats");
+        assert_eq!(status, 200, "{body}");
+        let stats = Json::parse(&body).expect("stats parse");
+        assert_eq!(stats.get("kind").and_then(Json::as_str), Some("ssnal_en.stats"));
+        let counter = |obj: &str, key: &str| {
+            stats.get(obj).and_then(|o| o.get(key)).and_then(Json::as_usize).expect(key)
+        };
+        assert_eq!(counter("queue", "rejected_full"), 0, "budget {budget}: {body}");
+        assert_eq!(counter("coalesce", "requests"), clients, "budget {budget}: {body}");
+        let batches = counter("coalesce", "batches");
+        assert!(batches >= 1 && batches <= clients, "budget {budget}: {body}");
+        let refit_count = stats
+            .get("endpoints")
+            .and_then(Json::as_arr)
+            .and_then(|eps| {
+                eps.iter()
+                    .find(|e| e.get("endpoint").and_then(Json::as_str) == Some("refit"))
+                    .and_then(|e| e.get("requests"))
+                    .and_then(Json::as_usize)
+            })
+            .expect("refit endpoint metrics");
+        assert_eq!(refit_count, clients, "budget {budget}: {body}");
+        let workspace = stats
+            .get("sessions")
+            .and_then(Json::as_arr)
+            .and_then(|sessions| {
+                sessions.iter().find_map(|s| s.get("workspace").and_then(StatsSnapshot::from_json))
+            })
+            .expect("warm session workspace snapshot");
+        assert!(workspace.events() > 0, "budget {budget}: {workspace:?}");
+        handle.stop();
+    }
 }
