@@ -9,10 +9,14 @@
 //! at workspace-cache cost, with results bitwise-identical to a cold fit.
 
 use crate::api::{Design, EnetError, EnetModel, StatsSnapshot};
-use crate::linalg::{DesignRef, NewtonWorkspace};
+use crate::linalg::{
+    design_fingerprint, DesignFingerprint, DesignRef, NewtonWorkspace, WorkspaceStats,
+};
 use crate::runtime::PjrtEngine;
-use crate::parallel::{ChainReport, ParallelPathResult};
-use crate::path::{PathPoint, PathResult};
+use crate::parallel::{
+    solve_path_parallel_warm, ChainReport, ParallelPathOptions, ParallelPathResult,
+};
+use crate::path::{PathPoint, PathResult, WarmState};
 use crate::solver::ssnal::SsnalTrace;
 use crate::solver::types::SolveResult;
 use crate::tuning::{CriteriaPoint, TuningResult};
@@ -221,10 +225,22 @@ pub(crate) fn solve_json(m: usize, n: usize, lam1: f64, lam2: f64, r: &SolveResu
     ])
 }
 
-/// A solved λ-path with the parallel engine's diagnostics.
+/// A solved λ-path with the parallel engine's diagnostics — and, like
+/// [`Fit`], a *warm session*: the per-chain Newton workspaces (buffer arenas
+/// + rank-1-editable Gram/Cholesky caches) that solved the path stay alive
+/// inside it. [`PathFit::refit_path`] re-solves the whole grid for a new
+/// response at workspace-cache cost, bitwise-identical to a cold
+/// [`EnetModel::fit_path`].
 #[derive(Clone, Debug)]
 pub struct PathFit {
     pub(crate) result: ParallelPathResult,
+    /// The validated engine options the path ran with (reused by refits).
+    pub(crate) popts: ParallelPathOptions,
+    /// One warm per-chain session per λ-chain, in deterministic chain order.
+    pub(crate) sessions: Vec<WarmState>,
+    /// Fingerprint of the design the sessions are bound to; a refit against a
+    /// different design drops the sessions instead of retargeting them.
+    pub(crate) design_fp: DesignFingerprint,
 }
 
 impl PathFit {
@@ -261,6 +277,41 @@ impl PathFit {
     /// Worker threads the engine ran with.
     pub fn threads(&self) -> usize {
         self.result.threads
+    }
+
+    /// Aggregate workspace cache/reuse counters across every chain session —
+    /// the path-scale analogue of [`Fit::workspace_stats`] (diagnostics only).
+    pub fn workspace_stats(&self) -> StatsSnapshot {
+        let mut total = WorkspaceStats::default();
+        for s in &self.sessions {
+            total.merge(&s.newton_ws.stats);
+        }
+        StatsSnapshot::from(&total)
+    }
+
+    /// Re-solve the full λ-grid on a (possibly new) design/response, reusing
+    /// the session's warm per-chain Newton workspaces — buffer arenas, cached
+    /// Grams, and rank-1-editable Cholesky factors survive across refits.
+    ///
+    /// Per-point numerics start cold (no iterate carry-over), so the result
+    /// is **bitwise-identical** to a fresh [`EnetModel::fit_path`] with the
+    /// same options at every `SSNAL_THREADS` budget; only the memory behavior
+    /// differs. A refit against a design with a different fingerprint drops
+    /// the warm sessions first (correct either way — the fingerprint check is
+    /// a fast path, not a correctness gate).
+    pub fn refit_path(&mut self, design: &Design<'_>) -> &PathResult {
+        let fp = design_fingerprint(design.design_ref());
+        if fp != self.design_fp {
+            self.sessions.clear();
+            self.design_fp = fp;
+        }
+        self.result = solve_path_parallel_warm(
+            design.design_ref(),
+            design.b(),
+            &self.popts,
+            &mut self.sessions,
+        );
+        &self.result.path
     }
 
     /// Consume into the raw engine result.

@@ -11,8 +11,10 @@
 use crate::api::fit::{Fit, PathFit, TuneFit};
 use crate::api::{Design, EnetError};
 use crate::coordinator::pjrt_solver;
-use crate::linalg::{DesignRef, NewtonWorkspace};
-use crate::parallel::{shard, solve_path_parallel, Chunking, ParallelPathOptions, DEFAULT_CHAINS};
+use crate::linalg::{design_fingerprint, DesignRef, NewtonWorkspace};
+use crate::parallel::{
+    shard, solve_path_parallel_warm, Chunking, ParallelPathOptions, DEFAULT_CHAINS,
+};
 use crate::path::{c_lambda_grid, PathOptions};
 use crate::runtime::PjrtEngine;
 use crate::solver::ssnal::{self, SsnalTrace};
@@ -326,6 +328,11 @@ impl EnetModel {
     /// honored stopping knob and each algorithm keeps its default iteration
     /// cap. An explicit [`EnetModel::max_iters`] is therefore rejected (not
     /// silently dropped); [`EnetModel::verbose`] applies to single fits only.
+    ///
+    /// Like [`EnetModel::fit`], the returned [`PathFit`] is a *warm session*:
+    /// the per-chain Newton workspaces that solved the path stay alive inside
+    /// it, and [`PathFit::refit_path`] re-solves a new response (or design) at
+    /// cache cost with bitwise-identical results.
     pub fn fit_path(&self, design: &Design<'_>) -> Result<PathFit, EnetError> {
         self.validate_common(design)?;
         self.check_path_algorithm()?;
@@ -335,7 +342,11 @@ impl EnetModel {
             chunking: self.chunking.clone(),
             screening: self.screening,
         };
-        Ok(PathFit { result: solve_path_parallel(design.design_ref(), design.b(), &popts) })
+        let mut sessions = Vec::new();
+        let result =
+            solve_path_parallel_warm(design.design_ref(), design.b(), &popts, &mut sessions);
+        let design_fp = design_fingerprint(design.design_ref());
+        Ok(PathFit { result, popts, sessions, design_fp })
     }
 
     /// Tuning sweep (paper §3.3): λ-path plus GCV / e-BIC (and k-fold CV when

@@ -26,6 +26,12 @@ pub struct StatsSnapshot {
     pub gram_rebuilds: usize,
     /// Cholesky refactors restarted at a pivot > 0.
     pub partial_refactors: usize,
+    /// Columns appended to a cached factor via structural rank-1 update.
+    pub rank1_updates: usize,
+    /// Columns removed from a cached factor via structural rank-1 downdate.
+    pub rank1_downdates: usize,
+    /// Edited refactors that lost positive definiteness and fell back cold.
+    pub downdate_fallbacks: usize,
     /// Direct solves that reused the cached m×m factor.
     pub direct_hits: usize,
     /// Direct solves that rebuilt V and refactored.
@@ -73,6 +79,9 @@ impl StatsSnapshot {
             ("gram_incremental", Json::Num(self.gram_incremental as f64)),
             ("gram_rebuilds", Json::Num(self.gram_rebuilds as f64)),
             ("partial_refactors", Json::Num(self.partial_refactors as f64)),
+            ("rank1_updates", Json::Num(self.rank1_updates as f64)),
+            ("rank1_downdates", Json::Num(self.rank1_downdates as f64)),
+            ("downdate_fallbacks", Json::Num(self.downdate_fallbacks as f64)),
             ("direct_hits", Json::Num(self.direct_hits as f64)),
             ("direct_rebuilds", Json::Num(self.direct_rebuilds as f64)),
             ("cg_fallbacks", Json::Num(self.cg_fallbacks as f64)),
@@ -94,6 +103,9 @@ impl StatsSnapshot {
             gram_incremental: field("gram_incremental")?,
             gram_rebuilds: field("gram_rebuilds")?,
             partial_refactors: field("partial_refactors")?,
+            rank1_updates: field("rank1_updates")?,
+            rank1_downdates: field("rank1_downdates")?,
+            downdate_fallbacks: field("downdate_fallbacks")?,
             direct_hits: field("direct_hits")?,
             direct_rebuilds: field("direct_rebuilds")?,
             cg_fallbacks: field("cg_fallbacks")?,
@@ -109,6 +121,9 @@ impl From<&WorkspaceStats> for StatsSnapshot {
             gram_incremental: ws.gram_incremental,
             gram_rebuilds: ws.gram_rebuilds,
             partial_refactors: ws.partial_refactors,
+            rank1_updates: ws.rank1_updates,
+            rank1_downdates: ws.rank1_downdates,
+            downdate_fallbacks: ws.downdate_fallbacks,
             direct_hits: ws.direct_hits,
             direct_rebuilds: ws.direct_rebuilds,
             cg_fallbacks: ws.cg_fallbacks,
@@ -127,6 +142,9 @@ mod tests {
             gram_incremental: 1,
             gram_rebuilds: 3,
             partial_refactors: 1,
+            rank1_updates: 2,
+            rank1_downdates: 1,
+            downdate_fallbacks: 0,
             direct_hits: 0,
             direct_rebuilds: 0,
             cg_fallbacks: 0,
@@ -157,11 +175,15 @@ mod tests {
         let ws = crate::linalg::WorkspaceStats {
             factor_hits: 4,
             gram_rebuilds: 1,
+            rank1_updates: 3,
+            downdate_fallbacks: 1,
             ..Default::default()
         };
         let s = StatsSnapshot::from(&ws);
         assert_eq!(s.factor_hits, 4);
         assert_eq!(s.gram_rebuilds, 1);
+        assert_eq!(s.rank1_updates, 3);
+        assert_eq!(s.downdate_fallbacks, 1);
         assert_eq!(s.events(), 5);
     }
 }

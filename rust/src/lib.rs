@@ -108,13 +108,16 @@
 //! --check`, `cargo clippy -- -D warnings` and `cargo doc --no-deps` under
 //! `RUSTDOCFLAGS="-D warnings"` (broken intra-doc links in the API surface
 //! fail the build), plus a bench-smoke job that runs the parallel-path,
-//! shard-linalg, sparse-design, pool-dispatch, Newton-workspace and serve
-//! benchmarks on tiny synthetic problems and uploads the resulting six
-//! `BENCH_*.json` tables (the Newton section also gates warm-vs-cold
-//! workspace cost and steady-state allocations; the sparse section gates
-//! CSC sweeps beating their dense twins; the serve section gates warm
-//! refits beating cold fits through HTTP, zero queue rejections at 2×
-//! offered load, and the refit-coalesce ratio exceeding 1), and a
+//! shard-linalg, sparse-design, pool-dispatch, Newton-workspace, warm-path
+//! and serve benchmarks on tiny synthetic problems and uploads the
+//! resulting seven `BENCH_*.json` tables (the Newton section also gates
+//! warm-vs-cold workspace cost and steady-state allocations; the sparse
+//! section gates CSC sweeps beating their dense twins; the warm-path
+//! section gates the rank-1 Cholesky edit tier beating both the
+//! pivot-refactor and cold tiers with zero downdate fallbacks and zero
+//! steady-state allocations; the serve section gates warm refits beating
+//! cold fits through HTTP, zero queue rejections at 2× offered load, and
+//! the refit-coalesce ratio exceeding 1), and a
 //! bench-regression job that diffs them
 //! against the committed baselines in `rust/benches/baselines/` via
 //! `ssnal-en bench-check` ([`bench::check`]: structural drift and determinism

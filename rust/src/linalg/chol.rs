@@ -99,6 +99,22 @@ impl Cholesky {
                 l.set(i, j, s * inv);
             }
         }
+        self.rebuild_tail(src, ridge, start)
+    }
+
+    /// Rebuild pivots `start..` from `src + ridge·I`, assuming columns
+    /// `< start` of the factor (all rows) are already current. This is the
+    /// trailing half of the full factorization, shared verbatim by
+    /// [`Cholesky::refactor`] and [`Cholesky::refactor_edited`] so every
+    /// rebuilt entry uses the cold factorization's exact expression.
+    fn rebuild_tail(
+        &mut self,
+        src: &Mat,
+        ridge: f64,
+        start: usize,
+    ) -> Result<(), NotPositiveDefinite> {
+        let n = src.rows();
+        let l = &mut self.l;
         // refresh the rebuilt columns: lower triangle from src, upper zeroed
         for j in start..n {
             for i in 0..j {
@@ -130,6 +146,74 @@ impl Cholesky {
             }
         }
         Ok(())
+    }
+
+    /// Structural rank-k up/down-date: refactor `src + ridge·I` **reusing the
+    /// current factor across a row/column edit script** — columns removed
+    /// and/or inserted at sorted positions, the shape of an active-set change
+    /// in the Woodbury cache. `old_map[i]` names the old index of new
+    /// row/column `i` (`usize::MAX` = inserted), strictly increasing over
+    /// mapped entries and the identity below `start` (the first edited
+    /// position).
+    ///
+    /// Caller contract: the current factor is a valid Cholesky factor of an
+    /// old matrix such that `src[i, j] == old[old_map[i], old_map[j]]`
+    /// bit-for-bit for every pair of mapped indices with `j < start` (kept
+    /// entries are shifted values, not recomputed ones — the Gram cache
+    /// guarantees this because entries are keyed by column identity), with
+    /// the same `ridge`.
+    ///
+    /// Why this reproduces a cold factorization bit for bit: the leading
+    /// `start×start` block of `src` is untouched, so its factor block is
+    /// byte-identical. For a surviving row `i ≥ start`, the cold expression
+    /// for `L[i, k]`, `k < start`, is forward substitution through the
+    /// unchanged leading factor on unchanged inputs — exactly the bits the
+    /// old factor already stores at `(old_map[i], k)`, so a shift suffices.
+    /// Inserted rows get that same forward substitution computed fresh (the
+    /// cold expression on cold inputs), and pivots `start..` rebuild through
+    /// `Cholesky::rebuild_tail` — the cold trailing loop. Every entry is
+    /// therefore either a bitwise-preserved cold value or a freshly computed
+    /// one; none is approximated, which is what keeps the repo's
+    /// warm-equals-cold contract intact (a classical hyperbolic-rotation
+    /// downdate would not).
+    ///
+    /// A pure suffix truncation (`start == src.rows()`) costs a shift and no
+    /// arithmetic. On error the factor is left invalid, exactly like
+    /// [`Cholesky::refactor`]; a retry must restart from scratch.
+    pub fn refactor_edited(
+        &mut self,
+        src: &Mat,
+        ridge: f64,
+        start: usize,
+        old_map: &[usize],
+    ) -> Result<(), NotPositiveDefinite> {
+        assert_eq!(src.rows(), src.cols(), "cholesky requires square input");
+        let n = src.rows();
+        assert_eq!(old_map.len(), n, "old_map must have one entry per new index");
+        let start = start.min(n);
+        debug_assert!(
+            old_map.iter().take(start).enumerate().all(|(i, &m)| m == i),
+            "old_map must be the identity below start"
+        );
+        self.l.remap_square(n, old_map);
+        // Forward-substitute the inserted rows' leading entries:
+        // L[i,k] = (src[i,k] − Σ_{t<k} L[i,t]·L[k,t]) / L[k,k] — the exact
+        // expression the full factorization uses for these entries. Survivor
+        // rows were shifted bitwise by the remap and need no arithmetic.
+        for i in start..n {
+            if old_map[i] != usize::MAX {
+                continue;
+            }
+            for k in 0..start {
+                let mut s = src.get(i, k);
+                for t in 0..k {
+                    s -= self.l.get(i, t) * self.l.get(k, t);
+                }
+                let v = s * (1.0 / self.l.get(k, k));
+                self.l.set(i, k, v);
+            }
+        }
+        self.rebuild_tail(src, ridge, start)
     }
 
     /// Dimension of the factored matrix.
@@ -283,5 +367,87 @@ mod tests {
         let ch = Cholesky::factor(&Mat::eye(4)).unwrap();
         assert!(ch.log_det().abs() < 1e-14);
         assert_eq!(ch.solve(&[1.0, 2.0, 3.0, 4.0]), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    /// Build the edited matrix a Gram cache would produce: kept entries are
+    /// *shifted* from the old matrix (bitwise), inserted rows/columns filled
+    /// from a donor SPD matrix large enough to stay positive definite.
+    fn edited_matrix(old: &Mat, donor: &Mat, old_map: &[usize]) -> Mat {
+        let n = old_map.len();
+        Mat::from_fn(n, n, |i, j| match (old_map[i], old_map[j]) {
+            (usize::MAX, _) | (_, usize::MAX) => donor.get(i, j),
+            (oi, oj) => old.get(oi, oj),
+        })
+    }
+
+    #[test]
+    fn refactor_edited_matches_cold_bitwise() {
+        const INS: usize = usize::MAX;
+        let n = 12;
+        let old = spd_random(n, 21);
+        // edit scripts: (old_map, first edited position)
+        let cases: Vec<(Vec<usize>, usize)> = vec![
+            (vec![0, 1, 2, 3, 4, 5, 6, 7], 8),                   // pure suffix truncation
+            ((0..n).collect(), n),                               // no-op edit
+            (vec![0, 1, 2, 4, 5, 6, 7, 8, 9, 10, 11], 3),        // interior removal
+            (vec![0, 1, 2, 3, INS, 4, 5, 6, 7, 8, 9, 10, 11], 4), // interior insertion
+            (vec![0, 1, INS, 3, 5, INS, 7, 8, 11], 2),           // mixed, multi-edit
+            (vec![INS, 1, 2, 3], 0),                             // edit at the front
+        ];
+        for (map, start) in cases {
+            // a donor with a heavy diagonal keeps every edited matrix SPD
+            let donor = spd_random(map.len(), 77 + map.len() as u64);
+            let edited = edited_matrix(&old, &donor, &map);
+            let cold = Cholesky::factor(&edited).unwrap();
+            let mut warm = Cholesky::factor(&old).unwrap();
+            warm.refactor_edited(&edited, 0.0, start, &map).unwrap();
+            assert_eq!(warm.l().as_slice(), cold.l().as_slice(), "map {map:?}");
+        }
+    }
+
+    #[test]
+    fn refactor_edited_applies_ridge_like_cold() {
+        let n = 9;
+        let old = spd_random(n, 31);
+        let mut warm = Cholesky::empty();
+        warm.refactor(&old, 1.5, 0).unwrap();
+        let map: Vec<usize> = vec![0, 1, 2, 3, 5, 6, 8]; // drop rows 4 and 7
+        let edited = edited_matrix(&old, &old, &map);
+        warm.refactor_edited(&edited, 1.5, 4, &map).unwrap();
+        let mut cold = Cholesky::empty();
+        cold.refactor(&edited, 1.5, 0).unwrap();
+        assert_eq!(warm.l().as_slice(), cold.l().as_slice());
+    }
+
+    #[test]
+    fn refactor_edited_reports_lost_positive_definiteness() {
+        // A negative ridge the old set survives, but a near-duplicate
+        // inserted column drives an eigenvalue below |ridge|: the edited
+        // refactor must fail at a trailing pivot exactly like a cold
+        // factorization would — never return an approximate factor.
+        let n = 6;
+        let old = spd_random(n, 41);
+        let ridge = -0.5;
+        let mut warm = Cholesky::empty();
+        warm.refactor(&old, ridge, 0).unwrap();
+        // insert a copy of row/column 2 right after it (the Gram of a
+        // duplicated column): the edited matrix is singular, so adding the
+        // negative ridge cannot stay positive definite
+        let map: Vec<usize> = vec![0, 1, 2, usize::MAX, 3, 4, 5];
+        let mut edited = edited_matrix(&old, &old, &map);
+        for k in 0..edited.rows() {
+            let v = if k == 3 { edited.get(2, 2) } else { edited.get(k, 2) };
+            edited.set(k, 3, v);
+            edited.set(3, k, v);
+        }
+        let err = warm.refactor_edited(&edited, ridge, 3, &map).unwrap_err();
+        // cold with the same ridge fails at the same pivot
+        let mut cold = Cholesky::empty();
+        let cold_err = cold.refactor(&edited, ridge, 0).unwrap_err();
+        assert_eq!(err.pivot, cold_err.pivot);
+        // and the factor recovers on a sane retry from scratch
+        warm.refactor(&old, 0.0, 0).unwrap();
+        let fresh = Cholesky::factor(&old).unwrap();
+        assert_eq!(warm.l().as_slice(), fresh.l().as_slice());
     }
 }

@@ -187,6 +187,78 @@ impl Mat {
         g
     }
 
+    /// In-place structural remap of a **square** matrix: resize to
+    /// `new_n × new_n`, where new entry `(i, j)` takes the old entry
+    /// `(old_map[i], old_map[j])` and rows/columns with `old_map[k] ==
+    /// usize::MAX` are *inserted* (zero-filled). `old_map` must be strictly
+    /// increasing over its mapped entries — the shape of an active-set edit
+    /// (columns removed and inserted at sorted positions), which is what the
+    /// Woodbury Gram cache uses this for. Kept entries move bit-for-bit;
+    /// no arithmetic is performed.
+    ///
+    /// Runs in place over the existing storage in two passes (compact the
+    /// survivors forward, then expand with holes backward), so the only
+    /// possible allocation is growing the backing buffer beyond its retained
+    /// capacity.
+    pub(crate) fn remap_square(&mut self, new_n: usize, old_map: &[usize]) {
+        assert_eq!(self.rows, self.cols, "remap_square requires a square matrix");
+        assert_eq!(old_map.len(), new_n, "old_map must have one entry per new index");
+        let n_old = self.rows;
+        let s = old_map.iter().filter(|&&m| m != usize::MAX).count();
+        debug_assert!(s <= n_old, "more survivors than old rows");
+        debug_assert!(
+            old_map
+                .iter()
+                .filter(|&&m| m != usize::MAX)
+                .zip(old_map.iter().filter(|&&m| m != usize::MAX).skip(1))
+                .all(|(a, b)| a < b),
+            "old_map must be strictly increasing over mapped entries"
+        );
+        // Pass 1 — compact the surviving rows/columns into a leading s×s
+        // block (stride s), ascending destination order. The t-th mapped
+        // entry has old index ≥ t and n_old ≥ s, so every source index is
+        // ≥ its destination: forward copies never read an overwritten slot.
+        {
+            let data = &mut self.data;
+            let mut tj = 0usize;
+            for &oj in old_map.iter().filter(|&&m| m != usize::MAX) {
+                let mut ti = 0usize;
+                for &oi in old_map.iter().filter(|&&m| m != usize::MAX) {
+                    debug_assert!(oi < n_old && oj < n_old, "old_map index out of range");
+                    data[tj * s + ti] = data[oj * n_old + oi];
+                    ti += 1;
+                }
+                tj += 1;
+            }
+        }
+        self.data.resize(new_n * new_n, 0.0);
+        // Pass 2 — expand from stride s to stride new_n, descending
+        // destination order, zero-filling inserted rows/columns. Survivor
+        // ranks satisfy t ≤ its new index and s ≤ new_n, so every source
+        // index is ≤ its destination: backward copies are safe.
+        {
+            let data = &mut self.data;
+            let mut tj = s;
+            for j in (0..new_n).rev() {
+                let oj_mapped = old_map[j] != usize::MAX;
+                if oj_mapped {
+                    tj -= 1;
+                }
+                let mut ti = s;
+                for i in (0..new_n).rev() {
+                    let oi_mapped = old_map[i] != usize::MAX;
+                    if oi_mapped {
+                        ti -= 1;
+                    }
+                    data[j * new_n + i] =
+                        if oj_mapped && oi_mapped { data[tj * s + ti] } else { 0.0 };
+                }
+            }
+        }
+        self.rows = new_n;
+        self.cols = new_n;
+    }
+
     /// Frobenius norm.
     pub fn fro_norm(&self) -> f64 {
         blas::nrm2(&self.data)
@@ -297,5 +369,56 @@ mod tests {
         let a = small();
         let i3 = Mat::eye(3);
         assert_eq!(a.matmul(&i3), a);
+    }
+
+    /// Reference for `remap_square`: rebuild from scratch with the same map.
+    fn remap_reference(src: &Mat, new_n: usize, old_map: &[usize]) -> Mat {
+        Mat::from_fn(new_n, new_n, |i, j| {
+            if old_map[i] == usize::MAX || old_map[j] == usize::MAX {
+                0.0
+            } else {
+                src.get(old_map[i], old_map[j])
+            }
+        })
+    }
+
+    #[test]
+    fn remap_square_matches_reference() {
+        const INS: usize = usize::MAX;
+        let base = Mat::from_fn(6, 6, |i, j| (i * 17 + j * 3 + 1) as f64 * 0.25);
+        let cases: Vec<Vec<usize>> = vec![
+            vec![0, 1, 2, 3, 4, 5],      // identity
+            vec![0, 1, 2, 3],            // pure suffix truncation
+            vec![0, 2, 3, 5],            // interior removals (shrink)
+            vec![0, 1, INS, 2, 3, 4, 5], // interior insertion (grow)
+            vec![INS, 0, 2, INS, 4, 5],  // mixed insert + remove, same size
+            vec![1, INS, 3, INS, 5, INS, INS], // grow past the old size
+            vec![INS, INS],              // everything replaced
+            vec![],                      // collapse to empty
+        ];
+        for map in cases {
+            let mut got = base.clone();
+            got.remap_square(map.len(), &map);
+            let want = remap_reference(&base, map.len(), &map);
+            assert_eq!(got.rows(), want.rows());
+            assert_eq!(got.cols(), want.cols());
+            assert_eq!(got.as_slice(), want.as_slice(), "map {map:?}");
+        }
+    }
+
+    #[test]
+    fn remap_square_chains_without_reallocating_on_shrink() {
+        let mut m = Mat::from_fn(8, 8, |i, j| (i + 10 * j) as f64);
+        let snapshot = m.clone();
+        let cap = {
+            m.remap_square(5, &[0, 2, 3, 6, 7]);
+            m.data.capacity()
+        };
+        // growing back within retained capacity must not reallocate
+        m.remap_square(7, &[usize::MAX, 0, 1, 2, usize::MAX, 3, 4]);
+        assert_eq!(m.data.capacity(), cap);
+        let step1 = remap_reference(&snapshot, 5, &[0, 2, 3, 6, 7]);
+        let want = remap_reference(&step1, 7, &[usize::MAX, 0, 1, 2, usize::MAX, 3, 4]);
+        assert_eq!(m.as_slice(), want.as_slice());
     }
 }

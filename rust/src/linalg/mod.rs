@@ -26,4 +26,6 @@ pub use chol::{Cholesky, NotPositiveDefinite};
 pub use design::{DesignRef, DesignStorage};
 pub use matrix::Mat;
 pub use sparse::CscMat;
-pub use workspace::{NewtonWorkspace, ShardScratch, WorkspaceStats};
+pub use workspace::{
+    design_fingerprint, DesignFingerprint, NewtonWorkspace, ShardScratch, WorkspaceStats,
+};

@@ -43,7 +43,20 @@
 //!   Woodbury cache reuses the *raw* Gram `A_JᵀA_J` (stored without the
 //!   κ-dependent ridge: zero new column dots) and refactors with the new
 //!   ridge.
-//! * **J changed by a few tail columns** (relative to the cached set) — the
+//! * **J changed by ≤ [`RANK1_MAX_EDITS`] single columns** (insertions and/or
+//!   removals at arbitrary sorted positions — the shape of an active-set
+//!   step) — the structural rank-1 up/down-date tier: a sorted edit script
+//!   maps surviving rows/columns to their new positions, the Gram is
+//!   remapped **in place** (kept entries are keyed by column identity, so
+//!   they shift bit-for-bit; only inserted rows/columns pay fresh dots), and
+//!   the factor is edited through [`Cholesky::refactor_edited`] — shifted
+//!   survivor entries plus cold-expression fills, never an approximate
+//!   hyperbolic-rotation downdate, so the edited factor reproduces a cold
+//!   factorization's bits. A downdate that loses positive definiteness
+//!   (impossible for the solver's positive ridges; reachable with
+//!   pathological κ) is counted in `downdate_fallbacks` and retried as a
+//!   cold full refactor, which fails only where cold would.
+//! * **J changed by a longer tail** (relative to the cached set) — the
 //!   Woodbury Gram updates incrementally: the leading common-prefix block is
 //!   kept bit-for-bit, only rows/columns from the first changed pivot are
 //!   recomputed, and the Cholesky refactors from that pivot
@@ -56,7 +69,19 @@
 //!   into the same buffers.
 //!
 //! The direct strategy's `V` has no exploitable prefix structure (every
-//! `a_j a_jᵀ` is dense in the m×m matrix), so its cache is hit-or-rebuild.
+//! `a_j a_jᵀ` is dense in the m×m matrix), so its cache is
+//! hit-or-append-or-rebuild: a set growing by a suffix of ≤
+//! [`RANK1_MAX_EDITS`] columns folds just the appended rank-1 terms into the
+//! cached raw accumulation (serial single-column folds — each lands exactly
+//! where the cold accumulation order puts it) and refactors; anything else
+//! rebuilds.
+//!
+//! Screened λ-chains move a workspace *between* designs:
+//! [`NewtonWorkspace::retarget_columns`] translates the cached state onto a
+//! gathered survivor sub-design (gathered columns are bitwise copies, so
+//! Gram entries keyed by column identity stay valid) instead of resetting —
+//! dropped columns become a structural downdate, and when every cached
+//! column survives the factorization itself is carried over untouched.
 //!
 //! Every cached quantity was produced by exactly the computation the cold
 //! path runs (same kernels, same operand order), so **cache hits return the
@@ -85,6 +110,11 @@ use std::cell::RefCell;
 /// `woodbury_factor`).
 const INCREMENTAL_MAX_COLS: usize = 8;
 
+/// Largest edit-script size (insertions + removals, counted per column) the
+/// structural rank-1 up/down-date tier handles; larger perturbations fall
+/// through to the prefix-incremental / full-rebuild tiers.
+pub const RANK1_MAX_EDITS: usize = 8;
+
 /// Cache/reuse counters (diagnostics for tests and `bench-parallel
 /// --newton-*`; never consulted by the numerics).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -99,6 +129,15 @@ pub struct WorkspaceStats {
     pub gram_rebuilds: usize,
     /// Cholesky refactors restarted at a pivot > 0.
     pub partial_refactors: usize,
+    /// Columns folded into a cached quantity by a structural rank-1 update
+    /// (Woodbury edit-script insertions; direct-strategy suffix appends).
+    pub rank1_updates: usize,
+    /// Columns removed from a cached Gram/factor by a structural downdate
+    /// (Woodbury edit-script removals, including screened-chain retargets).
+    pub rank1_downdates: usize,
+    /// Structural factor edits that lost positive definiteness and fell back
+    /// to a cold full refactor (bits identical to cold either way).
+    pub downdate_fallbacks: usize,
     /// Direct solves that reused the cached m×m factor.
     pub direct_hits: usize,
     /// Direct solves that rebuilt V and refactored.
@@ -107,15 +146,36 @@ pub struct WorkspaceStats {
     pub cg_fallbacks: usize,
 }
 
+impl WorkspaceStats {
+    /// Fold another workspace's counters into `self` — used to aggregate the
+    /// per-chain warm sessions of a path solve into one snapshot.
+    pub fn merge(&mut self, other: &WorkspaceStats) {
+        self.factor_hits += other.factor_hits;
+        self.gram_hits += other.gram_hits;
+        self.gram_incremental += other.gram_incremental;
+        self.gram_rebuilds += other.gram_rebuilds;
+        self.partial_refactors += other.partial_refactors;
+        self.rank1_updates += other.rank1_updates;
+        self.rank1_downdates += other.rank1_downdates;
+        self.downdate_fallbacks += other.downdate_fallbacks;
+        self.direct_hits += other.direct_hits;
+        self.direct_rebuilds += other.direct_rebuilds;
+        self.cg_fallbacks += other.cg_fallbacks;
+    }
+}
+
 /// Per-solve buffer arena + factorization cache (see the module docs).
 #[derive(Clone, Debug)]
 pub struct NewtonWorkspace {
-    // design fingerprint (pointer + shape + sampled-content bits of the
-    // bound A; see `rebind`)
-    a_ptr: usize,
-    a_rows: usize,
-    a_cols: usize,
-    a_sample: u64,
+    // fingerprint of the bound design (see `rebind` / `design_fingerprint`)
+    a_fp: DesignFingerprint,
+    /// Enables the structural rank-1 up/down-date tier (the bench harness
+    /// disables it to measure the pivot-refactor tier in isolation; the
+    /// numerics are bitwise-identical either way).
+    pub rank1_enabled: bool,
+    // edit-script scratch: old position per new row/column (usize::MAX =
+    // inserted); reused across calls so steady-state edits allocate nothing
+    edit_map: Vec<usize>,
     // Woodbury: raw Gram A_JᵀA_J (no ridge) + factor of (Gram + κ⁻¹I)
     gram_active: Vec<usize>,
     gram: Mat,
@@ -149,10 +209,9 @@ impl NewtonWorkspace {
     /// An empty workspace; buffers grow on first use and are then reused.
     pub fn new() -> Self {
         Self {
-            a_ptr: 0,
-            a_rows: 0,
-            a_cols: 0,
-            a_sample: 0,
+            a_fp: DesignFingerprint::default(),
+            rank1_enabled: true,
+            edit_map: Vec::new(),
             gram_active: Vec::new(),
             gram: Mat::zeros(0, 0),
             gram_valid: false,
@@ -180,45 +239,104 @@ impl NewtonWorkspace {
         self.direct_valid = false;
     }
 
-    /// Self-reset when handed a different design than the cached one. The
-    /// fingerprint is (data pointer, shape, sampled-entry bits): pointer +
-    /// shape alone would be defeated by ABA reuse — a same-shape matrix
-    /// rebuilt into the just-freed allocation — so a handful of entry bit
-    /// patterns are folded in, which distinguishes any realistically rebuilt
-    /// design. This remains probabilistic hardening, not a versioning
-    /// scheme: a workspace is still *contractually* bound to one design
-    /// (call [`NewtonWorkspace::reset`] when retargeting it by hand).
+    /// Self-reset when handed a different design than the cached one (see
+    /// [`design_fingerprint`]): pointer + shape alone would be defeated by
+    /// ABA reuse — a same-shape matrix rebuilt into the just-freed
+    /// allocation — so a handful of entry bit patterns are folded in, which
+    /// distinguishes any realistically rebuilt design. This remains
+    /// probabilistic hardening, not a versioning scheme: a workspace is
+    /// still *contractually* bound to one design (call
+    /// [`NewtonWorkspace::reset`] when retargeting it by hand, or
+    /// [`NewtonWorkspace::retarget_columns`] to carry warm state across a
+    /// column re-indexing).
     fn rebind(&mut self, a: DesignRef<'_>) {
-        let ptr = a.values_slice().as_ptr() as usize;
-        let sample = Self::sample_bits(a);
-        if ptr != self.a_ptr
-            || a.rows() != self.a_rows
-            || a.cols() != self.a_cols
-            || sample != self.a_sample
-        {
+        let fp = design_fingerprint(a);
+        if fp != self.a_fp {
             self.reset();
-            self.a_ptr = ptr;
-            self.a_rows = a.rows();
-            self.a_cols = a.cols();
-            self.a_sample = sample;
+            self.a_fp = fp;
         }
     }
 
-    /// Fold the bit patterns of 8 evenly spaced stored entries (FNV-style
-    /// mix) — column-major data for dense designs, the stored-nonzero slice
-    /// for CSC ones.
-    fn sample_bits(a: DesignRef<'_>) -> u64 {
-        let data = a.values_slice();
-        if data.is_empty() {
-            return 0;
+    /// Retarget this workspace onto a different design whose columns are a
+    /// bitwise-identical re-indexing of the current one's — the screened
+    /// λ-chain case, where consecutive points gather different survivor
+    /// subsets of one full design. `translate` maps a column index of the
+    /// currently bound design to its index in `new_a` (`None` = the column
+    /// is absent there) and must be strictly monotone over surviving
+    /// columns.
+    ///
+    /// Cached state survives because Gram entries are keyed by column
+    /// *identity* and gathered columns are bitwise copies: surviving active
+    /// columns keep their dots; when every cached column survives, the
+    /// factorization itself carries over untouched (its input bits are
+    /// unchanged), and dropped columns become a structural downdate (Gram
+    /// remap + [`Cholesky::refactor_edited`]). The direct cache survives
+    /// only when every cached column does (its m×m accumulation folds all
+    /// of them). The fingerprint is rewritten **without** a reset — this is
+    /// the one sanctioned way to move a warm workspace between designs, and
+    /// the caller vouches for the bitwise-copy contract (true for
+    /// `gather_cols` survivor subsets of one full design).
+    pub fn retarget_columns(
+        &mut self,
+        new_a: DesignRef<'_>,
+        mut translate: impl FnMut(usize) -> Option<usize>,
+    ) {
+        self.a_fp = design_fingerprint(new_a);
+        if self.gram_valid {
+            let r_old = self.gram_active.len();
+            self.edit_map.clear();
+            let mut kept = 0usize;
+            for i in 0..r_old {
+                if let Some(nj) = translate(self.gram_active[i]) {
+                    self.gram_active[kept] = nj;
+                    self.edit_map.push(i);
+                    kept += 1;
+                }
+            }
+            let dropped = r_old - kept;
+            if dropped > 0 {
+                self.gram_active.truncate(kept);
+                self.gram.remap_square(kept, &self.edit_map);
+                self.stats.rank1_downdates += dropped;
+                let had_factor = self.factor_valid && self.gram_chol.dim() == r_old;
+                self.factor_valid = false;
+                if had_factor {
+                    let start = self
+                        .edit_map
+                        .iter()
+                        .enumerate()
+                        .find(|&(t, &o)| o != t)
+                        .map(|(t, _)| t)
+                        .unwrap_or(kept);
+                    let ridge = 1.0 / self.gram_kappa;
+                    match self.gram_chol.refactor_edited(&self.gram, ridge, start, &self.edit_map)
+                    {
+                        Ok(()) => self.factor_valid = true,
+                        Err(_) => {
+                            self.stats.downdate_fallbacks += 1;
+                            if self.gram_chol.refactor(&self.gram, ridge, 0).is_ok() {
+                                self.factor_valid = true;
+                            }
+                        }
+                    }
+                }
+            }
+            debug_assert!(
+                self.gram_active.windows(2).all(|p| p[0] < p[1]),
+                "retarget translation must stay strictly ascending"
+            );
         }
-        let mut h = 0xcbf2_9ce4_8422_2325u64;
-        for k in 0..8usize {
-            let idx = k * (data.len() - 1) / 7;
-            h ^= data[idx].to_bits();
-            h = h.wrapping_mul(0x1000_0000_01b3);
+        if self.direct_valid {
+            for v in self.direct_active.iter_mut() {
+                match translate(*v) {
+                    Some(nj) => *v = nj,
+                    None => {
+                        self.direct_valid = false;
+                        break;
+                    }
+                }
+            }
         }
-        h
     }
 
     /// Ensure the cached Cholesky of `κ⁻¹I_r + A_JᵀA_J` is current for
@@ -240,6 +358,19 @@ impl NewtonWorkspace {
         if same_set && self.factor_valid && same_kappa {
             self.stats.factor_hits += 1;
             return Ok(());
+        }
+
+        // Structural rank-k edit (≤ RANK1_MAX_EDITS single-column
+        // insertions/removals at sorted positions): remap the Gram in place —
+        // kept entries are keyed by column identity, so they shift bitwise —
+        // pay column dots only for inserted rows/columns, and up/down-date
+        // the factor through `Cholesky::refactor_edited`.
+        if !same_set && self.gram_valid && self.rank1_enabled {
+            let script =
+                sorted_edit_script(&self.gram_active, active, RANK1_MAX_EDITS, &mut self.edit_map);
+            if let Some(ed) = script {
+                return self.woodbury_factor_edited(a, active, kappa, same_kappa, ed);
+            }
         }
 
         // Bring the raw Gram up to date; `fresh_from` is the first row/column
@@ -295,6 +426,76 @@ impl NewtonWorkspace {
         Ok(())
     }
 
+    /// The structural-edit arm of [`NewtonWorkspace::woodbury_factor`]:
+    /// `self.edit_map` holds the old-position-per-new-row map produced by
+    /// [`sorted_edit_script`]. Counted as one incremental Gram event plus
+    /// per-column `rank1_updates`/`rank1_downdates`; an edited refactor that
+    /// loses positive definiteness is counted in `downdate_fallbacks` and
+    /// retried as a cold full refactor, which fails only where a cold
+    /// factorization of the same Gram would.
+    fn woodbury_factor_edited(
+        &mut self,
+        a: DesignRef<'_>,
+        active: &[usize],
+        kappa: f64,
+        same_kappa: bool,
+        ed: EditScript,
+    ) -> Result<(), NotPositiveDefinite> {
+        let r = active.len();
+        let ridge = 1.0 / kappa;
+        let r_old = self.gram_active.len();
+        self.gram.remap_square(r, &self.edit_map);
+        // Fill the inserted rows/columns — the only entries that pay dots.
+        // Same operand order as the cold build: entry (i, j) with i ≤ j is
+        // ⟨A[:, J[i]], A[:, J[j]]⟩.
+        for q in 0..r {
+            if self.edit_map[q] != usize::MAX {
+                continue;
+            }
+            for i in 0..r {
+                let v = if i <= q {
+                    a.cols_dot(active[i], active[q])
+                } else {
+                    a.cols_dot(active[q], active[i])
+                };
+                self.gram.set(i, q, v);
+                self.gram.set(q, i, v);
+            }
+        }
+        self.stats.gram_incremental += 1;
+        self.stats.rank1_updates += ed.inserts;
+        self.stats.rank1_downdates += ed.removes;
+        self.gram_active.clear();
+        self.gram_active.extend_from_slice(active);
+        self.gram_valid = true;
+
+        let can_edit_factor = self.factor_valid && same_kappa && self.gram_chol.dim() == r_old;
+        self.factor_valid = false;
+        if can_edit_factor {
+            if ed.start > 0 && ed.start < r {
+                self.stats.partial_refactors += 1;
+            }
+            if self
+                .gram_chol
+                .refactor_edited(&self.gram, ridge, ed.start, &self.edit_map)
+                .is_err()
+            {
+                // The edit lost positive definiteness (unreachable for the
+                // solver's positive ridges — removing columns keeps a PD
+                // principal block PD — but reachable with pathological κ):
+                // retry cold; if that also fails, the Gram itself is bad and
+                // the caller degrades to CG.
+                self.stats.downdate_fallbacks += 1;
+                self.gram_chol.refactor(&self.gram, ridge, 0)?;
+            }
+        } else {
+            self.gram_chol.refactor(&self.gram, ridge, 0)?;
+        }
+        self.gram_kappa = kappa;
+        self.factor_valid = true;
+        Ok(())
+    }
+
     /// Recompute Gram rows/columns `p..` against the new active set, keeping
     /// the leading `p×p` block bit-for-bit (its column indices are unchanged).
     fn gram_update_tail(&mut self, a: DesignRef<'_>, active: &[usize], p: usize) {
@@ -328,10 +529,22 @@ impl NewtonWorkspace {
     }
 
     /// Ensure the cached Cholesky of `V = I + κ A_J A_Jᵀ` is current for
-    /// `(active, kappa)` — hit-or-rebuild (no incremental form exists: each
-    /// `a_j a_jᵀ` is dense in V). The m×m build buffer is zeroed and refilled
-    /// on a miss; on error the factor is invalid and the caller should fall
-    /// back to CG.
+    /// `(active, kappa)` — hit, suffix-append rank-1 update, or rebuild.
+    ///
+    /// The m×m build buffer caches the **raw** κ-scaled accumulation (no
+    /// `+I`; the unit ridge is applied by `refactor` as it consumes the
+    /// diagonal — one single add per entry either way, so the two forms are
+    /// bitwise-identical). A set that *grows by a suffix* of ≤
+    /// [`RANK1_MAX_EDITS`] columns is therefore a true rank-1 update: each
+    /// appended column folds into the cached accumulation as a serial
+    /// single-column pass — exactly where the cold accumulation order puts
+    /// its terms, so the appended buffer carries a cold build's bits (the
+    /// multi-shard kernel is not used here: it requires a zeroed triangle,
+    /// and a multi-column batch would reassociate the per-entry sums). Any
+    /// other change rebuilds — `V` has no exploitable prefix structure
+    /// (every `a_j a_jᵀ` is dense in the m×m matrix), and removals would
+    /// need subtraction, which is not bitwise-reversible. On error the
+    /// factor is invalid and the caller should fall back to CG.
     pub fn direct_factor<'a>(
         &mut self,
         a: impl Into<DesignRef<'a>>,
@@ -349,24 +562,41 @@ impl NewtonWorkspace {
             self.stats.direct_hits += 1;
             return Ok(&self.direct_chol);
         }
+        let old_len = self.direct_active.len();
+        let appended = self.rank1_enabled
+            && self.direct_valid
+            && self.direct_kappa.to_bits() == kappa.to_bits()
+            && self.direct_v.rows() == m
+            && self.direct_v.cols() == m
+            && active.len() > old_len
+            && active.len() - old_len <= RANK1_MAX_EDITS
+            && active.starts_with(&self.direct_active);
         self.direct_valid = false;
-        if self.direct_v.rows() != m || self.direct_v.cols() != m {
-            self.direct_v = Mat::zeros(m, m);
+        if appended {
+            let v = &mut self.direct_v;
+            shard::with_threads(1, || {
+                for i in old_len..active.len() {
+                    shard::rank1_lower_accum(a, &active[i..=i], kappa, v);
+                }
+            });
+            self.stats.rank1_updates += active.len() - old_len;
         } else {
-            // zero-or-overwrite: rank1_lower_accum folds into the buffer, so
-            // the workspace discharges its zeroed-triangle precondition here.
-            self.direct_v.as_mut_slice().fill(0.0);
+            if self.direct_v.rows() != m || self.direct_v.cols() != m {
+                self.direct_v = Mat::zeros(m, m);
+            } else {
+                // zero-or-overwrite: rank1_lower_accum folds into the buffer,
+                // so the workspace discharges its zeroed-triangle
+                // precondition here.
+                self.direct_v.as_mut_slice().fill(0.0);
+            }
+            shard::rank1_lower_accum(a, active, kappa, &mut self.direct_v);
+            self.stats.direct_rebuilds += 1;
         }
-        shard::rank1_lower_accum(a, active, kappa, &mut self.direct_v);
-        for i in 0..m {
-            self.direct_v.set(i, i, self.direct_v.get(i, i) + 1.0);
-        }
-        self.direct_chol.refactor(&self.direct_v, 0.0, 0)?;
+        self.direct_chol.refactor(&self.direct_v, 1.0, 0)?;
         self.direct_active.clear();
         self.direct_active.extend_from_slice(active);
         self.direct_kappa = kappa;
         self.direct_valid = true;
-        self.stats.direct_rebuilds += 1;
         Ok(&self.direct_chol)
     }
 
@@ -381,6 +611,89 @@ impl NewtonWorkspace {
 /// Longest common prefix of two index lists.
 fn common_prefix(a: &[usize], b: &[usize]) -> usize {
     a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+/// A sorted single-column edit script between two ascending active sets
+/// (see [`sorted_edit_script`]).
+#[derive(Clone, Copy, Debug)]
+struct EditScript {
+    /// First new position whose mapping is not the identity (the new length
+    /// when the edit is a pure suffix truncation).
+    start: usize,
+    /// Columns entering the set (mapped to `usize::MAX`).
+    inserts: usize,
+    /// Columns leaving the set.
+    removes: usize,
+}
+
+/// Diff two ascending index lists into a row/column edit script: fills `map`
+/// with, per new position, the old position holding the same column index
+/// (`usize::MAX` for an inserted column) and counts the single-column edits.
+/// Returns `None` — leaving `map` unspecified — when more than `max_edits`
+/// edits would be needed.
+fn sorted_edit_script(
+    old: &[usize],
+    new: &[usize],
+    max_edits: usize,
+    map: &mut Vec<usize>,
+) -> Option<EditScript> {
+    map.clear();
+    let mut oi = 0usize;
+    let mut inserts = 0usize;
+    for &col in new {
+        while oi < old.len() && old[oi] < col {
+            oi += 1; // `old[oi]` left the set
+        }
+        if oi < old.len() && old[oi] == col {
+            map.push(oi);
+            oi += 1;
+        } else {
+            map.push(usize::MAX);
+            inserts += 1;
+        }
+    }
+    let survivors = new.len() - inserts;
+    let removes = old.len() - survivors;
+    if inserts + removes > max_edits {
+        return None;
+    }
+    let start = map
+        .iter()
+        .enumerate()
+        .find(|&(i, &m)| m != i)
+        .map(|(i, _)| i)
+        .unwrap_or(new.len());
+    Some(EditScript { start, inserts, removes })
+}
+
+/// Cheap identity fingerprint of a design: data pointer + shape + the bit
+/// patterns of 8 evenly spaced stored entries (FNV-style fold — column-major
+/// data for dense designs, the stored-nonzero slice for CSC ones). This is
+/// the probabilistic identity [`NewtonWorkspace`] binds its caches to;
+/// path-level warm sessions use it to detect "not the design you warmed on".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DesignFingerprint {
+    ptr: usize,
+    rows: usize,
+    cols: usize,
+    sample: u64,
+}
+
+/// Fingerprint a design (see [`DesignFingerprint`]).
+pub fn design_fingerprint(a: DesignRef<'_>) -> DesignFingerprint {
+    let data = a.values_slice();
+    let sample = if data.is_empty() {
+        0
+    } else {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for k in 0..8usize {
+            let idx = k * (data.len() - 1) / 7;
+            h ^= data[idx].to_bits();
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h
+    };
+    DesignFingerprint { ptr: data.as_ptr() as usize, rows: a.rows(), cols: a.cols(), sample }
 }
 
 // ---------------------------------------------------------------------------
@@ -541,6 +854,119 @@ mod tests {
         assert_eq!(ws.stats.gram_incremental, 3, "{:?}", ws.stats);
         let cold = cold_woodbury_factor(&a, &shrunk, 0.9);
         assert_eq!(ws.gram_chol.l().as_slice(), cold.l().as_slice());
+    }
+
+    #[test]
+    fn structural_edit_is_rank1_and_bitwise_cold() {
+        let a = random_case(40, 120, 11);
+        let base: Vec<usize> = (0..30).map(|k| 3 * k).collect();
+        let mut ws = NewtonWorkspace::new();
+        ws.woodbury_factor(&a, &base, 0.9).unwrap();
+
+        // interior edit: drop column 9 (position 3), insert column 50
+        let mut edited = base.clone();
+        edited.remove(3);
+        let pos = edited.binary_search(&50).unwrap_err();
+        edited.insert(pos, 50);
+        ws.woodbury_factor(&a, &edited, 0.9).unwrap();
+        assert_eq!(ws.stats.rank1_updates, 1, "{:?}", ws.stats);
+        assert_eq!(ws.stats.rank1_downdates, 1, "{:?}", ws.stats);
+        assert_eq!(ws.stats.gram_rebuilds, 1, "the edit must not rebuild: {:?}", ws.stats);
+        assert_eq!(ws.stats.downdate_fallbacks, 0, "{:?}", ws.stats);
+        let cold = cold_woodbury_factor(&a, &edited, 0.9);
+        assert_eq!(ws.gram_chol.l().as_slice(), cold.l().as_slice());
+
+        // with the tier disabled, the same step takes the prefix path and
+        // still matches cold (the tiers differ in cost only, never in bits)
+        let mut ws2 = NewtonWorkspace::new();
+        ws2.rank1_enabled = false;
+        ws2.woodbury_factor(&a, &base, 0.9).unwrap();
+        ws2.woodbury_factor(&a, &edited, 0.9).unwrap();
+        assert_eq!(ws2.stats.rank1_updates, 0, "{:?}", ws2.stats);
+        assert_eq!(ws2.gram_chol.l().as_slice(), cold.l().as_slice());
+    }
+
+    #[test]
+    fn retarget_keeps_factor_when_all_columns_survive() {
+        let a = random_case(30, 80, 12);
+        let survivors: Vec<usize> = (0..80).filter(|j| j % 2 == 0).collect();
+        let sub = a.gather_cols(&survivors);
+        let active: Vec<usize> = vec![4, 10, 16, 22, 40];
+        let mut ws = NewtonWorkspace::new();
+        ws.woodbury_factor(&a, &active, 0.7).unwrap();
+        ws.retarget_columns((&sub).into(), |j| survivors.binary_search(&j).ok());
+        let sub_active: Vec<usize> =
+            active.iter().map(|j| survivors.binary_search(j).unwrap()).collect();
+        ws.woodbury_factor(&sub, &sub_active, 0.7).unwrap();
+        assert_eq!(ws.stats.factor_hits, 1, "retarget must carry the factor: {:?}", ws.stats);
+        assert_eq!(ws.stats.rank1_downdates, 0, "{:?}", ws.stats);
+        let cold = cold_woodbury_factor(&sub, &sub_active, 0.7);
+        let (warm, _) = ws.woodbury_parts();
+        assert_eq!(warm.l().as_slice(), cold.l().as_slice());
+    }
+
+    #[test]
+    fn retarget_downdates_dropped_columns_bitwise() {
+        let a = random_case(30, 80, 13);
+        let active: Vec<usize> = vec![4, 10, 16, 22, 40, 55];
+        let mut ws = NewtonWorkspace::new();
+        ws.woodbury_factor(&a, &active, 0.7).unwrap();
+        // the screened sub-design loses active columns 16 and 55
+        let survivors: Vec<usize> = (0..80).filter(|&j| j != 16 && j != 55).collect();
+        let sub = a.gather_cols(&survivors);
+        ws.retarget_columns((&sub).into(), |j| survivors.binary_search(&j).ok());
+        assert_eq!(ws.stats.rank1_downdates, 2, "{:?}", ws.stats);
+        let sub_active: Vec<usize> =
+            [4usize, 10, 22, 40].iter().map(|j| survivors.binary_search(j).unwrap()).collect();
+        ws.woodbury_factor(&sub, &sub_active, 0.7).unwrap();
+        assert_eq!(ws.stats.factor_hits, 1, "the downdated factor must hit: {:?}", ws.stats);
+        let cold = cold_woodbury_factor(&sub, &sub_active, 0.7);
+        assert_eq!(ws.gram_chol.l().as_slice(), cold.l().as_slice());
+    }
+
+    #[test]
+    fn direct_suffix_append_is_rank1_and_bitwise_cold() {
+        let a = random_case(20, 50, 14);
+        let base: Vec<usize> = (0..30).collect();
+        let mut ws = NewtonWorkspace::new();
+        ws.direct_factor(&a, &base, 1.3).unwrap();
+        let mut grown = base.clone();
+        grown.extend_from_slice(&[31, 34, 37]);
+        ws.direct_factor(&a, &grown, 1.3).unwrap();
+        assert_eq!(ws.stats.rank1_updates, 3, "{:?}", ws.stats);
+        assert_eq!(ws.stats.direct_rebuilds, 1, "append must not rebuild: {:?}", ws.stats);
+
+        let m = a.rows();
+        let mut v = Mat::zeros(m, m);
+        shard::rank1_lower_accum(&a, &grown, 1.3, &mut v);
+        for i in 0..m {
+            v.set(i, i, v.get(i, i) + 1.0);
+        }
+        let cold = Cholesky::factor(&v).unwrap();
+        for j in 0..m {
+            for i in j..m {
+                assert_eq!(
+                    ws.direct_chol.l().get(i, j).to_bits(),
+                    cold.l().get(i, j).to_bits(),
+                    "L[{i},{j}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sorted_edit_script_maps_and_counts() {
+        let mut map = Vec::new();
+        // {0,2,4,6} → {0,3,4,6,9}: remove 2, insert 3 and 9
+        let ed = sorted_edit_script(&[0, 2, 4, 6], &[0, 3, 4, 6, 9], 8, &mut map).unwrap();
+        assert_eq!(map, vec![0, usize::MAX, 2, 3, usize::MAX]);
+        assert_eq!((ed.start, ed.inserts, ed.removes), (1, 2, 1));
+        // pure suffix truncation maps to the identity with start = new length
+        let ed = sorted_edit_script(&[0, 2, 4, 6], &[0, 2], 8, &mut map).unwrap();
+        assert_eq!(map, vec![0, 1]);
+        assert_eq!((ed.start, ed.inserts, ed.removes), (2, 0, 2));
+        // over budget → None
+        assert!(sorted_edit_script(&[0, 1, 2, 3, 4], &[10, 11, 12], 7, &mut map).is_none());
     }
 
     #[test]

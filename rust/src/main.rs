@@ -107,6 +107,8 @@ fn print_help() {
          \x20                [--pool-out BENCH_pool_dispatch.json]\n\
          \x20                --newton-sizes 160:1200:40,320:2000:120 --newton-reps 3\n\
          \x20                [--no-newton-bench] [--newton-out BENCH_newton_workspace.json]\n\
+         \x20                --warm-m 200 --warm-n 2000 --warm-r0 40 --warm-points 24\n\
+         \x20                --warm-reps 3 [--no-warm-bench] [--warm-out BENCH_warm_path.json]\n\
          \x20                --serve-n 2000 --serve-m 100 --serve-clients 1,8,64 --serve-requests 4\n\
          \x20                [--no-serve-bench] [--serve-out BENCH_serve.json]\n\
          bench-check      --current BENCH_x.json --baseline benches/baselines/BENCH_x.json\n\
@@ -566,6 +568,57 @@ fn cmd_bench_parallel(args: &Args) -> Result<()> {
             return Err(Error::msg(format!(
                 "steady-state {} Newton iterations allocate ({:.2} allocs/iter at m={} r={})",
                 leaky.strategy, leaky.allocs_per_iter, leaky.m, leaky.r
+            )));
+        }
+    }
+
+    // Warm λ-chain: the same screened-chain-shaped active-set schedule solved
+    // cold, warm-with-pivot-refactor, and warm-with-rank-1-edits.
+    if !args.get_flag("no-warm-bench") {
+        let warm_m = args.get_usize("warm-m", 200).map_err(Error::msg)?;
+        let warm_n = args.get_usize("warm-n", 2_000).map_err(Error::msg)?;
+        let warm_r0 = args.get_usize("warm-r0", 40).map_err(Error::msg)?;
+        let warm_points = args.get_usize("warm-points", 24).map_err(Error::msg)?;
+        let warm_reps = args.get_usize("warm-reps", 3).map_err(Error::msg)?;
+        let (wt, wrows) = tables::warm_path_rows(warm_m, warm_n, warm_r0, warm_points, warm_reps);
+        println!();
+        wt.print();
+        if let Some(path) = args.get("warm-out") {
+            let json = tables::warm_path_json(&wrows, warm_reps);
+            if let Some(parent) = PathBuf::from(path).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, json)?;
+            println!("wrote {path}");
+        }
+        determinism_ok &= wrows.iter().all(|r| r.bitwise_equal);
+        // The tentpole claims are gates: along a screened-chain-shaped λ
+        // schedule the rank-1 edit tier must beat both the pivot-refactor
+        // tier and a cold workspace per point (the swap steps skip the
+        // O(r²m) Gram rebuild and refactor from an interior pivot, so the
+        // margin does not flake on noisy boxes); no edited refactor may
+        // lose positive definiteness on this well-posed chain; and — with
+        // this binary's counting allocator installed — the warm chain must
+        // allocate nothing in steady state.
+        if let Some(slow) = wrows.iter().find(|r| r.rank1_vs_pivot <= 1.0 || r.rank1_vs_cold <= 1.0)
+        {
+            return Err(Error::msg(format!(
+                "rank-1 warm chain no cheaper than the fallback tiers for {} \
+                 (rank1 {:.2e}s vs pivot {:.2e}s vs cold {:.2e}s)",
+                slow.strategy, slow.rank1_seconds, slow.pivot_seconds, slow.cold_seconds
+            )));
+        }
+        if let Some(bad) = wrows.iter().find(|r| r.downdate_fallbacks > 0) {
+            return Err(Error::msg(format!(
+                "edited refactors lost positive definiteness {} time(s) on a \
+                 well-posed {} chain",
+                bad.downdate_fallbacks, bad.strategy
+            )));
+        }
+        if let Some(leaky) = wrows.iter().find(|r| r.allocs_per_point > 0.0) {
+            return Err(Error::msg(format!(
+                "steady-state warm {} chain allocates ({:.2} allocs/point)",
+                leaky.strategy, leaky.allocs_per_point
             )));
         }
     }

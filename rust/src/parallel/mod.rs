@@ -140,11 +140,41 @@ pub fn solve_path_parallel<'a>(
     b: &[f64],
     opts: &ParallelPathOptions,
 ) -> ParallelPathResult {
+    let mut sessions = Vec::new();
+    solve_path_parallel_warm(a, b, opts, &mut sessions)
+}
+
+/// Warm-session variant of [`solve_path_parallel`]: `sessions` carries one
+/// [`WarmState`] per chain across runs, mirroring the serving layer's
+/// session reuse. Each run is numerically cold — `x`/`sigma` are cleared
+/// here, so no run reads the previous run's solution — but the Newton
+/// workspaces stay warm, which is bitwise-invisible (cache hits reproduce a
+/// cold build's bits) and skips the Gram/factor rebuild cost when a refit
+/// revisits similar active sets. The chain split is a pure function of
+/// (grid length, chunking, thread request), so sessions re-associate with
+/// the same grid segments on every run; if the split changes, the sessions
+/// are discarded and rebuilt fresh.
+pub fn solve_path_parallel_warm<'a>(
+    a: impl Into<DesignRef<'a>>,
+    b: &[f64],
+    opts: &ParallelPathOptions,
+    sessions: &mut Vec<WarmState>,
+) -> ParallelPathResult {
     let a = a.into();
     assert_descending_grid(&opts.base.c_grid);
     let grid_len = opts.base.c_grid.len();
     let lambda_max = EnetProblem::lambda_max(a, b, opts.base.alpha);
     let chains = chain::split_chains(grid_len, &opts.chunking, opts.num_threads);
+    if sessions.len() != chains.len() {
+        sessions.clear();
+        sessions.resize_with(chains.len(), WarmState::default);
+    }
+    // Cold numerics, warm memory: clear the carried solution and σ so the
+    // run's outputs cannot depend on the previous run's numerics.
+    for s in sessions.iter_mut() {
+        s.x = None;
+        s.sigma = None;
+    }
     let board = SharedScreen::new();
     let threads = resolve_threads(opts.num_threads).min(chains.len().max(1));
     // Spare cores not consumed by chain-level parallelism go to within-solve
@@ -155,13 +185,14 @@ pub fn solve_path_parallel<'a>(
 
     let jobs: Vec<_> = chains
         .iter()
-        .map(|&seg| {
+        .zip(sessions.drain(..))
+        .map(|(&seg, warm)| {
             let board = &board;
             let base = &opts.base;
             let screening = opts.screening;
             move || {
                 shard::with_threads(shard_budget, || {
-                    run_chain(a, b, lambda_max, seg, base, screening, board)
+                    run_chain(a, b, lambda_max, seg, base, screening, board, warm)
                 })
             }
         })
@@ -170,11 +201,13 @@ pub fn solve_path_parallel<'a>(
 
     // Deterministic assembly: place every solved point at its grid index, then
     // walk ascending until the grid ends, a cap hit truncates the path, or an
-    // unsolved index marks the pruned tail.
+    // unsolved index marks the pruned tail. Sessions return in chain order
+    // (`run_tasks` preserves job order).
     let mut per_index: Vec<Option<PathPoint>> = (0..grid_len).map(|_| None).collect();
     let mut reports = Vec::with_capacity(outputs.len());
-    for (report, points) in outputs {
+    for (report, points, warm) in outputs {
         reports.push(report);
+        sessions.push(warm);
         for (index, point) in points {
             per_index[index] = Some(point);
         }
@@ -204,6 +237,9 @@ pub fn solve_path_parallel<'a>(
 }
 
 /// Solve one chain sequentially with warm starts, publishing to the board.
+/// Takes the chain's warm session by value and hands it back so the caller
+/// can carry it into the next run.
+#[allow(clippy::too_many_arguments)]
 fn run_chain(
     a: DesignRef<'_>,
     b: &[f64],
@@ -212,10 +248,10 @@ fn run_chain(
     base: &PathOptions,
     screening: bool,
     board: &SharedScreen,
-) -> (ChainReport, Vec<(usize, PathPoint)>) {
+    mut warm: WarmState,
+) -> (ChainReport, Vec<(usize, PathPoint)>, WarmState) {
     let sw = Stopwatch::new();
     let n = a.cols();
-    let mut warm = WarmState::default();
     let mut out: Vec<(usize, PathPoint)> = Vec::with_capacity(seg.len());
     let mut survivor_sum = 0usize;
     for index in seg.start..seg.end {
@@ -228,6 +264,7 @@ fn run_chain(
             let prev = warm.x.clone();
             solve_point_screened(a, b, lambda_max, c, base, &mut warm, prev.as_deref())
         } else {
+            retarget_to_full(a, &mut warm);
             (solve_point(a, b, lambda_max, c, base, &mut warm), n)
         };
         let r = point.result.active_set.len();
@@ -247,7 +284,41 @@ fn run_chain(
     } else {
         survivor_sum as f64 / (solved * n) as f64
     };
-    (ChainReport { chain: seg, solved, seconds: sw.elapsed_s(), survivor_fraction }, out)
+    (ChainReport { chain: seg, solved, seconds: sw.elapsed_s(), survivor_fraction }, out, warm)
+}
+
+/// Re-bind a chain's warm workspace to the full design when it is currently
+/// bound to a gathered survivor subset, translating each sub-design column
+/// back to its full-design index. Every sub-design column exists in the full
+/// design, so the whole cached Gram — and the factorization — carries over.
+fn retarget_to_full(a: DesignRef<'_>, warm: &mut WarmState) {
+    if let Some(cols) = warm.ws_cols.take() {
+        warm.newton_ws.retarget_columns(a, |k| cols.get(k).copied());
+    }
+}
+
+/// Re-bind a chain's warm workspace onto this point's gathered survivor
+/// sub-design. Gathered columns are bitwise copies of full-design columns,
+/// so cached Gram entries stay valid under translation; active columns the
+/// screen just dropped become a structural downdate inside
+/// [`crate::linalg::NewtonWorkspace::retarget_columns`].
+fn retarget_to_sub(a_sub: DesignRef<'_>, survivors: &[usize], warm: &mut WarmState) {
+    match warm.ws_cols.take() {
+        // previously bound to the full design: full index → survivor position
+        None => warm.newton_ws.retarget_columns(a_sub, |j| survivors.binary_search(&j).ok()),
+        // sub → sub: previous survivor position → full index → new position
+        Some(prev) => {
+            warm.newton_ws.retarget_columns(a_sub, |k| {
+                prev.get(k).and_then(|&j| survivors.binary_search(&j).ok())
+            });
+            let mut cols = prev;
+            cols.clear();
+            cols.extend_from_slice(survivors);
+            warm.ws_cols = Some(cols);
+            return;
+        }
+    }
+    warm.ws_cols = Some(survivors.to_vec());
 }
 
 /// Warm-started solve restricted to the Gap-Safe survivors of `prev_x`.
@@ -267,6 +338,7 @@ fn solve_point_screened(
     let n = a.cols();
     let Some(prev) = prev_x else {
         // Chain head: no reference point, the sphere has infinite radius.
+        retarget_to_full(a, &mut *warm);
         return (solve_point(a, b, lambda_max, c, base, &mut *warm), n);
     };
     let (lam1, lam2) = EnetProblem::lambdas_from_alpha(base.alpha, c, lambda_max);
@@ -293,6 +365,7 @@ fn solve_point_screened(
     }
     if survivors.len() * 2 > n {
         // Screen barely bites: the gather copy would outweigh the savings.
+        retarget_to_full(a, &mut *warm);
         return (solve_point(a, b, lambda_max, c, base, &mut *warm), n);
     }
 
@@ -300,14 +373,17 @@ fn solve_point_screened(
     // `gather_cols` preserves the storage kind, so a sparse design solves its
     // screened subproblems on a sparse sub-design too.
     let a_sub = a.gather_cols(&survivors);
-    // Fresh workspace: the reduced design `a_sub` is a new matrix, so the
-    // chain's cached factorizations (keyed on the full design's columns)
-    // cannot carry over.
+    // Carry the chain's warm workspace onto the sub-design: gathered columns
+    // are bitwise copies of full-design columns, so the cached Gram/factor
+    // (keyed by column identity) translates through the survivor index map
+    // instead of being rebuilt per λ point.
     let mut warm_sub = WarmState {
         x: warm.x.as_ref().map(|x| survivors.iter().map(|&j| x[j]).collect()),
         sigma: warm.sigma,
-        newton_ws: Default::default(),
+        newton_ws: std::mem::take(&mut warm.newton_ws),
+        ws_cols: warm.ws_cols.take(),
     };
+    retarget_to_sub((&a_sub).into(), &survivors, &mut warm_sub);
     let sub = solve_point(&a_sub, b, lambda_max, c, base, &mut warm_sub);
 
     // Scatter the reduced solution back into full coordinates.
@@ -318,6 +394,8 @@ fn solve_point_screened(
     let active_set: Vec<usize> = sub.result.active_set.iter().map(|&k| survivors[k]).collect();
     warm.x = Some(x_full.clone());
     warm.sigma = warm_sub.sigma;
+    warm.newton_ws = warm_sub.newton_ws;
+    warm.ws_cols = warm_sub.ws_cols;
     let result =
         SolveResult { x: x_full, active_set, screen_survivors: Some(kept), ..sub.result };
     (PathPoint { c_lambda: c, lam1, lam2, result }, kept)
@@ -436,6 +514,46 @@ mod tests {
         for p in &eng.path.points[..eng.path.runs - 1] {
             assert!(p.result.active_set.len() < 8, "only the last point hits the cap");
         }
+    }
+
+    #[test]
+    fn screened_chain_carries_warm_workspace() {
+        let prob = problem();
+        let opts = ParallelPathOptions {
+            base: base_opts(),
+            num_threads: 1,
+            chunking: Chunking::Chains(1),
+            screening: true,
+        };
+        let cold = solve_path_parallel(&prob.a, &prob.b, &opts);
+        let mut sessions = Vec::new();
+        let first = solve_path_parallel_warm(&prob.a, &prob.b, &opts, &mut sessions);
+        assert_eq!(sessions.len(), 1);
+        let stats_first = sessions[0].newton_ws.stats;
+        // the carried workspace must actually engage across screened points:
+        // either structural edits or incremental Gram updates fire (a fresh
+        // workspace per point — the old behavior — would leave both at the
+        // per-point level only, with every point paying a rebuild)
+        assert!(
+            stats_first.rank1_updates + stats_first.gram_incremental > 0,
+            "screened chain never reused warm state: {stats_first:?}"
+        );
+        // warm sessions are bitwise-invisible: session path == fresh path,
+        // and a rerun on the same inputs reproduces itself exactly
+        assert_eq!(cold.path.runs, first.path.runs);
+        for (p, q) in cold.path.points.iter().zip(first.path.points.iter()) {
+            assert_eq!(p.result.x, q.result.x, "c={}", p.c_lambda);
+        }
+        let second = solve_path_parallel_warm(&prob.a, &prob.b, &opts, &mut sessions);
+        let stats_second = sessions[0].newton_ws.stats;
+        assert_eq!(first.path.runs, second.path.runs);
+        for (p, q) in first.path.points.iter().zip(second.path.points.iter()) {
+            assert_eq!(p.result.x, q.result.x, "warm rerun must be bitwise-identical");
+        }
+        assert!(
+            stats_second.factor_hits > stats_first.factor_hits,
+            "rerun must hit the carried caches: {stats_first:?} vs {stats_second:?}"
+        );
     }
 
     #[test]

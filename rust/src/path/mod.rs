@@ -99,6 +99,13 @@ pub struct WarmState {
     /// on a different one), and cache hits are bitwise-identical to cold
     /// rebuilds, so the path's bits are unchanged.
     pub newton_ws: crate::linalg::NewtonWorkspace,
+    /// When the workspace is currently bound to a *gathered sub-design*
+    /// (screened chain steps), the full-design column index of each
+    /// sub-design column; `None` = bound to the full design. The screened
+    /// driver uses this to retarget the warm workspace between survivor
+    /// coordinate systems ([`crate::linalg::NewtonWorkspace::retarget_columns`])
+    /// instead of resetting it per λ point.
+    pub ws_cols: Option<Vec<usize>>,
 }
 
 /// Validate a descending c_λ grid (shared by the sequential and parallel

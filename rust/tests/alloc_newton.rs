@@ -5,7 +5,9 @@
 //! kernel paths) — must perform **zero** heap allocations, for every
 //! strategy. A companion bound pins a fully-warm end-to-end SsNAL re-solve to
 //! a small constant allocation count (its per-solve state vectors), so no
-//! per-iteration churn can hide in the outer loop.
+//! per-iteration churn can hide in the outer loop. ISSUE 9 extends the
+//! zero pins to the screened warm-chain steady state: sub-design retargeting
+//! and rank-1 active-set edit cycling must also allocate nothing.
 //!
 //! The counter is process-global and the harness runs a binary's tests on
 //! several threads, so two defenses keep the pins deterministic: every test
@@ -178,6 +180,97 @@ fn warm_refit_allocates_strictly_less_than_cold_fit() {
             "warm refit allocated {warm} times, cold fit {cold} — the session \
              is not reusing its workspace"
         );
+    });
+}
+
+/// ISSUE 9 satellite: the screened warm-chain hot path — retargeting the
+/// workspace onto a gathered survivor sub-design, then solving — must be
+/// allocation-free in steady state. When every cached column survives, the
+/// retarget is a fingerprint rewrite plus an in-place index translation and
+/// the factorization carries over untouched.
+#[test]
+fn screened_retarget_and_solve_allocate_nothing() {
+    let _serial = gate();
+    let (a, _, rhs) = newton_case(60, 300, 20, 0x5C12);
+    let survivors: Vec<usize> = (0..150).map(|k| 2 * k).collect();
+    let a_sub = a.gather_cols(&survivors);
+    // active indices *within the sub-design*
+    let active: Vec<usize> = vec![3, 11, 27, 40, 66, 90, 120];
+    shard::with_threads(1, || {
+        let mut ws = NewtonWorkspace::new();
+        let mut d = vec![0.0; 60];
+        let solve = |ws: &mut NewtonWorkspace, d: &mut [f64]| {
+            solve_newton_system_ws(
+                &a_sub,
+                &active,
+                0.7,
+                &rhs,
+                d,
+                NewtonStrategy::Woodbury,
+                1e-10,
+                500,
+                ws,
+            );
+        };
+        // warm-up: populate the cache and ratchet the retarget scratch
+        solve(&mut ws, &mut d);
+        ws.retarget_columns((&a_sub).into(), Some);
+        solve(&mut ws, &mut d);
+        let delta = min_allocs(|| {
+            for _ in 0..8 {
+                // per λ point in a screened chain: retarget (all survive
+                // here), then solve — the steady state of the warm chain
+                ws.retarget_columns((&a_sub).into(), Some);
+                solve(&mut ws, &mut d);
+            }
+        });
+        assert_eq!(delta, 0, "screened retarget+solve steady state allocated");
+    });
+}
+
+/// ISSUE 9 satellite: cycling between two overlapping active sets — the
+/// rank-1 up/down-date tier's bread and butter (an interior column leaves,
+/// another enters, every few λ steps) — must also be allocation-free once
+/// buffer capacities have ratcheted: the Gram remap is in place, the edit
+/// map is reused scratch, and the edited refactor is dimension-stable.
+#[test]
+fn rank1_edit_cycling_allocates_nothing() {
+    let _serial = gate();
+    let (a, _, rhs) = newton_case(60, 300, 20, 0xED17);
+    let set_a: Vec<usize> = (0..18).map(|k| 4 * k).collect();
+    let mut set_b = set_a.clone();
+    set_b[9] = 37; // 36 → 37: one interior remove + one insert per switch
+    shard::with_threads(1, || {
+        let mut ws = NewtonWorkspace::new();
+        let mut d = vec![0.0; 60];
+        let solve = |ws: &mut NewtonWorkspace, active: &[usize], d: &mut [f64]| {
+            solve_newton_system_ws(
+                &a,
+                active,
+                0.7,
+                &rhs,
+                d,
+                NewtonStrategy::Woodbury,
+                1e-10,
+                500,
+                ws,
+            );
+        };
+        // warm-up: both sets seen once, edit scratch and factor sized
+        solve(&mut ws, &set_a, &mut d);
+        solve(&mut ws, &set_b, &mut d);
+        solve(&mut ws, &set_a, &mut d);
+        let before = ws.stats;
+        let delta = min_allocs(|| {
+            for i in 0..8 {
+                let active = if i % 2 == 0 { &set_b } else { &set_a };
+                solve(&mut ws, active, &mut d);
+            }
+        });
+        assert_eq!(delta, 0, "rank-1 edit cycling allocated in steady state");
+        // the measured region really exercised the edit tier
+        let edited = ws.stats.rank1_updates - before.rank1_updates;
+        assert!(edited >= 8, "edit tier did not engage: {:?}", ws.stats);
     });
 }
 

@@ -146,6 +146,54 @@ fn warm_refit_is_bitwise_identical_to_cold_fit() {
     }
 }
 
+/// ISSUE 9 satellite: `PathFit::refit_path` re-solves the λ-grid through the
+/// session's warm per-chain workspaces — bitwise-identical to a fresh
+/// `fit_path` at thread budgets 1 and 4, while the second pass reuses cached
+/// factors instead of rebuilding them.
+#[test]
+fn warm_refit_path_is_bitwise_identical_to_fresh_fit_path() {
+    let prob = generate_synthetic(&SyntheticSpec {
+        m: 60,
+        n: 400,
+        n0: 6,
+        x_star: 5.0,
+        snr: 6.0,
+        seed: 42,
+    });
+    for budget in [1usize, 4] {
+        let design = Design::new(&prob.a, &prob.b).unwrap();
+        let model = EnetModel::new()
+            .alpha(0.8)
+            .grid(1.0, 0.2, 12)
+            .tol(1e-7)
+            .threads(budget)
+            .screening(true);
+        let mut warm = model.fit_path(&design).unwrap();
+        let first_stats = warm.workspace_stats();
+        assert!(first_stats.events() > 0, "budget {budget}: no workspace activity");
+        let fresh = model.fit_path(&design).unwrap();
+        warm.refit_path(&design);
+        assert_eq!(warm.points().len(), fresh.points().len(), "budget {budget}");
+        for (k, (w, c)) in warm.points().iter().zip(fresh.points()).enumerate() {
+            assert_eq!(w.c_lambda.to_bits(), c.c_lambda.to_bits(), "budget {budget} point {k}");
+            let wb: Vec<u64> = w.result.x.iter().map(|v| v.to_bits()).collect();
+            let cb: Vec<u64> = c.result.x.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, cb, "budget {budget} point {k}: warm path refit != fresh fit");
+            assert_eq!(
+                w.result.iterations, c.result.iterations,
+                "budget {budget} point {k}: iteration counts differ"
+            );
+        }
+        // the warm pass reused cached state the fresh pass had to build
+        let second = warm.workspace_stats();
+        assert!(
+            second.factor_hits > first_stats.factor_hits,
+            "budget {budget}: refit_path did not reuse cached factors \
+             ({first_stats:?} → {second:?})"
+        );
+    }
+}
+
 /// For `(α, c_λ)` models the penalties are re-resolved against each new
 /// response, exactly as a cold fit would resolve them.
 #[test]

@@ -469,6 +469,149 @@ fn warm_newton_cache_is_bitwise_cold_at_every_thread_budget() {
     }
 }
 
+/// Rank-1 edit-tier contract (ISSUE 9): along a λ-path-like sequence whose
+/// active set changes by a few columns at a time — interior swap, interior
+/// multi-column downdate, suffix append — the structurally up/down-dated
+/// Gram/Cholesky factors must produce, at every thread budget on the warm
+/// pool, exactly the bits of a cold (fresh-workspace) solve of each step,
+/// and the rank-1 counters must actually engage (or the test is vacuous).
+#[test]
+fn rank1_edited_factors_are_bitwise_cold_at_every_thread_budget() {
+    let mut rng = Xoshiro256pp::seed_from_u64(909_909);
+    let (m, n, r) = (200, 600, 150);
+    let a = Mat::from_fn(m, n, |_, _| rng.next_gaussian());
+    let rhs: Vec<f64> = (0..m).map(|_| rng.next_gaussian()).collect();
+    assert!(Plan::for_work(m * (m + 1) / 2, 2 * r).shards > 1, "rank-1 build must fan out");
+    assert!(Plan::for_work(r * (r + 1) / 2, 2 * m).shards > 1, "gram build must fan out");
+
+    // base covers multiples of 4; edits use odd indices that cannot collide
+    let base: Vec<usize> = (0..r).map(|k| 4 * k).collect();
+    let mut swapped = base.clone();
+    swapped[40] = 161; // 160 → 161: one interior remove + one insert
+    let mut pruned = swapped.clone();
+    pruned.drain(120..124); // four interior removals, pure downdate
+    let mut grown = pruned.clone();
+    grown.extend([n - 2, n - 1]); // suffix append of two columns
+    let steps: Vec<(Vec<usize>, f64)> = vec![
+        (base, 0.7),          // cold rebuild
+        (swapped, 0.7),       // edit tier: 1 up + 1 down, partial refactor
+        (pruned, 0.7),        // edit tier: 4-column downdate
+        (grown.clone(), 0.7), // edit tier: suffix append (direct: serial fold)
+        (grown.clone(), 2.1), // κ bump → raw-Gram reuse
+        (grown, 2.1),         // exact repeat → full factor hit
+    ];
+
+    for strategy in [NewtonStrategy::Direct, NewtonStrategy::Woodbury] {
+        let run_warm = |steps: &[(Vec<usize>, f64)]| {
+            let mut ws = NewtonWorkspace::new();
+            let mut out = Vec::new();
+            for (active, kappa) in steps {
+                let mut d = vec![0.0; m];
+                solve_newton_system_ws(
+                    &a, active, *kappa, &rhs, &mut d, strategy, 1e-10, 500, &mut ws,
+                );
+                out.push(d);
+            }
+            (out, ws.stats)
+        };
+        let (reference, stats) = shard::with_threads(1, || run_warm(&steps));
+        // the edit tier must actually engage, or this test is vacuous
+        match strategy {
+            NewtonStrategy::Direct => {
+                assert!(stats.rank1_updates >= 2, "{stats:?}"); // suffix append
+                assert!(stats.direct_hits >= 1, "{stats:?}");
+            }
+            _ => {
+                assert!(stats.rank1_updates >= 3, "{stats:?}"); // 1 + 2
+                assert!(stats.rank1_downdates >= 5, "{stats:?}"); // 1 + 4
+                assert!(stats.partial_refactors >= 2, "{stats:?}");
+                assert!(stats.factor_hits >= 1, "{stats:?}");
+                assert!(stats.gram_hits >= 1, "{stats:?}");
+            }
+        }
+        assert_eq!(stats.downdate_fallbacks, 0, "{stats:?}");
+        // warm edited sequence is invariant to the thread budget (warm pool)
+        for t in [2usize, 4, 8] {
+            let (got, _) = shard::with_threads(t, || run_warm(&steps));
+            assert_eq!(got, reference, "{strategy:?} edited sequence drifted at threads={t}");
+        }
+        // every warm step equals a cold fresh-workspace solve, bit for bit
+        for (k, (active, kappa)) in steps.iter().enumerate() {
+            let cold = shard::with_threads(1, || {
+                let mut d = vec![0.0; m];
+                solve_newton_system(&a, active, *kappa, &rhs, &mut d, strategy, 1e-10, 500);
+                d
+            });
+            assert_eq!(cold, reference[k], "{strategy:?} step {k}: edited warm != cold");
+        }
+    }
+}
+
+/// The downdate → fallback boundary: when an edited refactor genuinely loses
+/// positive definiteness (here: κ < 0 makes the Woodbury ridge negative and
+/// the edit inserts an exact duplicate column, so `G + κ⁻¹I` has a −0.5
+/// eigenvalue), the workspace must count one `downdate_fallbacks`, retry the
+/// factorization cold (which fails identically), fall back to CG — and then
+/// recover on the next well-posed solve by reusing the still-valid raw Gram,
+/// bitwise-identical to cold, at every thread budget.
+#[test]
+fn downdate_fallback_recovers_and_counts() {
+    // Disjointly supported columns → the Gram of any duplicate-free active
+    // set is exactly diagonal (entries 7.3), so step 1 with ridge −0.5 is
+    // deterministically PD; column 25 is an exact copy of column 5, so any
+    // set containing both has an exactly singular Gram and `G − 0.5I` is
+    // deterministically NOT PD.
+    let (m, n) = (200, 40);
+    let a = Mat::from_fn(m, n, |i, j| {
+        let jj = if j == 25 { 5 } else { j };
+        if i >= 5 * jj && i < 5 * jj + 5 {
+            1.0 + 0.1 * (i - 5 * jj) as f64
+        } else {
+            0.0
+        }
+    });
+    let rhs: Vec<f64> = (0..m).map(|i| ((i % 7) as f64) - 3.0).collect();
+    let clean: Vec<usize> = vec![0, 2, 5, 8, 12, 16, 20, 30, 35, 39];
+    let mut poisoned = clean.clone();
+    poisoned.insert(7, 25); // sorted insert of the duplicate column
+
+    let run = || {
+        let mut ws = NewtonWorkspace::new();
+        let mut outs = Vec::new();
+        for (active, kappa) in [(&clean, -2.0), (&poisoned, -2.0), (&poisoned, 0.7)] {
+            let mut d = vec![0.0; m];
+            solve_newton_system_ws(
+                &a, active, kappa, &rhs, &mut d, NewtonStrategy::Woodbury, 1e-12, 8, &mut ws,
+            );
+            outs.push(d);
+        }
+        (outs, ws.stats)
+    };
+    let (reference, stats) = shard::with_threads(1, run);
+    // step 2 took the edit tier, lost PD, counted the fallback, went to CG
+    assert_eq!(stats.rank1_updates, 1, "{stats:?}");
+    assert_eq!(stats.downdate_fallbacks, 1, "{stats:?}");
+    assert_eq!(stats.cg_fallbacks, 1, "{stats:?}");
+    // step 3 recovered through the still-valid raw Gram (κ changed → re-ridge)
+    assert!(stats.gram_hits >= 1, "{stats:?}");
+    // the recovery solve is bitwise a cold solve of the same system
+    let cold = shard::with_threads(1, || {
+        let mut d = vec![0.0; m];
+        solve_newton_system(
+            &a, &poisoned, 0.7, &rhs, &mut d, NewtonStrategy::Woodbury, 1e-12, 8,
+        );
+        d
+    });
+    assert_eq!(bits(&cold), bits(&reference[2]), "post-fallback recovery != cold");
+    // counters and recovery bits are invariant to the warm-pool budget
+    for t in [2usize, 4, 8] {
+        let (got, s) = shard::with_threads(t, run);
+        assert_eq!(s.downdate_fallbacks, 1, "threads={t}: {s:?}");
+        assert_eq!(s.cg_fallbacks, 1, "threads={t}: {s:?}");
+        assert_eq!(bits(&got[2]), bits(&reference[2]), "recovery drifted at threads={t}");
+    }
+}
+
 /// The tentpole end-to-end guarantee: a full SSNAL solve big enough for its
 /// `Aᵀy` sweeps to fan out produces bitwise-identical solutions at every
 /// within-solve thread budget.

@@ -868,6 +868,22 @@ fn coalesced_concurrent_refits_match_sequential_and_surface_in_stats() {
             })
             .expect("warm session workspace snapshot");
         assert!(workspace.events() > 0, "budget {budget}: {workspace:?}");
+        // The rank-1 edit-tier counters are part of the schema (from_json
+        // above already requires them); single-design refits never edit the
+        // active design, so no downdate fallback may fire here.
+        let ws_json = stats
+            .get("sessions")
+            .and_then(Json::as_arr)
+            .and_then(|sessions| sessions.first())
+            .and_then(|s| s.get("workspace"))
+            .expect("workspace json");
+        for key in ["rank1_updates", "rank1_downdates", "downdate_fallbacks"] {
+            assert!(
+                ws_json.get(key).and_then(Json::as_usize).is_some(),
+                "budget {budget}: missing workspace counter {key}: {body}"
+            );
+        }
+        assert_eq!(workspace.downdate_fallbacks, 0, "budget {budget}: {workspace:?}");
         handle.stop();
     }
 }
