@@ -7,13 +7,17 @@
 //! buffers (zero-copy, the common case) or own them (for designs built on
 //! the fly and handed across threads/sessions).
 //!
-//! The design matrix may be **dense** ([`Mat`], column-major) or **CSC
-//! sparse** ([`CscMat`]) — every solver in the crate dispatches over
-//! [`DesignRef`] with bitwise-dense-equal sparse kernels, so the storage
-//! choice affects wall-clock time and memory, never the fitted coefficients.
+//! The design matrix may be **dense** ([`Mat`], column-major), **CSC
+//! sparse** ([`CscMat`]), or **out-of-core** ([`OocDesign`], block-streamed
+//! from disk through a bounded panel cache) — every solver in the crate
+//! dispatches over [`DesignRef`] with bitwise-dense-equal kernels, so the
+//! storage choice affects wall-clock time and memory, never the fitted
+//! coefficients.
+
+use std::path::Path;
 
 use crate::api::EnetError;
-use crate::linalg::{CscMat, DesignRef, DesignStorage, Mat};
+use crate::linalg::{CscMat, DesignRef, DesignStorage, Mat, OocDesign};
 use crate::solver::types::EnetProblem;
 
 /// Owned-or-borrowed design matrix, over either storage kind.
@@ -103,6 +107,27 @@ impl<'a> Design<'a> {
         Design::build(DesignMat::Owned(a), ResponseVec::Owned(b))
     }
 
+    /// Open an out-of-core design written by `ssnal-en convert` (or
+    /// [`crate::linalg::ooc::OocWriter`]) with the default decoded-panel
+    /// cache budget. `b` is still supplied in core — a `Design` couples the
+    /// matrix with its response. I/O and format errors surface as
+    /// [`EnetError::InvalidDesign`].
+    pub fn from_ooc(path: &Path, b: Vec<f64>) -> Result<Design<'static>, EnetError> {
+        Design::from_ooc_with_cache(path, b, crate::linalg::ooc::DEFAULT_CACHE_BYTES)
+    }
+
+    /// [`Design::from_ooc`] with an explicit cache budget in bytes.
+    pub fn from_ooc_with_cache(
+        path: &Path,
+        b: Vec<f64>,
+        cache_bytes: usize,
+    ) -> Result<Design<'static>, EnetError> {
+        let ooc = OocDesign::open_with_cache(path, cache_bytes).map_err(|e| {
+            EnetError::InvalidDesign { reason: format!("{}: {e}", path.display()) }
+        })?;
+        Design::build(DesignMat::Owned(DesignStorage::OutOfCore(ooc)), ResponseVec::Owned(b))
+    }
+
     fn build(a: DesignMat<'a>, b: ResponseVec<'a>) -> Result<Design<'a>, EnetError> {
         {
             let a_ref = match &a {
@@ -122,9 +147,15 @@ impl<'a> Design<'a> {
             }
             // For sparse storage this scans the stored nonzeros (the implicit
             // zeros are finite by definition); `index` then points into the
-            // stored-values slice rather than the dense data.
-            if let Some(index) = a_ref.values_slice().iter().position(|v| !v.is_finite()) {
-                return Err(EnetError::NonFinite { what: "design", index });
+            // stored-values slice rather than the dense data. Out-of-core
+            // designs expose no in-memory slice — their payloads are either
+            // decoded 2-bit dosages (finite by construction) or f64 blocks
+            // validated when `convert` densified them, so the scan is a
+            // write-time responsibility there.
+            if let Some(values) = a_ref.values_slice() {
+                if let Some(index) = values.iter().position(|v| !v.is_finite()) {
+                    return Err(EnetError::NonFinite { what: "design", index });
+                }
             }
             if let Some(index) = b_ref.iter().position(|v| !v.is_finite()) {
                 return Err(EnetError::NonFinite { what: "response", index });
@@ -150,6 +181,11 @@ impl<'a> Design<'a> {
     /// Whether the design is stored CSC-sparse.
     pub fn is_sparse(&self) -> bool {
         self.design_ref().is_sparse()
+    }
+
+    /// Whether the design streams from disk.
+    pub fn is_out_of_core(&self) -> bool {
+        self.design_ref().is_out_of_core()
     }
 
     /// The response vector.
@@ -208,7 +244,10 @@ mod tests {
         let b = vec![1.0, -1.0];
         let borrowed = Design::new(&a, &b).unwrap();
         let owned = Design::from_owned(a.clone(), b.clone()).unwrap();
-        assert_eq!(borrowed.design_ref().values_slice(), owned.design_ref().values_slice());
+        assert_eq!(
+            borrowed.design_ref().values_slice().unwrap(),
+            owned.design_ref().values_slice().unwrap()
+        );
         assert_eq!(borrowed.b(), owned.b());
         assert_eq!(borrowed.m(), 2);
         assert_eq!(borrowed.n(), 2);
@@ -259,6 +298,37 @@ mod tests {
         assert!(matches!(
             Design::new(&ok, &[0.0, f64::INFINITY]),
             Err(EnetError::NonFinite { what: "response", index: 1 })
+        ));
+    }
+
+    #[test]
+    fn ooc_designs_open_and_validate() {
+        let dense = Mat::from_row_major(3, 2, &[1.0, 0.0, 0.0, 2.0, 3.0, 0.0]);
+        let mut path = std::env::temp_dir();
+        path.push(format!("ssnal_api_design_{}.ooc", std::process::id()));
+        crate::linalg::ooc::write_design_f64(&path, DesignRef::from(&dense), 1)
+            .expect("write ooc");
+        let b = vec![1.0, -1.0, 0.5];
+        let d = Design::from_ooc(&path, b.clone()).unwrap();
+        assert!(d.is_out_of_core() && !d.is_sparse());
+        assert!(d.as_dense().is_none());
+        assert!(d.design_ref().values_slice().is_none());
+        assert_eq!((d.m(), d.n()), (3, 2));
+        for j in 0..2 {
+            for i in 0..3 {
+                assert_eq!(d.design_ref().get(i, j), dense.get(i, j));
+            }
+        }
+        // shape mismatch is still a typed error
+        assert!(matches!(
+            Design::from_ooc(&path, vec![1.0]),
+            Err(EnetError::ShapeMismatch { rows: 3, response_len: 1 })
+        ));
+        std::fs::remove_file(&path).ok();
+        // a missing or malformed file maps to InvalidDesign
+        assert!(matches!(
+            Design::from_ooc(&path, b),
+            Err(EnetError::InvalidDesign { .. })
         ));
     }
 

@@ -91,9 +91,13 @@ impl<'d> Fit<'d> {
 
     /// Workspace cache/reuse counters — how much of the Newton state the
     /// session reused so far, as the typed public snapshot shared with the
-    /// serving layer's `GET /v1/stats` (diagnostics only).
+    /// serving layer's `GET /v1/stats` (diagnostics only). For out-of-core
+    /// designs the block-cache counters live on the shared design handle,
+    /// not the workspace, and are overlaid here.
     pub fn workspace_stats(&self) -> StatsSnapshot {
-        StatsSnapshot::from(&self.ws.stats)
+        let mut stats = self.ws.stats;
+        stats.overlay_ooc(self.design.design_ref());
+        StatsSnapshot::from(&stats)
     }
 
     /// Consume the session, keeping only the solver result.

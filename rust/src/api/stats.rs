@@ -38,6 +38,13 @@ pub struct StatsSnapshot {
     pub direct_rebuilds: usize,
     /// Newton solves that fell back to CG after a factorization failure.
     pub cg_fallbacks: usize,
+    /// Out-of-core panel lookups served from the resident block cache
+    /// (always zero for in-core designs).
+    pub ooc_cache_hits: usize,
+    /// Out-of-core panel lookups that went to disk (read + decode).
+    pub ooc_cache_misses: usize,
+    /// Encoded bytes streamed from out-of-core design files.
+    pub ooc_bytes_read: usize,
 }
 
 impl StatsSnapshot {
@@ -70,6 +77,17 @@ impl StatsSnapshot {
         }
     }
 
+    /// Out-of-core block-cache hit rate in `[0, 1]` (`0.0` for in-core
+    /// designs, which never touch the streaming tier).
+    pub fn ooc_hit_rate(&self) -> f64 {
+        let lookups = self.ooc_cache_hits + self.ooc_cache_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.ooc_cache_hits as f64 / lookups as f64
+        }
+    }
+
     /// The canonical JSON schema (field names mirror the struct; `events`,
     /// `hits`, and `hit_rate` are included so consumers need no arithmetic).
     pub fn to_json(&self) -> Json {
@@ -85,6 +103,10 @@ impl StatsSnapshot {
             ("direct_hits", Json::Num(self.direct_hits as f64)),
             ("direct_rebuilds", Json::Num(self.direct_rebuilds as f64)),
             ("cg_fallbacks", Json::Num(self.cg_fallbacks as f64)),
+            ("ooc_cache_hits", Json::Num(self.ooc_cache_hits as f64)),
+            ("ooc_cache_misses", Json::Num(self.ooc_cache_misses as f64)),
+            ("ooc_bytes_read", Json::Num(self.ooc_bytes_read as f64)),
+            ("ooc_hit_rate", Json::Num(self.ooc_hit_rate())),
             ("events", Json::Num(self.events() as f64)),
             ("hits", Json::Num(self.hits() as f64)),
             ("hit_rate", Json::Num(self.hit_rate())),
@@ -109,6 +131,9 @@ impl StatsSnapshot {
             direct_hits: field("direct_hits")?,
             direct_rebuilds: field("direct_rebuilds")?,
             cg_fallbacks: field("cg_fallbacks")?,
+            ooc_cache_hits: field("ooc_cache_hits")?,
+            ooc_cache_misses: field("ooc_cache_misses")?,
+            ooc_bytes_read: field("ooc_bytes_read")?,
         })
     }
 }
@@ -127,6 +152,9 @@ impl From<&WorkspaceStats> for StatsSnapshot {
             direct_hits: ws.direct_hits,
             direct_rebuilds: ws.direct_rebuilds,
             cg_fallbacks: ws.cg_fallbacks,
+            ooc_cache_hits: ws.ooc_cache_hits,
+            ooc_cache_misses: ws.ooc_cache_misses,
+            ooc_bytes_read: ws.ooc_bytes_read,
         }
     }
 }
@@ -148,6 +176,9 @@ mod tests {
             direct_hits: 0,
             direct_rebuilds: 0,
             cg_fallbacks: 0,
+            ooc_cache_hits: 3,
+            ooc_cache_misses: 1,
+            ooc_bytes_read: 4096,
         }
     }
 
@@ -157,7 +188,11 @@ mod tests {
         assert_eq!(s.events(), 12);
         assert_eq!(s.hits(), 9);
         assert!((s.hit_rate() - 0.75).abs() < 1e-15);
+        // The streaming-tier counters are a separate cache: they never feed
+        // the Newton-event totals, and carry their own rate.
+        assert!((s.ooc_hit_rate() - 0.75).abs() < 1e-15);
         assert_eq!(StatsSnapshot::default().hit_rate(), 0.0);
+        assert_eq!(StatsSnapshot::default().ooc_hit_rate(), 0.0);
     }
 
     #[test]
@@ -177,6 +212,8 @@ mod tests {
             gram_rebuilds: 1,
             rank1_updates: 3,
             downdate_fallbacks: 1,
+            ooc_cache_hits: 7,
+            ooc_bytes_read: 1024,
             ..Default::default()
         };
         let s = StatsSnapshot::from(&ws);
@@ -184,6 +221,8 @@ mod tests {
         assert_eq!(s.gram_rebuilds, 1);
         assert_eq!(s.rank1_updates, 3);
         assert_eq!(s.downdate_fallbacks, 1);
+        assert_eq!(s.ooc_cache_hits, 7);
+        assert_eq!(s.ooc_bytes_read, 1024);
         assert_eq!(s.events(), 5);
     }
 }

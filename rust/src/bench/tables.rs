@@ -1606,6 +1606,8 @@ pub fn sparse_design_rows(
     let sp = match cohort.a {
         DesignStorage::Sparse(sp) => sp,
         DesignStorage::Dense(dm) => CscMat::from_dense(&dm),
+        // The generator only produces in-core storage.
+        DesignStorage::OutOfCore(_) => unreachable!("generate_sparse is in-core"),
     };
     let dense = sp.to_dense();
     let b = cohort.b;
@@ -1730,6 +1732,288 @@ pub fn sparse_design_json(rows: &[SparseDesignRow], n: usize, m: usize, density:
         ("n", Json::Num(n as f64)),
         ("m", Json::Num(m as f64)),
         ("density", Json::Num(density)),
+        ("rows", Json::Arr(row_objs)),
+    ])
+    .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Out-of-core design storage — streamed column blocks vs in-core
+// ---------------------------------------------------------------------------
+
+/// One measured thread budget of the out-of-core storage comparison: the
+/// same rare-variant cohort held as an in-core dense [`Mat`] and streamed
+/// from a 2-bit [`crate::linalg::OocDesign`] file at two decoded-panel cache
+/// budgets, timed through the `Aᵀy` sweep, the Gap-Safe screening sweep, and
+/// a full single-λ SSNAL solve.
+#[derive(Clone, Debug)]
+pub struct OocDesignRow {
+    /// Within-solve shard thread budget.
+    pub threads: usize,
+    /// Sharded `Aᵀy` over the in-core dense copy, seconds.
+    pub dense_aty_seconds: f64,
+    /// Sharded `Aᵀy` streamed at the large budget with an empty cache
+    /// (every panel read + decoded), seconds — a single timed pass.
+    pub ooc_cold_aty_seconds: f64,
+    /// Sharded `Aᵀy` streamed at the large budget with the cache warm,
+    /// seconds.
+    pub ooc_warm_aty_seconds: f64,
+    /// Cache hit rate of the small-budget cold sweep.
+    pub small_hit_rate: f64,
+    /// Encoded MiB read from disk by the small-budget cold sweep.
+    pub small_mib_read: f64,
+    /// Cache hit rate across the large-budget cold + warm sweeps.
+    pub large_hit_rate: f64,
+    /// Encoded MiB read from disk across the large-budget cold + warm
+    /// sweeps.
+    pub large_mib_read: f64,
+    /// Gap-Safe survivor sweep over the dense copy, seconds.
+    pub dense_screen_seconds: f64,
+    /// Gap-Safe survivor sweep streamed at the small budget, seconds.
+    pub ooc_screen_seconds: f64,
+    /// Full single-λ SSNAL solve on the dense copy, seconds.
+    pub dense_ssnal_seconds: f64,
+    /// Full single-λ SSNAL solve streamed at the small budget, seconds.
+    pub ooc_ssnal_seconds: f64,
+    /// Whether every streamed output (both budgets, cold and warm) and the
+    /// multi-thread dense ones reproduced the 1-thread dense reference bit
+    /// for bit.
+    pub bitwise_equal: bool,
+    /// Whether `resident_bytes() <= cache_budget()` held on both handles
+    /// after every sweep.
+    pub cache_within_budget: bool,
+    /// Whether the large-budget warm sweep was strictly cheaper than the
+    /// cold pass (the margin is the whole file read + decode).
+    pub warm_cheaper_than_cold: bool,
+}
+
+/// Measure the out-of-core storage tier on a GWAS-style rare-variant cohort:
+/// the raw {0,1,2} dosages written once as a 2-bit block file, then streamed
+/// back through the same sharded kernels as the in-core dense copy at a
+/// small (heavy-eviction) and a large (fully-resident) decoded-panel cache
+/// budget, verifying bitwise storage-, budget-, and thread-invariance
+/// against the 1-thread dense run as it goes. Returns the table, the rows,
+/// and the cohort's stored-entry density.
+pub fn ooc_design_rows(
+    n_snps: usize,
+    m: usize,
+    threads_list: &[usize],
+    small_cache_bytes: usize,
+    large_cache_bytes: usize,
+    tol: f64,
+    seed: u64,
+) -> (Table, Vec<OocDesignRow>, f64) {
+    use crate::data::snp::{generate_sparse, SparseSnpSpec};
+    use crate::linalg::{ooc, CscMat, DesignStorage, OocDesign};
+    use crate::parallel::shard;
+    use crate::solver::screening::AugmentedView;
+    use crate::util::timer::time_it;
+
+    let cohort = generate_sparse(&SparseSnpSpec {
+        base: SnpSpec {
+            m,
+            n_snps,
+            n_causal: (n_snps / 500).clamp(3, 20),
+            seed,
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let density = cohort.density;
+    let sp = match cohort.a {
+        DesignStorage::Sparse(sp) => sp,
+        DesignStorage::Dense(dm) => CscMat::from_dense(&dm),
+        // The generator only produces in-core storage.
+        DesignStorage::OutOfCore(_) => unreachable!("generate_sparse is in-core"),
+    };
+    let dense = sp.to_dense();
+    let b = cohort.b;
+
+    // Write the cohort once as a 2-bit block file (raw dosages are exactly
+    // 2-bit-codable), then open it at both cache budgets.
+    let path = std::env::temp_dir()
+        .join(format!("ssnal_bench_ooc_{}_{seed}.ooc", std::process::id()));
+    ooc::write_design_plink2bit(&path, (&dense).into(), ooc::DEFAULT_BLOCK_COLS, 0.0)
+        .expect("bench ooc file is writable");
+    let ooc_small = OocDesign::open_with_cache(&path, small_cache_bytes)
+        .expect("bench ooc file opens");
+    let ooc_large = OocDesign::open_with_cache(&path, large_cache_bytes)
+        .expect("bench ooc file opens");
+
+    let lmax = EnetProblem::lambda_max(&dense, &b, 0.9);
+    let (lam1, lam2) = EnetProblem::lambdas_from_alpha(0.9, 0.3, lmax);
+    let pd = EnetProblem::new(&dense, &b, lam1, lam2);
+    let po = EnetProblem::new(&ooc_small, &b, lam1, lam2);
+    let sopts = SsnalOptions { tol, ..Default::default() };
+
+    // Deterministic operands, shared with the sparse-design bench: a smooth
+    // dual vector for Aᵀy and a crude strongest-scores iterate for the
+    // screening sweep.
+    let y: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.01).sin()).collect();
+    let aty0 = pd.a.t_mul_vec(&b);
+    let x_screen: Vec<f64> =
+        aty0.iter().map(|&v| if v.abs() > 0.5 * lmax { 0.1 * v } else { 0.0 }).collect();
+    let aug_d = AugmentedView::new(&pd);
+    let aug_o = AugmentedView::new(&po);
+    let kcfg = MeasureConfig { warmup: 1, reps: 3 };
+
+    // 1-thread dense reference outputs: the bitwise bar every
+    // (storage, budget, threads) combination must clear.
+    let (ref_aty, ref_surv, ref_x) = shard::with_threads(1, || {
+        let mut aty = vec![0.0; n_snps];
+        shard::t_mul_vec_into(&dense, &y, &mut aty);
+        let surv = aug_d.gap_safe_survivors(&x_screen);
+        let x = ssnal::solve(&pd, &sopts).x;
+        (aty, surv, x)
+    });
+
+    let title = format!(
+        "out-of-core vs in-core design: {m}×{n_snps} GWAS dosages, 2-bit file, \
+         cache {}/{} MiB",
+        small_cache_bytes >> 20,
+        large_cache_bytes >> 20
+    );
+    let mut t = Table::new(&[
+        "threads",
+        "aty dn(s)",
+        "aty cold(s)",
+        "aty warm(s)",
+        "hit% sm",
+        "hit% lg",
+        "screen dn(s)",
+        "screen ooc(s)",
+        "ssnal dn(s)",
+        "ssnal ooc(s)",
+        "bitwise",
+        "in-budget",
+    ])
+    .with_title(&title);
+    let mut rows: Vec<OocDesignRow> = Vec::with_capacity(threads_list.len());
+    for &threads in threads_list {
+        let threads = threads.max(1);
+        let row = shard::with_threads(threads, || {
+            let mut aty_d = vec![0.0; n_snps];
+            let (sda, _) = measure(kcfg, || shard::t_mul_vec_into(&dense, &y, &mut aty_d));
+
+            // Large budget: one cold pass on an emptied cache, then the
+            // warm steady state (measure()'s warmup fills the cache).
+            ooc_large.evict_all();
+            ooc_large.reset_counters();
+            let mut aty_cold = vec![0.0; n_snps];
+            let (_, cold_secs) =
+                time_it(|| shard::t_mul_vec_into(&ooc_large, &y, &mut aty_cold));
+            let mut aty_lg = vec![0.0; n_snps];
+            let (swa, _) = measure(kcfg, || shard::t_mul_vec_into(&ooc_large, &y, &mut aty_lg));
+            let lc = ooc_large.counters();
+            let mut within = ooc_large.resident_bytes() <= ooc_large.cache_budget();
+
+            // Small budget: a cold pass under heavy eviction pressure.
+            ooc_small.evict_all();
+            ooc_small.reset_counters();
+            let mut aty_sm = vec![0.0; n_snps];
+            shard::t_mul_vec_into(&ooc_small, &y, &mut aty_sm);
+            let sc = ooc_small.counters();
+            within &= ooc_small.resident_bytes() <= ooc_small.cache_budget();
+
+            let (sds, surv_d) = measure(kcfg, || aug_d.gap_safe_survivors(&x_screen));
+            let (sos, surv_o) = measure(kcfg, || aug_o.gap_safe_survivors(&x_screen));
+            let (sdn, res_d) = measure(MeasureConfig::default(), || ssnal::solve(&pd, &sopts));
+            let (son, res_o) = measure(MeasureConfig::default(), || ssnal::solve(&po, &sopts));
+            within &= ooc_small.resident_bytes() <= ooc_small.cache_budget();
+
+            let hit_rate = |c: &crate::linalg::OocCounters| {
+                let total = c.cache_hits + c.cache_misses;
+                if total == 0 {
+                    0.0
+                } else {
+                    c.cache_hits as f64 / total as f64
+                }
+            };
+            let bitwise_equal = aty_d == ref_aty
+                && aty_cold == ref_aty
+                && aty_lg == ref_aty
+                && aty_sm == ref_aty
+                && surv_d == ref_surv
+                && surv_o == ref_surv
+                && res_d.x == ref_x
+                && res_o.x == ref_x;
+            OocDesignRow {
+                threads,
+                dense_aty_seconds: sda.mean,
+                ooc_cold_aty_seconds: cold_secs,
+                ooc_warm_aty_seconds: swa.mean,
+                small_hit_rate: hit_rate(&sc),
+                small_mib_read: sc.bytes_read as f64 / (1 << 20) as f64,
+                large_hit_rate: hit_rate(&lc),
+                large_mib_read: lc.bytes_read as f64 / (1 << 20) as f64,
+                dense_screen_seconds: sds.mean,
+                ooc_screen_seconds: sos.mean,
+                dense_ssnal_seconds: sdn.mean,
+                ooc_ssnal_seconds: son.mean,
+                bitwise_equal,
+                cache_within_budget: within,
+                warm_cheaper_than_cold: swa.mean < cold_secs,
+            }
+        });
+        t.row(vec![
+            format!("{}", row.threads),
+            fmt_secs(row.dense_aty_seconds),
+            fmt_secs(row.ooc_cold_aty_seconds),
+            fmt_secs(row.ooc_warm_aty_seconds),
+            format!("{:.0}%", row.small_hit_rate * 100.0),
+            format!("{:.0}%", row.large_hit_rate * 100.0),
+            fmt_secs(row.dense_screen_seconds),
+            fmt_secs(row.ooc_screen_seconds),
+            fmt_secs(row.dense_ssnal_seconds),
+            fmt_secs(row.ooc_ssnal_seconds),
+            format!("{}", row.bitwise_equal),
+            format!("{}", row.cache_within_budget),
+        ]);
+        rows.push(row);
+    }
+    let _ = std::fs::remove_file(&path);
+    (t, rows, density)
+}
+
+/// Render the out-of-core design bench as the JSON payload CI uploads
+/// (`BENCH_ooc_design.json`).
+pub fn ooc_design_json(
+    rows: &[OocDesignRow],
+    n: usize,
+    m: usize,
+    density: f64,
+    small_cache_bytes: usize,
+    large_cache_bytes: usize,
+) -> String {
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("threads", Json::Num(r.threads as f64)),
+                ("dense_aty_seconds", Json::Num(r.dense_aty_seconds)),
+                ("ooc_cold_aty_seconds", Json::Num(r.ooc_cold_aty_seconds)),
+                ("ooc_warm_aty_seconds", Json::Num(r.ooc_warm_aty_seconds)),
+                ("small_hit_rate", Json::Num(r.small_hit_rate)),
+                ("small_mib_read", Json::Num(r.small_mib_read)),
+                ("large_hit_rate", Json::Num(r.large_hit_rate)),
+                ("large_mib_read", Json::Num(r.large_mib_read)),
+                ("dense_screen_seconds", Json::Num(r.dense_screen_seconds)),
+                ("ooc_screen_seconds", Json::Num(r.ooc_screen_seconds)),
+                ("dense_ssnal_seconds", Json::Num(r.dense_ssnal_seconds)),
+                ("ooc_ssnal_seconds", Json::Num(r.ooc_ssnal_seconds)),
+                ("bitwise_equal", Json::Bool(r.bitwise_equal)),
+                ("cache_within_budget", Json::Bool(r.cache_within_budget)),
+                ("warm_cheaper_than_cold", Json::Bool(r.warm_cheaper_than_cold)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("ooc_design".to_string())),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("density", Json::Num(density)),
+        ("small_cache_bytes", Json::Num(small_cache_bytes as f64)),
+        ("large_cache_bytes", Json::Num(large_cache_bytes as f64)),
         ("rows", Json::Arr(row_objs)),
     ])
     .to_string()

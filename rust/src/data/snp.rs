@@ -15,6 +15,9 @@
 //! configurable correlation between them but **disjoint causal sets**, matching
 //! the paper's observation that the selected sets for CWG and BMI do not overlap.
 
+use std::fs::File;
+use std::path::Path;
+
 use crate::linalg::{CscMat, DesignStorage, Mat};
 use crate::rng::Xoshiro256pp;
 
@@ -359,6 +362,231 @@ pub fn generate_sparse(spec: &SparseSnpSpec) -> SnpCohortSparse {
     SnpCohortSparse { a, b, causal, effects, snp_names, density }
 }
 
+// ---------------------------------------------------------------------------
+// PLINK 1.9 binary fileset reader (.bed / .bim / .fam)
+// ---------------------------------------------------------------------------
+
+/// A PLINK 1.9 binary fileset opened for streaming variant reads.
+///
+/// The `.bed` file stores genotypes SNP-major, 2 bits per sample, LSB-first
+/// (sample `s` of a variant sits in byte `s/4` at bit `2·(s%4)`), with code
+/// mapping `00` = homozygous A1 → dosage 2.0, `01` = missing, `10` =
+/// heterozygous → 1.0, `11` = homozygous A2 → 0.0. Sample count comes from
+/// the `.fam` line count, variant count from the `.bim` line count; the
+/// `.bed` payload length is validated against both at open.
+///
+/// This reader feeds both `ssnal-en convert` (raw 2-bit repack into the
+/// out-of-core block format — byte-for-byte, no decode) and direct
+/// [`SnpCohortSparse`] ingestion via [`load_plink`].
+pub struct PlinkBed {
+    file: File,
+    samples: usize,
+    variants: usize,
+    variant_ids: Vec<String>,
+    phenotypes: Vec<f64>,
+}
+
+/// `.bed` magic bytes plus the SNP-major mode byte.
+const BED_MAGIC: [u8; 3] = [0x6C, 0x1B, 0x01];
+
+fn read_fam(path: &Path) -> Result<(usize, Vec<f64>), String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut phenos = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() < 6 {
+            return Err(format!(
+                "{}: line {} has {} fields, expected 6 (FID IID father mother sex phenotype)",
+                path.display(),
+                lineno + 1,
+                fields.len()
+            ));
+        }
+        // PLINK codes a missing phenotype as -9 (or NA); treat both as 0.0
+        // so downstream centering is well-defined.
+        let p = match fields[5].parse::<f64>() {
+            Ok(v) if v != -9.0 => v,
+            _ => 0.0,
+        };
+        phenos.push(p);
+    }
+    Ok((phenos.len(), phenos))
+}
+
+fn read_bim(path: &Path) -> Result<Vec<String>, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut ids = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut fields = line.split_whitespace();
+        let id = fields.nth(1).ok_or_else(|| {
+            format!(
+                "{}: line {} is missing the variant-id field",
+                path.display(),
+                lineno + 1
+            )
+        })?;
+        ids.push(id.to_string());
+    }
+    Ok(ids)
+}
+
+impl PlinkBed {
+    /// Open a fileset by its `.bed` path; the sibling `.bim`/`.fam` files
+    /// are derived by extension swap.
+    pub fn open(bed_path: &Path) -> Result<PlinkBed, String> {
+        let variant_ids = read_bim(&bed_path.with_extension("bim"))?;
+        let (samples, phenotypes) = read_fam(&bed_path.with_extension("fam"))?;
+        if samples == 0 || variant_ids.is_empty() {
+            return Err(format!(
+                "{}: empty fileset ({} samples, {} variants)",
+                bed_path.display(),
+                samples,
+                variant_ids.len()
+            ));
+        }
+        let file = File::open(bed_path).map_err(|e| format!("{}: {e}", bed_path.display()))?;
+        let mut magic = [0u8; 3];
+        crate::linalg::ooc::read_exact_at(&file, &mut magic, 0)
+            .map_err(|e| format!("{}: {e}", bed_path.display()))?;
+        if magic[..2] != BED_MAGIC[..2] {
+            return Err(format!("{}: not a PLINK .bed file (bad magic)", bed_path.display()));
+        }
+        if magic[2] != BED_MAGIC[2] {
+            return Err(format!(
+                "{}: individual-major .bed files are not supported (mode byte {:#04x})",
+                bed_path.display(),
+                magic[2]
+            ));
+        }
+        let variants = variant_ids.len();
+        let bpv = samples.div_ceil(4);
+        let expect = 3 + (variants * bpv) as u64;
+        let actual = file
+            .metadata()
+            .map_err(|e| format!("{}: {e}", bed_path.display()))?
+            .len();
+        if actual != expect {
+            return Err(format!(
+                "{}: file length {actual} != expected {expect} for {samples} samples x \
+                 {variants} variants",
+                bed_path.display()
+            ));
+        }
+        Ok(PlinkBed { file, samples, variants, variant_ids, phenotypes })
+    }
+
+    /// Samples (`.fam` rows).
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// Variants (`.bim` rows).
+    pub fn variants(&self) -> usize {
+        self.variants
+    }
+
+    /// Variant identifiers (`.bim` column 2), in file order.
+    pub fn variant_ids(&self) -> &[String] {
+        &self.variant_ids
+    }
+
+    /// Phenotypes (`.fam` column 6; `-9`/unparseable → 0.0), in file order.
+    pub fn phenotypes(&self) -> &[f64] {
+        &self.phenotypes
+    }
+
+    /// Packed bytes per variant: `ceil(samples/4)`.
+    pub fn bytes_per_variant(&self) -> usize {
+        self.samples.div_ceil(4)
+    }
+
+    /// Read variant `j`'s packed 2-bit codes into `buf` (resized to
+    /// [`PlinkBed::bytes_per_variant`]). These bytes repack into the
+    /// out-of-core 2-bit encoding unchanged.
+    pub fn read_variant_codes(&self, j: usize, buf: &mut Vec<u8>) -> Result<(), String> {
+        if j >= self.variants {
+            return Err(format!("variant index {j} out of range ({})", self.variants));
+        }
+        let bpv = self.bytes_per_variant();
+        buf.clear();
+        buf.resize(bpv, 0u8);
+        crate::linalg::ooc::read_exact_at(&self.file, buf, 3 + (j * bpv) as u64)
+            .map_err(|e| format!("variant {j}: {e}"))
+    }
+
+    /// Read and decode variant `j` into `{0,1,2}` dosages (`out` is resized
+    /// to the sample count); missing genotypes decode to `missing_fill`.
+    pub fn read_variant_dosages(
+        &self,
+        j: usize,
+        missing_fill: f64,
+        out: &mut Vec<f64>,
+    ) -> Result<(), String> {
+        let mut codes = Vec::new();
+        self.read_variant_codes(j, &mut codes)?;
+        out.clear();
+        out.resize(self.samples, 0.0);
+        crate::linalg::ooc::decode_plink_col(&codes, self.samples, missing_fill, out);
+        Ok(())
+    }
+}
+
+/// Load a PLINK fileset straight into a [`SnpCohortSparse`]: dosages go
+/// directly to CSC storage (densified past `max_sparse_density`, like
+/// [`generate_sparse`]), the phenotype is the centered `.fam` column 6, and
+/// variant ids come from the `.bim`. Real data carries no ground truth, so
+/// `causal`/`effects` are empty.
+///
+/// `missing_fill` is the dosage substituted for missing genotypes; the
+/// common GWAS choice 0.0 also keeps missing entries unstored in CSC.
+pub fn load_plink(
+    bed_path: &Path,
+    missing_fill: f64,
+    max_sparse_density: f64,
+) -> Result<SnpCohortSparse, String> {
+    let bed = PlinkBed::open(bed_path)?;
+    let (m, n) = (bed.samples(), bed.variants());
+    let mut col_ptr = Vec::with_capacity(n + 1);
+    col_ptr.push(0usize);
+    let mut row_idx = Vec::new();
+    let mut values = Vec::new();
+    let mut dosages = Vec::new();
+    for j in 0..n {
+        bed.read_variant_dosages(j, missing_fill, &mut dosages)?;
+        for (i, &g) in dosages.iter().enumerate() {
+            if g != 0.0 {
+                row_idx.push(i);
+                values.push(g);
+            }
+        }
+        col_ptr.push(row_idx.len());
+    }
+    let csc = CscMat::new(m, n, col_ptr, row_idx, values);
+    let density = csc.density();
+    let (b, _) = crate::data::standardize::center(bed.phenotypes());
+    let a = if density <= max_sparse_density {
+        DesignStorage::Sparse(csc)
+    } else {
+        DesignStorage::Dense(csc.to_dense())
+    };
+    Ok(SnpCohortSparse {
+        a,
+        b,
+        causal: Vec::new(),
+        effects: Vec::new(),
+        snp_names: bed.variant_ids().to_vec(),
+        density,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -513,5 +741,111 @@ mod tests {
         assert_eq!(c1.b, c2.b);
         let c3 = generate(&SnpSpec { seed: 1, ..spec });
         assert_ne!(c1.b, c3.b);
+    }
+
+    // -- PLINK fileset fixture: 4 samples x 3 variants, hand-packed --------
+    //
+    // Dosages (missing marked `.`):
+    //   rs1: [2, 1, 0, .]   -> codes 00 10 11 01 (LSB-first) -> 0x78
+    //   rs2: [0, 0, 1, 2]   -> codes 11 11 10 00            -> 0x2F
+    //   rs3: [1, 2, 2, 0]   -> codes 10 00 00 11            -> 0xC2
+    // Phenotypes: [1.5, -0.5, 2.0, -9 (missing -> 0.0)].
+
+    fn write_plink_fixture(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir();
+        let stem = format!("ssnal_plink_{}_{tag}", std::process::id());
+        let bed = dir.join(format!("{stem}.bed"));
+        std::fs::write(&bed, [0x6C, 0x1B, 0x01, 0x78, 0x2F, 0xC2]).unwrap();
+        std::fs::write(
+            dir.join(format!("{stem}.bim")),
+            "1 rs1 0 100 A G\n1 rs2 0 200 A G\n1 rs3 0 300 A G\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join(format!("{stem}.fam")),
+            "f1 s1 0 0 1 1.5\nf2 s2 0 0 2 -0.5\nf3 s3 0 0 1 2.0\nf4 s4 0 0 2 -9\n",
+        )
+        .unwrap();
+        bed
+    }
+
+    fn remove_plink_fixture(bed: &Path) {
+        for ext in ["bed", "bim", "fam"] {
+            let _ = std::fs::remove_file(bed.with_extension(ext));
+        }
+    }
+
+    #[test]
+    fn plink_bed_decodes_fixture_trio() {
+        let bed_path = write_plink_fixture("decode");
+        let bed = PlinkBed::open(&bed_path).unwrap();
+        assert_eq!(bed.samples(), 4);
+        assert_eq!(bed.variants(), 3);
+        assert_eq!(bed.variant_ids(), ["rs1", "rs2", "rs3"]);
+        assert_eq!(bed.phenotypes(), [1.5, -0.5, 2.0, 0.0]);
+        assert_eq!(bed.bytes_per_variant(), 1);
+
+        let mut codes = Vec::new();
+        bed.read_variant_codes(0, &mut codes).unwrap();
+        assert_eq!(codes, [0x78]);
+
+        let mut d = Vec::new();
+        bed.read_variant_dosages(0, -1.0, &mut d).unwrap();
+        assert_eq!(d, [2.0, 1.0, 0.0, -1.0]);
+        bed.read_variant_dosages(1, -1.0, &mut d).unwrap();
+        assert_eq!(d, [0.0, 0.0, 1.0, 2.0]);
+        bed.read_variant_dosages(2, -1.0, &mut d).unwrap();
+        assert_eq!(d, [1.0, 2.0, 2.0, 0.0]);
+
+        assert!(bed.read_variant_codes(3, &mut codes).is_err());
+        remove_plink_fixture(&bed_path);
+    }
+
+    #[test]
+    fn plink_load_builds_sparse_cohort() {
+        let bed_path = write_plink_fixture("load");
+        let cohort = load_plink(&bed_path, 0.0, 1.0).unwrap();
+        remove_plink_fixture(&bed_path);
+
+        assert_eq!(cohort.snp_names, ["rs1", "rs2", "rs3"]);
+        assert!(cohort.causal.is_empty() && cohort.effects.is_empty());
+        // Centered phenotype: mean of [1.5, -0.5, 2.0, 0.0] is 0.75.
+        assert_eq!(cohort.b, [0.75, -1.25, 1.25, -0.75]);
+        assert!((cohort.density - 7.0 / 12.0).abs() < 1e-12);
+
+        let DesignStorage::Sparse(csc) = &cohort.a else { panic!("expected sparse") };
+        assert_eq!(csc.rows(), 4);
+        assert_eq!(csc.cols(), 3);
+        assert_eq!(csc.col(0), (&[0usize, 1][..], &[2.0, 1.0][..]));
+        assert_eq!(csc.col(1), (&[2usize, 3][..], &[1.0, 2.0][..]));
+        assert_eq!(csc.col(2), (&[0usize, 1, 2][..], &[1.0, 2.0, 2.0][..]));
+    }
+
+    #[test]
+    fn plink_load_densifies_past_threshold() {
+        let bed_path = write_plink_fixture("densify");
+        // Density 7/12 exceeds a 0.25 threshold: the heuristic densifies.
+        let cohort = load_plink(&bed_path, 0.0, 0.25).unwrap();
+        remove_plink_fixture(&bed_path);
+        assert!(!cohort.a.is_sparse());
+        let a = cohort.a.as_ref();
+        assert_eq!(a.get(0, 0), 2.0);
+        assert_eq!(a.get(3, 1), 2.0);
+        assert_eq!(a.get(3, 2), 0.0);
+    }
+
+    #[test]
+    fn plink_open_rejects_malformed_filesets() {
+        // Bad magic.
+        let bed_path = write_plink_fixture("badmagic");
+        std::fs::write(&bed_path, [0x00, 0x1B, 0x01, 0x78, 0x2F, 0xC2]).unwrap();
+        assert!(PlinkBed::open(&bed_path).unwrap_err().contains("bad magic"));
+        // Individual-major mode byte.
+        std::fs::write(&bed_path, [0x6C, 0x1B, 0x00, 0x78, 0x2F, 0xC2]).unwrap();
+        assert!(PlinkBed::open(&bed_path).unwrap_err().contains("individual-major"));
+        // Truncated payload.
+        std::fs::write(&bed_path, [0x6C, 0x1B, 0x01, 0x78]).unwrap();
+        assert!(PlinkBed::open(&bed_path).unwrap_err().contains("file length"));
+        remove_plink_fixture(&bed_path);
     }
 }

@@ -1,23 +1,37 @@
-//! Storage-polymorphic design matrices: one dispatch point for dense and CSC.
+//! Storage-polymorphic design matrices: one dispatch point for dense, CSC,
+//! and out-of-core storage.
 //!
-//! [`DesignRef`] is a `Copy` borrowed view over either a dense [`Mat`] or a
-//! sparse [`CscMat`], exposing the unified serial kernel surface every solver
-//! consumes (`Aᵀy`, `A x`, support-restricted gathers, column dots/axpys,
-//! Gram blocks). [`DesignStorage`] is the owned counterpart that
-//! [`crate::api::Design`] and the screening path's column gathers hold.
+//! [`DesignRef`] is a `Copy` borrowed view over a dense [`Mat`], a sparse
+//! [`CscMat`], or an on-disk [`OocDesign`], exposing the unified serial
+//! kernel surface every solver consumes (`Aᵀy`, `A x`, support-restricted
+//! gathers, column dots/axpys, Gram blocks). [`DesignStorage`] is the owned
+//! counterpart that [`crate::api::Design`] and the screening path's column
+//! gathers hold.
 //!
 //! Dense arms delegate verbatim to the [`Mat`] reference kernels; sparse arms
 //! delegate to [`CscMat`]'s dense-bit-emulating kernels (see
 //! [`crate::linalg::sparse`]'s module docs for why the two storages produce
-//! **bitwise-identical** results). The sharded counterparts in
-//! [`crate::parallel::shard`] dispatch over `DesignRef` too, with shard plans
-//! that are pure functions of the *logical* shape (rows × cols), never of the
-//! storage — so a sparse and a dense copy of the same matrix also shard
-//! identically, which is what extends the bitwise guarantee to multi-thread
-//! fits.
+//! **bitwise-identical** results). Out-of-core arms decode the touched
+//! columns to exact dense `f64` panels and run the *same* dense [`blas`]
+//! kernels as the dense arms (see [`crate::linalg::ooc`]), which extends the
+//! bitwise guarantee to streamed designs at any cache budget. The sharded
+//! counterparts in [`crate::parallel::shard`] dispatch over `DesignRef` too,
+//! with shard plans that are pure functions of the *logical* shape (rows ×
+//! cols), never of the storage — so all three storages of the same matrix
+//! shard identically, which is what extends the bitwise guarantee to
+//! multi-thread fits.
+//!
+//! One deliberate asymmetry: [`DesignRef::gather_cols`] on an out-of-core
+//! design materializes the gathered sub-design **in core** (dense). Gathers
+//! are active-set-sized by construction, and an in-core survivor sub-design
+//! is what keeps the warm-workspace machinery (rank-1 factor edits,
+//! screened-chain retargeting) working unchanged on streamed cohorts.
+
+use std::sync::Arc;
 
 use crate::linalg::blas;
 use crate::linalg::matrix::Mat;
+use crate::linalg::ooc::OocDesign;
 use crate::linalg::sparse::CscMat;
 
 /// Borrowed storage-polymorphic view of a design matrix.
@@ -27,6 +41,8 @@ pub enum DesignRef<'a> {
     Dense(&'a Mat),
     /// Compressed-sparse-column storage.
     Sparse(&'a CscMat),
+    /// On-disk block-streamed storage with a bounded decoded-panel cache.
+    OutOfCore(&'a OocDesign),
 }
 
 impl<'a> From<&'a Mat> for DesignRef<'a> {
@@ -38,6 +54,12 @@ impl<'a> From<&'a Mat> for DesignRef<'a> {
 impl<'a> From<&'a CscMat> for DesignRef<'a> {
     fn from(a: &'a CscMat) -> Self {
         DesignRef::Sparse(a)
+    }
+}
+
+impl<'a> From<&'a OocDesign> for DesignRef<'a> {
+    fn from(a: &'a OocDesign) -> Self {
+        DesignRef::OutOfCore(a)
     }
 }
 
@@ -53,6 +75,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(a) => a.rows(),
             DesignRef::Sparse(a) => a.rows(),
+            DesignRef::OutOfCore(a) => a.rows(),
         }
     }
 
@@ -61,6 +84,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(a) => a.cols(),
             DesignRef::Sparse(a) => a.cols(),
+            DesignRef::OutOfCore(a) => a.cols(),
         }
     }
 
@@ -70,12 +94,18 @@ impl<'a> DesignRef<'a> {
         matches!(self, DesignRef::Sparse(_))
     }
 
+    /// Whether the underlying storage streams from disk.
+    #[inline]
+    pub fn is_out_of_core(self) -> bool {
+        matches!(self, DesignRef::OutOfCore(_))
+    }
+
     /// The dense matrix behind this view, if dense-backed.
     #[inline]
     pub fn as_dense(self) -> Option<&'a Mat> {
         match self {
             DesignRef::Dense(a) => Some(a),
-            DesignRef::Sparse(_) => None,
+            DesignRef::Sparse(_) | DesignRef::OutOfCore(_) => None,
         }
     }
 
@@ -83,28 +113,40 @@ impl<'a> DesignRef<'a> {
     #[inline]
     pub fn as_sparse(self) -> Option<&'a CscMat> {
         match self {
-            DesignRef::Dense(_) => None,
             DesignRef::Sparse(a) => Some(a),
+            DesignRef::Dense(_) | DesignRef::OutOfCore(_) => None,
+        }
+    }
+
+    /// The out-of-core handle behind this view, if disk-backed.
+    #[inline]
+    pub fn as_ooc(self) -> Option<&'a OocDesign> {
+        match self {
+            DesignRef::OutOfCore(a) => Some(a),
+            DesignRef::Dense(_) | DesignRef::Sparse(_) => None,
         }
     }
 
     /// The raw stored-value slice (dense: column-major data; sparse: stored
-    /// nonzeros). Used for workspace fingerprinting.
+    /// nonzeros; `None` for out-of-core storage, whose values live on disk).
+    /// Used for workspace fingerprinting and whole-design scans.
     #[inline]
-    pub fn values_slice(self) -> &'a [f64] {
+    pub fn values_slice(self) -> Option<&'a [f64]> {
         match self {
-            DesignRef::Dense(a) => a.as_slice(),
-            DesignRef::Sparse(a) => a.values(),
+            DesignRef::Dense(a) => Some(a.as_slice()),
+            DesignRef::Sparse(a) => Some(a.values()),
+            DesignRef::OutOfCore(_) => None,
         }
     }
 
-    /// Element access (row, col). O(1) dense, O(log nnz_j) sparse — tuning
-    /// and tests only, never a solver hot path.
+    /// Element access (row, col). O(1) dense, O(log nnz_j) sparse, one panel
+    /// fetch out-of-core — tuning and tests only, never a solver hot path.
     #[inline]
     pub fn get(self, i: usize, j: usize) -> f64 {
         match self {
             DesignRef::Dense(a) => a.get(i, j),
             DesignRef::Sparse(a) => a.get(i, j),
+            DesignRef::OutOfCore(a) => a.with_col(j, |c| c[i]),
         }
     }
 
@@ -114,6 +156,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(a) => blas::dot(a.col(j), y),
             DesignRef::Sparse(a) => a.col_dot(j, y),
+            DesignRef::OutOfCore(a) => a.with_col(j, |c| blas::dot(c, y)),
         }
     }
 
@@ -125,6 +168,14 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => blas::dot(m.col(a), m.col(b)),
             DesignRef::Sparse(m) => m.cols_dot(a, b),
+            DesignRef::OutOfCore(m) => {
+                // Fetch both panels up front (Arc-held, no lock while
+                // dotting); a and b may live in the same panel.
+                let (pa, at_a) = m.col_panel(a);
+                let (pb, at_b) = m.col_panel(b);
+                let rows = m.rows();
+                blas::dot(&pa[at_a..at_a + rows], &pb[at_b..at_b + rows])
+            }
         }
     }
 
@@ -134,6 +185,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(a) => blas::nrm2_sq(a.col(j)),
             DesignRef::Sparse(a) => a.col_nrm2_sq(j),
+            DesignRef::OutOfCore(a) => a.with_col(j, blas::nrm2_sq),
         }
     }
 
@@ -143,13 +195,14 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(a) => blas::axpy(alpha, a.col(j), out),
             DesignRef::Sparse(a) => a.col_axpy(alpha, j, out),
+            DesignRef::OutOfCore(a) => a.with_col(j, |c| blas::axpy(alpha, c, out)),
         }
     }
 
-    /// Iterate column `j` in ascending row order. The dense arm yields every
-    /// entry (zeros included); the sparse arm yields stored nonzeros only —
-    /// consumers that skip exact zeros (every current caller) see identical
-    /// streams.
+    /// Iterate column `j` in ascending row order. The dense and out-of-core
+    /// arms yield every entry (zeros included); the sparse arm yields stored
+    /// nonzeros only — consumers that skip exact zeros (every current
+    /// caller) see identical streams.
     #[inline]
     pub fn col_iter(self, j: usize) -> ColIter<'a> {
         match self {
@@ -157,6 +210,10 @@ impl<'a> DesignRef<'a> {
             DesignRef::Sparse(a) => {
                 let (rs, vs) = a.col(j);
                 ColIter::Sparse(rs.iter().zip(vs.iter()))
+            }
+            DesignRef::OutOfCore(a) => {
+                let (panel, at) = a.col_panel(j);
+                ColIter::Ooc { panel, at, rows: a.rows(), next: 0 }
             }
         }
     }
@@ -166,6 +223,13 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(a) => a.t_mul_vec_into(y, out),
             DesignRef::Sparse(a) => a.t_mul_vec_into(y, out),
+            DesignRef::OutOfCore(a) => {
+                assert_eq!(y.len(), a.rows());
+                assert_eq!(out.len(), a.cols());
+                for (j, slot) in out.iter_mut().enumerate() {
+                    *slot = a.with_col(j, |c| blas::dot(c, y));
+                }
+            }
         }
     }
 
@@ -181,6 +245,16 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(a) => a.mul_vec_into(x, out),
             DesignRef::Sparse(a) => a.mul_vec_into(x, out),
+            DesignRef::OutOfCore(a) => {
+                assert_eq!(x.len(), a.cols());
+                assert_eq!(out.len(), a.rows());
+                out.iter_mut().for_each(|o| *o = 0.0);
+                for (j, &xj) in x.iter().enumerate() {
+                    if xj != 0.0 {
+                        a.with_col(j, |c| blas::axpy(xj, c, out));
+                    }
+                }
+            }
         }
     }
 
@@ -196,6 +270,16 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(a) => a.mul_vec_support_into(x, support, out),
             DesignRef::Sparse(a) => a.mul_vec_support_into(x, support, out),
+            DesignRef::OutOfCore(a) => {
+                assert_eq!(out.len(), a.rows());
+                out.iter_mut().for_each(|o| *o = 0.0);
+                for &j in support {
+                    let xj = x[j];
+                    if xj != 0.0 {
+                        a.with_col(j, |c| blas::axpy(xj, c, out));
+                    }
+                }
+            }
         }
     }
 
@@ -204,7 +288,7 @@ impl<'a> DesignRef<'a> {
     pub fn gram_of_cols(self, idx: &[usize], ridge: f64) -> Mat {
         match self {
             DesignRef::Dense(a) => a.gram_of_cols(idx, ridge),
-            DesignRef::Sparse(_) => {
+            DesignRef::Sparse(_) | DesignRef::OutOfCore(_) => {
                 let r = idx.len();
                 let mut g = Mat::zeros(r, r);
                 for a in 0..r {
@@ -221,22 +305,46 @@ impl<'a> DesignRef<'a> {
         }
     }
 
-    /// Gather columns `idx` into an owned design of the same storage kind.
+    /// Gather columns `idx` into an owned design. Dense and sparse sources
+    /// preserve their storage kind; out-of-core sources materialize a
+    /// **dense in-core** sub-design (gathers are active-set-sized, and an
+    /// in-core copy keeps rank-1 workspace edits working on streamed
+    /// cohorts).
     pub fn gather_cols(self, idx: &[usize]) -> DesignStorage {
         match self {
             DesignRef::Dense(a) => DesignStorage::Dense(a.gather_cols(idx)),
             DesignRef::Sparse(a) => DesignStorage::Sparse(a.gather_cols(idx)),
+            DesignRef::OutOfCore(a) => {
+                let m = a.rows();
+                let mut out = Mat::zeros(m, idx.len());
+                for (k, &j) in idx.iter().enumerate() {
+                    a.with_col(j, |c| out.col_mut(k).copy_from_slice(c));
+                }
+                DesignStorage::Dense(out)
+            }
         }
     }
 }
 
-/// Ascending-row column iterator over either storage (see
+/// Ascending-row column iterator over any storage (see
 /// [`DesignRef::col_iter`]).
 pub enum ColIter<'a> {
     /// Dense: every row, zeros included.
     Dense(std::iter::Enumerate<std::slice::Iter<'a, f64>>),
     /// Sparse: stored nonzeros only.
     Sparse(std::iter::Zip<std::slice::Iter<'a, usize>, std::slice::Iter<'a, f64>>),
+    /// Out-of-core: every row of a decoded panel, zeros included. Owns the
+    /// panel `Arc` so the column stays alive for the iterator's lifetime.
+    Ooc {
+        /// Decoded panel holding the column.
+        panel: Arc<Vec<f64>>,
+        /// Offset of the column within the panel.
+        at: usize,
+        /// Logical row count.
+        rows: usize,
+        /// Next row to yield.
+        next: usize,
+    },
 }
 
 impl<'a> Iterator for ColIter<'a> {
@@ -247,6 +355,14 @@ impl<'a> Iterator for ColIter<'a> {
         match self {
             ColIter::Dense(it) => it.next().map(|(i, &v)| (i, v)),
             ColIter::Sparse(it) => it.next().map(|(&i, &v)| (i, v)),
+            ColIter::Ooc { panel, at, rows, next } => {
+                if *next >= *rows {
+                    return None;
+                }
+                let i = *next;
+                *next += 1;
+                Some((i, panel[*at + i]))
+            }
         }
     }
 }
@@ -259,6 +375,9 @@ pub enum DesignStorage {
     Dense(Mat),
     /// Compressed-sparse-column storage.
     Sparse(CscMat),
+    /// On-disk block-streamed storage (a cheap shared handle; clones share
+    /// the panel cache and streaming counters).
+    OutOfCore(OocDesign),
 }
 
 impl DesignStorage {
@@ -268,6 +387,7 @@ impl DesignStorage {
         match self {
             DesignStorage::Dense(a) => DesignRef::Dense(a),
             DesignStorage::Sparse(a) => DesignRef::Sparse(a),
+            DesignStorage::OutOfCore(a) => DesignRef::OutOfCore(a),
         }
     }
 
@@ -286,6 +406,12 @@ impl DesignStorage {
     pub fn is_sparse(&self) -> bool {
         matches!(self, DesignStorage::Sparse(_))
     }
+
+    /// Whether the storage streams from disk.
+    #[inline]
+    pub fn is_out_of_core(&self) -> bool {
+        matches!(self, DesignStorage::OutOfCore(_))
+    }
 }
 
 impl From<Mat> for DesignStorage {
@@ -300,9 +426,16 @@ impl From<CscMat> for DesignStorage {
     }
 }
 
+impl From<OocDesign> for DesignStorage {
+    fn from(a: OocDesign) -> Self {
+        DesignStorage::OutOfCore(a)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::ooc;
     use crate::rng::Xoshiro256pp;
 
     fn pair(m: usize, n: usize, seed: u64) -> (Mat, CscMat) {
@@ -318,51 +451,94 @@ mod tests {
         (a, s)
     }
 
+    fn ooc_copy(a: &Mat, tag: &str, block_cols: usize, cache_bytes: usize) -> OocDesign {
+        let mut path = std::env::temp_dir();
+        path.push(format!("ssnal_design_test_{tag}_{}.ooc", std::process::id()));
+        ooc::write_design_f64(&path, DesignRef::from(a), block_cols).expect("write ooc");
+        let d = OocDesign::open_with_cache(&path, cache_bytes).expect("open ooc");
+        std::fs::remove_file(&path).ok();
+        d
+    }
+
     #[test]
     fn dispatch_matches_across_storages_bitwise() {
         let (a, s) = pair(27, 9, 3);
-        let (da, ds) = (DesignRef::from(&a), DesignRef::from(&s));
+        let o = ooc_copy(&a, "dispatch", 4, 1 << 20);
+        let (da, ds, do_) = (DesignRef::from(&a), DesignRef::from(&s), DesignRef::from(&o));
         let mut rng = Xoshiro256pp::seed_from_u64(7);
         let y: Vec<f64> = (0..27).map(|_| rng.next_gaussian()).collect();
         let x: Vec<f64> = (0..9).map(|_| rng.next_gaussian()).collect();
 
         assert_eq!(da.t_mul_vec(&y), ds.t_mul_vec(&y));
+        assert_eq!(da.t_mul_vec(&y), do_.t_mul_vec(&y));
         assert_eq!(da.mul_vec(&x), ds.mul_vec(&x));
+        assert_eq!(da.mul_vec(&x), do_.mul_vec(&x));
         for j in 0..9 {
             assert_eq!(da.col_dot(j, &y).to_bits(), ds.col_dot(j, &y).to_bits());
+            assert_eq!(da.col_dot(j, &y).to_bits(), do_.col_dot(j, &y).to_bits());
             assert_eq!(da.col_nrm2_sq(j).to_bits(), ds.col_nrm2_sq(j).to_bits());
+            assert_eq!(da.col_nrm2_sq(j).to_bits(), do_.col_nrm2_sq(j).to_bits());
         }
         let idx = [1usize, 4, 6];
         let ga = da.gram_of_cols(&idx, 0.25);
         let gs = ds.gram_of_cols(&idx, 0.25);
+        let go = do_.gram_of_cols(&idx, 0.25);
         assert_eq!(ga.as_slice(), gs.as_slice());
+        assert_eq!(ga.as_slice(), go.as_slice());
+    }
+
+    #[test]
+    fn ooc_dispatch_survives_eviction_pressure() {
+        // A cache that holds a single 27x2 panel forces constant re-reads;
+        // results must not change by a bit.
+        let (a, _) = pair(27, 9, 3);
+        let o = ooc_copy(&a, "evict", 2, 27 * 2 * 8);
+        let (da, do_) = (DesignRef::from(&a), DesignRef::from(&o));
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let y: Vec<f64> = (0..27).map(|_| rng.next_gaussian()).collect();
+        for _ in 0..3 {
+            assert_eq!(da.t_mul_vec(&y), do_.t_mul_vec(&y));
+            assert!(o.resident_bytes() <= o.cache_budget());
+        }
+        assert!(o.counters().cache_misses > o.header().blocks() as u64);
     }
 
     #[test]
     fn col_iter_agrees_on_nonzeros() {
         let (a, s) = pair(15, 4, 9);
+        let o = ooc_copy(&a, "col_iter", 2, 1 << 20);
         for j in 0..4 {
             let dense: Vec<(usize, f64)> = DesignRef::from(&a)
                 .col_iter(j)
                 .filter(|(_, v)| *v != 0.0)
                 .collect();
             let sparse: Vec<(usize, f64)> = DesignRef::from(&s).col_iter(j).collect();
+            let ooc: Vec<(usize, f64)> = DesignRef::from(&o)
+                .col_iter(j)
+                .filter(|(_, v)| *v != 0.0)
+                .collect();
             assert_eq!(dense, sparse, "j={j}");
+            assert_eq!(dense, ooc, "j={j}");
         }
     }
 
     #[test]
     fn gather_preserves_storage_kind() {
         let (a, s) = pair(12, 6, 21);
+        let o = ooc_copy(&a, "gather", 3, 1 << 20);
         let idx = [5usize, 0, 3];
         let ga = DesignRef::from(&a).gather_cols(&idx);
         let gs = DesignRef::from(&s).gather_cols(&idx);
+        let go = DesignRef::from(&o).gather_cols(&idx);
         assert!(!ga.is_sparse());
         assert!(gs.is_sparse());
+        // Out-of-core gathers materialize dense in-core sub-designs.
+        assert!(!go.is_sparse() && !go.is_out_of_core());
         for (k, &j) in idx.iter().enumerate() {
             for i in 0..12 {
                 assert_eq!(ga.as_ref().get(i, k), a.get(i, j));
                 assert_eq!(gs.as_ref().get(i, k), a.get(i, j));
+                assert_eq!(go.as_ref().get(i, k), a.get(i, j));
             }
         }
     }

@@ -2,8 +2,10 @@
 //! ships no BLAS/LAPACK bindings).
 //!
 //! Everything SsNAL-EN and its baselines need: a column-major [`matrix::Mat`],
-//! a CSC sparse matrix with bitwise-dense-equal kernels ([`sparse::CscMat`])
-//! and the storage-polymorphic [`design::DesignRef`]/[`design::DesignStorage`]
+//! a CSC sparse matrix with bitwise-dense-equal kernels ([`sparse::CscMat`]),
+//! an out-of-core block-streamed design tier with a bounded panel cache
+//! ([`ooc::OocDesign`]), and the storage-polymorphic
+//! [`design::DesignRef`]/[`design::DesignStorage`]
 //! views the solvers dispatch over, level-1 kernels tuned for the solver's
 //! streaming access patterns ([`blas`]), [`chol::Cholesky`] for the
 //! direct/Woodbury Newton strategies, matrix-free [`cg`] for the
@@ -18,6 +20,7 @@ pub mod chol;
 pub mod design;
 pub mod lstsq;
 pub mod matrix;
+pub mod ooc;
 pub mod sparse;
 pub mod workspace;
 
@@ -25,6 +28,7 @@ pub use cg::{solve_cg, solve_cg_with, CgResult};
 pub use chol::{Cholesky, NotPositiveDefinite};
 pub use design::{DesignRef, DesignStorage};
 pub use matrix::Mat;
+pub use ooc::{OocCounters, OocDesign, OocEncoding, OocHeader, OocWriter};
 pub use sparse::CscMat;
 pub use workspace::{
     design_fingerprint, DesignFingerprint, NewtonWorkspace, ShardScratch, WorkspaceStats,

@@ -1,0 +1,831 @@
+//! Out-of-core design storage: block-streamed column I/O with a bounded
+//! panel cache.
+//!
+//! [`OocDesign`] is the third storage tier behind
+//! [`crate::linalg::DesignRef`]: a design matrix that lives on disk in a
+//! fixed binary layout (64-byte header + column-major payload) and is
+//! streamed through a bounded LRU cache of *decoded column panels*. Two
+//! payload encodings are supported:
+//!
+//! * **f64** — each column is `rows` little-endian `f64`s, byte-for-byte the
+//!   column-major layout of [`Mat`];
+//! * **2-bit PLINK codes** — each column is `ceil(rows/4)` bytes of PLINK
+//!   1.9 genotype codes (LSB-first, sample `s` in byte `s/4` at bit
+//!   `2·(s%4)`), decoded on read to `{0.0, 1.0, 2.0}` dosages (code `01` =
+//!   missing maps to the header's `missing_fill`).
+//!
+//! # Bitwise contract
+//!
+//! The in-core sparse tier earns bitwise equality with dense by *emulating*
+//! the dense reduction order (see [`crate::linalg::sparse`]). The out-of-core
+//! tier earns it more directly: every kernel decodes the touched columns to
+//! exact dense `f64` slices and then runs the *identical* dense [`blas`]
+//! kernels the `Dense` arm runs. Decoding is deterministic (pure function of
+//! the on-disk bytes), caching only changes *when* a panel is decoded, never
+//! *what* it decodes to, and shard plans remain pure functions of the logical
+//! shape — so streamed results are bitwise-identical to in-core results at
+//! every `SSNAL_THREADS` budget and every cache budget, including under
+//! eviction pressure.
+//!
+//! # Cache contract
+//!
+//! The panel cache is an LRU keyed by block index with a hard byte budget:
+//! `resident_bytes() <= cache_budget()` at all times. A panel whose decoded
+//! size alone exceeds the budget is served but never inserted (pure
+//! streaming); otherwise LRU panels are evicted until the newcomer fits.
+//! Hit/miss/bytes-read counters are process-wide atomics on the shared
+//! handle, surfaced through `WorkspaceStats` → `StatsSnapshot` →
+//! `GET /v1/stats`.
+//!
+//! Handles are cheap to clone (an `Arc`); clones share the cache and the
+//! counters, which is what you want — they describe the same on-disk design.
+
+use std::cell::RefCell;
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::linalg::matrix::Mat;
+
+/// Magic bytes opening every SSNAL out-of-core design file.
+pub const OOC_MAGIC: [u8; 8] = *b"SSNALOC1";
+/// Current format version.
+pub const OOC_VERSION: u32 = 1;
+/// Header size in bytes; the payload starts at this offset.
+pub const OOC_HEADER_BYTES: u64 = 64;
+/// Default decoded-panel cache budget (bytes) when none is configured.
+pub const DEFAULT_CACHE_BYTES: usize = 256 << 20;
+/// Default columns per cached panel when none is configured at write time.
+pub const DEFAULT_BLOCK_COLS: usize = 256;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Payload encoding of an out-of-core design file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OocEncoding {
+    /// Little-endian `f64` column-major payload.
+    F64,
+    /// 2-bit PLINK 1.9 genotype codes, decoded to `{0,1,2}` dosages.
+    Plink2Bit,
+}
+
+impl OocEncoding {
+    fn tag(self) -> u32 {
+        match self {
+            OocEncoding::F64 => 0,
+            OocEncoding::Plink2Bit => 1,
+        }
+    }
+
+    fn from_tag(tag: u32) -> io::Result<OocEncoding> {
+        match tag {
+            0 => Ok(OocEncoding::F64),
+            1 => Ok(OocEncoding::Plink2Bit),
+            t => Err(bad_format(format!("unknown encoding tag {t}"))),
+        }
+    }
+}
+
+/// Parsed 64-byte header of an out-of-core design file.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OocHeader {
+    /// Payload encoding.
+    pub encoding: OocEncoding,
+    /// Logical row count (samples).
+    pub rows: usize,
+    /// Logical column count (features / variants).
+    pub cols: usize,
+    /// Columns per cached panel (cache granularity, not a layout parameter).
+    pub block_cols: usize,
+    /// Dosage substituted for PLINK missing genotypes at decode time.
+    pub missing_fill: f64,
+    /// FNV-1a hash of the encoded payload, computed at write time; the
+    /// content half of header-based fingerprints (no body re-scan needed).
+    pub content_hash: u64,
+}
+
+impl OocHeader {
+    /// Encoded bytes per column for this header's encoding.
+    pub fn bytes_per_col(&self) -> usize {
+        match self.encoding {
+            OocEncoding::F64 => self.rows * 8,
+            OocEncoding::Plink2Bit => self.rows.div_ceil(4),
+        }
+    }
+
+    /// Number of column blocks (`ceil(cols / block_cols)`).
+    pub fn blocks(&self) -> usize {
+        self.cols.div_ceil(self.block_cols)
+    }
+
+    /// FNV-1a fold of every header field — the design-identity half of
+    /// workspace and serve fingerprints.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        let mut fold = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(FNV_PRIME);
+        };
+        fold(u64::from(self.encoding.tag()));
+        fold(self.rows as u64);
+        fold(self.cols as u64);
+        fold(self.block_cols as u64);
+        fold(self.missing_fill.to_bits());
+        fold(self.content_hash);
+        h
+    }
+
+    fn to_bytes(self) -> [u8; OOC_HEADER_BYTES as usize] {
+        let mut out = [0u8; OOC_HEADER_BYTES as usize];
+        out[0..8].copy_from_slice(&OOC_MAGIC);
+        out[8..12].copy_from_slice(&OOC_VERSION.to_le_bytes());
+        out[12..16].copy_from_slice(&self.encoding.tag().to_le_bytes());
+        out[16..24].copy_from_slice(&(self.rows as u64).to_le_bytes());
+        out[24..32].copy_from_slice(&(self.cols as u64).to_le_bytes());
+        out[32..40].copy_from_slice(&(self.block_cols as u64).to_le_bytes());
+        out[40..48].copy_from_slice(&self.missing_fill.to_bits().to_le_bytes());
+        out[48..56].copy_from_slice(&self.content_hash.to_le_bytes());
+        // bytes 56..64 reserved, zero
+        out
+    }
+
+    fn from_bytes(raw: &[u8; OOC_HEADER_BYTES as usize]) -> io::Result<OocHeader> {
+        if raw[0..8] != OOC_MAGIC {
+            return Err(bad_format("bad magic (not an SSNAL OOC design file)".into()));
+        }
+        let version = u32::from_le_bytes(raw[8..12].try_into().unwrap());
+        if version != OOC_VERSION {
+            return Err(bad_format(format!("unsupported format version {version}")));
+        }
+        let encoding = OocEncoding::from_tag(u32::from_le_bytes(raw[12..16].try_into().unwrap()))?;
+        let rows = u64::from_le_bytes(raw[16..24].try_into().unwrap()) as usize;
+        let cols = u64::from_le_bytes(raw[24..32].try_into().unwrap()) as usize;
+        let block_cols = u64::from_le_bytes(raw[32..40].try_into().unwrap()) as usize;
+        let missing_fill = f64::from_bits(u64::from_le_bytes(raw[40..48].try_into().unwrap()));
+        let content_hash = u64::from_le_bytes(raw[48..56].try_into().unwrap());
+        if rows == 0 || cols == 0 {
+            return Err(bad_format(format!("degenerate shape {rows}x{cols}")));
+        }
+        if block_cols == 0 {
+            return Err(bad_format("block_cols must be positive".into()));
+        }
+        Ok(OocHeader { encoding, rows, cols, block_cols, missing_fill, content_hash })
+    }
+}
+
+fn bad_format(reason: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("ooc design: {reason}"))
+}
+
+/// Decode one packed 2-bit PLINK column into `{0,1,2}` / `missing_fill`
+/// dosages. Code mapping (PLINK 1.9 `.bed`): `00` = hom A1 → 2.0, `01` =
+/// missing → `missing_fill`, `10` = het → 1.0, `11` = hom A2 → 0.0.
+pub fn decode_plink_col(codes: &[u8], rows: usize, missing_fill: f64, out: &mut [f64]) {
+    debug_assert!(codes.len() >= rows.div_ceil(4));
+    debug_assert!(out.len() >= rows);
+    for (i, slot) in out.iter_mut().enumerate().take(rows) {
+        let code = (codes[i / 4] >> (2 * (i % 4))) & 0b11;
+        *slot = match code {
+            0b00 => 2.0,
+            0b01 => missing_fill,
+            0b10 => 1.0,
+            _ => 0.0,
+        };
+    }
+}
+
+/// Pack one column of `{0,1,2}` dosages into 2-bit PLINK codes (the inverse
+/// of [`decode_plink_col`] for non-missing data). Returns an error string on
+/// any value outside `{0,1,2}` — the 2-bit encoding is for raw dosage
+/// matrices only.
+pub fn encode_plink_col(col: &[f64], out: &mut Vec<u8>) -> Result<(), String> {
+    out.clear();
+    out.resize(col.len().div_ceil(4), 0u8);
+    for (i, &v) in col.iter().enumerate() {
+        let code: u8 = if v == 2.0 {
+            0b00
+        } else if v == 1.0 {
+            0b10
+        } else if v == 0.0 {
+            0b11
+        } else {
+            return Err(format!("value {v} at row {i} is not a {{0,1,2}} dosage"));
+        };
+        out[i / 4] |= code << (2 * (i % 4));
+    }
+    Ok(())
+}
+
+/// Streaming writer for the on-disk block format: create, push columns in
+/// order, `finish()` (which stamps the header, content hash included).
+pub struct OocWriter {
+    file: BufWriter<File>,
+    header: OocHeader,
+    cols_written: usize,
+    hash: u64,
+    scratch: Vec<u8>,
+}
+
+impl OocWriter {
+    /// Create `path` (truncating) for a `rows × cols` design.
+    pub fn create(
+        path: &Path,
+        rows: usize,
+        cols: usize,
+        block_cols: usize,
+        encoding: OocEncoding,
+        missing_fill: f64,
+    ) -> io::Result<OocWriter> {
+        if rows == 0 || cols == 0 {
+            return Err(bad_format(format!("degenerate shape {rows}x{cols}")));
+        }
+        let mut file = BufWriter::new(
+            OpenOptions::new().write(true).create(true).truncate(true).open(path)?,
+        );
+        file.seek(SeekFrom::Start(OOC_HEADER_BYTES))?;
+        Ok(OocWriter {
+            file,
+            header: OocHeader {
+                encoding,
+                rows,
+                cols,
+                block_cols: block_cols.max(1),
+                missing_fill,
+                content_hash: 0,
+            },
+            cols_written: 0,
+            hash: FNV_OFFSET,
+            scratch: Vec::new(),
+        })
+    }
+
+    fn push_bytes(&mut self, raw: &[u8]) -> io::Result<()> {
+        if self.cols_written >= self.header.cols {
+            return Err(bad_format("more columns pushed than declared".into()));
+        }
+        for &b in raw {
+            self.hash ^= u64::from(b);
+            self.hash = self.hash.wrapping_mul(FNV_PRIME);
+        }
+        self.file.write_all(raw)?;
+        self.cols_written += 1;
+        Ok(())
+    }
+
+    /// Append one dense column (f64 encoding only).
+    pub fn push_col_f64(&mut self, col: &[f64]) -> io::Result<()> {
+        if self.header.encoding != OocEncoding::F64 {
+            return Err(bad_format("push_col_f64 on a non-f64 file".into()));
+        }
+        if col.len() != self.header.rows {
+            return Err(bad_format(format!(
+                "column length {} != rows {}",
+                col.len(),
+                self.header.rows
+            )));
+        }
+        self.scratch.clear();
+        self.scratch.reserve(col.len() * 8);
+        for &v in col {
+            self.scratch.extend_from_slice(&v.to_le_bytes());
+        }
+        let raw = std::mem::take(&mut self.scratch);
+        let res = self.push_bytes(&raw);
+        self.scratch = raw;
+        res
+    }
+
+    /// Append one packed 2-bit column (`ceil(rows/4)` bytes, PLINK codes).
+    pub fn push_col_codes(&mut self, codes: &[u8]) -> io::Result<()> {
+        if self.header.encoding != OocEncoding::Plink2Bit {
+            return Err(bad_format("push_col_codes on a non-2bit file".into()));
+        }
+        if codes.len() != self.header.rows.div_ceil(4) {
+            return Err(bad_format(format!(
+                "packed column length {} != ceil(rows/4) = {}",
+                codes.len(),
+                self.header.rows.div_ceil(4)
+            )));
+        }
+        let raw = codes.to_vec();
+        self.push_bytes(&raw)
+    }
+
+    /// Flush the payload and stamp the header. Errors if fewer columns were
+    /// pushed than declared.
+    pub fn finish(mut self) -> io::Result<OocHeader> {
+        if self.cols_written != self.header.cols {
+            return Err(bad_format(format!(
+                "{} columns pushed, {} declared",
+                self.cols_written, self.header.cols
+            )));
+        }
+        self.header.content_hash = self.hash;
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.write_all(&self.header.to_bytes())?;
+        self.file.flush()?;
+        Ok(self.header)
+    }
+}
+
+/// Write any in-core design to `path` with the f64 encoding. Columns are
+/// densified through the storage-polymorphic column iterator, so dense and
+/// CSC sources produce byte-identical files for equal logical matrices.
+pub fn write_design_f64(
+    path: &Path,
+    a: crate::linalg::DesignRef<'_>,
+    block_cols: usize,
+) -> io::Result<OocHeader> {
+    let (m, n) = (a.rows(), a.cols());
+    let mut w = OocWriter::create(path, m, n, block_cols, OocEncoding::F64, 0.0)?;
+    let mut col = vec![0.0; m];
+    for j in 0..n {
+        col.iter_mut().for_each(|v| *v = 0.0);
+        for (i, v) in a.col_iter(j) {
+            col[i] = v;
+        }
+        w.push_col_f64(&col)?;
+    }
+    w.finish()
+}
+
+/// Write a `{0,1,2}`-valued in-core design (raw dosages) to `path` with the
+/// 2-bit PLINK encoding. Errors on any value outside `{0,1,2}`.
+pub fn write_design_plink2bit(
+    path: &Path,
+    a: crate::linalg::DesignRef<'_>,
+    block_cols: usize,
+    missing_fill: f64,
+) -> io::Result<OocHeader> {
+    let (m, n) = (a.rows(), a.cols());
+    let mut w = OocWriter::create(path, m, n, block_cols, OocEncoding::Plink2Bit, missing_fill)?;
+    let mut col = vec![0.0; m];
+    let mut packed = Vec::new();
+    for j in 0..n {
+        col.iter_mut().for_each(|v| *v = 0.0);
+        for (i, v) in a.col_iter(j) {
+            col[i] = v;
+        }
+        encode_plink_col(&col, &mut packed)
+            .map_err(|e| bad_format(format!("column {j}: {e}")))?;
+        w.push_col_codes(&packed)?;
+    }
+    w.finish()
+}
+
+/// Point-in-time copy of the shared streaming counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OocCounters {
+    /// Panel lookups served from the resident cache.
+    pub cache_hits: u64,
+    /// Panel lookups that went to disk (read + decode).
+    pub cache_misses: u64,
+    /// Encoded bytes read from the file (payload only, header excluded).
+    pub bytes_read: u64,
+}
+
+struct Lru {
+    /// `(block index, decoded panel)` in LRU order — front oldest, back MRU.
+    panels: Vec<(usize, Arc<Vec<f64>>)>,
+    resident_bytes: usize,
+}
+
+struct Inner {
+    file: File,
+    path: PathBuf,
+    header: OocHeader,
+    budget: usize,
+    cache: Mutex<Lru>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes_read: AtomicU64,
+}
+
+impl std::fmt::Debug for Inner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OocDesign")
+            .field("path", &self.path)
+            .field("header", &self.header)
+            .field("budget", &self.budget)
+            .finish()
+    }
+}
+
+/// Shared handle to an on-disk design: parsed header, positioned-read file
+/// handle, bounded LRU panel cache, streaming counters. See the module docs
+/// for the bitwise and cache contracts.
+#[derive(Clone, Debug)]
+pub struct OocDesign {
+    inner: Arc<Inner>,
+}
+
+thread_local! {
+    /// Per-thread encoded-read scratch so concurrent shard jobs never share
+    /// a decode buffer (decoded panels themselves are immutable `Arc`s).
+    static READ_SCRATCH: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Positioned exact read (shared with the PLINK `.bed` reader in
+/// [`crate::data::snp`]).
+pub(crate) fn read_exact_at(file: &File, buf: &mut [u8], offset: u64) -> io::Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.read_exact_at(buf, offset)
+    }
+    #[cfg(not(unix))]
+    {
+        // Fallback for non-unix targets: a cloned handle shares the cursor,
+        // so serialize through a fresh seek each call (correct, slower).
+        let mut f = file.try_clone()?;
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)
+    }
+}
+
+impl OocDesign {
+    /// Open `path` with the default cache budget.
+    pub fn open(path: &Path) -> io::Result<OocDesign> {
+        OocDesign::open_with_cache(path, DEFAULT_CACHE_BYTES)
+    }
+
+    /// Open `path` with an explicit decoded-panel cache budget in bytes.
+    pub fn open_with_cache(path: &Path, cache_bytes: usize) -> io::Result<OocDesign> {
+        let file = File::open(path)?;
+        let mut raw = [0u8; OOC_HEADER_BYTES as usize];
+        read_exact_at(&file, &mut raw, 0)?;
+        let header = OocHeader::from_bytes(&raw)?;
+        let expect = OOC_HEADER_BYTES + (header.cols * header.bytes_per_col()) as u64;
+        let actual = file.metadata()?.len();
+        if actual != expect {
+            return Err(bad_format(format!(
+                "file length {actual} != expected {expect} for {}x{} payload",
+                header.rows, header.cols
+            )));
+        }
+        Ok(OocDesign {
+            inner: Arc::new(Inner {
+                file,
+                path: path.to_path_buf(),
+                header,
+                budget: cache_bytes,
+                cache: Mutex::new(Lru { panels: Vec::new(), resident_bytes: 0 }),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                bytes_read: AtomicU64::new(0),
+            }),
+        })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.inner.header.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.inner.header.cols
+    }
+
+    /// The parsed file header.
+    pub fn header(&self) -> &OocHeader {
+        &self.inner.header
+    }
+
+    /// Path this design was opened from.
+    pub fn path(&self) -> &Path {
+        &self.inner.path
+    }
+
+    /// Configured decoded-panel cache budget in bytes.
+    pub fn cache_budget(&self) -> usize {
+        self.inner.budget
+    }
+
+    /// Identity pointer for workspace fingerprinting: stable across clones
+    /// of the same handle (they share one `Inner`).
+    pub fn identity_ptr(&self) -> usize {
+        Arc::as_ptr(&self.inner) as usize
+    }
+
+    /// Current copy of the shared streaming counters.
+    pub fn counters(&self) -> OocCounters {
+        OocCounters {
+            cache_hits: self.inner.hits.load(Ordering::Relaxed),
+            cache_misses: self.inner.misses.load(Ordering::Relaxed),
+            bytes_read: self.inner.bytes_read.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero the shared streaming counters (bench cold/warm phases).
+    pub fn reset_counters(&self) {
+        self.inner.hits.store(0, Ordering::Relaxed);
+        self.inner.misses.store(0, Ordering::Relaxed);
+        self.inner.bytes_read.store(0, Ordering::Relaxed);
+    }
+
+    /// Bytes of decoded panels currently resident. Invariant:
+    /// `resident_bytes() <= cache_budget()` at all times.
+    pub fn resident_bytes(&self) -> usize {
+        lock_cache(&self.inner.cache).resident_bytes
+    }
+
+    /// Drop every resident panel (bench cold phases on a shared handle).
+    pub fn evict_all(&self) {
+        let mut lru = lock_cache(&self.inner.cache);
+        lru.panels.clear();
+        lru.resident_bytes = 0;
+    }
+
+    fn lazy_panel(&self, blk: usize) -> Arc<Vec<f64>> {
+        // Probe under the lock; never hold it across I/O or decode.
+        {
+            let mut lru = lock_cache(&self.inner.cache);
+            if let Some(pos) = lru.panels.iter().position(|(b, _)| *b == blk) {
+                let entry = lru.panels.remove(pos);
+                let panel = Arc::clone(&entry.1);
+                lru.panels.push(entry);
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                return panel;
+            }
+        }
+        self.inner.misses.fetch_add(1, Ordering::Relaxed);
+        let panel = Arc::new(self.read_decode_block(blk));
+        let panel_bytes = panel.len() * 8;
+        let mut lru = lock_cache(&self.inner.cache);
+        // A racing thread may have inserted the same block while we read;
+        // keep theirs. A panel larger than the whole budget is served but
+        // never cached, preserving the resident <= budget invariant.
+        if panel_bytes <= self.inner.budget && !lru.panels.iter().any(|(b, _)| *b == blk) {
+            while lru.resident_bytes + panel_bytes > self.inner.budget {
+                let (_, old) = lru.panels.remove(0);
+                lru.resident_bytes -= old.len() * 8;
+            }
+            lru.resident_bytes += panel_bytes;
+            lru.panels.push((blk, Arc::clone(&panel)));
+        }
+        panel
+    }
+
+    fn read_decode_block(&self, blk: usize) -> Vec<f64> {
+        let h = &self.inner.header;
+        let start = blk * h.block_cols;
+        let bcols = h.block_cols.min(h.cols - start);
+        let bpc = h.bytes_per_col();
+        let offset = OOC_HEADER_BYTES + (start * bpc) as u64;
+        let nbytes = bcols * bpc;
+        READ_SCRATCH.with(|scratch| {
+            let mut buf = scratch.borrow_mut();
+            buf.clear();
+            buf.resize(nbytes, 0u8);
+            // Reads can only fail on truncation-after-open or hardware
+            // faults; lengths were validated at open, so treat failure as
+            // fatal rather than threading io::Result through every kernel.
+            read_exact_at(&self.inner.file, &mut buf, offset).unwrap_or_else(|e| {
+                panic!("ooc design read failed at block {blk} ({}): {e}", self.inner.path.display())
+            });
+            self.inner.bytes_read.fetch_add(nbytes as u64, Ordering::Relaxed);
+            let mut panel = vec![0.0; h.rows * bcols];
+            match h.encoding {
+                OocEncoding::F64 => {
+                    for (dst, src) in panel.iter_mut().zip(buf.chunks_exact(8)) {
+                        *dst = f64::from_le_bytes(src.try_into().unwrap());
+                    }
+                }
+                OocEncoding::Plink2Bit => {
+                    for c in 0..bcols {
+                        decode_plink_col(
+                            &buf[c * bpc..(c + 1) * bpc],
+                            h.rows,
+                            h.missing_fill,
+                            &mut panel[c * h.rows..(c + 1) * h.rows],
+                        );
+                    }
+                }
+            }
+            panel
+        })
+    }
+
+    /// Fetch the decoded panel holding column `j` and return `(panel, offset
+    /// of column j within it)`. The panel stays alive as long as the `Arc`.
+    pub fn col_panel(&self, j: usize) -> (Arc<Vec<f64>>, usize) {
+        debug_assert!(j < self.cols());
+        let blk = j / self.inner.header.block_cols;
+        let panel = self.lazy_panel(blk);
+        let within = j - blk * self.inner.header.block_cols;
+        (panel, within * self.inner.header.rows)
+    }
+
+    /// Run `f` over the decoded dense column `j`. All storage-polymorphic
+    /// kernels route through this, then run the same dense `blas` kernels as
+    /// the `Dense` arm — the bitwise contract in one place.
+    #[inline]
+    pub fn with_col<R>(&self, j: usize, f: impl FnOnce(&[f64]) -> R) -> R {
+        let (panel, at) = self.col_panel(j);
+        f(&panel[at..at + self.rows()])
+    }
+
+    /// Materialize the full design in core (tests and small sub-designs).
+    pub fn to_dense(&self) -> Mat {
+        let (m, n) = (self.rows(), self.cols());
+        let mut data = vec![0.0; m * n];
+        for j in 0..n {
+            self.with_col(j, |c| data[j * m..(j + 1) * m].copy_from_slice(c));
+        }
+        Mat::from_col_major(m, n, data)
+    }
+}
+
+fn lock_cache(m: &Mutex<Lru>) -> std::sync::MutexGuard<'_, Lru> {
+    // The cache holds immutable decoded panels and byte accounting only; a
+    // panic mid-update cannot leave torn panels, so recover from poison.
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DesignRef;
+    use crate::rng::Xoshiro256pp;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("ssnal_ooc_test_{tag}_{}.ooc", std::process::id()));
+        p
+    }
+
+    fn random_mat(m: usize, n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Mat::from_fn(m, n, |_, _| rng.next_gaussian())
+    }
+
+    #[test]
+    fn header_round_trips_through_bytes() {
+        let h = OocHeader {
+            encoding: OocEncoding::Plink2Bit,
+            rows: 1234,
+            cols: 77,
+            block_cols: 16,
+            missing_fill: 0.5,
+            content_hash: 0xdead_beef_cafe_f00d,
+        };
+        let parsed = OocHeader::from_bytes(&h.to_bytes()).expect("parses");
+        assert_eq!(parsed, h);
+        assert_eq!(parsed.bytes_per_col(), 1234usize.div_ceil(4));
+        assert_eq!(parsed.blocks(), 77usize.div_ceil(16));
+
+        let mut bad = h.to_bytes();
+        bad[0] = b'X';
+        assert!(OocHeader::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn f64_file_round_trips_bitwise() {
+        let a = random_mat(23, 11, 42);
+        let path = tmp_path("f64_round_trip");
+        write_design_f64(&path, DesignRef::from(&a), 4).expect("write");
+        let ooc = OocDesign::open(&path).expect("open");
+        assert_eq!((ooc.rows(), ooc.cols()), (23, 11));
+        let back = ooc.to_dense();
+        assert_eq!(a.as_slice(), back.as_slice());
+        for j in 0..11 {
+            ooc.with_col(j, |c| assert_eq!(c, a.col(j), "j={j}"));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn plink2bit_encode_decode_round_trips() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let a = Mat::from_fn(17, 9, |_, _| f64::from((rng.next_f64() * 3.0) as u32));
+        let path = tmp_path("plink_round_trip");
+        write_design_plink2bit(&path, DesignRef::from(&a), 3, 0.0).expect("write");
+        let ooc = OocDesign::open(&path).expect("open");
+        let back = ooc.to_dense();
+        assert_eq!(a.as_slice(), back.as_slice());
+        std::fs::remove_file(&path).ok();
+
+        // Non-dosage values must be rejected.
+        let bad = Mat::from_fn(4, 2, |_, _| 0.5);
+        let path = tmp_path("plink_reject");
+        assert!(write_design_plink2bit(&path, DesignRef::from(&bad), 2, 0.0).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_code_decodes_to_fill() {
+        // One column of 5 samples: codes [2, missing, 0, 1, 2] packed LSB
+        // first. dosage(code): 00->2, 01->fill, 10->1, 11->0.
+        let codes = [
+            0b01_11_01_00u8, // samples 0..4: code 0, 1, 3, 1
+            0b00_00_00_00u8, // sample 4: code 0
+        ];
+        let mut out = [0.0; 5];
+        decode_plink_col(&codes, 5, -1.0, &mut out);
+        assert_eq!(out, [2.0, -1.0, 0.0, -1.0, 2.0]);
+    }
+
+    #[test]
+    fn cache_respects_budget_and_counts_hits() {
+        let a = random_mat(16, 12, 9);
+        let path = tmp_path("cache_budget");
+        write_design_f64(&path, DesignRef::from(&a), 2).expect("write");
+        // One panel = 16 rows x 2 cols x 8 bytes = 256 bytes; budget fits 2.
+        let ooc = OocDesign::open_with_cache(&path, 512).expect("open");
+        for j in 0..12 {
+            ooc.with_col(j, |_| ());
+        }
+        assert!(ooc.resident_bytes() <= 512);
+        let cold = ooc.counters();
+        assert_eq!(cold.cache_misses, 6); // 6 blocks, each read once
+        assert_eq!(cold.bytes_read, 6 * 256);
+
+        // Re-sweeping re-reads evicted blocks but stays within budget,
+        // and the decoded values are identical either way.
+        for j in 0..12 {
+            ooc.with_col(j, |c| assert_eq!(c, a.col(j)));
+        }
+        assert!(ooc.resident_bytes() <= 512);
+        assert!(ooc.counters().cache_misses > cold.cache_misses);
+
+        // A budget holding everything turns the second sweep into pure hits.
+        let warm = OocDesign::open_with_cache(&path, 1 << 20).expect("open");
+        for j in 0..12 {
+            warm.with_col(j, |_| ());
+        }
+        let after_cold = warm.counters();
+        for j in 0..12 {
+            warm.with_col(j, |c| assert_eq!(c, a.col(j)));
+        }
+        let after_warm = warm.counters();
+        assert_eq!(after_warm.cache_misses, after_cold.cache_misses);
+        assert_eq!(after_warm.bytes_read, after_cold.bytes_read);
+        assert_eq!(after_warm.cache_hits, after_cold.cache_hits + 12);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn oversized_panel_streams_without_caching() {
+        let a = random_mat(32, 6, 11);
+        let path = tmp_path("oversized");
+        write_design_f64(&path, DesignRef::from(&a), 3).expect("write");
+        // One panel = 32 x 3 x 8 = 768 bytes > 100-byte budget.
+        let ooc = OocDesign::open_with_cache(&path, 100).expect("open");
+        for j in 0..6 {
+            ooc.with_col(j, |c| assert_eq!(c, a.col(j)));
+        }
+        assert_eq!(ooc.resident_bytes(), 0);
+        assert_eq!(ooc.counters().cache_hits, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_file_rejected_at_open() {
+        let a = random_mat(8, 4, 5);
+        let path = tmp_path("truncated");
+        write_design_f64(&path, DesignRef::from(&a), 2).expect("write");
+        let full = std::fs::read(&path).expect("read back");
+        std::fs::write(&path, &full[..full.len() - 8]).expect("truncate");
+        assert!(OocDesign::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn content_hash_distinguishes_payloads() {
+        let a = random_mat(10, 5, 1);
+        let b = random_mat(10, 5, 2);
+        let (pa, pb) = (tmp_path("hash_a"), tmp_path("hash_b"));
+        let ha = write_design_f64(&pa, DesignRef::from(&a), 2).expect("write a");
+        let hb = write_design_f64(&pb, DesignRef::from(&b), 2).expect("write b");
+        assert_ne!(ha.content_hash, hb.content_hash);
+        assert_ne!(ha.fingerprint(), hb.fingerprint());
+        std::fs::remove_file(&pa).ok();
+        std::fs::remove_file(&pb).ok();
+    }
+
+    #[test]
+    fn clones_share_cache_and_counters() {
+        let a = random_mat(12, 8, 3);
+        let path = tmp_path("clone_share");
+        write_design_f64(&path, DesignRef::from(&a), 4).expect("write");
+        let ooc = OocDesign::open(&path).expect("open");
+        let other = ooc.clone();
+        for j in 0..8 {
+            ooc.with_col(j, |_| ());
+        }
+        for j in 0..8 {
+            other.with_col(j, |_| ());
+        }
+        // Second sweep through the clone hits the shared cache.
+        assert_eq!(other.counters().cache_hits, 8);
+        assert_eq!(ooc.identity_ptr(), other.identity_ptr());
+        std::fs::remove_file(&path).ok();
+    }
+}

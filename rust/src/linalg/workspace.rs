@@ -144,6 +144,13 @@ pub struct WorkspaceStats {
     pub direct_rebuilds: usize,
     /// Newton solves that fell back to CG after a factorization failure.
     pub cg_fallbacks: usize,
+    /// Out-of-core panel lookups served from the resident cache (zero for
+    /// in-core designs; overlaid from the design's shared atomics).
+    pub ooc_cache_hits: usize,
+    /// Out-of-core panel lookups that went to disk (read + decode).
+    pub ooc_cache_misses: usize,
+    /// Encoded bytes streamed from out-of-core design files.
+    pub ooc_bytes_read: usize,
 }
 
 impl WorkspaceStats {
@@ -161,6 +168,22 @@ impl WorkspaceStats {
         self.direct_hits += other.direct_hits;
         self.direct_rebuilds += other.direct_rebuilds;
         self.cg_fallbacks += other.cg_fallbacks;
+        self.ooc_cache_hits += other.ooc_cache_hits;
+        self.ooc_cache_misses += other.ooc_cache_misses;
+        self.ooc_bytes_read += other.ooc_bytes_read;
+    }
+
+    /// Overlay the shared streaming counters of an out-of-core design into
+    /// this snapshot (the design, not the workspace, owns those atomics; for
+    /// in-core designs this is a no-op). Counters are cumulative per design
+    /// handle, so sessions sharing a handle see design-level totals.
+    pub fn overlay_ooc(&mut self, a: DesignRef<'_>) {
+        if let Some(ooc) = a.as_ooc() {
+            let c = ooc.counters();
+            self.ooc_cache_hits = c.cache_hits as usize;
+            self.ooc_cache_misses = c.cache_misses as usize;
+            self.ooc_bytes_read = c.bytes_read as usize;
+        }
     }
 }
 
@@ -679,9 +702,20 @@ pub struct DesignFingerprint {
     sample: u64,
 }
 
-/// Fingerprint a design (see [`DesignFingerprint`]).
+/// Fingerprint a design (see [`DesignFingerprint`]). Out-of-core designs
+/// have no in-memory value slice; their identity is the shared handle
+/// pointer (stable across clones) plus the header fingerprint, whose
+/// `content_hash` covers the full encoded payload.
 pub fn design_fingerprint(a: DesignRef<'_>) -> DesignFingerprint {
-    let data = a.values_slice();
+    if let Some(ooc) = a.as_ooc() {
+        return DesignFingerprint {
+            ptr: ooc.identity_ptr(),
+            rows: a.rows(),
+            cols: a.cols(),
+            sample: ooc.header().fingerprint(),
+        };
+    }
+    let data = a.values_slice().expect("in-core designs carry stored values");
     let sample = if data.is_empty() {
         0
     } else {

@@ -48,6 +48,7 @@ fn main() {
     let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
     let result = match cmd.as_str() {
         "solve" => cmd_solve(&args),
+        "convert" => cmd_convert(&args),
         "path" => cmd_path(&args),
         "tune" => cmd_tune(&args),
         "fig1" => cmd_fig1(&args),
@@ -87,6 +88,10 @@ fn print_help() {
          \n\
          SUBCOMMANDS\n\
          solve            --n 1e4 --m 500 --n0 10 --alpha 0.8 --c 0.5 --threads 1 --backend native|pjrt\n\
+         \x20                [--design cohort.ooc [--pheno cohort.pheno] [--cache-bytes 268435456]]\n\
+         convert          --from plink --bed cohort.bed --out cohort.ooc [--missing 0.0]\n\
+         \x20                --from snp-sparse|snp-dense --out cohort.ooc --m 200 --n-snps 5e4\n\
+         \x20                [--n0 10] [--seed 2020] [--block-cols 256]\n\
          path             --n 1e4 --m 500 --alpha 0.8 --grid 100 --max-active 100 --threads 0\n\
          tune             --n 1e4 --m 200 --alpha 0.9 --grid 30 --cv 0\n\
          fig1             --points 241 --out results/fig1.csv\n\
@@ -103,6 +108,9 @@ fn print_help() {
          \x20                [--shard-out BENCH_shard_linalg.json]\n\
          \x20                --sparse-n 5e4 --sparse-m 200 --sparse-threads 1,2,4 [--no-sparse-bench]\n\
          \x20                [--sparse-out BENCH_sparse_design.json]\n\
+         \x20                --ooc-n 2e4 --ooc-m 200 --ooc-threads 1,2,4 [--no-ooc-bench]\n\
+         \x20                [--ooc-small-cache 2097152] [--ooc-large-cache 268435456]\n\
+         \x20                [--ooc-out BENCH_ooc_design.json]\n\
          \x20                --pool-calls 200 --pool-threads 2,4 [--no-pool-bench]\n\
          \x20                [--pool-out BENCH_pool_dispatch.json]\n\
          \x20                --newton-sizes 160:1200:40,320:2000:120 --newton-reps 3\n\
@@ -134,20 +142,40 @@ fn maybe_write(table: &Table, args: &Args) -> Result<()> {
 }
 
 fn cmd_solve(args: &Args) -> Result<()> {
-    let n = args.get_usize("n", 10_000).map_err(Error::msg)?;
-    let m = args.get_usize("m", 500).map_err(Error::msg)?;
-    let n0 = args.get_usize("n0", 10).map_err(Error::msg)?;
     let alpha = args.get_f64("alpha", 0.8).map_err(Error::msg)?;
     let c = args.get_f64("c", 0.5).map_err(Error::msg)?;
-    let seed = args.get_usize("seed", 2020).map_err(Error::msg)? as u64;
     let backend = Backend::parse(&args.get_str("backend", "native")).map_err(Error::msg)?;
     let tol = parse_tol(args)?;
     // Within-solve shard threads (also settable via SSNAL_THREADS); the
     // solution is bitwise-identical at every setting.
     let threads = args.get_usize("threads", 0).map_err(Error::msg)?;
 
-    let prob = generate_synthetic(&SyntheticSpec { m, n, n0, x_star: 5.0, snr: 5.0, seed });
-    let design = Design::new(&prob.a, &prob.b)?;
+    // `--design cohort.ooc` streams an out-of-core file written by
+    // `ssnal-en convert` instead of generating a synthetic problem; the
+    // phenotype rides in the `<design>.pheno` sidecar unless `--pheno`
+    // points elsewhere. Without `--design`, the synthetic defaults apply.
+    let (design, support) = if let Some(path) = args.get("design") {
+        let design_path = PathBuf::from(path);
+        let pheno_path = args
+            .get("pheno")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| design_path.with_extension("pheno"));
+        let b = read_pheno(&pheno_path)?;
+        let cache_bytes = args
+            .get_usize("cache-bytes", ssnal_en::linalg::ooc::DEFAULT_CACHE_BYTES)
+            .map_err(Error::msg)?;
+        (Design::from_ooc_with_cache(&design_path, b, cache_bytes)?, None)
+    } else {
+        let n = args.get_usize("n", 10_000).map_err(Error::msg)?;
+        let m = args.get_usize("m", 500).map_err(Error::msg)?;
+        let n0 = args.get_usize("n0", 10).map_err(Error::msg)?;
+        let seed = args.get_usize("seed", 2020).map_err(Error::msg)? as u64;
+        let prob = generate_synthetic(&SyntheticSpec { m, n, n0, x_star: 5.0, snr: 5.0, seed });
+        let design =
+            Design::from_storage(ssnal_en::linalg::DesignStorage::Dense(prob.a), prob.b)?;
+        (design, Some(prob.support))
+    };
+    let (m, n) = (design.m(), design.n());
 
     let model = EnetModel::new()
         .alpha_c(alpha, c)
@@ -175,9 +203,142 @@ fn cmd_solve(args: &Args) -> Result<()> {
         res.residual,
         res.objective
     );
-    let hits = prob.support.iter().filter(|j| fit.coefficients()[**j] != 0.0).count();
-    println!("true-support recovery: {hits}/{}", prob.support.len());
+    if design.is_out_of_core() {
+        let stats = fit.workspace_stats();
+        println!(
+            "block cache: {} hits / {} misses (hit rate {:.1}%), {:.1} MiB read",
+            stats.ooc_cache_hits,
+            stats.ooc_cache_misses,
+            stats.ooc_hit_rate() * 100.0,
+            stats.ooc_bytes_read as f64 / (1 << 20) as f64
+        );
+    }
+    if let Some(support) = support {
+        let hits = support.iter().filter(|j| fit.coefficients()[**j] != 0.0).count();
+        println!("true-support recovery: {hits}/{}", support.len());
+    }
     Ok(())
+}
+
+/// Parse a whitespace-separated phenotype sidecar (one value per sample, the
+/// format `ssnal-en convert` writes).
+fn read_pheno(path: &std::path::Path) -> Result<Vec<f64>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::msg(format!("{}: {e}", path.display())))?;
+    let mut b = Vec::new();
+    for tok in text.split_whitespace() {
+        b.push(tok.parse::<f64>().map_err(|_| {
+            Error::msg(format!("{}: bad phenotype value {tok:?}", path.display()))
+        })?);
+    }
+    if b.is_empty() {
+        return Err(Error::msg(format!("{}: empty phenotype file", path.display())));
+    }
+    Ok(b)
+}
+
+/// `ssnal-en convert` — write an out-of-core design file (plus its
+/// `<out>.pheno` sidecar) from a PLINK 1.9 fileset or a synthetic cohort.
+///
+/// PLINK input repacks the 2-bit genotype codes byte-for-byte (no decode);
+/// `snp-sparse` writes raw {0,1,2} dosages 2-bit-coded; `snp-dense` writes
+/// the standardized cohort as f64 columns.
+fn cmd_convert(args: &Args) -> Result<()> {
+    let from = args.get_str("from", "plink");
+    let out = PathBuf::from(
+        args.get("out").ok_or_else(|| Error::msg("convert requires --out <file.ooc>"))?,
+    );
+    let block_cols = args
+        .get_usize("block-cols", ssnal_en::linalg::ooc::DEFAULT_BLOCK_COLS)
+        .map_err(Error::msg)?;
+    let missing = args.get_f64("missing", 0.0).map_err(Error::msg)?;
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+
+    let (header, b) = match from.as_str() {
+        "plink" => {
+            let bed_path = PathBuf::from(
+                args.get("bed")
+                    .ok_or_else(|| Error::msg("convert --from plink requires --bed <file.bed>"))?,
+            );
+            let bed = ssnal_en::data::snp::PlinkBed::open(&bed_path).map_err(Error::msg)?;
+            let mut w = ssnal_en::linalg::OocWriter::create(
+                &out,
+                bed.samples(),
+                bed.variants(),
+                block_cols,
+                ssnal_en::linalg::OocEncoding::Plink2Bit,
+                missing,
+            )?;
+            let mut codes = Vec::new();
+            for j in 0..bed.variants() {
+                bed.read_variant_codes(j, &mut codes).map_err(Error::msg)?;
+                w.push_col_codes(&codes)?;
+            }
+            let (b, _) = ssnal_en::data::standardize::center(bed.phenotypes());
+            (w.finish()?, b)
+        }
+        "snp-sparse" => {
+            let spec = ssnal_en::data::snp::SparseSnpSpec {
+                base: convert_snp_spec(args)?,
+                ..Default::default()
+            };
+            let cohort = ssnal_en::data::snp::generate_sparse(&spec);
+            let header = ssnal_en::linalg::ooc::write_design_plink2bit(
+                &out,
+                cohort.a.as_ref(),
+                block_cols,
+                missing,
+            )?;
+            (header, cohort.b)
+        }
+        "snp-dense" => {
+            let cohort = ssnal_en::data::snp::generate(&convert_snp_spec(args)?);
+            let header =
+                ssnal_en::linalg::ooc::write_design_f64(&out, (&cohort.a).into(), block_cols)?;
+            (header, cohort.b)
+        }
+        other => {
+            return Err(Error::msg(format!(
+                "unknown --from {other:?} (expected plink, snp-sparse, or snp-dense)"
+            )))
+        }
+    };
+
+    let pheno_path = out.with_extension("pheno");
+    let mut text = String::with_capacity(b.len() * 20);
+    for v in &b {
+        text.push_str(&format!("{v}\n"));
+    }
+    std::fs::write(&pheno_path, text)?;
+
+    let payload_bytes = header.cols * header.bytes_per_col();
+    println!(
+        "wrote {} ({} x {}, {:?}, block_cols={}, {:.1} MiB payload, content hash {:#018x})",
+        out.display(),
+        header.rows,
+        header.cols,
+        header.encoding,
+        header.block_cols,
+        payload_bytes as f64 / (1 << 20) as f64,
+        header.content_hash
+    );
+    println!("wrote {} ({} phenotype values, centered)", pheno_path.display(), b.len());
+    Ok(())
+}
+
+/// The synthetic-cohort sizing flags shared by `convert --from snp-*`.
+fn convert_snp_spec(args: &Args) -> Result<SnpSpec> {
+    Ok(SnpSpec {
+        m: args.get_usize("m", 200).map_err(Error::msg)?,
+        n_snps: args.get_usize("n-snps", 50_000).map_err(Error::msg)?,
+        n_causal: args.get_usize("n0", 10).map_err(Error::msg)?,
+        seed: args.get_usize("seed", 2020).map_err(Error::msg)? as u64,
+        ..Default::default()
+    })
 }
 
 fn cmd_path(args: &Args) -> Result<()> {
@@ -496,6 +657,72 @@ fn cmd_bench_parallel(args: &Args) -> Result<()> {
                 slow.sparse_screen_seconds,
                 slow.dense_screen_seconds,
                 density * 100.0
+            )));
+        }
+    }
+
+    // Out-of-core design storage: the same cohort streamed from a 2-bit
+    // block file at a heavy-eviction and a fully-resident cache budget,
+    // through the same sharded kernels as the in-core dense copy.
+    if !args.get_flag("no-ooc-bench") {
+        let ooc_threads = args.get_usize_list("ooc-threads", &[1, 2, 4]).map_err(Error::msg)?;
+        let ooc_n = args.get_usize("ooc-n", 20_000).map_err(Error::msg)?;
+        let ooc_m = args.get_usize("ooc-m", 200).map_err(Error::msg)?;
+        let small_cache = args.get_usize("ooc-small-cache", 2 << 20).map_err(Error::msg)?;
+        let large_cache = args.get_usize("ooc-large-cache", 256 << 20).map_err(Error::msg)?;
+        let (ot, orows, density) = tables::ooc_design_rows(
+            ooc_n,
+            ooc_m,
+            &ooc_threads,
+            small_cache,
+            large_cache,
+            tol,
+            seed,
+        );
+        println!();
+        ot.print();
+        if let Some(r) = orows.first() {
+            println!(
+                "\nstreamed at {:.1}% density: warm Aᵀy {:.2}x over cold, {:.1} MiB read \
+                 under the {} MiB budget",
+                density * 100.0,
+                r.ooc_cold_aty_seconds / r.ooc_warm_aty_seconds.max(1e-12),
+                r.small_mib_read,
+                small_cache >> 20
+            );
+        }
+        if let Some(path) = args.get("ooc-out") {
+            let json = tables::ooc_design_json(
+                &orows,
+                ooc_n,
+                ooc_m,
+                density,
+                small_cache,
+                large_cache,
+            );
+            if let Some(parent) = PathBuf::from(path).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(path, json)?;
+            println!("wrote {path}");
+        }
+        determinism_ok &= orows.iter().all(|r| r.bitwise_equal);
+        // The tentpole claims are gates: the decoded-panel cache may never
+        // exceed its byte budget, and a warm cache must make the streamed
+        // sweep strictly cheaper than the cold read-and-decode pass at the
+        // fully-resident budget (the margin is the whole file's I/O +
+        // decode, so this does not flake on noisy boxes).
+        if let Some(bad) = orows.iter().find(|r| !r.cache_within_budget) {
+            return Err(Error::msg(format!(
+                "out-of-core panel cache exceeded its byte budget at {} threads",
+                bad.threads
+            )));
+        }
+        if let Some(slow) = orows.iter().find(|r| !r.warm_cheaper_than_cold) {
+            return Err(Error::msg(format!(
+                "warm out-of-core sweep no cheaper than cold at {} threads \
+                 ({:.2e}s vs {:.2e}s)",
+                slow.threads, slow.ooc_warm_aty_seconds, slow.ooc_cold_aty_seconds
             )));
         }
     }

@@ -761,6 +761,23 @@ pub fn rank1_lower_accum<'a>(
                     }
                 }
             }
+            DesignRef::OutOfCore(oc) => {
+                // Decoded panels are exact dense columns; the loop body is
+                // the Dense arm verbatim.
+                for &j in active {
+                    oc.with_col(j, |col| {
+                        for c in 0..m {
+                            let s = kappa * col[c];
+                            if s != 0.0 {
+                                let vc = v.col_mut(c);
+                                for row in c..m {
+                                    vc[row] += s * col[row];
+                                }
+                            }
+                        }
+                    });
+                }
+            }
         }
         return;
     }
@@ -818,6 +835,21 @@ pub fn rank1_lower_accum<'a>(
                                             }
                                         }
                                     }
+                                }
+                            }
+                            DesignRef::OutOfCore(oc) => {
+                                // Dense arm verbatim over decoded panels; the
+                                // shared panel cache serves concurrent shards
+                                // (immutable Arcs, per-thread decode scratch).
+                                for &j in active {
+                                    oc.with_col(j, |col| {
+                                        let s = kappa * col[c];
+                                        if s != 0.0 {
+                                            for (off, dst) in vals.iter_mut().enumerate() {
+                                                *dst += s * col[c + off];
+                                            }
+                                        }
+                                    });
                                 }
                             }
                         }

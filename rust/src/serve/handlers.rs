@@ -427,11 +427,38 @@ fn stats(state: &ServerState) -> Result<String, ServeError> {
     Ok(wire::stats_body(&snap, &entries))
 }
 
-/// `POST /v1/designs` — body: a matrix spec plus `"b"` (response vector).
-/// Registration is idempotent; the returned `design_id` is a content
-/// fingerprint.
+/// `POST /v1/designs` — body: a matrix spec plus `"b"` (response vector),
+/// or `{"path": "...", "b": [...]}` (+ optional `"cache_bytes"`) registering
+/// an on-disk out-of-core design by reference. Registration is idempotent;
+/// the returned `design_id` is a content fingerprint (for `"path"`
+/// registrations it is derived from the file header, whose `content_hash`
+/// covers the encoded payload — no matrix body crosses the wire).
 fn register_design(state: &ServerState, body: &Json) -> Result<String, ServeError> {
-    let storage = parse_matrix(body, "design")?;
+    let storage = match body.get("path") {
+        Some(path) => {
+            // On-disk out-of-core registration: no matrix upload, the
+            // fingerprint comes from the file header's content hash.
+            if body.get("dense").is_some() || body.get("col_ptr").is_some() {
+                return Err(ServeError::BadRequest(
+                    "give \"path\" or an inline matrix payload, not both".to_string(),
+                ));
+            }
+            let path = path
+                .as_str()
+                .ok_or_else(|| ServeError::BadRequest("\"path\" must be a string".to_string()))?;
+            let cache_bytes = usize_field(body, "cache_bytes")?
+                .unwrap_or(crate::linalg::ooc::DEFAULT_CACHE_BYTES);
+            let ooc = crate::linalg::OocDesign::open_with_cache(
+                std::path::Path::new(path),
+                cache_bytes,
+            )
+            .map_err(|e| {
+                ServeError::Api(EnetError::InvalidDesign { reason: format!("{path}: {e}") })
+            })?;
+            DesignStorage::OutOfCore(ooc)
+        }
+        None => parse_matrix(body, "design")?,
+    };
     let b = body
         .get("b")
         .ok_or_else(|| ServeError::BadRequest("missing \"b\" (response vector)".to_string()))?;

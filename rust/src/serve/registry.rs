@@ -66,11 +66,14 @@ impl Fnv {
 /// Content fingerprint of a design: storage kind, shape, the exact value
 /// bits, and (for CSC) the sparsity pattern — plus the response vector, so
 /// the same matrix with a different stored `b` is a different design.
+/// Out-of-core designs hash the file header instead of the payload (the
+/// header's `content_hash` was computed over the full encoded payload at
+/// convert time — no body re-scan on registration).
 pub(crate) fn fingerprint(design: &Design<'_>) -> String {
     let mut h = Fnv::new();
     let a = design.design_ref();
-    match a.as_sparse() {
-        Some(csc) => {
+    match a {
+        DesignRef::Sparse(csc) => {
             h.write(b"csc");
             h.write_u64(csc.rows() as u64);
             h.write_u64(csc.cols() as u64);
@@ -84,13 +87,19 @@ pub(crate) fn fingerprint(design: &Design<'_>) -> String {
                 h.write_u64(v.to_bits());
             }
         }
-        None => {
+        DesignRef::Dense(_) => {
             h.write(b"dense");
             h.write_u64(a.rows() as u64);
             h.write_u64(a.cols() as u64);
-            for &v in a.values_slice() {
+            for &v in a.values_slice().expect("dense designs carry stored values") {
                 h.write_u64(v.to_bits());
             }
+        }
+        DesignRef::OutOfCore(ooc) => {
+            h.write(b"ooc");
+            h.write_u64(ooc.rows() as u64);
+            h.write_u64(ooc.cols() as u64);
+            h.write_u64(ooc.header().fingerprint());
         }
     }
     for &v in design.b() {
@@ -162,9 +171,14 @@ impl Session {
     }
 
     /// Workspace reuse counters as the typed public snapshot — the same
-    /// struct [`crate::api::Fit::workspace_stats`] returns.
+    /// struct [`crate::api::Fit::workspace_stats`] returns. Out-of-core
+    /// block-cache counters live on the shared design handle and are
+    /// overlaid here (design-level totals, shared by every session bound to
+    /// the same registered design).
     pub fn workspace_snapshot(&self) -> StatsSnapshot {
-        StatsSnapshot::from(&self.ws.stats)
+        let mut stats = self.ws.stats;
+        stats.overlay_ooc(self.design.design.design_ref());
+        StatsSnapshot::from(&stats)
     }
 
     /// One solve against the warm workspace — the same `checked_lambdas` →

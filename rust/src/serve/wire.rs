@@ -75,6 +75,19 @@ pub fn design_body(stored: &StoredDesign) -> String {
         ("m", Json::Num(stored.design.m() as f64)),
         ("n", Json::Num(stored.design.n() as f64)),
         ("sparse", Json::Bool(stored.design.is_sparse())),
+        (
+            "storage",
+            Json::Str(
+                if stored.design.is_out_of_core() {
+                    "out_of_core"
+                } else if stored.design.is_sparse() {
+                    "csc"
+                } else {
+                    "dense"
+                }
+                .to_string(),
+            ),
+        ),
     ])
     .to_string()
 }

@@ -65,6 +65,22 @@ pub fn solve_admm(p: &EnetProblem, opts: &BaselineOptions, admm: &AdmmOptions) -
                 }
             }
         }
+        DesignRef::OutOfCore(oc) => {
+            // Dense arm verbatim over decoded panels (one pass, j-outer).
+            for j in 0..n {
+                oc.with_col(j, |col| {
+                    for a_ in 0..m {
+                        let s = col[a_];
+                        if s != 0.0 {
+                            let cc = aat.col_mut(a_);
+                            for b_ in a_..m {
+                                cc[b_] += s * col[b_];
+                            }
+                        }
+                    }
+                });
+            }
+        }
     }
     // symmetrize upper from lower not needed (Cholesky reads lower); add cI
     for i in 0..m {

@@ -12,7 +12,7 @@
 
 use ssnal_en::data::snp::{generate_sparse, SnpSpec, SparseSnpSpec};
 use ssnal_en::data::{generate_synthetic, SyntheticSpec};
-use ssnal_en::linalg::{blas, CscMat, DesignRef, DesignStorage, Mat, NewtonWorkspace};
+use ssnal_en::linalg::{blas, CscMat, DesignRef, DesignStorage, Mat, NewtonWorkspace, OocDesign};
 use ssnal_en::parallel::shard::{self, Plan};
 use ssnal_en::rng::Xoshiro256pp;
 use ssnal_en::solver::screening::AugmentedView;
@@ -828,4 +828,189 @@ fn screened_sparse_path_matches_dense_bitwise() {
             assert_eq!(d.result.screen_survivors, s.result.screen_survivors);
         }
     }
+}
+
+// ---- ISSUE 10: out-of-core storage must reproduce in-core bits -----------
+
+/// Write `dense` (raw {0,1,2} dosages) as a 2-bit out-of-core file and open
+/// it at the given decoded-panel cache budget. The caller removes the file
+/// when done.
+fn ooc_design(
+    tag: &str,
+    dense: &Mat,
+    block_cols: usize,
+    cache_bytes: usize,
+) -> (OocDesign, std::path::PathBuf) {
+    let path =
+        std::env::temp_dir().join(format!("ssnal_ooc_lp_{}_{tag}.ooc", std::process::id()));
+    ssnal_en::linalg::ooc::write_design_plink2bit(&path, DesignRef::from(dense), block_cols, 0.0)
+        .unwrap();
+    let d = OocDesign::open_with_cache(&path, cache_bytes).unwrap();
+    (d, path)
+}
+
+/// The ISSUE 10 tentpole guarantee, end to end: a full SSNAL solve streamed
+/// from an out-of-core 2-bit file produces coefficients, duals and traces
+/// bitwise-identical to the in-core dense and CSC copies, at every
+/// `SSNAL_THREADS` budget.
+#[test]
+fn ooc_fit_is_bitwise_in_core_at_every_thread_budget() {
+    let (sp, dense, b) = sparse_cohort(60, 4_000, 9);
+    // 8 resident panels out of 63: the solve streams with some eviction.
+    let (ooc, path) = ooc_design("fit", &dense, 64, 8 * 64 * 60 * 8);
+    let lmax = EnetProblem::lambda_max(&dense, &b, 0.9);
+    let (l1, l2) = EnetProblem::lambdas_from_alpha(0.9, 0.3, lmax);
+    assert_eq!(
+        EnetProblem::lambda_max(&ooc, &b, 0.9).to_bits(),
+        lmax.to_bits(),
+        "λmax must not depend on storage"
+    );
+    let opts = SsnalOptions::default();
+
+    let solve = |a: DesignRef<'_>| {
+        let p = EnetProblem::new(a, &b, l1, l2);
+        ssnal_en::solver::ssnal::solve_warm(&p, &opts, None)
+    };
+    let (res_ref, trace_ref) = shard::with_threads(1, || solve(DesignRef::from(&dense)));
+    assert!(res_ref.converged);
+    assert!(!res_ref.active_set.is_empty());
+    for &t in &THREADS {
+        for (kind, a) in [("csc", DesignRef::from(&sp)), ("ooc", DesignRef::from(&ooc))] {
+            let (res, trace) = shard::with_threads(t, || solve(a));
+            assert_eq!(bits(&res.x), bits(&res_ref.x), "{kind} x drifted at threads={t}");
+            assert_eq!(bits(&res.y), bits(&res_ref.y), "{kind} dual drifted at threads={t}");
+            assert_eq!(res.active_set, res_ref.active_set);
+            assert_eq!(res.iterations, res_ref.iterations);
+            assert_eq!(res.inner_iterations, res_ref.inner_iterations);
+            assert_eq!(
+                bits(&trace.outer_residuals),
+                bits(&trace_ref.outer_residuals),
+                "{kind} trace residuals drifted at threads={t}"
+            );
+            assert_eq!(trace.inner_counts, trace_ref.inner_counts);
+            assert_eq!(trace.active_sizes, trace_ref.active_sizes);
+            assert_eq!(trace.final_sigma.to_bits(), trace_ref.final_sigma.to_bits());
+        }
+    }
+    let c = ooc.counters();
+    assert!(c.cache_misses > 0 && c.bytes_read > 0, "the streamed path must actually read");
+    drop(ooc);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Cache-eviction-under-pressure correctness: with a budget of a single
+/// decoded panel, every block access beyond the resident one evicts and
+/// re-reads — the solve must still reproduce the in-core bits exactly, and
+/// the resident set may never exceed the budget.
+#[test]
+fn ooc_fit_under_eviction_pressure_is_bitwise_in_core() {
+    let (_sp, dense, b) = sparse_cohort(50, 2_000, 33);
+    let panel_bytes = 64 * 50 * 8;
+    let (ooc, path) = ooc_design("evict", &dense, 64, panel_bytes);
+    let blocks = 2_000usize.div_ceil(64);
+    let lmax = EnetProblem::lambda_max(&dense, &b, 0.9);
+    let (l1, l2) = EnetProblem::lambdas_from_alpha(0.9, 0.3, lmax);
+    let opts = SsnalOptions::default();
+
+    let pd = EnetProblem::new(&dense, &b, l1, l2);
+    let po = EnetProblem::new(&ooc, &b, l1, l2);
+    let res_ref = shard::with_threads(1, || ssnal_en::solver::ssnal::solve(&pd, &opts));
+    assert!(res_ref.converged);
+    for &t in &THREADS {
+        let res = shard::with_threads(t, || ssnal_en::solver::ssnal::solve(&po, &opts));
+        assert_eq!(bits(&res.x), bits(&res_ref.x), "x drifted under eviction at threads={t}");
+        assert_eq!(bits(&res.y), bits(&res_ref.y), "dual drifted under eviction at threads={t}");
+        assert_eq!(res.active_set, res_ref.active_set);
+        assert!(
+            ooc.resident_bytes() <= ooc.cache_budget(),
+            "resident {} exceeds budget {} at threads={t}",
+            ooc.resident_bytes(),
+            ooc.cache_budget()
+        );
+    }
+    let c = ooc.counters();
+    assert!(
+        c.cache_misses > blocks as u64,
+        "a one-panel budget must evict and re-read (misses {}, blocks {blocks})",
+        c.cache_misses
+    );
+    drop(po);
+    drop(ooc);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Gap-Safe screening over the streamed tier — augmented column norms, the
+/// scaled dual point, and the survivor index set — must reproduce the dense
+/// bits at a shape where its sweeps genuinely multi-shard.
+#[test]
+fn ooc_screening_survivors_match_dense_bitwise() {
+    let (_sp, dense, b) = sparse_cohort(100, 30_000, 21);
+    assert!(Plan::for_work(30_000, 2 * 100).shards > 1, "sweeps must fan out");
+    // 6 resident panels out of 118 blocks (block_cols 256): heavy eviction.
+    let (ooc, path) = ooc_design("screen", &dense, 256, 6 * 256 * 100 * 8);
+    let lmax = EnetProblem::lambda_max(&dense, &b, 0.9);
+    let (l1, l2) = EnetProblem::lambdas_from_alpha(0.9, 0.4, lmax);
+    let pd = EnetProblem::new(&dense, &b, l1, l2);
+    let po = EnetProblem::new(&ooc, &b, l1, l2);
+    let aty = pd.a.t_mul_vec(&b);
+    let x: Vec<f64> =
+        aty.iter().map(|&v| if v.abs() > 0.5 * lmax { 0.1 * v } else { 0.0 }).collect();
+
+    let aug_d = AugmentedView::new(&pd);
+    let aug_o = AugmentedView::new(&po);
+    assert_eq!(bits(&aug_d.col_norms), bits(&aug_o.col_norms), "‖Ã_j‖ drifted");
+    for &t in &THREADS {
+        let ((dual_d, top_d, bot_d), surv_d) =
+            shard::with_threads(t, || (aug_d.dual_point(&x), aug_d.gap_safe_survivors(&x)));
+        let ((dual_o, top_o, bot_o), surv_o) =
+            shard::with_threads(t, || (aug_o.dual_point(&x), aug_o.gap_safe_survivors(&x)));
+        assert_eq!(dual_d.to_bits(), dual_o.to_bits(), "dual value drifted at threads={t}");
+        assert_eq!(bits(&top_d), bits(&top_o), "θ_top drifted at threads={t}");
+        assert_eq!(bits(&bot_d), bits(&bot_o), "θ_bottom drifted at threads={t}");
+        assert_eq!(surv_d, surv_o, "survivor set drifted at threads={t}");
+        assert!(!surv_d.is_empty(), "survivor set must be nonempty");
+    }
+    drop(aug_o);
+    drop(po);
+    drop(ooc);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The screened parallel λ-path — whose `gather_cols` survivor sub-designs
+/// materialize in-core dense for the streamed tier — reproduces the dense
+/// path's bits at every thread budget.
+#[test]
+fn ooc_screened_path_matches_dense_bitwise() {
+    let (_sp, dense, b) = sparse_cohort(50, 2_000, 33);
+    let (ooc, path) = ooc_design("path", &dense, 64, 4 * 64 * 50 * 8);
+    let base = ssnal_en::path::PathOptions {
+        alpha: 0.9,
+        c_grid: ssnal_en::path::c_lambda_grid(0.9, 0.2, 8),
+        max_active: 0,
+        tol: 1e-6,
+        algorithm: ssnal_en::solver::types::Algorithm::SsnalEn,
+    };
+    for threads in [1usize, 4] {
+        let opts = ssnal_en::parallel::ParallelPathOptions {
+            base: base.clone(),
+            num_threads: threads,
+            chunking: ssnal_en::parallel::Chunking::Chains(2),
+            screening: true,
+        };
+        let pd = ssnal_en::parallel::solve_path_parallel(&dense, &b, &opts);
+        let po = ssnal_en::parallel::solve_path_parallel(&ooc, &b, &opts);
+        assert_eq!(pd.path.runs, po.path.runs, "threads={threads}");
+        for (d, o) in pd.path.points.iter().zip(po.path.points.iter()) {
+            assert_eq!(
+                bits(&d.result.x),
+                bits(&o.result.x),
+                "path point c={} drifted (threads={threads})",
+                d.c_lambda
+            );
+            assert_eq!(d.result.active_set, o.result.active_set);
+            assert_eq!(d.result.screen_survivors, o.result.screen_survivors);
+        }
+    }
+    drop(ooc);
+    let _ = std::fs::remove_file(&path);
 }

@@ -887,3 +887,96 @@ fn coalesced_concurrent_refits_match_sequential_and_surface_in_stats() {
         handle.stop();
     }
 }
+
+/// `POST /v1/designs {"path": ...}` registers an on-disk out-of-core design
+/// by reference — no matrix crosses the wire. The streamed fit is
+/// byte-identical to the dense direct-api fit (f64 panels decode to exactly
+/// the in-core columns and the same kernels run on both sides),
+/// registration is idempotent on the file's content fingerprint, the design
+/// body reports `"out_of_core"` storage, `/v1/stats` surfaces the session's
+/// block-cache counters, and a dangling path answers 4xx, never a panic.
+#[test]
+fn ooc_path_registration_fits_bitwise_and_surfaces_cache_counters() {
+    use ssnal_en::api::StatsSnapshot;
+    use ssnal_en::linalg::ooc;
+
+    let prob = problem();
+    let design = Design::new(&prob.a, &prob.b).unwrap();
+    let expected_fit =
+        EnetModel::new().alpha_c(0.8, 0.5).tol(TOL).fit(&design).unwrap().export_json();
+
+    let path = std::env::temp_dir().join(format!("ssnal_serve_ooc_{}.ooc", std::process::id()));
+    ooc::write_design_f64(&path, (&prob.a).into(), 32).expect("write ooc design");
+
+    let handle = spawn_server(16, 0, 256 << 20);
+    let mut client = Client::connect(&handle.addr()).unwrap();
+
+    // Register by path: a tiny JSON body instead of an m×n payload. A small
+    // cache budget (two 32-column panels) keeps the streaming tier honest —
+    // the solve below must evict and re-read to cover all 200 columns.
+    let register = Json::obj(vec![
+        ("path", Json::Str(path.display().to_string())),
+        ("b", num_arr(&prob.b)),
+        ("cache_bytes", Json::Num((2 * 32 * prob.a.rows() * 8) as f64)),
+    ])
+    .to_string();
+    let (status, body) = client.request("POST", "/v1/designs", &register).unwrap();
+    assert_eq!(status, 200, "path registration failed: {body}");
+    let reg = Json::parse(&body).expect("registration response parses");
+    assert_eq!(reg.get("storage").and_then(Json::as_str), Some("out_of_core"), "{body}");
+    assert_eq!(reg.get("m").and_then(Json::as_usize), Some(prob.a.rows()), "{body}");
+    assert_eq!(reg.get("n").and_then(Json::as_usize), Some(prob.a.cols()), "{body}");
+    let id = reg
+        .get("design_id")
+        .and_then(|v| v.as_str().map(String::from))
+        .expect("design_id present");
+
+    // Re-registering the same file is a no-op: the design_id is derived from
+    // the header's content hash, so the same bytes map to the same id.
+    let (status, body) = client.request("POST", "/v1/designs", &register).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let again = Json::parse(&body).expect("second registration parses");
+    assert_eq!(again.get("design_id").and_then(Json::as_str), Some(id.as_str()), "{body}");
+
+    // The fit streamed from disk matches the in-core fit byte for byte.
+    let (status, body) = client.request("POST", "/v1/fit", &fit_body(&id, 0.5)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body, expected_fit, "out-of-core server fit diverges from dense direct api");
+
+    // The warm session's workspace snapshot must show the block cache at
+    // work: the solve touched disk, so misses and streamed bytes are
+    // nonzero (in-core sessions pin these counters at zero).
+    let (status, body) = client.request("GET", "/v1/stats", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let stats = Json::parse(&body).expect("stats parse");
+    let workspace = stats
+        .get("sessions")
+        .and_then(Json::as_arr)
+        .and_then(|sessions| {
+            sessions.iter().find_map(|s| s.get("workspace").and_then(StatsSnapshot::from_json))
+        })
+        .expect("warm session workspace snapshot");
+    assert!(workspace.ooc_cache_misses > 0, "no disk reads recorded: {workspace:?}");
+    assert!(workspace.ooc_bytes_read > 0, "no bytes streamed: {workspace:?}");
+
+    // A dangling path is a client error with the reason in the body, not a
+    // panic and not a wedged server.
+    let bad = Json::obj(vec![
+        ("path", Json::Str("/nonexistent/definitely-missing.ooc".to_string())),
+        ("b", num_arr(&prob.b)),
+    ])
+    .to_string();
+    let (status, body) = client.request("POST", "/v1/designs", &bad).unwrap();
+    assert!((400..500).contains(&status), "expected 4xx for a bad path, got {status}: {body}");
+
+    // Mixing "path" with an inline payload is rejected outright.
+    let mut mixed = dense_spec(&prob.a);
+    mixed.push(("path", Json::Str(path.display().to_string())));
+    mixed.push(("b", num_arr(&prob.b)));
+    let (status, body) =
+        client.request("POST", "/v1/designs", &Json::obj(mixed).to_string()).unwrap();
+    assert_eq!(status, 400, "expected 400 for mixed path+inline spec: {body}");
+
+    handle.stop();
+    let _ = std::fs::remove_file(&path);
+}
